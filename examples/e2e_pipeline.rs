@@ -1,0 +1,109 @@
+//! End-to-end driver (the system-prompt mandated E2E validation): proves all
+//! three layers compose on a real small workload.
+//!
+//! 1. **Train** a transformer LM from scratch on the synthetic corpus by
+//!    driving the JAX/Pallas-lowered `train_step` HLO artifact through the
+//!    PJRT runtime (L2/L1 under rust control); logs the loss curve.
+//! 2. **Compress** the trained model with OATS and every baseline at ρ=0.5
+//!    through the L3 coordinator pipeline (Algorithm 2).
+//! 3. **Evaluate** perplexity + task suites, and **serve** the compressed
+//!    model through the batched engine, reporting throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+//! (add `-- --quick` for a CI-sized run; `--preset small|base` to scale up).
+
+use oats::cli::Args;
+use oats::config::{CompressConfig, Method};
+use oats::coordinator::pipeline::compress_clone;
+use oats::experiments::Ctx;
+use oats::report::{pct, ppl, speedup, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.bool_flag("quick");
+    let preset = args.flag_or("preset", "tiny");
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if !oats::runtime::Engine::available(&root.join("artifacts").join(preset)) {
+        eprintln!("artifacts/{preset} missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let mut ctx = Ctx::new(&root, quick);
+
+    // ── 1. train via the PJRT train_step artifact ──
+    println!("━━ stage 1: training '{preset}' via PJRT train_step artifact ━━");
+    let model = ctx.model(preset)?; // trains on first call, caches to models/
+    let curve_path = root.join("models").join(preset).join("loss_curve.json");
+    if let Ok(s) = std::fs::read_to_string(&curve_path) {
+        let curve = oats::json::parse(&s)?;
+        let arr = curve.as_arr().unwrap_or(&[]).to_vec();
+        let pick = |i: usize| arr.get(i).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let n = arr.len();
+        println!("loss curve ({n} steps):");
+        for frac in [0.0, 0.1, 0.25, 0.5, 0.75, 1.0] {
+            let i = ((n.saturating_sub(1)) as f64 * frac) as usize;
+            println!("  step {:>6}: {:.4}", i, pick(i));
+        }
+    }
+    let corpus = oats::data::SyntheticCorpus::new(ctx.corpus(preset)?.cfg.clone());
+    let dense_row =
+        oats::eval::evaluate(&model, &corpus, "Dense", ctx.eval_batches(), ctx.eval_probes());
+    println!(
+        "dense model: ppl={:.2} hard={:.1}% easy={:.1}%\n",
+        dense_row.ppl, dense_row.hard, dense_row.easy
+    );
+
+    // ── 2. compress with every method at ρ=0.5 ──
+    println!("━━ stage 2: compression (ρ=0.5, κ=0.25, N={}) ━━", if quick { 8 } else { 80 });
+    let calib = ctx.calib(preset)?;
+    let mut t = Table::new(
+        "E2E — ρ=0.5 compression comparison",
+        &["Method", "Hard", "Easy", "PPL", "Achieved ρ", "Compress s"],
+    );
+    t.row(vec![
+        "Dense".into(),
+        pct(dense_row.hard),
+        pct(dense_row.easy),
+        ppl(dense_row.ppl),
+        "0%".into(),
+        "-".into(),
+    ]);
+    let mut compressed_oats = None;
+    for method in Method::all_pruners() {
+        let cfg = CompressConfig {
+            method,
+            rate: 0.5,
+            rank_ratio: 0.25,
+            iters: if quick { 8 } else { 80 },
+            ..Default::default()
+        };
+        let (cm, report) = compress_clone(&model, &calib, &cfg, 6)?;
+        let row = oats::eval::evaluate(&cm, &corpus, method.name(), ctx.eval_batches(), ctx.eval_probes());
+        t.row(vec![
+            method.name().into(),
+            pct(row.hard),
+            pct(row.easy),
+            ppl(row.ppl),
+            format!("{:.1}%", cm.achieved_compression() * 100.0),
+            format!("{:.1}", report.total_seconds),
+        ]);
+        if method == Method::Oats {
+            compressed_oats = Some(cm);
+        }
+    }
+    t.print();
+    ctx.record(&t.to_json());
+
+    // ── 3. serve the compressed model ──
+    println!("\n━━ stage 3: batched serving (dense vs OATS weights) ━━");
+    let oats_model = compressed_oats.unwrap();
+    let n_req = if quick { 16 } else { 64 };
+    let tp_dense = oats::experiments::speed::decode_throughput(&model, n_req, 4);
+    let tp_oats = oats::experiments::speed::decode_throughput(&oats_model, n_req, 4);
+    println!("dense engine: {tp_dense:.1} tokens/s");
+    println!(
+        "OATS engine:  {tp_oats:.1} tokens/s  ({} vs dense)",
+        speedup(tp_oats / tp_dense)
+    );
+    println!("\nE2E pipeline complete — all three layers exercised.");
+    Ok(())
+}

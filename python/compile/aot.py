@@ -1,0 +1,259 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest, consumed by the rust
+runtime (`rust/src/runtime/`).
+
+HLO **text** is the interchange format — xla_extension 0.5.1 rejects
+jax≥0.5 serialized HloModuleProtos (64-bit instruction ids), while the text
+parser reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+
+Usage:
+    python -m compile.aot --preset tiny --out ../artifacts
+    python -m compile.aot --preset base --vit --out ../artifacts
+
+Artifacts per preset (written to <out>/<preset>/):
+    lm_fwd.hlo.txt           (params..., tokens) → (logits,)
+    lm_fwd_pallas.hlo.txt    same, attention via the Pallas kernel
+    lm_loss.hlo.txt          (params..., tokens, targets) → (loss,)
+    train_step.hlo.txt       (params..., m..., v..., step, tokens, targets)
+                             → (params'..., m'..., v'..., step', loss)
+    oats_step.hlo.txt        (wd, s, omega) → (u, vt, s_new)
+    spl_matmul.hlo.txt       (x, s, u, vt) → (y,)
+    vit_fwd.hlo.txt / vit_train_step.hlo.txt  (with --vit)
+    manifest.json            config, param order/shapes, artifact signatures
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PRESETS = {
+    # keep in sync with rust/src/config.rs::ModelConfig::preset
+    "tiny": dict(vocab=256, d_model=64, n_heads=4, n_layers=2, d_ff=256, seq_len=64),
+    "small": dict(vocab=256, d_model=128, n_heads=4, n_layers=4, d_ff=512, seq_len=128),
+    "base": dict(vocab=512, d_model=256, n_heads=8, n_layers=6, d_ff=1024, seq_len=128),
+    "large": dict(vocab=512, d_model=384, n_heads=8, n_layers=8, d_ff=1536, seq_len=128),
+    "alt": dict(vocab=256, d_model=128, n_heads=4, n_layers=4, d_ff=768, seq_len=128),
+}
+
+VIT_PRESET = dict(image_side=16, n_classes=8, d_model=64, n_heads=4, n_layers=3, d_ff=256)
+
+TRAIN_BATCH = 8
+LM_LR, LM_WD = 1e-3, 0.01
+VIT_LR, VIT_WD = 1e-3, 0.01
+OATS_RANK_FRACTION = 0.25  # κ for the representative oats_step artifact
+OATS_RATE = 0.5
+OATS_POWER_ITERS = 4
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def f32_specs(shapes):
+    return [spec(s) for s in shapes]
+
+
+def lower_and_write(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def describe(args_specs, outs):
+    """Signature record for the manifest."""
+    def one(s):
+        return {"shape": list(s.shape), "dtype": str(s.dtype)}
+    return {"inputs": [one(s) for s in args_specs], "outputs": outs}
+
+
+def build_lm_artifacts(cfg, outdir, manifest):
+    n_layers = cfg["n_layers"]
+    names = M.param_names(n_layers)
+    shapes = M.param_shapes(cfg)
+    pspecs = f32_specs([shapes[n] for n in names])
+    np_ = len(names)
+    B, S = TRAIN_BATCH, cfg["seq_len"]
+    tok = spec((B, S), jnp.int32)
+
+    # lm_fwd (ref attention) and lm_fwd_pallas (L1 kernel attention)
+    for tag, use_pallas in [("lm_fwd", False), ("lm_fwd_pallas", True)]:
+        def fwd(*args, _up=use_pallas):
+            params = M.list_to_params(list(args[:np_]), n_layers)
+            return (M.lm_logits(params, args[np_], cfg, use_pallas=_up),)
+
+        n = lower_and_write(fwd, pspecs + [tok], os.path.join(outdir, f"{tag}.hlo.txt"))
+        manifest["artifacts"][tag] = describe(
+            pspecs + [tok], [{"shape": [B, S, cfg["vocab"]], "dtype": "float32"}]
+        )
+        print(f"  {tag}: {n} chars")
+
+    # lm_loss
+    def loss_fn(*args):
+        params = M.list_to_params(list(args[:np_]), n_layers)
+        return (M.lm_loss(params, args[np_], args[np_ + 1], cfg),)
+
+    lower_and_write(loss_fn, pspecs + [tok, tok], os.path.join(outdir, "lm_loss.hlo.txt"))
+    manifest["artifacts"]["lm_loss"] = describe(
+        pspecs + [tok, tok], [{"shape": [], "dtype": "float32"}]
+    )
+    print("  lm_loss: ok")
+
+    # train_step
+    def step_fn(*args):
+        params = M.list_to_params(list(args[:np_]), n_layers)
+        m = M.list_to_params(list(args[np_:2 * np_]), n_layers)
+        v = M.list_to_params(list(args[2 * np_:3 * np_]), n_layers)
+        step, tokens, targets = args[3 * np_], args[3 * np_ + 1], args[3 * np_ + 2]
+        p2, m2, v2, s2, loss = M.train_step(
+            params, m, v, step, tokens, targets, cfg, lr=LM_LR, wd=LM_WD
+        )
+        return (
+            tuple(M.params_to_list(p2, n_layers))
+            + tuple(M.params_to_list(m2, n_layers))
+            + tuple(M.params_to_list(v2, n_layers))
+            + (s2, loss)
+        )
+
+    step_spec = spec((), jnp.int32)
+    args = pspecs + pspecs + pspecs + [step_spec, tok, tok]
+    lower_and_write(step_fn, args, os.path.join(outdir, "train_step.hlo.txt"))
+    manifest["artifacts"]["train_step"] = describe(
+        args,
+        [{"shape": list(shapes[n]), "dtype": "float32"} for n in names] * 3
+        + [{"shape": [], "dtype": "int32"}, {"shape": [], "dtype": "float32"}],
+    )
+    print("  train_step: ok")
+
+    # oats_step on the attention projection shape (d × d)
+    d = cfg["d_model"]
+    keep = (1.0 - OATS_RATE) * d * d
+    rank = max(1, int(round(OATS_RANK_FRACTION * keep / (2 * d))))
+    k = int((1.0 - OATS_RANK_FRACTION) * keep)
+
+    def oats_fn(wd_mat, s, omega):
+        return M.oats_step(wd_mat, s, omega, k, power_iters=OATS_POWER_ITERS)
+
+    oats_args = f32_specs([(d, d), (d, d), (d, rank)])
+    lower_and_write(oats_fn, oats_args, os.path.join(outdir, "oats_step.hlo.txt"))
+    manifest["artifacts"]["oats_step"] = describe(
+        oats_args,
+        [
+            {"shape": [d, rank], "dtype": "float32"},
+            {"shape": [rank, d], "dtype": "float32"},
+            {"shape": [d, d], "dtype": "float32"},
+        ],
+    )
+    manifest["oats_step_params"] = {"rank": rank, "nonzeros": k, "dout": d, "din": d,
+                                    "power_iters": OATS_POWER_ITERS}
+    print(f"  oats_step: rank={rank} k={k}")
+
+    # fused SPL matmul kernel artifact (L1 standalone)
+    from .kernels import oats_kernels as K
+
+    bx = 32
+
+    def spl_fn(x, s, u, vt):
+        return (K.spl_matmul(x, s, u, vt),)
+
+    spl_args = f32_specs([(bx, d), (d, d), (d, rank), (rank, d)])
+    lower_and_write(spl_fn, spl_args, os.path.join(outdir, "spl_matmul.hlo.txt"))
+    manifest["artifacts"]["spl_matmul"] = describe(
+        spl_args, [{"shape": [bx, d], "dtype": "float32"}]
+    )
+    print("  spl_matmul: ok")
+
+
+def build_vit_artifacts(vcfg, outdir, manifest):
+    n_layers = vcfg["n_layers"]
+    names = M.vit_param_names(n_layers)
+    shapes = M.vit_param_shapes(vcfg)
+    pspecs = f32_specs([shapes[n] for n in names])
+    np_ = len(names)
+    B = TRAIN_BATCH
+    side2 = vcfg["image_side"] ** 2
+    img = spec((B, side2))
+    lbl = spec((B,), jnp.int32)
+
+    def fwd(*args):
+        params = dict(zip(names, args[:np_]))
+        return (M.vit_logits(params, args[np_], vcfg),)
+
+    lower_and_write(fwd, pspecs + [img], os.path.join(outdir, "vit_fwd.hlo.txt"))
+    manifest["artifacts"]["vit_fwd"] = describe(
+        pspecs + [img], [{"shape": [B, vcfg["n_classes"]], "dtype": "float32"}]
+    )
+    print("  vit_fwd: ok")
+
+    def step_fn(*args):
+        params = dict(zip(names, args[:np_]))
+        m = dict(zip(names, args[np_:2 * np_]))
+        v = dict(zip(names, args[2 * np_:3 * np_]))
+        step, images, labels = args[3 * np_], args[3 * np_ + 1], args[3 * np_ + 2]
+        p2, m2, v2, s2, loss = M.vit_train_step(
+            params, m, v, step, images, labels, vcfg, lr=VIT_LR, wd=VIT_WD
+        )
+        ordered = lambda d_: tuple(d_[n] for n in names)
+        return ordered(p2) + ordered(m2) + ordered(v2) + (s2, loss)
+
+    args = pspecs + pspecs + pspecs + [spec((), jnp.int32), img, lbl]
+    lower_and_write(step_fn, args, os.path.join(outdir, "vit_train_step.hlo.txt"))
+    manifest["artifacts"]["vit_train_step"] = describe(
+        args,
+        [{"shape": list(shapes[n]), "dtype": "float32"} for n in names] * 3
+        + [{"shape": [], "dtype": "int32"}, {"shape": [], "dtype": "float32"}],
+    )
+    print("  vit_train_step: ok")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--vit", action="store_true", help="also lower the ViT artifacts")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    outdir = os.path.join(args.out, args.preset)
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {
+        "preset": args.preset,
+        "config": cfg,
+        "param_names": M.param_names(cfg["n_layers"]),
+        "param_shapes": {n: list(s) for n, s in M.param_shapes(cfg).items()},
+        "train": {"batch": TRAIN_BATCH, "lr": LM_LR, "wd": LM_WD},
+        "artifacts": {},
+    }
+    print(f"lowering preset '{args.preset}' → {outdir}")
+    build_lm_artifacts(cfg, outdir, manifest)
+    if args.vit:
+        manifest["vit_config"] = VIT_PRESET
+        manifest["vit_param_names"] = M.vit_param_names(VIT_PRESET["n_layers"])
+        manifest["vit_param_shapes"] = {
+            n: list(s) for n, s in M.vit_param_shapes(VIT_PRESET).items()
+        }
+        manifest["vit_train"] = {"batch": TRAIN_BATCH, "lr": VIT_LR, "wd": VIT_WD}
+        build_vit_artifacts(VIT_PRESET, outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("manifest written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Layer-1 Pallas kernels (interpret=True — see DESIGN.md §Hardware-Adaptation).
+
+Three kernels cover the stack's compute hot-spots:
+
+* :func:`scale_columns` — the outlier scaling W·D (paper §2.3), elementwise
+  with a broadcast vector; BlockSpec tiles stream W through VMEM row-blocks.
+* :func:`apply_row_threshold` — hard-threshold application given per-row
+  magnitude cutoffs (the data-parallel half of HARDTHRESHOLD; the cutoff
+  search is a sort, which stays in XLA where it is already optimal).
+* :func:`spl_matmul` — the serving hot path x(S + UVᵀ)ᵀ fused into one
+  kernel: the sparse term is an MXU matmul over a masked dense tile (on a
+  real TPU the mask becomes an N:M structured tile), the low-rank term is
+  two skinny MXU matmuls through a VMEM accumulator.
+* :func:`attention` — tiled causal attention for the L2 model forward.
+
+TPU adaptation notes: the paper's CPU/GPU speedups come from *skipping*
+zeros (DeepSparse) or sparse tensor cores (2:4). On TPU the MXU has no
+unstructured-sparse mode, so the win OATS offers is shifting κ of the
+budget into the *dense low-rank* term which the MXU executes at full
+utilization — exactly what spl_matmul expresses: the low-rank factors tile
+into VMEM (r ≪ d so both skinny matmuls are VMEM-resident), while the
+sparse term's tile is bandwidth-bound. interpret=True keeps all of this
+runnable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size for elementwise kernels (VMEM-friendly: 128×din f32).
+_ROW_BLOCK = 128
+
+
+def _ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def scale_columns(w, d):
+    """W · diag(d) via a row-blocked Pallas kernel. w: [m, n], d: [n]."""
+    m, n = w.shape
+    bm = min(_ROW_BLOCK, m)
+
+    def kernel(w_ref, d_ref, o_ref):
+        o_ref[...] = w_ref[...] * d_ref[...][None, :]
+
+    grid = ((m + bm - 1) // bm,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(w, d)
+
+
+def apply_row_threshold(a, thresh):
+    """Zero |a[i,j]| < thresh[i]; row-blocked. a: [m, n], thresh: [m]."""
+    m, n = a.shape
+    bm = min(_ROW_BLOCK, m)
+
+    def kernel(a_ref, t_ref, o_ref):
+        av = a_ref[...]
+        o_ref[...] = jnp.where(jnp.abs(av) >= t_ref[...][:, None], av, 0.0)
+
+    grid = ((m + bm - 1) // bm,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, thresh)
+
+
+def spl_matmul(x, s, u, vt):
+    """Fused x @ (S + U·Vt)ᵀ. x: [b, din], s: [dout, din], u: [dout, r],
+    vt: [r, din] → [b, dout].
+
+    Grid tiles the batch; each program holds one x-block in VMEM, runs the
+    two skinny low-rank matmuls into a VMEM accumulator, then the (masked)
+    dense sparse-term matmul on the MXU.
+    """
+    b, din = x.shape
+    dout, r = u.shape
+    bb = min(_ROW_BLOCK, b)
+
+    def kernel(x_ref, s_ref, u_ref, vt_ref, o_ref):
+        xb = x_ref[...]
+        # low-rank path: (x @ Vtᵀ) @ Uᵀ — both VMEM-resident skinny matmuls
+        t = jnp.dot(xb, vt_ref[...].T)
+        lr = jnp.dot(t, u_ref[...].T)
+        # sparse path: masked-dense MXU matmul (N:M tile on real hardware)
+        sp = jnp.dot(xb, s_ref[...].T)
+        o_ref[...] = sp + lr
+
+    grid = ((b + bb - 1) // bb,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, din), lambda i: (i, 0)),
+            pl.BlockSpec((dout, din), lambda i: (0, 0)),
+            pl.BlockSpec((dout, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, din), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dout), x.dtype),
+        interpret=True,
+    )(x, s, u, vt)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal=True):
+    """Tiled attention. q/k/v: [heads, seq, head_dim] → same shape.
+
+    One program per (head, query-block); keys/values stream as full-length
+    VMEM blocks (seq is small in this regime; a real-TPU deployment would
+    add a kv-block loop with online softmax à la FlashAttention).
+    """
+    h, s, hd = q.shape
+    bq = min(64, s)
+    scale = 1.0 / (hd ** 0.5)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        iq = pl.program_id(1)
+        qb = q_ref[0]  # [bq, hd]
+        kb = k_ref[0]  # [s, hd]
+        vb = v_ref[0]  # [s, hd]
+        scores = jnp.dot(qb, kb.T) * scale  # [bq, s]
+        if causal:
+            qpos = iq * bq + jax.lax.iota(jnp.int32, bq)[:, None]
+            kpos = jax.lax.iota(jnp.int32, s)[None, :]
+            scores = jnp.where(kpos <= qpos, scores, -1e30)
+        m = scores.max(axis=-1, keepdims=True)
+        p = jnp.exp(scores - m)
+        p = p / p.sum(axis=-1, keepdims=True)
+        o_ref[0] = jnp.dot(p, vb)
+
+    grid = (h, (s + bq - 1) // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, s, hd), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda ih, iq: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, hd), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(kernel_name, **dims):
+    """Estimated per-program VMEM footprint (DESIGN.md §Perf: on-TPU cost is
+    estimated from BlockSpec shapes, since interpret=True timings are
+    CPU-numpy timings)."""
+    f32 = 4
+    if kernel_name == "scale_columns":
+        bm, n = min(_ROW_BLOCK, dims["m"]), dims["n"]
+        return f32 * (2 * bm * n + n)
+    if kernel_name == "spl_matmul":
+        bb = min(_ROW_BLOCK, dims["b"])
+        din, dout, r = dims["din"], dims["dout"], dims["r"]
+        return f32 * (bb * din + dout * din + dout * r + r * din + bb * dout)
+    if kernel_name == "attention":
+        bq = min(64, dims["s"])
+        s, hd = dims["s"], dims["hd"]
+        return f32 * (bq * hd + 2 * s * hd + bq * s + bq * hd)
+    raise ValueError(kernel_name)

@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in :mod:`oats_kernels` has a reference implementation here;
+pytest + hypothesis assert allclose between the two over shape/dtype sweeps.
+These references are also what the L2 model uses when ``use_pallas=False``
+(the two paths lower to equivalent HLO and are cross-checked).
+"""
+
+import jax.numpy as jnp
+
+
+def scale_columns_ref(w, d):
+    """W · diag(d): scale column j of w by d[j] (paper §2.3 outlier scaling)."""
+    return w * d[None, :]
+
+
+def spl_matmul_ref(x, s, u, vt):
+    """Fused sparse-plus-low-rank linear layer: x @ (S + U·Vt)ᵀ.
+
+    x: [b, din], s: [dout, din] (sparse-as-dense), u: [dout, r], vt: [r, din].
+    """
+    return x @ s.T + (x @ vt.T) @ u.T
+
+
+def apply_row_threshold_ref(a, thresh):
+    """Zero entries with |a[i, j]| < thresh[i] (hard-threshold application)."""
+    return jnp.where(jnp.abs(a) >= thresh[:, None], a, 0.0)
+
+
+def rowwise_topk_threshold_ref(a, k):
+    """Per-row hard threshold keeping the k largest |entries| of each row.
+
+    Returns the thresholded matrix. Ties broken by keeping values ≥ the kth
+    magnitude (may keep extra entries only when exact ties occur).
+    """
+    mag = jnp.abs(a)
+    kth = jnp.sort(mag, axis=1)[:, a.shape[1] - k]
+    return jnp.where(mag >= kth[:, None], a, 0.0)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: [heads, seq, head_dim] → [heads, seq, head_dim].
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("htd,hud->htu", q, k) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("htu,hud->htd", probs, v)
+
+
+def orthonormalize_ref(y, iters=12):
+    """Orthonormalize the columns of y [m, r] without LAPACK custom-calls.
+
+    Newton–Schulz iteration for the inverse matrix square root of yᵀy:
+        Q = y · (yᵀy)^(-1/2).
+    Pure matmuls, so the lowered HLO is loadable by xla_extension 0.5.1
+    (jnp.linalg.qr would emit a lapack custom-call — see DESIGN.md).
+    """
+    g = y.T @ y  # [r, r]
+    # Normalize so the spectrum is in (0, 1] — required for NS convergence.
+    norm = jnp.trace(g) + 1e-12
+    gn = g / norm
+    r = y.shape[1]
+    eye = jnp.eye(r, dtype=y.dtype)
+    t = eye
+    for _ in range(iters):
+        tgt = t @ gn @ t
+        t = 0.5 * t @ (3.0 * eye - tgt)
+    # t ≈ gn^(-1/2) ⇒ g^(-1/2) = t / sqrt(norm)
+    return y @ (t / jnp.sqrt(norm))
+
+
+def truncated_svd_ref(a, omega, power_iters=4, ns_iters=12):
+    """Rank-r approximation via randomized subspace iteration.
+
+    a: [m, n]; omega: [n, r] Gaussian test matrix. Returns (u, vt) with
+    L = u @ vt ≈ SVD_r(a); u has orthonormal columns.
+    """
+    y = a @ omega
+    for _ in range(power_iters):
+        q = orthonormalize_ref(y, ns_iters)
+        y = a @ (a.T @ q)
+    q = orthonormalize_ref(y, ns_iters)
+    return q, q.T @ a
+
+
+def oats_step_ref(wd, s, omega, k, power_iters=4):
+    """One OATS alternating-thresholding iteration (paper Algorithm 1 body).
+
+    L = TruncatedSVD(WD − S, r);  S' = HardThreshold_rowwise(WD − L, k).
+    Returns (u, vt, s_new).
+    """
+    u, vt = truncated_svd_ref(wd - s, omega, power_iters)
+    low = u @ vt
+    s_new = rowwise_topk_threshold_ref(wd - low, k)
+    return u, vt, s_new

@@ -1,0 +1,316 @@
+"""Layer-2 JAX model: the transformer LM and ViT whose forward/backward are
+AOT-lowered to HLO artifacts executed by the rust runtime.
+
+Architecture parity contract (verified by rust integration tests):
+pre-LN blocks, eps 1e-5, tanh-GELU, causal MHA with 1/sqrt(hd) scaling,
+learned positional embeddings, untied head, no linear biases. Parameter
+order matches ``rust/src/model/io.rs::param_names`` exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import oats_kernels as K
+from .kernels import ref as R
+
+LN_EPS = 1e-5
+
+
+# ───────────────────────────── parameters ─────────────────────────────
+
+
+def param_names(n_layers):
+    """Canonical parameter order — mirror of rust io::param_names."""
+    names = ["tok_emb", "pos_emb"]
+    for b in range(n_layers):
+        for t in ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w_up", "w_down"]:
+            names.append(f"block{b}.{t}")
+    names += ["lnf_g", "lnf_b", "head"]
+    return names
+
+
+def param_shapes(cfg):
+    """name → shape for the LM. cfg: dict with vocab, d_model, n_heads,
+    n_layers, d_ff, seq_len."""
+    d, dff = cfg["d_model"], cfg["d_ff"]
+    shapes = {
+        "tok_emb": (cfg["vocab"], d),
+        "pos_emb": (cfg["seq_len"], d),
+        "lnf_g": (d,),
+        "lnf_b": (d,),
+        "head": (cfg["vocab"], d),
+    }
+    for b in range(cfg["n_layers"]):
+        shapes[f"block{b}.ln1_g"] = (d,)
+        shapes[f"block{b}.ln1_b"] = (d,)
+        shapes[f"block{b}.wq"] = (d, d)
+        shapes[f"block{b}.wk"] = (d, d)
+        shapes[f"block{b}.wv"] = (d, d)
+        shapes[f"block{b}.wo"] = (d, d)
+        shapes[f"block{b}.ln2_g"] = (d,)
+        shapes[f"block{b}.ln2_b"] = (d,)
+        shapes[f"block{b}.w_up"] = (dff, d)
+        shapes[f"block{b}.w_down"] = (d, dff)
+    return shapes
+
+
+def init_params(cfg, key):
+    """Initialize LM parameters (same scheme as the rust init)."""
+    shapes = param_shapes(cfg)
+    resid = 0.02 / (2 * cfg["n_layers"]) ** 0.5
+    params = {}
+    for name in param_names(cfg["n_layers"]):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1_g", "ln2_g", "lnf_g")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("ln1_b", "ln2_b", "lnf_b")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = resid if name.endswith(("wo", "w_down")) else 0.02
+            if name == "pos_emb":
+                std = 0.01
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def params_to_list(params, n_layers):
+    return [params[n] for n in param_names(n_layers)]
+
+
+def list_to_params(lst, n_layers):
+    return dict(zip(param_names(n_layers), lst))
+
+
+# ───────────────────────────── LM forward ─────────────────────────────
+
+
+def _layernorm(x, g, b):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def _block(params, b, h, n_heads, use_pallas):
+    """One pre-LN transformer block. h: [B, S, d]."""
+    p = lambda t: params[f"block{b}.{t}"]
+    B, S, d = h.shape
+    hd = d // n_heads
+    x = _layernorm(h, p("ln1_g"), p("ln1_b"))
+    q = x @ p("wq").T
+    k = x @ p("wk").T
+    v = x @ p("wv").T
+    # [B, S, d] → [B, heads, S, hd]
+    split = lambda t: t.reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    qh, kh, vh = split(q), split(k), split(v)
+    if use_pallas:
+        ctx = jax.vmap(lambda qq, kk, vv: K.attention(qq, kk, vv, causal=True))(qh, kh, vh)
+    else:
+        ctx = jax.vmap(lambda qq, kk, vv: R.attention_ref(qq, kk, vv, causal=True))(qh, kh, vh)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B, S, d)
+    h = h + ctx @ p("wo").T
+    x2 = _layernorm(h, p("ln2_g"), p("ln2_b"))
+    u = jax.nn.gelu(x2 @ p("w_up").T, approximate=True)
+    return h + u @ p("w_down").T
+
+
+def lm_logits(params, tokens, cfg, use_pallas=False):
+    """tokens: [B, S] int32 → logits [B, S, vocab]."""
+    B, S = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :S, :]
+    for b in range(cfg["n_layers"]):
+        h = _block(params, b, h, cfg["n_heads"], use_pallas)
+    h = _layernorm(h, params["lnf_g"], params["lnf_b"])
+    return h @ params["head"].T
+
+
+def lm_loss(params, tokens, targets, cfg, use_pallas=False):
+    """Mean next-token cross entropy (nats)."""
+    logits = lm_logits(params, tokens, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+# ───────────────────────────── AdamW ─────────────────────────────
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def train_step(params, m, v, step, tokens, targets, cfg, lr=3e-4, wd=0.01,
+               use_pallas=False):
+    """One AdamW step. params/m/v: dicts; step: scalar int32 (1-based after
+    this step). Returns (params', m', v', step+1, loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(p, tokens, targets, cfg, use_pallas)
+    )(params)
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = {}, {}, {}
+    for n in params:
+        g = grads[n]
+        nm = ADAM_B1 * m[n] + (1 - ADAM_B1) * g
+        nv = ADAM_B2 * v[n] + (1 - ADAM_B2) * g * g
+        update = (nm / bc1) / (jnp.sqrt(nv / bc2) + ADAM_EPS)
+        decay = 0.0 if params[n].ndim == 1 else wd  # no decay on ln/bias vecs
+        new_p[n] = params[n] - lr * (update + decay * params[n])
+        new_m[n] = nm
+        new_v[n] = nv
+    return new_p, new_m, new_v, step, loss
+
+
+# ───────────────────────────── OATS step (L2) ─────────────────────────────
+
+
+def oats_step(wd_mat, s, omega, k, power_iters=4, use_pallas=False):
+    """One alternating-thresholding iteration, LAPACK-free (DESIGN.md):
+    subspace-iteration truncated SVD + row-wise hard threshold.
+
+    wd_mat: [dout, din] scaled weights; s: current sparse term; omega:
+    [din, r] test matrix; k: per-layer nonzero budget (static).
+    Returns (u [dout, r], vt [r, din], s_new).
+    """
+    u, vt = R.truncated_svd_ref(wd_mat - s, omega, power_iters)
+    resid = wd_mat - u @ vt
+    per_row = k // wd_mat.shape[0]
+    mag = jnp.abs(resid)
+    kth = jnp.sort(mag, axis=1)[:, wd_mat.shape[1] - per_row]
+    if use_pallas:
+        s_new = K.apply_row_threshold(resid, kth)
+    else:
+        s_new = R.apply_row_threshold_ref(resid, kth)
+    return u, vt, s_new
+
+
+# ───────────────────────────── ViT ─────────────────────────────
+
+VIT_PATCH = 4
+
+
+def vit_param_names(n_layers):
+    names = ["patch_proj", "cls", "pos_emb"]
+    for b in range(n_layers):
+        for t in ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w_up", "w_down"]:
+            names.append(f"block{b}.{t}")
+    names += ["lnf_g", "lnf_b", "head"]
+    return names
+
+
+def vit_param_shapes(cfg):
+    """cfg: dict with image_side, n_classes, d_model, n_heads, n_layers, d_ff."""
+    d, dff = cfg["d_model"], cfg["d_ff"]
+    pe = cfg["image_side"] // VIT_PATCH
+    t = pe * pe + 1
+    shapes = {
+        "patch_proj": (d, VIT_PATCH * VIT_PATCH),
+        "cls": (d,),
+        "pos_emb": (t, d),
+        "lnf_g": (d,),
+        "lnf_b": (d,),
+        "head": (cfg["n_classes"], d),
+    }
+    for b in range(cfg["n_layers"]):
+        shapes[f"block{b}.ln1_g"] = (d,)
+        shapes[f"block{b}.ln1_b"] = (d,)
+        shapes[f"block{b}.wq"] = (d, d)
+        shapes[f"block{b}.wk"] = (d, d)
+        shapes[f"block{b}.wv"] = (d, d)
+        shapes[f"block{b}.wo"] = (d, d)
+        shapes[f"block{b}.ln2_g"] = (d,)
+        shapes[f"block{b}.ln2_b"] = (d,)
+        shapes[f"block{b}.w_up"] = (dff, d)
+        shapes[f"block{b}.w_down"] = (d, dff)
+    return shapes
+
+
+def vit_init_params(cfg, key):
+    shapes = vit_param_shapes(cfg)
+    resid = 0.02 / (2 * cfg["n_layers"]) ** 0.5
+    params = {}
+    for name in vit_param_names(cfg["n_layers"]):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1_g", "ln2_g", "lnf_g")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("ln1_b", "ln2_b", "lnf_b")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "patch_proj":
+            params[name] = 0.05 * jax.random.normal(sub, shape, jnp.float32)
+        elif name == "pos_emb":
+            params[name] = 0.01 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            std = resid if name.endswith(("wo", "w_down")) else 0.02
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _patchify(images, side):
+    """images: [B, side*side] → [B, P, patch_dim], matching rust layout."""
+    B = images.shape[0]
+    pe = side // VIT_PATCH
+    x = images.reshape(B, pe, VIT_PATCH, pe, VIT_PATCH)
+    return x.transpose(0, 1, 3, 2, 4).reshape(B, pe * pe, VIT_PATCH * VIT_PATCH)
+
+
+def _vit_block(params, b, h, n_heads, use_pallas):
+    p = lambda t: params[f"block{b}.{t}"]
+    B, T, d = h.shape
+    hd = d // n_heads
+    x = _layernorm(h, p("ln1_g"), p("ln1_b"))
+    split = lambda t: t.reshape(B, T, n_heads, hd).transpose(0, 2, 1, 3)
+    qh = split(x @ p("wq").T)
+    kh = split(x @ p("wk").T)
+    vh = split(x @ p("wv").T)
+    if use_pallas:
+        ctx = jax.vmap(lambda qq, kk, vv: K.attention(qq, kk, vv, causal=False))(qh, kh, vh)
+    else:
+        ctx = jax.vmap(lambda qq, kk, vv: R.attention_ref(qq, kk, vv, causal=False))(qh, kh, vh)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B, T, d)
+    h = h + ctx @ p("wo").T
+    x2 = _layernorm(h, p("ln2_g"), p("ln2_b"))
+    u = jax.nn.gelu(x2 @ p("w_up").T, approximate=True)
+    return h + u @ p("w_down").T
+
+
+def vit_logits(params, images, cfg, use_pallas=False):
+    """images: [B, side²] → class logits [B, n_classes]."""
+    B = images.shape[0]
+    patches = _patchify(images, cfg["image_side"])
+    h = patches @ params["patch_proj"].T  # [B, P, d]
+    cls = jnp.broadcast_to(params["cls"][None, None, :], (B, 1, h.shape[-1]))
+    h = jnp.concatenate([cls, h], axis=1) + params["pos_emb"][None, :, :]
+    for b in range(cfg["n_layers"]):
+        h = _vit_block(params, b, h, cfg["n_heads"], use_pallas)
+    cls_out = _layernorm(h[:, 0, :], params["lnf_g"], params["lnf_b"])
+    return cls_out @ params["head"].T
+
+
+def vit_loss(params, images, labels, cfg, use_pallas=False):
+    logits = vit_logits(params, images, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def vit_train_step(params, m, v, step, images, labels, cfg, lr=1e-3, wd=0.01,
+                   use_pallas=False):
+    loss, grads = jax.value_and_grad(
+        lambda p: vit_loss(p, images, labels, cfg, use_pallas)
+    )(params)
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = {}, {}, {}
+    for n in params:
+        g = grads[n]
+        nm = ADAM_B1 * m[n] + (1 - ADAM_B1) * g
+        nv = ADAM_B2 * v[n] + (1 - ADAM_B2) * g * g
+        update = (nm / bc1) / (jnp.sqrt(nv / bc2) + ADAM_EPS)
+        decay = 0.0 if params[n].ndim == 1 else wd
+        new_p[n] = params[n] - lr * (update + decay * params[n])
+        new_m[n] = nm
+        new_v[n] = nv
+    return new_p, new_m, new_v, step, loss

@@ -1,0 +1,125 @@
+"""Hypothesis sweeps: Pallas kernels vs pure-jnp references.
+
+This is the L1 correctness signal — every kernel is checked against ref.py
+across randomized shapes (paper-relevant ranges) before AOT lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import oats_kernels as K
+from compile.kernels import ref as R
+
+DEADLINE = None  # interpret-mode pallas is slow; disable per-case deadline
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=20, deadline=DEADLINE)
+@given(m=st.integers(1, 300), n=st.integers(1, 80), seed=st.integers(0, 2**16))
+def test_scale_columns_matches_ref(m, n, seed):
+    w = rand(seed, m, n)
+    d = jnp.abs(rand(seed + 1, n)) + 0.01
+    np.testing.assert_allclose(
+        K.scale_columns(w, d), R.scale_columns_ref(w, d), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=20, deadline=DEADLINE)
+@given(m=st.integers(1, 300), n=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_apply_row_threshold_matches_ref(m, n, seed):
+    a = rand(seed, m, n)
+    t = jnp.abs(rand(seed + 1, m)) * 0.5
+    np.testing.assert_allclose(
+        K.apply_row_threshold(a, t), R.apply_row_threshold_ref(a, t), rtol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=DEADLINE)
+@given(
+    b=st.integers(1, 200),
+    din=st.integers(1, 48),
+    dout=st.integers(1, 48),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_spl_matmul_matches_ref(b, din, dout, r, seed):
+    x = rand(seed, b, din)
+    s = rand(seed + 1, dout, din)
+    u = rand(seed + 2, dout, r)
+    vt = rand(seed + 3, r, din)
+    np.testing.assert_allclose(
+        K.spl_matmul(x, s, u, vt), R.spl_matmul_ref(x, s, u, vt), rtol=1e-3, atol=1e-3
+    )
+
+
+@settings(max_examples=10, deadline=DEADLINE)
+@given(
+    h=st.integers(1, 4),
+    s=st.integers(1, 96),
+    hd=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(h, s, hd, causal, seed):
+    q = rand(seed, h, s, hd)
+    k = rand(seed + 1, h, s, hd)
+    v = rand(seed + 2, h, s, hd)
+    np.testing.assert_allclose(
+        K.attention(q, k, v, causal=causal),
+        R.attention_ref(q, k, v, causal=causal),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=DEADLINE)
+@given(m=st.integers(4, 64), r=st.integers(1, 6), seed=st.integers(0, 2**16))
+def test_orthonormalize_produces_orthonormal_columns(m, r, seed):
+    r = min(r, m)
+    y = rand(seed, m, r)
+    q = R.orthonormalize_ref(y)
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram, np.eye(r), atol=5e-3)
+
+
+@settings(max_examples=8, deadline=DEADLINE)
+@given(seed=st.integers(0, 2**16))
+def test_truncated_svd_exact_on_lowrank(seed):
+    # Planted rank-3 matrix is recovered near-exactly.
+    a = rand(seed, 24, 3) @ rand(seed + 1, 3, 20)
+    omega = rand(seed + 2, 20, 3)
+    u, vt = R.truncated_svd_ref(a, omega, power_iters=6)
+    err = float(jnp.linalg.norm(a - u @ vt) / jnp.linalg.norm(a))
+    assert err < 1e-2, err
+
+
+def test_rowwise_topk_keeps_k_per_row():
+    a = rand(0, 16, 32)
+    out = R.rowwise_topk_threshold_ref(a, 8)
+    nnz_per_row = np.asarray((out != 0).sum(axis=1))
+    assert (nnz_per_row == 8).all()
+
+
+def test_oats_step_residual_decreases():
+    wd = rand(1, 32, 32)
+    s = jnp.zeros((32, 32))
+    omega = rand(2, 32, 4)
+    resids = []
+    for _ in range(6):
+        u, vt, s = R.oats_step_ref(wd, s, omega, k=512, power_iters=4)
+        resids.append(float(jnp.linalg.norm(wd - u @ vt - s)))
+    assert resids[-1] <= resids[0] + 1e-5, resids
+
+
+def test_vmem_footprint_estimates():
+    # DESIGN.md §Perf: footprints must fit a 16 MiB VMEM budget at the
+    # paper-relevant sizes.
+    assert K.vmem_footprint_bytes("spl_matmul", b=128, din=1024, dout=1024, r=128) < 16 * 2**20
+    assert K.vmem_footprint_bytes("attention", s=2048, hd=128) < 16 * 2**20
+    assert K.vmem_footprint_bytes("scale_columns", m=4096, n=4096) < 16 * 2**20

@@ -1,0 +1,132 @@
+"""L2 model tests: shapes, parity between pallas/ref paths, training-step
+behaviour, ViT, and the LAPACK-free decomposition building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+CFG = dict(vocab=64, d_model=32, n_heads=4, n_layers=2, d_ff=64, seq_len=16)
+VCFG = dict(image_side=16, n_classes=8, d_model=32, n_heads=4, n_layers=2, d_ff=64)
+
+
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def toks(key, b=2, s=16):
+    return jax.random.randint(jax.random.PRNGKey(key), (b, s), 0, CFG["vocab"])
+
+
+def test_param_names_cover_shapes():
+    names = M.param_names(CFG["n_layers"])
+    shapes = M.param_shapes(CFG)
+    assert set(names) == set(shapes)
+    assert names[0] == "tok_emb" and names[-1] == "head"
+
+
+def test_logits_shape_and_finite():
+    logits = M.lm_logits(params(), toks(1), CFG)
+    assert logits.shape == (2, 16, 64)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_pallas_and_ref_paths_agree():
+    p = params()
+    t = toks(2)
+    a = M.lm_logits(p, t, CFG, use_pallas=False)
+    b = M.lm_logits(p, t, CFG, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_causality():
+    p = params()
+    t1 = toks(3).at[:, -1].set(0)
+    t2 = toks(3).at[:, -1].set(5)
+    l1 = M.lm_logits(p, t1, CFG)
+    l2 = M.lm_logits(p, t2, CFG)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], atol=1e-5)
+
+
+def test_loss_near_log_vocab_at_init():
+    t = toks(4)
+    loss = float(M.lm_loss(params(), t, toks(5), CFG))
+    assert abs(loss - np.log(CFG["vocab"])) < 1.0
+
+
+def test_train_step_decreases_loss():
+    p = params()
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    step = jnp.int32(0)
+    t_in, t_out = toks(6), toks(7)
+    losses = []
+    fn = jax.jit(lambda p_, m_, v_, s_: M.train_step(p_, m_, v_, s_, t_in, t_out, CFG, lr=1e-3))
+    for _ in range(40):
+        p, m, v, step, loss = fn(p, m, v, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+    assert int(step) == 40
+
+
+def test_adamw_skips_decay_on_vectors():
+    # ln gains should not be decayed toward zero when grads are zero-ish:
+    # check decay masks by inspecting one step with zero grads is impossible
+    # directly; instead verify update leaves ones-vector ln gains near 1.
+    p = params()
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    p2, *_ = M.train_step(p, m, v, jnp.int32(0), toks(8), toks(9), CFG, lr=1e-3, wd=0.5)
+    g0 = float(jnp.abs(p2["block0.ln1_g"] - p["block0.ln1_g"]).max())
+    assert g0 < 0.1  # moved only by gradient, not by 0.5 weight decay
+
+
+def test_oats_step_budget_and_convergence():
+    key = jax.random.PRNGKey(3)
+    wd = jax.random.normal(key, (48, 48))
+    s = jnp.zeros_like(wd)
+    omega = jax.random.normal(key, (48, 6))
+    k = 1024
+    resids = []
+    for _ in range(5):
+        u, vt, s = M.oats_step(wd, s, omega, k)
+        resids.append(float(jnp.linalg.norm(wd - u @ vt - s)))
+    per_row = k // 48
+    assert int((s != 0).sum(axis=1).max()) <= per_row
+    assert resids[-1] <= resids[0]
+
+
+def test_vit_logits_shape():
+    p = M.vit_init_params(VCFG, jax.random.PRNGKey(1))
+    imgs = jax.random.uniform(jax.random.PRNGKey(2), (4, 256))
+    logits = M.vit_logits(p, imgs, VCFG)
+    assert logits.shape == (4, 8)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_vit_train_step_decreases_loss():
+    p = M.vit_init_params(VCFG, jax.random.PRNGKey(4))
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    step = jnp.int32(0)
+    imgs = jax.random.uniform(jax.random.PRNGKey(5), (16, 256))
+    labels = jnp.arange(16, dtype=jnp.int32) % 8
+    fn = jax.jit(lambda p_, m_, v_, s_: M.vit_train_step(p_, m_, v_, s_, imgs, labels, VCFG, lr=3e-3))
+    losses = []
+    for _ in range(40):
+        p, m, v, step, loss = fn(p, m, v, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_patchify_matches_rust_layout():
+    # pixel value = row-major index; patch (0,0) must start 0,1,..; the
+    # second row of the patch starts at 16 (matching rust/src/vit tests).
+    img = jnp.arange(256, dtype=jnp.float32)[None, :]
+    p = M._patchify(img, 16)
+    assert p.shape == (1, 16, 16)
+    assert float(p[0, 0, 0]) == 0.0
+    assert float(p[0, 0, 1]) == 1.0
+    assert float(p[0, 0, 4]) == 16.0
+    assert float(p[0, 1, 0]) == 4.0

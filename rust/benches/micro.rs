@@ -1,0 +1,102 @@
+//! Micro-benchmarks for the §Perf pass: GEMM, CSR GEMM, the fused
+//! sparse+low-rank apply, randomized SVD, and one full OATS iteration.
+//!
+//! Run: `cargo bench --bench micro`
+
+use oats::bench::{black_box, Bench};
+use oats::linalg::randomized_svd;
+use oats::sparse::{Csr, LowRank, SparsePlusLowRank};
+use oats::tensor::{matmul, matmul_bt, Matrix};
+use oats::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut b = Bench::default();
+    println!("== micro benches (d=512 layer scale) ==");
+
+    let d = 512;
+    let a = Matrix::randn(d, d, 1.0, &mut rng);
+    let bm = Matrix::randn(d, d, 1.0, &mut rng);
+    b.run_with_units("gemm 512x512x512", Some((2 * d * d * d) as f64), || {
+        black_box(matmul(&a, &bm));
+    });
+
+    let x = Matrix::randn(64, d, 1.0, &mut rng);
+    b.run_with_units("gemm_bt 64x512 · 512x512", Some((2 * 64 * d * d) as f64), || {
+        black_box(matmul_bt(&x, &a));
+    });
+
+    // 50% sparse CSR
+    let mut s = Matrix::randn(d, d, 1.0, &mut rng);
+    for v in s.data.iter_mut() {
+        if rng.f64() < 0.5 {
+            *v = 0.0;
+        }
+    }
+    let csr = Csr::from_dense(&s);
+    b.run_with_units("csr(50%) matmul_xt 64xd", Some((2 * 64 * csr.nnz()) as f64), || {
+        black_box(csr.matmul_xt(&x));
+    });
+
+    // OATS layer at ρ=0.5, κ=0.25: nnz = 0.375 d², r ≈ 0.0625 d
+    let mut s2 = Matrix::randn(d, d, 1.0, &mut rng);
+    for v in s2.data.iter_mut() {
+        if rng.f64() < 0.625 {
+            *v = 0.0;
+        }
+    }
+    let r = d / 16;
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&s2),
+        low_rank: Some(LowRank {
+            u: Matrix::randn(d, r, 1.0, &mut rng),
+            vt: Matrix::randn(r, d, 1.0, &mut rng),
+        }),
+    };
+    b.run("spl(ρ=.5,κ=.25) apply_batch 64xd", || {
+        black_box(spl.apply_batch(&x));
+    });
+
+    // single-vector decode path
+    let xv: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+    let mut y = vec![0.0f32; d];
+    b.run("dense matvec d=512", || {
+        for (row, out) in y.iter_mut().enumerate() {
+            *out = oats::tensor::dot(a.row(row), &xv);
+        }
+        black_box(&y);
+    });
+    b.run("csr(50%) matvec d=512", || {
+        csr.matvec(&xv, &mut y);
+        black_box(&y);
+    });
+    b.run("spl apply d=512", || {
+        spl.apply(&xv, &mut y);
+        black_box(&y);
+    });
+
+    // randomized SVD — the OATS hot spot
+    let w = Matrix::randn(d, d, 1.0, &mut rng);
+    for rank in [16, 32, 64] {
+        let mut r2 = Rng::new(9);
+        b.run(&format!("rsvd d=512 r={rank} p=2"), || {
+            black_box(randomized_svd(&w, rank, 8, 2, &mut r2));
+        });
+    }
+
+    // one full OATS iteration at layer scale
+    let p = oats::compress::params::solve(d, d, 0.5, 0.25);
+    let mut r3 = Rng::new(11);
+    b.run("oats 1 iter d=512 (ρ=.5 κ=.25)", || {
+        black_box(oats::compress::oats::alternating_thresholding(
+            &w,
+            1,
+            p.rank,
+            p.nonzeros,
+            oats::config::SparsityPattern::RowWise,
+            false,
+            None,
+            &mut r3,
+        ));
+    });
+}

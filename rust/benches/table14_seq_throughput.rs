@@ -1,0 +1,52 @@
+//! Table 14 bench: long-sequence generation throughput — the regime where
+//! compute (not weight bandwidth) dominates and the OATS/unstructured gap
+//! narrows, as in the paper's 256-token appendix experiment.
+//!
+//! Run: `cargo bench --bench table14_seq_throughput`
+
+use oats::calib::CalibSet;
+use oats::config::{CompressConfig, Method, ModelConfig};
+use oats::coordinator::pipeline::compress_clone;
+use oats::data::{CorpusConfig, SyntheticCorpus};
+use oats::experiments::speed::sequence_throughput;
+use oats::model::TransformerLM;
+use oats::report::{speedup, Table};
+
+fn main() {
+    let cfg = ModelConfig::preset("small").unwrap();
+    let model = TransformerLM::init(&cfg, 7);
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 1));
+    let calib = CalibSet::sample(&corpus, 8, 32, 8);
+    let seq = cfg.seq_len - 4;
+
+    let mut t = Table::new(
+        "Table 14 (bench) — long-sequence throughput, 'small' preset",
+        &["Compression", "Method", "tokens/s", "Speedup"],
+    );
+    let dense_tp = sequence_throughput(&model, seq);
+    t.row(vec!["0%".into(), "Dense".into(), format!("{dense_tp:.1}"), speedup(1.0)]);
+
+    for rate in [0.3, 0.4, 0.5] {
+        for (method, kappa, label) in [
+            (Method::Wanda, 0.0, "Unstructured"),
+            (Method::Oats, 0.25, "OATS"),
+        ] {
+            let cc = CompressConfig {
+                method,
+                rate,
+                rank_ratio: kappa,
+                iters: 8,
+                ..Default::default()
+            };
+            let (cm, _) = compress_clone(&model, &calib, &cc, 6).unwrap();
+            let tp = sequence_throughput(&cm, seq);
+            t.row(vec![
+                format!("{}%", (rate * 100.0) as u64),
+                label.into(),
+                format!("{tp:.1}"),
+                speedup(tp / dense_tp),
+            ]);
+        }
+    }
+    t.print();
+}

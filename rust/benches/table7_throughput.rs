@@ -1,0 +1,54 @@
+//! Table 7 bench: single-token CPU serving throughput — dense vs
+//! unstructured pruning vs OATS, at ρ ∈ {0.3, 0.4, 0.5}.
+//!
+//! Weight *values* don't affect kernel speed, so this bench compresses a
+//! randomly-initialized `small` model (no training required) and measures
+//! the KV-cached decode loop through the serving engine.
+//!
+//! Run: `cargo bench --bench table7_throughput`
+
+use oats::calib::CalibSet;
+use oats::config::{CompressConfig, Method, ModelConfig};
+use oats::coordinator::pipeline::compress_clone;
+use oats::data::{CorpusConfig, SyntheticCorpus};
+use oats::experiments::speed::decode_throughput;
+use oats::model::TransformerLM;
+use oats::report::{speedup, Table};
+
+fn main() {
+    let cfg = ModelConfig::preset("small").unwrap();
+    let model = TransformerLM::init(&cfg, 7);
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 1));
+    let calib = CalibSet::sample(&corpus, 8, 32, 8);
+
+    let mut t = Table::new(
+        "Table 7 (bench) — single-token throughput, 'small' preset",
+        &["Compression", "Method", "tokens/s", "Speedup"],
+    );
+    let dense_tp = decode_throughput(&model, 48, 4);
+    t.row(vec!["0%".into(), "Dense".into(), format!("{dense_tp:.1}"), speedup(1.0)]);
+
+    for rate in [0.3, 0.4, 0.5] {
+        for (method, kappa, label) in [
+            (Method::Wanda, 0.0, "Unstructured"),
+            (Method::Oats, 0.25, "OATS"),
+        ] {
+            let cc = CompressConfig {
+                method,
+                rate,
+                rank_ratio: kappa,
+                iters: 8,
+                ..Default::default()
+            };
+            let (cm, _) = compress_clone(&model, &calib, &cc, 6).unwrap();
+            let tp = decode_throughput(&cm, 48, 4);
+            t.row(vec![
+                format!("{}%", (rate * 100.0) as u64),
+                label.into(),
+                format!("{tp:.1}"),
+                speedup(tp / dense_tp),
+            ]);
+        }
+    }
+    t.print();
+}

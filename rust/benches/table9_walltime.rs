@@ -1,0 +1,13 @@
+//! Table 9 bench: wall-clock seconds per OATS alternating-thresholding
+//! iteration per transformer block, across the model presets (the paper's
+//! A40 numbers scale with d_out·d_in·r; ours must show the same scaling).
+//!
+//! Run: `cargo bench --bench table9_walltime`
+
+use oats::experiments::speed::walltime_table;
+
+fn main() {
+    let t = walltime_table(false).unwrap();
+    t.print();
+    println!("\nScaling check: s/iter should grow ~with d²·(d/16) across presets");
+}

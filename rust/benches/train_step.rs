@@ -1,0 +1,31 @@
+//! §Perf bench: seconds per PJRT `train_step` execution, per preset.
+//! Measures the rust-side driver overhead (literal plumbing) + XLA compute.
+//!
+//! Run: `cargo bench --bench train_step`
+
+use oats::data::{CorpusConfig, SyntheticCorpus};
+use oats::runtime::Engine;
+use oats::train::Trainer;
+use std::path::PathBuf;
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    for preset in ["tiny", "small"] {
+        let dir = root.join(preset);
+        if !Engine::available(&dir) {
+            eprintln!("SKIP {preset}: artifacts missing");
+            continue;
+        }
+        let engine = Engine::load(&dir).unwrap();
+        let cfg = engine.model_config().unwrap();
+        let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 1));
+        let mut trainer = Trainer::new(engine, 1).unwrap();
+        // warmup (includes XLA compile)
+        let _ = trainer.train(&corpus, 3).unwrap();
+        let n = 30;
+        let t0 = std::time::Instant::now();
+        let _ = trainer.train(&corpus, n).unwrap();
+        let dt = t0.elapsed().as_secs_f64() / n as f64;
+        println!("{preset}: {:.1} ms/step ({n} steps)", dt * 1e3);
+    }
+}

@@ -1,0 +1,166 @@
+//! A criterion-style micro/macro benchmark harness (criterion itself is not
+//! in the vendored dependency set). Provides warmup, repeated sampling,
+//! summary statistics, and a uniform report format shared by all
+//! `rust/benches/*` targets and the §Perf iteration logs.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark's collected timings.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    /// Optional throughput unit count per iteration (e.g. tokens).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// units/second at the mean time, if a unit count was attached.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.summary.mean)
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(tp) if tp >= 100.0 => format!("  {:>12.1} units/s", tp),
+            Some(tp) => format!("  {:>12.3} units/s", tp),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>10} p50 {:>10} p95 {:>10} (n={}){}",
+            self.name,
+            fmt_secs(self.summary.mean),
+            fmt_secs(self.summary.p50),
+            fmt_secs(self.summary.p95),
+            self.summary.n,
+            tp
+        )
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark runner with warmup and a sample budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Hard cap on total sampling time.
+    pub max_seconds: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, samples: 20, max_seconds: 30.0, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, samples: 5, max_seconds: 10.0, results: Vec::new() }
+    }
+
+    /// Run a benchmark; `f` is one iteration. Returns the recorded result.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.run_with_units(name, None, move || {
+            f();
+        })
+    }
+
+    /// Run with an attached units-per-iteration count for throughput display.
+    pub fn run_with_units(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let budget_start = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+            if budget_start.elapsed().as_secs_f64() > self.max_seconds {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&times),
+            units_per_iter,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Speedup of `b` relative to `a` (a.mean / b.mean) by name lookup.
+    pub fn speedup(&self, base: &str, other: &str) -> Option<f64> {
+        let a = self.results.iter().find(|r| r.name == base)?;
+        let b = self.results.iter().find(|r| r.name == other)?;
+        Some(a.summary.mean / b.summary.mean)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bench { warmup_iters: 1, samples: 5, max_seconds: 5.0, results: vec![] };
+        b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].summary.n >= 1);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::quick();
+        b.run_with_units("unitful", Some(100.0), || {
+            black_box(std::time::Duration::from_micros(1));
+        });
+        assert!(b.results[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn speedup_lookup() {
+        let mut b = Bench::quick();
+        b.run("slow", || std::thread::sleep(std::time::Duration::from_micros(200)));
+        b.run("fast", || std::thread::sleep(std::time::Duration::from_micros(10)));
+        let s = b.speedup("slow", "fast").unwrap();
+        assert!(s > 1.0, "speedup={s}");
+        assert!(b.speedup("nope", "fast").is_none());
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

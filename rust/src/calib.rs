@@ -1,0 +1,167 @@
+//! Calibration pipeline — paper Algorithm 2's outer loop.
+//!
+//! Calibration batches are embedded once, then propagated block by block.
+//! At each block the inputs to its six linear layers are captured (these
+//! inputs have already passed through all previously *compressed* blocks,
+//! exactly as the paper specifies), the per-linear [`CalibStats`] are
+//! accumulated, the block's layers are compressed, and the block output is
+//! recomputed with the compressed weights before moving on.
+
+use crate::compress::CalibStats;
+use crate::data::{Batch, SyntheticCorpus};
+use crate::model::{ForwardCapture, TransformerLM, LINEAR_NAMES};
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+/// Calibration activations: a fixed token set reused across methods so all
+/// pruners see identical data (paper §3.1).
+pub struct CalibSet {
+    pub batches: Vec<Batch>,
+    pub seq_len: usize,
+}
+
+impl CalibSet {
+    /// Sample `n_sequences` of `seq_len` tokens from the corpus calibration
+    /// stream, grouped into batches of `batch_size`.
+    pub fn sample(
+        corpus: &SyntheticCorpus,
+        n_sequences: usize,
+        seq_len: usize,
+        batch_size: usize,
+    ) -> CalibSet {
+        let mut rng: Rng = corpus.stream(0xCA11B);
+        let mut batches = Vec::new();
+        let mut remaining = n_sequences;
+        while remaining > 0 {
+            let b = batch_size.min(remaining);
+            batches.push(corpus.batch(b, seq_len, &mut rng));
+            remaining -= b;
+        }
+        CalibSet { batches, seq_len }
+    }
+
+    pub fn n_sequences(&self) -> usize {
+        self.batches.iter().map(|b| b.inputs.len()).sum()
+    }
+}
+
+/// Per-block capture: the hidden states of every calibration batch at the
+/// current block boundary.
+pub struct BlockPropagator<'m> {
+    pub model: &'m TransformerLM,
+    /// hidden[i] is batch i's hidden state [B·S × d].
+    pub hidden: Vec<Matrix>,
+    pub batch_sizes: Vec<usize>,
+    pub seq_len: usize,
+    pub block: usize,
+}
+
+impl<'m> BlockPropagator<'m> {
+    /// Embed the calibration set; positions the propagator before block 0.
+    pub fn new(model: &'m TransformerLM, calib: &CalibSet) -> BlockPropagator<'m> {
+        let hidden: Vec<Matrix> =
+            calib.batches.iter().map(|b| model.embed(&b.inputs)).collect();
+        let batch_sizes = calib.batches.iter().map(|b| b.inputs.len()).collect();
+        BlockPropagator { model, hidden, batch_sizes, seq_len: calib.seq_len, block: 0 }
+    }
+
+    /// Capture the input statistics of every linear in the current block
+    /// (using the block's *current* weights for the within-block forward).
+    pub fn capture_stats(&self) -> std::collections::HashMap<&'static str, CalibStats> {
+        let mut stats: std::collections::HashMap<&'static str, CalibStats> =
+            std::collections::HashMap::new();
+        for (h, &bsz) in self.hidden.iter().zip(&self.batch_sizes) {
+            let mut cap = ForwardCapture::default();
+            let _ = self.model.block_forward(
+                self.block,
+                h,
+                bsz,
+                self.seq_len,
+                Some(&mut cap),
+                None,
+            );
+            for name in LINEAR_NAMES {
+                let x = &cap.inputs[name];
+                stats
+                    .entry(name)
+                    .or_insert_with(|| CalibStats::new(x.cols))
+                    .update(x, 128);
+            }
+        }
+        for s in stats.values_mut() {
+            s.finalize();
+        }
+        stats
+    }
+
+    /// Recompute the current block's outputs (with whatever weights the
+    /// model now holds — i.e. compressed) and advance to the next block.
+    pub fn advance(&mut self) {
+        for (h, &bsz) in self.hidden.iter_mut().zip(&self.batch_sizes) {
+            *h = self
+                .model
+                .block_forward(self.block, h, bsz, self.seq_len, None, None);
+        }
+        self.block += 1;
+    }
+
+    pub fn done(&self) -> bool {
+        self.block >= self.model.blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::CorpusConfig;
+
+    fn setup() -> (TransformerLM, SyntheticCorpus, CalibSet) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let model = TransformerLM::init(&cfg, 3);
+        let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 9));
+        let calib = CalibSet::sample(&corpus, 8, 16, 4);
+        (model, corpus, calib)
+    }
+
+    #[test]
+    fn calib_set_counts() {
+        let (_, _, calib) = setup();
+        assert_eq!(calib.n_sequences(), 8);
+        assert_eq!(calib.batches.len(), 2);
+    }
+
+    #[test]
+    fn propagation_matches_plain_forward() {
+        // With no compression applied, propagating through all blocks must
+        // equal the model's own forward pass.
+        let (model, _, calib) = setup();
+        let mut prop = BlockPropagator::new(&model, &calib);
+        while !prop.done() {
+            prop.advance();
+        }
+        let logits_prop = model.project_logits(prop.hidden[0].clone());
+        let logits_direct = model.forward(&calib.batches[0].inputs);
+        assert!(logits_prop.fro_dist(&logits_direct) < 1e-4);
+    }
+
+    #[test]
+    fn stats_have_right_dims() {
+        let (model, _, calib) = setup();
+        let prop = BlockPropagator::new(&model, &calib);
+        let stats = prop.capture_stats();
+        assert_eq!(stats["q"].gram.cols, model.cfg.d_model);
+        assert_eq!(stats["down"].gram.cols, model.cfg.d_ff);
+        let rows = 8 * 16; // all sequences × positions
+        assert_eq!(stats["q"].n_samples, rows);
+    }
+
+    #[test]
+    fn qkv_share_input_stats() {
+        let (model, _, calib) = setup();
+        let prop = BlockPropagator::new(&model, &calib);
+        let stats = prop.capture_stats();
+        assert!(stats["q"].gram.fro_dist(&stats["k"].gram) < 1e-6);
+        assert!(stats["q"].gram.fro_dist(&stats["v"].gram) < 1e-6);
+    }
+}

@@ -1,0 +1,120 @@
+//! Command-line argument parsing (stands in for `clap`): subcommands plus
+//! `--flag value` / `--flag=value` / boolean `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args, and flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of f64s.
+    pub fn f64_list_flag(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.flag(name) {
+            Some(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["compress", "--rate", "0.5", "--owl", "--model=base"]);
+        assert_eq!(a.command, "compress");
+        assert_eq!(a.f64_flag("rate", 0.0), 0.5);
+        assert!(a.bool_flag("owl"));
+        assert_eq!(a.flag("model"), Some("base"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["eval", "path/to/model", "--ppl"]);
+        assert_eq!(a.positional, vec!["path/to/model"]);
+        assert!(a.bool_flag("ppl"));
+    }
+
+    #[test]
+    fn negative_number_flag_value() {
+        // `--offset -3` — "-3" does not start with "--" so it is the value.
+        let a = parse(&["run", "--offset", "-3"]);
+        assert_eq!(a.flag("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["sweep", "--rates", "0.3,0.4, 0.5"]);
+        assert_eq!(a.f64_list_flag("rates", &[]), vec![0.3, 0.4, 0.5]);
+        assert_eq!(a.f64_list_flag("missing", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.command, "");
+        assert_eq!(a.usize_flag("iters", 80), 80);
+        assert_eq!(a.flag_or("out", "artifacts"), "artifacts");
+    }
+}

@@ -1,0 +1,46 @@
+//! Magnitude pruning — the classical baseline: keep the largest-|W| entries.
+
+use super::{params, threshold, CompressedLayer};
+use crate::config::CompressConfig;
+use crate::sparse::Csr;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+pub fn compress(w: &Matrix, cfg: &CompressConfig) -> Result<CompressedLayer> {
+    let k = params::solve(w.rows, w.cols, cfg.rate, 0.0).nonzeros;
+    let pruned = threshold::hard_threshold(w, w, k, cfg.pattern);
+    Ok(CompressedLayer::Sparse(Csr::from_dense(&pruned)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, SparsityPattern};
+
+    #[test]
+    fn keeps_largest() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, -9.0, 0.5, 4.0]);
+        let cfg = CompressConfig {
+            method: Method::Magnitude,
+            rate: 0.5,
+            pattern: SparsityPattern::LayerWise,
+            ..Default::default()
+        };
+        let out = compress(&w, &cfg).unwrap();
+        assert_eq!(out.to_dense().data, vec![0.0, -9.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn rate_achieved() {
+        let mut g = crate::util::prop::Gen::new(1);
+        let w = Matrix::from_vec(32, 32, g.vec_normal(1024, 1.0));
+        let cfg = CompressConfig {
+            method: Method::Magnitude,
+            rate: 0.6,
+            pattern: SparsityPattern::RowWise,
+            ..Default::default()
+        };
+        let out = compress(&w, &cfg).unwrap();
+        assert!((out.compression_rate() - 0.6).abs() < 0.05);
+    }
+}

@@ -1,0 +1,262 @@
+//! The compression algorithms: OATS (the paper's contribution) and every
+//! baseline it is benchmarked against (magnitude, Wanda, SparseGPT, DSNoT),
+//! plus OWL non-uniform layerwise rates.
+//!
+//! All compressors share one entry point, [`compress_layer`], which takes the
+//! dense weight `W` (out×in), the layer's calibration statistics, and a
+//! [`CompressConfig`], and returns a [`CompressedLayer`].
+
+pub mod dsnot;
+pub mod magnitude;
+pub mod oats;
+pub mod owl;
+pub mod params;
+pub mod sparsegpt;
+pub mod threshold;
+pub mod wanda;
+
+use crate::config::{CompressConfig, Method};
+use crate::sparse::{Csr, SparsePlusLowRank};
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Per-layer activation statistics gathered by the calibration pipeline
+/// (Algorithm 2's `Xᵀ X` plus the extras the baselines/ablations need).
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    /// Gram matrix XᵀX, din×din (SparseGPT Hessian; its diagonal feeds
+    /// OATS/Wanda scaling).
+    pub gram: Matrix,
+    /// Column means E[x_j] (DSNoT's reconstruction-error criterion).
+    pub col_mean: Vec<f32>,
+    /// A row subsample of X for the robust (median) scaling ablation (A.3).
+    pub sample_rows: Matrix,
+    /// Number of rows (batch·seq) accumulated.
+    pub n_samples: usize,
+}
+
+impl CalibStats {
+    pub fn new(din: usize) -> CalibStats {
+        CalibStats {
+            gram: Matrix::zeros(din, din),
+            col_mean: vec![0.0; din],
+            sample_rows: Matrix::zeros(0, din),
+            n_samples: 0,
+        }
+    }
+
+    /// Accumulate a batch of activations X [b × din].
+    pub fn update(&mut self, x: &Matrix, keep_samples: usize) {
+        assert_eq!(x.cols, self.gram.cols);
+        // gram += XᵀX (rank-b update)
+        for r in 0..x.rows {
+            let row = x.row(r);
+            for i in 0..x.cols {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let g = &mut self.gram.data[i * x.cols..(i + 1) * x.cols];
+                for (gv, &xj) in g.iter_mut().zip(row) {
+                    *gv += xi * xj;
+                }
+            }
+        }
+        for r in 0..x.rows {
+            for (m, &v) in self.col_mean.iter_mut().zip(x.row(r)) {
+                *m += v;
+            }
+        }
+        // Keep the first `keep_samples` rows for the robust-scaling ablation.
+        let want = keep_samples.saturating_sub(self.sample_rows.rows);
+        for r in 0..x.rows.min(want) {
+            self.sample_rows.data.extend_from_slice(x.row(r));
+            self.sample_rows.rows += 1;
+        }
+        self.n_samples += x.rows;
+    }
+
+    /// Finalized mean (update() accumulates sums).
+    pub fn finalize(&mut self) {
+        if self.n_samples > 0 {
+            let inv = 1.0 / self.n_samples as f32;
+            for m in &mut self.col_mean {
+                *m *= inv;
+            }
+        }
+    }
+
+    /// D = sqrt(diag(XᵀX)) — the paper's outlier scaling (§2.3). Zero
+    /// columns get scale 1 so D stays invertible.
+    pub fn scale_d(&self) -> Vec<f32> {
+        (0..self.gram.cols)
+            .map(|i| {
+                let d = self.gram.at(i, i).max(0.0).sqrt();
+                if d > 1e-12 {
+                    d
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
+    /// ‖x_j‖₂ per column (Wanda's score scale — identical to `scale_d`).
+    pub fn col_norms(&self) -> Vec<f32> {
+        self.scale_d()
+    }
+
+    /// D_robust = median(|X|) per column (Appendix A.3). Falls back to
+    /// `scale_d` if no samples were retained.
+    pub fn robust_scale(&self) -> Vec<f32> {
+        if self.sample_rows.rows == 0 {
+            return self.scale_d();
+        }
+        let n = self.sample_rows.rows;
+        (0..self.sample_rows.cols)
+            .map(|j| {
+                let mut col: Vec<f32> =
+                    (0..n).map(|r| self.sample_rows.at(r, j).abs()).collect();
+                col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let med = col[n / 2];
+                if med > 1e-12 {
+                    med
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
+    /// Convenience for tests: stats equivalent to observing X directly.
+    pub fn from_activations(x: &Matrix) -> CalibStats {
+        let mut s = CalibStats::new(x.cols);
+        s.update(x, x.rows.min(256));
+        s.finalize();
+        s
+    }
+}
+
+/// Result of compressing one linear layer.
+#[derive(Clone, Debug)]
+pub enum CompressedLayer {
+    /// Untouched dense weight (method = Dense or excluded layer).
+    Dense(Matrix),
+    /// Sparse-only result stored in CSR (magnitude/Wanda/SparseGPT/DSNoT,
+    /// or OATS with κ=0).
+    Sparse(Csr),
+    /// OATS' sparse + low-rank decomposition.
+    Spl(SparsePlusLowRank),
+}
+
+impl CompressedLayer {
+    /// Dense reconstruction, for evaluation paths that want plain GEMM.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            CompressedLayer::Dense(w) => w.clone(),
+            CompressedLayer::Sparse(s) => s.to_dense(),
+            CompressedLayer::Spl(spl) => spl.to_dense(),
+        }
+    }
+
+    /// Nonzero parameters, per the paper's compression-rate accounting.
+    pub fn param_count(&self) -> usize {
+        match self {
+            CompressedLayer::Dense(w) => w.rows * w.cols,
+            CompressedLayer::Sparse(s) => s.nnz(),
+            CompressedLayer::Spl(spl) => spl.param_count(),
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            CompressedLayer::Dense(w) => (w.rows, w.cols),
+            CompressedLayer::Sparse(s) => (s.rows, s.cols),
+            CompressedLayer::Spl(spl) => (spl.sparse.rows, spl.sparse.cols),
+        }
+    }
+
+    /// Achieved compression rate 1 − params/dense.
+    pub fn compression_rate(&self) -> f64 {
+        let (r, c) = self.shape();
+        1.0 - self.param_count() as f64 / (r * c) as f64
+    }
+}
+
+/// Compress one layer with the configured method. `cfg.rate` is the target
+/// for THIS layer (the coordinator applies OWL adjustments before calling).
+pub fn compress_layer(
+    w: &Matrix,
+    stats: &CalibStats,
+    cfg: &CompressConfig,
+) -> Result<CompressedLayer> {
+    match cfg.method {
+        Method::Dense => Ok(CompressedLayer::Dense(w.clone())),
+        Method::Magnitude => magnitude::compress(w, cfg),
+        Method::Wanda => wanda::compress(w, stats, cfg),
+        Method::SparseGpt => sparsegpt::compress(w, stats, cfg),
+        Method::DsNoT => dsnot::compress(w, stats, cfg),
+        Method::Oats => oats::compress(w, stats, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn calib_stats_gram_matches_direct() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(50, 8, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&x);
+        let direct = crate::tensor::matmul(&x.transpose(), &x);
+        assert!(stats.gram.fro_dist(&direct) < 1e-2);
+        assert_eq!(stats.n_samples, 50);
+    }
+
+    #[test]
+    fn calib_stats_incremental_equals_batch() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(40, 6, 1.0, &mut rng);
+        let full = CalibStats::from_activations(&x);
+        let mut inc = CalibStats::new(6);
+        let half1 = Matrix::from_vec(20, 6, x.data[..120].to_vec());
+        let half2 = Matrix::from_vec(20, 6, x.data[120..].to_vec());
+        inc.update(&half1, 256);
+        inc.update(&half2, 256);
+        inc.finalize();
+        assert!(inc.gram.fro_dist(&full.gram) < 1e-3);
+        for (a, b) in inc.col_mean.iter().zip(&full.col_mean) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scale_d_handles_zero_columns() {
+        let x = Matrix::from_vec(3, 2, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let stats = CalibStats::from_activations(&x);
+        let d = stats.scale_d();
+        assert!((d[0] - (14.0f32).sqrt()).abs() < 1e-4);
+        assert_eq!(d[1], 1.0); // dead column → safe scale
+    }
+
+    #[test]
+    fn robust_scale_is_median() {
+        let x = Matrix::from_vec(3, 1, vec![-1.0, 10.0, 2.0]);
+        let stats = CalibStats::from_activations(&x);
+        let d = stats.robust_scale();
+        assert!((d[0] - 2.0).abs() < 1e-6); // median(1,10,2)=2
+    }
+
+    #[test]
+    fn dense_method_is_identity() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&Matrix::randn(16, 8, 1.0, &mut rng));
+        let cfg = CompressConfig { method: Method::Dense, ..Default::default() };
+        let out = compress_layer(&w, &stats, &cfg).unwrap();
+        assert!(out.to_dense().fro_dist(&w) < 1e-9);
+        assert_eq!(out.compression_rate(), 0.0);
+    }
+}

@@ -1,0 +1,355 @@
+//! OATS — the paper's algorithm (Algorithms 1 and 2).
+//!
+//! `compress` scales the weight by `D = sqrt(diag(XᵀX))`, runs N iterations
+//! of alternating thresholding (truncated SVD ↔ hard thresholding) on `WD`,
+//! and returns `S·D⁻¹` as CSR plus `L·D⁻¹` as a low-rank factor pair.
+//!
+//! The ablation switches of §3.3 / Appendix A.3–A.5 are all supported:
+//! no-scaling, robust (median) scaling, hard-threshold-first order, and
+//! magnitude-based (unscaled) selection for the sparse component.
+
+use super::params;
+use super::threshold::{self, Mask};
+use super::{CalibStats, CompressedLayer};
+use crate::config::{CompressConfig, SparsityPattern};
+use crate::linalg::{randomized_svd, TruncatedSvd};
+use crate::sparse::{Csr, LowRank, SparsePlusLowRank};
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Oversampling and power iterations for the randomized truncated SVD.
+/// Two power iterations suffice here because alternating thresholding
+/// re-solves L every iteration (errors wash out across iterations).
+const SVD_OVERSAMPLE: usize = 8;
+const SVD_POWER_ITERS: usize = 2;
+
+/// Result of the raw decomposition (scaled space) — exposed for tests and
+/// for the runtime cross-validation against the JAX `oats_step` artifact.
+#[derive(Clone, Debug)]
+pub struct Decomposition {
+    pub sparse: Matrix,
+    pub svd: TruncatedSvd,
+    /// ‖WD − S − L‖_F after the final iteration.
+    pub residual: f64,
+}
+
+/// ALTERNATINGTHRESHOLDING (paper Algorithm 1), with the A.4/A.5 ablation
+/// switches. Operates entirely in the scaled space (input `wd`).
+///
+/// * `select_scores`: optional alternative score matrix for the sparse-term
+///   selection (A.5 passes |(WD−L)·D⁻¹|; `None` means select on `WD−L`).
+pub fn alternating_thresholding(
+    wd: &Matrix,
+    iters: usize,
+    rank: usize,
+    nonzeros: usize,
+    pattern: SparsityPattern,
+    threshold_first: bool,
+    inv_d_for_selection: Option<&[f32]>,
+    rng: &mut Rng,
+) -> Decomposition {
+    let mut s = Matrix::zeros(wd.rows, wd.cols);
+    let mut svd = TruncatedSvd {
+        u: Matrix::zeros(wd.rows, rank.max(1)),
+        s: vec![0.0; rank.max(1)],
+        vt: Matrix::zeros(rank.max(1), wd.cols),
+    };
+    let mut low = Matrix::zeros(wd.rows, wd.cols);
+
+    let ht = |resid: &Matrix, rng_mask: Option<&[f32]>| -> Matrix {
+        match rng_mask {
+            Some(inv_d) => {
+                // A.5: select on the *unscaled* residual magnitudes but keep
+                // scaled values, so S stays in the scaled space.
+                let scores = resid.mul_columns(inv_d);
+                threshold::hard_threshold(resid, &scores, nonzeros, pattern)
+            }
+            None => threshold::hard_threshold(resid, resid, nonzeros, pattern),
+        }
+    };
+
+    for it in 0..iters.max(1) {
+        if threshold_first && it == 0 {
+            // A.4 order ablation: hard-threshold before the first SVT.
+            let resid = wd.clone();
+            s = ht(&resid, inv_d_for_selection);
+        }
+        // L = TRUNCATEDSVD(WD − S, r)
+        if rank > 0 {
+            let mut resid = wd.clone();
+            resid.axpy(-1.0, &s);
+            svd = randomized_svd(&resid, rank, SVD_OVERSAMPLE, SVD_POWER_ITERS, rng);
+            low = svd.reconstruct();
+        }
+        // S = HARDTHRESHOLD(WD − L, k)
+        let mut resid = wd.clone();
+        resid.axpy(-1.0, &low);
+        s = ht(&resid, inv_d_for_selection);
+    }
+
+    let mut err = wd.clone();
+    err.axpy(-1.0, &s);
+    err.axpy(-1.0, &low);
+    Decomposition { sparse: s, svd, residual: err.fro_norm() }
+}
+
+/// OATS (paper Algorithm 2) on one layer.
+pub fn compress(w: &Matrix, stats: &CalibStats, cfg: &CompressConfig) -> Result<CompressedLayer> {
+    let (dout, din) = (w.rows, w.cols);
+    anyhow::ensure!(din == stats.gram.cols, "stats dim {} != layer din {din}", stats.gram.cols);
+    let p = params::solve(dout, din, cfg.rate, cfg.rank_ratio);
+    let mut rng = Rng::new(cfg.seed ^ ((dout as u64) << 32 | din as u64));
+
+    // D (or its ablation variants).
+    let d: Vec<f32> = if !cfg.scale_by_d {
+        vec![1.0; din]
+    } else if cfg.robust_scaling {
+        stats.robust_scale()
+    } else {
+        stats.scale_d()
+    };
+    let inv_d: Vec<f32> = d.iter().map(|&x| 1.0 / x).collect();
+
+    let wd = w.mul_columns(&d);
+    let dec = alternating_thresholding(
+        &wd,
+        cfg.iters,
+        p.rank,
+        p.nonzeros,
+        cfg.pattern,
+        cfg.threshold_first,
+        if cfg.scale_lowrank_only { Some(&inv_d) } else { None },
+        &mut rng,
+    );
+
+    // Undo the scaling: S·D⁻¹ stays sparse; L·D⁻¹ folds into Vt.
+    let s_unscaled = dec.sparse.mul_columns(&inv_d);
+    let low_rank = if p.rank > 0 {
+        // U keeps the singular values (U·Σ), Vt gets D⁻¹.
+        let mut u = dec.svd.u.clone();
+        for (j, &sv) in dec.svd.s.iter().enumerate() {
+            u.scale_column(j, sv);
+        }
+        Some(LowRank { u, vt: dec.svd.vt.mul_columns(&inv_d) })
+    } else {
+        None
+    };
+
+    let spl = SparsePlusLowRank { sparse: Csr::from_dense(&s_unscaled), low_rank };
+    Ok(CompressedLayer::Spl(spl))
+}
+
+/// Wanda-equivalence check helper (paper §6): OATS at κ=0, N=1 is exactly
+/// one hard-threshold of WD mapped back through D⁻¹.
+pub fn single_threshold_reference(
+    w: &Matrix,
+    d: &[f32],
+    k: usize,
+    pattern: SparsityPattern,
+) -> Matrix {
+    let wd = w.mul_columns(d);
+    let thr = threshold::hard_threshold(&wd, &wd, k, pattern);
+    let inv: Vec<f32> = d.iter().map(|&x| 1.0 / x).collect();
+    thr.mul_columns(&inv)
+}
+
+/// Expose the mask of a compressed sparse term (testing/DSNoT interop).
+pub fn mask_of(m: &Matrix) -> Mask {
+    Mask {
+        rows: m.rows,
+        cols: m.cols,
+        keep: m.data.iter().map(|&v| v != 0.0).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::util::prop::check;
+
+    fn outlier_stats(din: usize, seed: u64) -> CalibStats {
+        let mut g = crate::util::prop::Gen::new(seed);
+        let x = Matrix::from_vec(64, din, g.outlier_matrix(64, din, 0.06));
+        CalibStats::from_activations(&x)
+    }
+
+    fn default_cfg() -> CompressConfig {
+        CompressConfig { method: Method::Oats, iters: 20, ..Default::default() }
+    }
+
+    #[test]
+    fn residual_decreases_over_iterations() {
+        let mut g = crate::util::prop::Gen::new(7);
+        let w = Matrix::from_vec(24, 32, g.vec_normal(24 * 32, 1.0));
+        let mut rng = Rng::new(1);
+        let d1 = alternating_thresholding(
+            &w, 1, 4, 200, SparsityPattern::RowWise, false, None, &mut rng,
+        );
+        let mut rng = Rng::new(1);
+        let d20 = alternating_thresholding(
+            &w, 20, 4, 200, SparsityPattern::RowWise, false, None, &mut rng,
+        );
+        assert!(
+            d20.residual <= d1.residual + 1e-6,
+            "N=20 residual {} vs N=1 {}",
+            d20.residual,
+            d1.residual
+        );
+    }
+
+    #[test]
+    fn compression_rate_hits_target_prop() {
+        check("OATS achieves ρ within rounding", 10, |g| {
+            let dout = g.usize_range(16, 48);
+            let din = g.usize_range(16, 48);
+            let rate = *g.choose(&[0.3, 0.4, 0.5]);
+            let kappa = *g.choose(&[0.0, 0.2, 0.3]);
+            let w = Matrix::from_vec(dout, din, g.vec_normal(dout * din, 1.0));
+            let stats = outlier_stats(din, 99);
+            let cfg = CompressConfig {
+                rate,
+                rank_ratio: kappa,
+                iters: 3,
+                ..default_cfg()
+            };
+            let out = compress(&w, &stats, &cfg).unwrap();
+            let achieved = out.compression_rate();
+            // Row-wise flooring + rank ceil ⇒ achieved ≥ target − small slack.
+            let tol = (dout + din) as f64 / (dout * din) as f64 + 1.0 / din as f64;
+            assert!(
+                achieved >= rate - tol,
+                "target ρ={rate} κ={kappa} achieved={achieved} (dout={dout} din={din})"
+            );
+        });
+    }
+
+    #[test]
+    fn kappa_zero_reduces_to_wanda_selection() {
+        // §6: OATS with κ=0, N=1 == Wanda's scaled hard-threshold.
+        let mut g = crate::util::prop::Gen::new(3);
+        let w = Matrix::from_vec(16, 24, g.vec_normal(16 * 24, 1.0));
+        let stats = outlier_stats(24, 5);
+        let cfg = CompressConfig {
+            rank_ratio: 0.0,
+            iters: 1,
+            rate: 0.5,
+            pattern: SparsityPattern::RowWise,
+            ..default_cfg()
+        };
+        let out = compress(&w, &stats, &cfg).unwrap();
+        let d = stats.scale_d();
+        let k = params::solve(16, 24, 0.5, 0.0).nonzeros;
+        let want = single_threshold_reference(&w, &d, k, SparsityPattern::RowWise);
+        assert!(out.to_dense().fro_dist(&want) < 1e-4);
+    }
+
+    #[test]
+    fn exact_sparse_plus_lowrank_recovered() {
+        // Plant W = S* + L* with r=2 and sparse k; OATS should reach a
+        // near-zero residual (Robust PCA exact-recovery regime).
+        let mut rng = Rng::new(11);
+        let u = Matrix::randn(30, 2, 1.0, &mut rng);
+        let v = Matrix::randn(2, 40, 1.0, &mut rng);
+        let mut w = crate::tensor::matmul(&u, &v);
+        // plant 40 sparse spikes
+        for _ in 0..40 {
+            let r = rng.below(30);
+            let c = rng.below(40);
+            w.data[r * 40 + c] += 10.0 * (rng.f32() - 0.5).signum();
+        }
+        let mut rng2 = Rng::new(1);
+        let dec = alternating_thresholding(
+            &w, 30, 2, 60, SparsityPattern::LayerWise, false, None, &mut rng2,
+        );
+        assert!(
+            dec.residual / w.fro_norm() < 0.05,
+            "relative residual {}",
+            dec.residual / w.fro_norm()
+        );
+    }
+
+    #[test]
+    fn scaling_preserves_outlier_columns_better() {
+        // With heavy outlier columns, scaled OATS must reconstruct the
+        // outlier-weighted error better than unscaled.
+        let mut g = crate::util::prop::Gen::new(13);
+        let w = Matrix::from_vec(32, 48, g.vec_normal(32 * 48, 1.0));
+        let stats = outlier_stats(48, 21);
+        let d = stats.scale_d();
+
+        let scaled_cfg = CompressConfig { rate: 0.5, iters: 10, ..default_cfg() };
+        let unscaled_cfg = CompressConfig { scale_by_d: false, ..scaled_cfg.clone() };
+        let ws = compress(&w, &stats, &scaled_cfg).unwrap().to_dense();
+        let wu = compress(&w, &stats, &unscaled_cfg).unwrap().to_dense();
+
+        // Error in the D-weighted metric (what the loss sees to first order).
+        let err = |wc: &Matrix| -> f64 {
+            let mut e = w.clone();
+            e.axpy(-1.0, wc);
+            e.mul_columns(&d).fro_norm()
+        };
+        assert!(
+            err(&ws) < err(&wu),
+            "scaled {} !< unscaled {}",
+            err(&ws),
+            err(&wu)
+        );
+    }
+
+    #[test]
+    fn nm_pattern_respected_end_to_end() {
+        let mut g = crate::util::prop::Gen::new(17);
+        let w = Matrix::from_vec(16, 32, g.vec_normal(16 * 32, 1.0));
+        let stats = outlier_stats(32, 23);
+        let cfg = CompressConfig {
+            rate: 0.5,
+            rank_ratio: 0.3,
+            iters: 5,
+            pattern: SparsityPattern::Nm { n: 2, m: 8 },
+            ..default_cfg()
+        };
+        let out = compress(&w, &stats, &cfg).unwrap();
+        if let CompressedLayer::Spl(spl) = &out {
+            let dense_s = spl.sparse.to_dense();
+            assert!(crate::sparse::NmPattern { n: 2, m: 8 }.validates(&dense_s));
+            assert!(spl.low_rank.is_some());
+        } else {
+            panic!("expected Spl");
+        }
+    }
+
+    #[test]
+    fn ablation_flags_run() {
+        let mut g = crate::util::prop::Gen::new(19);
+        let w = Matrix::from_vec(12, 16, g.vec_normal(12 * 16, 1.0));
+        let stats = outlier_stats(16, 29);
+        for (robust, first, lronly) in
+            [(true, false, false), (false, true, false), (false, false, true)]
+        {
+            let cfg = CompressConfig {
+                rate: 0.4,
+                rank_ratio: 0.2,
+                iters: 4,
+                robust_scaling: robust,
+                threshold_first: first,
+                scale_lowrank_only: lronly,
+                ..default_cfg()
+            };
+            let out = compress(&w, &stats, &cfg).unwrap();
+            assert!(out.compression_rate() > 0.3);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut g = crate::util::prop::Gen::new(23);
+        let w = Matrix::from_vec(10, 12, g.vec_normal(120, 1.0));
+        let stats = outlier_stats(12, 31);
+        let cfg = CompressConfig { iters: 5, ..default_cfg() };
+        let a = compress(&w, &stats, &cfg).unwrap().to_dense();
+        let b = compress(&w, &stats, &cfg).unwrap().to_dense();
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,127 @@
+//! OWL — Outlier-Weighed Layerwise sparsity ratios (Yin et al., 2024b).
+//!
+//! Layers with more activation-outlier mass get *lower* sparsity. The
+//! layerwise outlier distribution is measured as the fraction of entries of
+//! the Wanda-style score matrix `|W|·‖x‖` exceeding `M ×` the layer's mean
+//! score; ratios are mapped linearly to per-layer rates clipped to
+//! `rate ± λ` and renormalized so the global rate is preserved.
+
+use super::{wanda, CalibStats};
+use crate::tensor::Matrix;
+
+/// Outlier fraction of one layer: share of score entries > m·mean(score).
+pub fn outlier_fraction(w: &Matrix, stats: &CalibStats, m: f64) -> f64 {
+    let s = wanda::scores(w, stats);
+    let mean = crate::util::stats::mean_f32(&s.data);
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let thresh = (m * mean) as f32;
+    s.data.iter().filter(|&&v| v > thresh).count() as f64 / s.data.len() as f64
+}
+
+/// Map per-layer outlier fractions to per-layer compression rates.
+///
+/// Higher outlier fraction ⇒ lower rate (keep more). Rates are confined to
+/// `[rate−λ, rate+λ]` and shifted so that the parameter-weighted mean equals
+/// the global target (paper: "OWL ratios", used at ρ=0.6, Table 5).
+pub fn layerwise_rates(
+    outlier_fracs: &[f64],
+    layer_params: &[usize],
+    global_rate: f64,
+    lambda: f64,
+) -> Vec<f64> {
+    assert_eq!(outlier_fracs.len(), layer_params.len());
+    let n = outlier_fracs.len();
+    if n == 0 {
+        return vec![];
+    }
+    let max_f = outlier_fracs.iter().cloned().fold(f64::MIN, f64::max);
+    let min_f = outlier_fracs.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (max_f - min_f).max(1e-12);
+    // Linear map: most-outlier layer → rate−λ, least → rate+λ.
+    let mut rates: Vec<f64> = outlier_fracs
+        .iter()
+        .map(|&f| {
+            let t = (f - min_f) / span; // 0..1
+            global_rate + lambda * (1.0 - 2.0 * t)
+        })
+        .collect();
+    // Renormalize (parameter-weighted) to hit the global target exactly,
+    // then re-clip; one round of each is sufficient for our λ values.
+    let total: f64 = layer_params.iter().map(|&p| p as f64).sum();
+    let achieved: f64 = rates
+        .iter()
+        .zip(layer_params)
+        .map(|(&r, &p)| r * p as f64)
+        .sum::<f64>()
+        / total;
+    let shift = global_rate - achieved;
+    for r in &mut rates {
+        *r = (*r + shift).clamp(0.05, 0.95);
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    #[test]
+    fn outlier_fraction_detects_outliers() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(16, 32, 1.0, &mut rng);
+        let mut x = Matrix::randn(64, 32, 1.0, &mut rng);
+        let flat = CalibStats::from_activations(&x);
+        let f_flat = outlier_fraction(&w, &flat, 5.0);
+        for r in 0..x.rows {
+            *x.at_mut(r, 0) *= 50.0;
+            *x.at_mut(r, 1) *= 50.0;
+        }
+        let spiky = CalibStats::from_activations(&x);
+        let f_spiky = outlier_fraction(&w, &spiky, 5.0);
+        assert!(f_spiky > f_flat, "{f_spiky} !> {f_flat}");
+    }
+
+    #[test]
+    fn rates_weighted_mean_preserved_prop() {
+        check("OWL preserves global rate", 100, |g| {
+            let n = g.usize_range(1, 12);
+            let fracs: Vec<f64> = (0..n).map(|_| g.f64_unit() * 0.2).collect();
+            let params: Vec<usize> = (0..n).map(|_| g.usize_range(1000, 100_000)).collect();
+            let rate = 0.3 + g.f64_unit() * 0.4;
+            let lambda = 0.08;
+            let rates = layerwise_rates(&fracs, &params, rate, lambda);
+            let total: f64 = params.iter().map(|&p| p as f64).sum();
+            let achieved: f64 =
+                rates.iter().zip(&params).map(|(&r, &p)| r * p as f64).sum::<f64>() / total;
+            assert!((achieved - rate).abs() < 0.02, "achieved {achieved} target {rate}");
+            // Individual rates stay within 2λ of the target (λ map plus the
+            // parameter-weighted renormalization shift, each bounded by λ).
+            for &r in &rates {
+                assert!(r >= rate - 2.0 * lambda - 1e-9 && r <= rate + 2.0 * lambda + 1e-9, "r={r} target {rate}");
+            }
+        });
+    }
+
+    #[test]
+    fn outlier_layers_get_lower_rates() {
+        let fracs = [0.2, 0.01, 0.01, 0.01];
+        let params = [100usize, 100, 100, 100];
+        let rates = layerwise_rates(&fracs, &params, 0.6, 0.08);
+        assert!(rates[0] < rates[1], "{rates:?}");
+        assert!(rates[0] < 0.6);
+    }
+
+    #[test]
+    fn uniform_fracs_give_uniform_rates() {
+        let fracs = [0.05, 0.05, 0.05];
+        let params = [10usize, 10, 10];
+        let rates = layerwise_rates(&fracs, &params, 0.5, 0.08);
+        // span collapses → all layers land on the same (clipped) rate
+        let achieved: f64 = rates.iter().sum::<f64>() / 3.0;
+        assert!((achieved - 0.5).abs() < 0.02, "{rates:?}");
+    }
+}

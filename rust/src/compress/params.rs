@@ -1,0 +1,98 @@
+//! The (ρ, κ) → (r, k) parameter solver — paper Equation 2.
+//!
+//! Given a compression rate ρ and a rank ratio κ, splits the kept parameter
+//! budget `(1−ρ)·dout·din` between the low-rank term (`r(dout+din)` params)
+//! and the sparse term (`k` nonzeros).
+
+/// Resolved per-layer compression parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OatsParams {
+    /// Rank of the low-rank term L.
+    pub rank: usize,
+    /// Number of nonzeros in the sparse term S.
+    pub nonzeros: usize,
+}
+
+/// Paper Eq. 2:
+/// `r = ⌈κ·(1−ρ)·dout·din/(dout+din)⌉`, `k = ⌊(1−κ)·(1−ρ)·dout·din⌋`.
+pub fn solve(dout: usize, din: usize, rate: f64, rank_ratio: f64) -> OatsParams {
+    assert!((0.0..1.0).contains(&rate), "rate must be in [0,1): {rate}");
+    assert!((0.0..=1.0).contains(&rank_ratio), "rank ratio must be in [0,1]: {rank_ratio}");
+    let dd = (dout * din) as f64;
+    let keep = (1.0 - rate) * dd;
+    let rank = (rank_ratio * keep / (dout + din) as f64).ceil() as usize;
+    let nonzeros = ((1.0 - rank_ratio) * keep).floor() as usize;
+    OatsParams { rank, nonzeros: nonzeros.min(dout * din) }
+}
+
+/// Achieved compression rate for a resolved parameter pair — the ρ identity
+/// from §2.4 used to verify the solver.
+pub fn achieved_rate(dout: usize, din: usize, p: OatsParams) -> f64 {
+    1.0 - (p.nonzeros + p.rank * (dout + din)) as f64 / (dout * din) as f64
+}
+
+/// Achieved rank ratio for a resolved pair.
+pub fn achieved_rank_ratio(dout: usize, din: usize, p: OatsParams) -> f64 {
+    let lr = (p.rank * (dout + din)) as f64;
+    let total = lr + p.nonzeros as f64;
+    if total == 0.0 {
+        0.0
+    } else {
+        lr / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn kappa_zero_is_pure_sparsity() {
+        let p = solve(100, 200, 0.5, 0.0);
+        assert_eq!(p.rank, 0);
+        assert_eq!(p.nonzeros, 10_000); // (1-0.5)*100*200
+    }
+
+    #[test]
+    fn paper_defaults_sane() {
+        // base-preset attention projection, ρ=0.5, κ=0.25.
+        let p = solve(256, 256, 0.5, 0.25);
+        assert!(p.rank >= 1);
+        let rho = achieved_rate(256, 256, p);
+        assert!((rho - 0.5).abs() < 0.02, "achieved ρ = {rho}");
+        let kap = achieved_rank_ratio(256, 256, p);
+        assert!((kap - 0.25).abs() < 0.05, "achieved κ = {kap}");
+    }
+
+    #[test]
+    fn identity_holds_prop() {
+        check("ρ,κ identity within rounding", 200, |g| {
+            let dout = g.usize_range(8, 512);
+            let din = g.usize_range(8, 512);
+            let rate = g.f64_unit() * 0.8 + 0.1;
+            let kappa = g.f64_unit() * 0.6;
+            let p = solve(dout, din, rate, kappa);
+            let rho = achieved_rate(dout, din, p);
+            // Rounding error bounded by (dout+din)/(dout·din) for the ceil
+            // on r plus 1/(dout·din) for the floor on k.
+            let tol = (dout + din) as f64 / (dout * din) as f64 + 1e-9;
+            assert!(
+                (rho - rate).abs() <= tol,
+                "ρ target {rate} achieved {rho} tol {tol} (dout={dout} din={din} κ={kappa})"
+            );
+        });
+    }
+
+    #[test]
+    fn nonzeros_never_exceed_matrix() {
+        let p = solve(4, 4, 0.0, 0.0);
+        assert!(p.nonzeros <= 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_rate_one() {
+        solve(10, 10, 1.0, 0.2);
+    }
+}

@@ -1,0 +1,168 @@
+//! Hard-thresholding operators (paper §2.1–2.2): keep the k
+//! largest-magnitude entries layer-wise, row-wise, or under an N:M pattern.
+//!
+//! All operators take a *score* matrix deciding which entries survive and a
+//! *value* matrix supplying the surviving values — the two differ whenever a
+//! scaled score (e.g. Wanda's `|W|·‖x‖`) selects entries of the raw weights,
+//! and in the A.5 ablation where OATS selects on unscaled magnitudes.
+
+use crate::config::SparsityPattern;
+use crate::tensor::{top_k_abs_indices, Matrix};
+
+/// Boolean keep-mask with exactly the pattern's nonzero budget.
+#[derive(Clone, Debug)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub keep: Vec<bool>,
+}
+
+impl Mask {
+    pub fn nnz(&self) -> usize {
+        self.keep.iter().filter(|&&b| b).count()
+    }
+
+    /// Apply to values: out[i] = if keep[i] { values[i] } else { 0 }.
+    pub fn apply(&self, values: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (values.rows, values.cols));
+        let mut out = values.clone();
+        for (v, &k) in out.data.iter_mut().zip(&self.keep) {
+            if !k {
+                *v = 0.0;
+            }
+        }
+        out
+    }
+}
+
+/// Build the keep-mask for `k` total nonzeros from `scores`, under `pattern`.
+///
+/// * `LayerWise` — global top-k by |score| (paper Algorithm 1).
+/// * `RowWise` — top-⌊k/rows⌋ per row (paper §2.2; Sun et al. 2024b show
+///   this comparison group performs better).
+/// * `Nm` — keep the n largest per group of m along each row; `k` is ignored
+///   (the pattern fixes the budget).
+pub fn mask_top_k(scores: &Matrix, k: usize, pattern: SparsityPattern) -> Mask {
+    let mut keep = vec![false; scores.rows * scores.cols];
+    match pattern {
+        SparsityPattern::LayerWise => {
+            for i in top_k_abs_indices(&scores.data, k) {
+                keep[i] = true;
+            }
+        }
+        SparsityPattern::RowWise => {
+            let per_row = k / scores.rows.max(1);
+            for r in 0..scores.rows {
+                for c in top_k_abs_indices(scores.row(r), per_row) {
+                    keep[r * scores.cols + c] = true;
+                }
+            }
+        }
+        SparsityPattern::Nm { n, m } => {
+            for r in 0..scores.rows {
+                let row = scores.row(r);
+                for g in (0..row.len()).step_by(m) {
+                    let end = (g + m).min(row.len());
+                    let budget = if end - g == m {
+                        n
+                    } else {
+                        (n * (end - g)).div_ceil(m)
+                    };
+                    for c in top_k_abs_indices(&row[g..end], budget) {
+                        keep[r * scores.cols + g + c] = true;
+                    }
+                }
+            }
+        }
+    }
+    Mask { rows: scores.rows, cols: scores.cols, keep }
+}
+
+/// HARDTHRESHOLD(A, k): mask selected on `scores`, values taken from
+/// `values` (paper Algorithm 1 uses scores == values; Wanda and the A.5
+/// ablation use different scores).
+pub fn hard_threshold(
+    values: &Matrix,
+    scores: &Matrix,
+    k: usize,
+    pattern: SparsityPattern,
+) -> Matrix {
+    mask_top_k(scores, k, pattern).apply(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::NmPattern;
+    use crate::util::prop::check;
+
+    #[test]
+    fn layerwise_keeps_exactly_k() {
+        check("layerwise exact k", 50, |g| {
+            let rows = g.usize_range(1, 20);
+            let cols = g.usize_range(1, 20);
+            let k = g.usize_range(0, rows * cols + 1);
+            let scores = Matrix::from_vec(rows, cols, g.vec_normal(rows * cols, 1.0));
+            let m = mask_top_k(&scores, k, SparsityPattern::LayerWise);
+            assert_eq!(m.nnz(), k.min(rows * cols));
+        });
+    }
+
+    #[test]
+    fn rowwise_keeps_floor_k_over_rows_per_row() {
+        check("rowwise per-row budget", 50, |g| {
+            let rows = g.usize_range(1, 16);
+            let cols = g.usize_range(1, 32);
+            let k = g.usize_range(0, rows * cols + 1);
+            let scores = Matrix::from_vec(rows, cols, g.vec_normal(rows * cols, 1.0));
+            let m = mask_top_k(&scores, k, SparsityPattern::RowWise);
+            let per_row = (k / rows).min(cols);
+            for r in 0..rows {
+                let nnz = (0..cols).filter(|&c| m.keep[r * cols + c]).count();
+                assert_eq!(nnz, per_row, "row {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn nm_masks_validate_pattern() {
+        check("N:M masks valid", 50, |g| {
+            let rows = g.usize_range(1, 12);
+            let mfac = *g.choose(&[4usize, 8]);
+            let n = g.usize_range(1, mfac.min(4));
+            let cols = g.usize_range(1, 6) * mfac + g.usize_range(0, mfac);
+            let scores = Matrix::from_vec(rows, cols, g.vec_normal(rows * cols, 1.0));
+            let mask = mask_top_k(&scores, 0, SparsityPattern::Nm { n, m: mfac });
+            let vals = mask.apply(&scores);
+            assert!(
+                NmPattern { n, m: mfac }.validates(&vals),
+                "rows={rows} cols={cols} n={n} m={mfac}"
+            );
+        });
+    }
+
+    #[test]
+    fn threshold_selects_largest_magnitudes() {
+        let v = Matrix::from_vec(1, 5, vec![5.0, -1.0, 3.0, -4.0, 0.5]);
+        let out = hard_threshold(&v, &v, 2, SparsityPattern::LayerWise);
+        assert_eq!(out.data, vec![5.0, 0.0, 0.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn scores_differ_from_values() {
+        // Select on scores, keep raw values.
+        let values = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let scores = Matrix::from_vec(1, 3, vec![9.0, 0.1, 0.2]);
+        let out = hard_threshold(&values, &scores, 1, SparsityPattern::LayerWise);
+        assert_eq!(out.data, vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn nm_full_pattern_sparsity() {
+        // With cols divisible by m, 2:4 yields exactly 50% nnz.
+        let mut g = crate::util::prop::Gen::new(1);
+        let scores = Matrix::from_vec(8, 16, g.vec_normal(128, 1.0));
+        let m = mask_top_k(&scores, 0, SparsityPattern::Nm { n: 2, m: 4 });
+        assert_eq!(m.nnz(), 64);
+    }
+}

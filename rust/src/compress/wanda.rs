@@ -1,0 +1,92 @@
+//! Wanda (Sun et al., 2024b): prune by the score `|W_ij| · ‖x_j‖₂`, with a
+//! per-output-row comparison group. Equivalent to OATS at κ=0 (paper §6).
+
+use super::{params, threshold, CalibStats, CompressedLayer};
+use crate::config::CompressConfig;
+use crate::sparse::Csr;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Wanda score matrix S_ij = |W_ij| · ‖x_j‖₂.
+pub fn scores(w: &Matrix, stats: &CalibStats) -> Matrix {
+    let norms = stats.col_norms();
+    let mut s = w.clone();
+    for v in &mut s.data {
+        *v = v.abs();
+    }
+    s.mul_columns(&norms)
+}
+
+pub fn compress(w: &Matrix, stats: &CalibStats, cfg: &CompressConfig) -> Result<CompressedLayer> {
+    anyhow::ensure!(w.cols == stats.gram.cols, "stats dim mismatch");
+    let k = params::solve(w.rows, w.cols, cfg.rate, 0.0).nonzeros;
+    let sc = scores(w, stats);
+    let pruned = threshold::hard_threshold(w, &sc, k, cfg.pattern);
+    Ok(CompressedLayer::Sparse(Csr::from_dense(&pruned)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, SparsityPattern};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn outlier_columns_protected() {
+        // Column 0 has huge activation norm; even small weights there beat
+        // large weights in dead columns.
+        let w = Matrix::from_vec(1, 3, vec![0.1, 0.5, 0.9]);
+        let x = Matrix::from_vec(4, 3, vec![
+            100.0, 0.1, 0.1,
+            100.0, 0.1, 0.1,
+            100.0, 0.1, 0.1,
+            100.0, 0.1, 0.1,
+        ]);
+        let stats = CalibStats::from_activations(&x);
+        let cfg = CompressConfig {
+            method: Method::Wanda,
+            rate: 0.66,
+            pattern: SparsityPattern::RowWise,
+            ..Default::default()
+        };
+        let out = compress(&w, &stats, &cfg).unwrap().to_dense();
+        assert!(out.data[0] != 0.0, "outlier-column weight must survive: {:?}", out.data);
+        assert_eq!(out.nnz(), 1);
+    }
+
+    #[test]
+    fn magnitude_recovered_with_uniform_activations() {
+        // If all columns have equal norms, Wanda == magnitude pruning.
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let x = Matrix::filled(10, 16, 1.0);
+        let stats = CalibStats::from_activations(&x);
+        let cfg = CompressConfig {
+            method: Method::Wanda,
+            rate: 0.5,
+            pattern: SparsityPattern::RowWise,
+            ..Default::default()
+        };
+        let wanda = compress(&w, &stats, &cfg).unwrap().to_dense();
+        let magnitude = super::super::magnitude::compress(&w, &cfg).unwrap().to_dense();
+        assert!(wanda.fro_dist(&magnitude) < 1e-6);
+    }
+
+    #[test]
+    fn achieves_rate() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(24, 24, 1.0, &mut rng);
+        let x = Matrix::randn(32, 24, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&x);
+        for rate in [0.3, 0.5, 0.7] {
+            let cfg = CompressConfig {
+                method: Method::Wanda,
+                rate,
+                pattern: SparsityPattern::RowWise,
+                ..Default::default()
+            };
+            let out = compress(&w, &stats, &cfg).unwrap();
+            assert!((out.compression_rate() - rate).abs() < 0.06, "rate {rate}");
+        }
+    }
+}

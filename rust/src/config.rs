@@ -1,0 +1,313 @@
+//! Typed experiment configuration: model presets (the stand-ins for the
+//! paper's Phi-3 / Llama-3 / Qwen families), compression settings, and
+//! pipeline options. JSON-backed so configs can be checked into `configs/`
+//! and reproduced exactly.
+
+use crate::json::{self, Json};
+use anyhow::Result;
+
+/// Transformer LM architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    /// Parameter count of the linear weights subject to compression
+    /// (q,k,v,o + up,down per block; embeddings/head excluded per paper §3.1).
+    pub fn prunable_params(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = 2 * self.d_model * self.d_ff;
+        self.n_layers * (attn + mlp)
+    }
+
+    /// Total parameter count (incl. embeddings, head, layernorms).
+    pub fn total_params(&self) -> usize {
+        let emb = self.vocab * self.d_model + self.seq_len * self.d_model;
+        let head = self.vocab * self.d_model;
+        let ln = self.n_layers * 4 * self.d_model + 2 * self.d_model;
+        emb + head + ln + self.prunable_params()
+    }
+
+    /// Model presets. Sizes scale the same way the paper's model families do
+    /// (see DESIGN.md §3 substitution table).
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let c = match name {
+            // stands in for Phi-3 Mini
+            "tiny" => ModelConfig {
+                name: "tiny".into(),
+                vocab: 256,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 256,
+                seq_len: 64,
+            },
+            // stands in for Llama-3 8B
+            "small" => ModelConfig {
+                name: "small".into(),
+                vocab: 256,
+                d_model: 128,
+                n_heads: 4,
+                n_layers: 4,
+                d_ff: 512,
+                seq_len: 128,
+            },
+            // stands in for Phi-3 Medium
+            "base" => ModelConfig {
+                name: "base".into(),
+                vocab: 512,
+                d_model: 256,
+                n_heads: 8,
+                n_layers: 6,
+                d_ff: 1024,
+                seq_len: 128,
+            },
+            // stands in for Llama-3 70B
+            "large" => ModelConfig {
+                name: "large".into(),
+                vocab: 512,
+                d_model: 384,
+                n_heads: 8,
+                n_layers: 8,
+                d_ff: 1536,
+                seq_len: 128,
+            },
+            // stands in for Qwen-2.5 3B (different FFN ratio, Table 17)
+            "alt" => ModelConfig {
+                name: "alt".into(),
+                vocab: 256,
+                d_model: 128,
+                n_heads: 4,
+                n_layers: 4,
+                d_ff: 768,
+                seq_len: 128,
+            },
+            other => anyhow::bail!("unknown model preset '{other}' (tiny|small|base|large|alt)"),
+        };
+        Ok(c)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", json::s(&self.name))
+            .set("vocab", json::num(self.vocab as f64))
+            .set("d_model", json::num(self.d_model as f64))
+            .set("n_heads", json::num(self.n_heads as f64))
+            .set("n_layers", json::num(self.n_layers as f64))
+            .set("d_ff", json::num(self.d_ff as f64))
+            .set("seq_len", json::num(self.seq_len as f64));
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            vocab: v.req_usize("vocab")?,
+            d_model: v.req_usize("d_model")?,
+            n_heads: v.req_usize("n_heads")?,
+            n_layers: v.req_usize("n_layers")?,
+            d_ff: v.req_usize("d_ff")?,
+            seq_len: v.req_usize("seq_len")?,
+        })
+    }
+}
+
+/// Which compression algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Dense,
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    DsNoT,
+    Oats,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => Method::Dense,
+            "magnitude" | "mag" => Method::Magnitude,
+            "wanda" => Method::Wanda,
+            "sparsegpt" => Method::SparseGpt,
+            "dsnot" => Method::DsNoT,
+            "oats" => Method::Oats,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "Dense",
+            Method::Magnitude => "Magnitude",
+            Method::Wanda => "Wanda",
+            Method::SparseGpt => "SparseGPT",
+            Method::DsNoT => "DSNoT",
+            Method::Oats => "OATS",
+        }
+    }
+
+    pub fn all_pruners() -> [Method; 5] {
+        [Method::Magnitude, Method::SparseGpt, Method::Wanda, Method::DsNoT, Method::Oats]
+    }
+}
+
+/// Granularity of the hard-threshold step (paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparsityPattern {
+    /// Top-k over the whole matrix.
+    LayerWise,
+    /// Top-⌊k/m⌋ per output row (Wanda's comparison-group; paper default).
+    RowWise,
+    /// N:M semi-structured.
+    Nm { n: usize, m: usize },
+}
+
+impl SparsityPattern {
+    pub fn parse(s: &str) -> Result<SparsityPattern> {
+        match s.to_ascii_lowercase().as_str() {
+            "layer" | "layerwise" => Ok(SparsityPattern::LayerWise),
+            "row" | "rowwise" => Ok(SparsityPattern::RowWise),
+            other => {
+                if let Some((n, m)) = other.split_once(':') {
+                    let n = n.parse()?;
+                    let m = m.parse()?;
+                    anyhow::ensure!(n > 0 && m > n, "bad N:M '{other}'");
+                    Ok(SparsityPattern::Nm { n, m })
+                } else {
+                    anyhow::bail!("unknown sparsity pattern '{other}' (layer|row|N:M)")
+                }
+            }
+        }
+    }
+}
+
+/// Full compression run configuration (paper Algorithm 2 inputs + ablation
+/// switches from §3.3 and Appendices A.3–A.5).
+#[derive(Clone, Debug)]
+pub struct CompressConfig {
+    pub method: Method,
+    /// Compression rate ρ ∈ (0,1).
+    pub rate: f64,
+    /// Rank ratio κ ∈ [0,1) — fraction of the kept budget spent on L.
+    pub rank_ratio: f64,
+    /// Alternating-thresholding iterations N.
+    pub iters: usize,
+    pub pattern: SparsityPattern,
+    /// Scale by D = sqrt(diag(XᵀX)) (ablation: Table 6 "No Scaling").
+    pub scale_by_d: bool,
+    /// Use the outlier-robust median scaling instead (Appendix A.3).
+    pub robust_scaling: bool,
+    /// Perform hard-threshold before SVT (Appendix A.4 order ablation).
+    pub threshold_first: bool,
+    /// Only scale the low-rank term, prune S on raw magnitudes (App. A.5).
+    pub scale_lowrank_only: bool,
+    /// Use OWL non-uniform layerwise rates (paper §3.1, Table 5).
+    pub owl: bool,
+    /// OWL hyperparameter λ: rates clipped to rate ± λ.
+    pub owl_lambda: f64,
+    /// OWL outlier threshold multiple M.
+    pub owl_m: f64,
+    /// Seed for the randomized SVD.
+    pub seed: u64,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            method: Method::Oats,
+            rate: 0.5,
+            rank_ratio: 0.25,
+            iters: 80,
+            pattern: SparsityPattern::RowWise,
+            scale_by_d: true,
+            robust_scaling: false,
+            threshold_first: false,
+            scale_lowrank_only: false,
+            owl: false,
+            owl_lambda: 0.08,
+            owl_m: 5.0,
+            seed: 0xA75,
+        }
+    }
+}
+
+/// Calibration configuration (paper §3.1: 128 sequences, C4 → our corpus).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    pub n_sequences: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { n_sequences: 128, seq_len: 128, seed: 0xCA11B }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_scale_monotonically() {
+        let sizes: Vec<usize> = ["tiny", "small", "base", "large"]
+            .iter()
+            .map(|n| ModelConfig::preset(n).unwrap().total_params())
+            .collect();
+        for w in sizes.windows(2) {
+            assert!(w[0] < w[1], "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn preset_unknown_fails() {
+        assert!(ModelConfig::preset("llama-3-70b").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::preset("base").unwrap();
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("oats").unwrap(), Method::Oats);
+        assert_eq!(Method::parse("SparseGPT").unwrap(), Method::SparseGpt);
+        assert!(Method::parse("??").is_err());
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(SparsityPattern::parse("row").unwrap(), SparsityPattern::RowWise);
+        assert_eq!(
+            SparsityPattern::parse("2:8").unwrap(),
+            SparsityPattern::Nm { n: 2, m: 8 }
+        );
+        assert!(SparsityPattern::parse("8:2").is_err());
+        assert!(SparsityPattern::parse("x").is_err());
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for p in ["tiny", "small", "base", "large", "alt"] {
+            let c = ModelConfig::preset(p).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0, "{p}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The L3 coordinator — the system half of the reproduction.
+//!
+//! * [`pipeline`] — the compression-job orchestrator: runs the calibration
+//!   propagation (Algorithm 2), fans the six linears of each block out to a
+//!   worker pool, applies OWL per-layer rates, and commits results back into
+//!   the model.
+//! * [`serve`] — the compressed-inference serving engine: request queue,
+//!   dynamic batcher, KV-cached decode loop, per-request latency metrics.
+
+pub mod pipeline;
+pub mod serve;
+
+pub use pipeline::{compress_model, CompressionReport, LayerReport};
+pub use serve::{ServeConfig, ServeStats, Server};

@@ -1,0 +1,291 @@
+//! Compression pipeline orchestrator.
+//!
+//! Responsibilities (paper §3.1 experiment protocol):
+//! 1. optional OWL pre-pass computing per-block compression rates;
+//! 2. sequential block loop propagating calibration activations through
+//!    already-compressed blocks (Algorithm 2);
+//! 3. per-block parallel compression of the six linear layers (the paper
+//!    notes per-block parallelism in §A.2);
+//! 4. commit + telemetry (per-layer residuals, achieved rates, wall-clock).
+
+use crate::calib::{BlockPropagator, CalibSet};
+use crate::compress::{self, owl, CalibStats, CompressedLayer};
+use crate::config::{CompressConfig, Method};
+use crate::model::{LinearId, LinearOp, TransformerLM, LINEAR_NAMES};
+use crate::util::time::Stopwatch;
+use anyhow::Result;
+use std::sync::mpsc;
+
+/// Telemetry for one compressed layer.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub id: LinearId,
+    pub target_rate: f64,
+    pub achieved_rate: f64,
+    /// ‖W − Ŵ‖_F / ‖W‖_F (unscaled reconstruction error).
+    pub rel_error: f64,
+    pub seconds: f64,
+}
+
+/// Full pipeline telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct CompressionReport {
+    pub layers: Vec<LayerReport>,
+    pub total_seconds: f64,
+    /// Per-block wall-clock (Table 9's measurement).
+    pub block_seconds: Vec<f64>,
+    pub owl_rates: Option<Vec<f64>>,
+}
+
+impl CompressionReport {
+    pub fn mean_rel_error(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.rel_error).sum::<f64>() / self.layers.len() as f64
+    }
+
+    pub fn achieved_rate(&self) -> f64 {
+        // parameter-weighted is what the model reports; this is the mean.
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.achieved_rate).sum::<f64>() / self.layers.len() as f64
+    }
+}
+
+/// Compress every prunable layer of `model` in place.
+///
+/// `workers` controls the per-block fan-out (1 = sequential). The calibration
+/// set must have been sampled with the same corpus/stream for every method
+/// being compared (paper §3.1).
+pub fn compress_model(
+    model: &mut TransformerLM,
+    calib: &CalibSet,
+    cfg: &CompressConfig,
+    workers: usize,
+) -> Result<CompressionReport> {
+    let mut report = CompressionReport::default();
+    let mut sw = Stopwatch::new();
+
+    // ── OWL pre-pass: per-block rates from outlier fractions ──
+    let n_blocks = model.blocks.len();
+    let block_rates: Vec<f64> = if cfg.owl {
+        let mut prop = BlockPropagator::new(model, calib);
+        let mut fracs = Vec::with_capacity(n_blocks);
+        let mut params = Vec::with_capacity(n_blocks);
+        for b in 0..n_blocks {
+            let stats = prop.capture_stats();
+            // Block outlier fraction: parameter-weighted mean over linears.
+            let mut f = 0.0;
+            let mut p_total = 0usize;
+            for name in LINEAR_NAMES {
+                let w = model.blocks[b].linear(name).dense_view();
+                let pc = w.rows * w.cols;
+                f += owl::outlier_fraction(&w, &stats[name], cfg.owl_m) * pc as f64;
+                p_total += pc;
+            }
+            fracs.push(f / p_total as f64);
+            params.push(p_total);
+            prop.advance();
+        }
+        let rates = owl::layerwise_rates(&fracs, &params, cfg.rate, cfg.owl_lambda);
+        report.owl_rates = Some(rates.clone());
+        sw.lap("owl");
+        rates
+    } else {
+        vec![cfg.rate; n_blocks]
+    };
+
+    // ── main block loop (Algorithm 2) ──
+    // BlockPropagator borrows the model immutably, so each iteration scopes
+    // the borrow: capture stats → drop propagator → mutate → re-embed would
+    // be O(L²). Instead we keep hidden states outside and call block_forward
+    // directly.
+    let mut hidden: Vec<crate::tensor::Matrix> =
+        calib.batches.iter().map(|b| model.embed(&b.inputs)).collect();
+    let batch_sizes: Vec<usize> = calib.batches.iter().map(|b| b.inputs.len()).collect();
+    let s = calib.seq_len;
+
+    for b in 0..n_blocks {
+        let block_t0 = std::time::Instant::now();
+        // capture stats with current (compressed-so-far) activations
+        let stats: std::collections::HashMap<&'static str, CalibStats> = {
+            let mut map: std::collections::HashMap<&'static str, CalibStats> =
+                std::collections::HashMap::new();
+            for (h, &bsz) in hidden.iter().zip(&batch_sizes) {
+                let mut cap = crate::model::ForwardCapture::default();
+                let _ = model.block_forward(b, h, bsz, s, Some(&mut cap), None);
+                for name in LINEAR_NAMES {
+                    let x = &cap.inputs[name];
+                    map.entry(name)
+                        .or_insert_with(|| CalibStats::new(x.cols))
+                        .update(x, 128);
+                }
+            }
+            for st in map.values_mut() {
+                st.finalize();
+            }
+            map
+        };
+
+        // compress the six linears (possibly in parallel)
+        let layer_cfg = CompressConfig { rate: block_rates[b], ..cfg.clone() };
+        let jobs: Vec<(&'static str, crate::tensor::Matrix, CalibStats)> = LINEAR_NAMES
+            .iter()
+            .map(|&name| (name, model.blocks[b].linear(name).dense_view(), stats[name].clone()))
+            .collect();
+
+        let results: Vec<(&'static str, Result<CompressedLayer>, f64)> = if workers > 1 {
+            let (tx, rx) = mpsc::channel();
+            std::thread::scope(|scope| {
+                for (name, w, st) in &jobs {
+                    let tx = tx.clone();
+                    let lc = layer_cfg.clone();
+                    scope.spawn(move || {
+                        let t0 = std::time::Instant::now();
+                        let r = compress::compress_layer(w, st, &lc);
+                        let dt = t0.elapsed().as_secs_f64();
+                        let _ = tx.send((*name, r, dt));
+                    });
+                }
+            });
+            drop(tx);
+            rx.into_iter().collect()
+        } else {
+            jobs.iter()
+                .map(|(name, w, st)| {
+                    let t0 = std::time::Instant::now();
+                    let r = compress::compress_layer(w, st, &layer_cfg);
+                    (*name, r, t0.elapsed().as_secs_f64())
+                })
+                .collect()
+        };
+
+        // commit + telemetry
+        for (name, result, dt) in results {
+            let compressed = result?;
+            let id = LinearId { block: b, name };
+            let w_orig = model.blocks[b].linear(name).dense_view();
+            let w_new = compressed.to_dense();
+            let mut diff = w_orig.clone();
+            diff.axpy(-1.0, &w_new);
+            let denom = w_orig.fro_norm().max(1e-12);
+            report.layers.push(LayerReport {
+                id,
+                target_rate: block_rates[b],
+                achieved_rate: compressed.compression_rate(),
+                rel_error: diff.fro_norm() / denom,
+                seconds: dt,
+            });
+            model.set_linear(id, LinearOp::Compressed(compressed));
+        }
+
+        // propagate through the now-compressed block
+        for (h, &bsz) in hidden.iter_mut().zip(&batch_sizes) {
+            *h = model.block_forward(b, h, bsz, s, None, None);
+        }
+        report.block_seconds.push(block_t0.elapsed().as_secs_f64());
+    }
+
+    report.total_seconds = sw.elapsed();
+    report.layers.sort_by_key(|l| (l.id.block, l.id.name));
+    Ok(report)
+}
+
+/// Convenience: compress a fresh clone of the model, leaving the input
+/// untouched (used by the sweep/table harnesses that compare methods).
+pub fn compress_clone(
+    model: &TransformerLM,
+    calib: &CalibSet,
+    cfg: &CompressConfig,
+    workers: usize,
+) -> Result<(TransformerLM, CompressionReport)> {
+    let mut m = model.clone();
+    let report = compress_model(&mut m, calib, cfg, workers)?;
+    Ok((m, report))
+}
+
+/// Methods with no compression work (Dense) skip the pipeline entirely.
+pub fn is_noop(cfg: &CompressConfig) -> bool {
+    matches!(cfg.method, Method::Dense) || cfg.rate <= 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{CorpusConfig, SyntheticCorpus};
+
+    fn setup() -> (TransformerLM, CalibSet) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let model = TransformerLM::init(&cfg, 17);
+        let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 4));
+        let calib = CalibSet::sample(&corpus, 8, 16, 4);
+        (model, calib)
+    }
+
+    #[test]
+    fn oats_pipeline_compresses_all_layers() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig { rate: 0.5, rank_ratio: 0.25, iters: 3, ..Default::default() };
+        let (m, report) = compress_clone(&model, &calib, &cfg, 1).unwrap();
+        assert_eq!(report.layers.len(), model.blocks.len() * 6);
+        let achieved = m.achieved_compression();
+        assert!((achieved - 0.5).abs() < 0.05, "achieved {achieved}");
+        assert_eq!(report.block_seconds.len(), model.blocks.len());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig { rate: 0.4, rank_ratio: 0.2, iters: 2, ..Default::default() };
+        let (m1, _) = compress_clone(&model, &calib, &cfg, 1).unwrap();
+        let (m4, _) = compress_clone(&model, &calib, &cfg, 4).unwrap();
+        let toks = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+        let d = m1.forward(&toks).fro_dist(&m4.forward(&toks));
+        assert!(d < 1e-4, "parallel/sequential divergence {d}");
+    }
+
+    #[test]
+    fn wanda_pipeline_runs() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig {
+            method: Method::Wanda,
+            rate: 0.5,
+            ..Default::default()
+        };
+        let (m, report) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+        assert!((m.achieved_compression() - 0.5).abs() < 0.05);
+        assert!(report.mean_rel_error() > 0.0);
+    }
+
+    #[test]
+    fn owl_rates_vary_but_preserve_mean() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig {
+            rate: 0.6,
+            rank_ratio: 0.25,
+            iters: 2,
+            owl: true,
+            ..Default::default()
+        };
+        let (m, report) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+        let rates = report.owl_rates.as_ref().unwrap();
+        assert_eq!(rates.len(), model.blocks.len());
+        let achieved = m.achieved_compression();
+        assert!((achieved - 0.6).abs() < 0.07, "achieved {achieved} rates {rates:?}");
+    }
+
+    #[test]
+    fn compression_error_grows_with_rate() {
+        let (model, calib) = setup();
+        let mut errs = Vec::new();
+        for rate in [0.3, 0.6] {
+            let cfg = CompressConfig { rate, rank_ratio: 0.25, iters: 2, ..Default::default() };
+            let (_, report) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+            errs.push(report.mean_rel_error());
+        }
+        assert!(errs[0] < errs[1], "{errs:?}");
+    }
+}

@@ -1,0 +1,389 @@
+//! The compressed-inference serving engine (the DeepSparse stand-in for
+//! Table 7 / Table 14).
+//!
+//! Architecture: a request queue feeds a *dynamic batcher* (pure, testable
+//! [`Batcher`]) which releases batches when either the batch-size cap or the
+//! wait deadline is hit; a worker pool executes each batch member's
+//! KV-cached decode loop; per-request latency and aggregate token
+//! throughput are recorded in [`ServeStats`].
+
+use crate::model::{KvCache, TransformerLM};
+use crate::tensor::argmax;
+use crate::util::stats::Summary;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Dynamic batch cap.
+    pub max_batch: usize,
+    /// Max time the first queued request waits before dispatch.
+    pub max_wait: Duration,
+    /// Tokens to generate per request.
+    pub gen_tokens: usize,
+    /// Executor threads.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            gen_tokens: 16,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// An inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub enqueued: Instant,
+}
+
+/// A completed generation.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    pub latency: Duration,
+}
+
+/// Pure dynamic-batching policy: FIFO, size- and deadline-triggered.
+#[derive(Default)]
+pub struct Batcher {
+    queue: std::collections::VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Release a batch if the policy triggers: the queue has `max_batch`
+    /// requests, or the oldest request has waited past `max_wait`.
+    pub fn ready(&mut self, now: Instant, max_batch: usize, max_wait: Duration) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let deadline_hit =
+            now.duration_since(self.queue.front().unwrap().enqueued) >= max_wait;
+        if self.queue.len() >= max_batch || deadline_hit {
+            let n = self.queue.len().min(max_batch);
+            Some(self.queue.drain(..n).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self, max_batch: usize) -> Vec<Vec<Request>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(max_batch);
+            out.push(self.queue.drain(..n).collect());
+        }
+        out
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub n_requests: usize,
+    pub tokens_generated: usize,
+    pub wall_seconds: f64,
+    pub latency: Summary,
+    pub batch_sizes: Summary,
+}
+
+impl ServeStats {
+    /// End-to-end generated-token throughput.
+    pub fn tokens_per_second(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
+/// Greedy-generate `n` tokens from `prompt` (the executor inner loop).
+pub fn generate(model: &TransformerLM, prompt: &[usize], n: usize) -> Vec<usize> {
+    let mut cache = KvCache::new(&model.cfg);
+    let mut logits = vec![0.0f32; model.cfg.vocab];
+    let budget = model.cfg.seq_len;
+    for &t in prompt.iter().take(budget) {
+        logits = model.decode_step(t, &mut cache);
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if cache.len >= budget {
+            break;
+        }
+        let next = argmax(&logits);
+        out.push(next);
+        logits = model.decode_step(next, &mut cache);
+    }
+    out
+}
+
+/// The server: owns the batcher thread and executor pool.
+pub struct Server {
+    req_tx: Option<mpsc::Sender<(Request, mpsc::Sender<Response>)>>,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    pub observed_batches: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Server {
+    pub fn start(model: Arc<TransformerLM>, cfg: ServeConfig) -> Server {
+        let (req_tx, req_rx) = mpsc::channel::<(Request, mpsc::Sender<Response>)>();
+        let observed_batches = Arc::new(Mutex::new(Vec::new()));
+        let observed = Arc::clone(&observed_batches);
+
+        let handle = std::thread::spawn(move || {
+            let mut batcher = Batcher::default();
+            let mut resp_txs: std::collections::HashMap<u64, mpsc::Sender<Response>> =
+                std::collections::HashMap::new();
+            let mut closed = false;
+            loop {
+                // Pull requests (with a short poll so deadlines fire).
+                match req_rx.recv_timeout(Duration::from_micros(200)) {
+                    Ok((req, tx)) => {
+                        resp_txs.insert(req.id, tx);
+                        batcher.push(req);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                }
+                let now = Instant::now();
+                let batches: Vec<Vec<Request>> = if closed {
+                    batcher.drain_all(cfg.max_batch)
+                } else {
+                    batcher.ready(now, cfg.max_batch, cfg.max_wait).into_iter().collect()
+                };
+                for batch in batches {
+                    observed.lock().unwrap().push(batch.len());
+                    // Fan the batch out over scoped worker threads.
+                    let model = Arc::clone(&model);
+                    let txs: Vec<(Request, mpsc::Sender<Response>)> = batch
+                        .into_iter()
+                        .map(|r| {
+                            let tx = resp_txs.remove(&r.id).expect("response channel");
+                            (r, tx)
+                        })
+                        .collect();
+                    let n_workers = cfg.workers.min(txs.len()).max(1);
+                    let items = Arc::new(Mutex::new(txs));
+                    std::thread::scope(|s| {
+                        for _ in 0..n_workers {
+                            let items = Arc::clone(&items);
+                            let model = Arc::clone(&model);
+                            s.spawn(move || loop {
+                                let next = items.lock().unwrap().pop();
+                                let Some((req, tx)) = next else { break };
+                                let tokens = generate(&model, &req.prompt, cfg.gen_tokens);
+                                let _ = tx.send(Response {
+                                    id: req.id,
+                                    tokens,
+                                    latency: req.enqueued.elapsed(),
+                                });
+                            });
+                        }
+                    });
+                }
+                if closed && batcher.is_empty() {
+                    break;
+                }
+            }
+        });
+
+        Server { req_tx: Some(req_tx), batcher_handle: Some(handle), observed_batches }
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, id: u64, prompt: Vec<usize>) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.req_tx
+            .as_ref()
+            .expect("server stopped")
+            .send((Request { id, prompt, enqueued: Instant::now() }, tx))
+            .expect("batcher alive");
+        rx
+    }
+
+    /// Stop accepting requests and wait for in-flight work.
+    pub fn shutdown(mut self) {
+        drop(self.req_tx.take());
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.req_tx.take());
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Closed-loop load test: submit `n_requests` prompts, wait for all, and
+/// report stats. This is the Table 7 / Table 14 measurement harness.
+pub fn run_load(
+    model: Arc<TransformerLM>,
+    cfg: ServeConfig,
+    prompts: Vec<Vec<usize>>,
+) -> ServeStats {
+    let t0 = Instant::now();
+    let server = Server::start(model, cfg.clone());
+    let rxs: Vec<mpsc::Receiver<Response>> = prompts
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| server.submit(i as u64, p))
+        .collect();
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    let n = rxs.len();
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        latencies.push(resp.latency.as_secs_f64());
+        tokens += resp.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let batch_sizes: Vec<f64> = server
+        .observed_batches
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|&b| b as f64)
+        .collect();
+    server.shutdown();
+    ServeStats {
+        n_requests: n,
+        tokens_generated: tokens,
+        wall_seconds: wall,
+        latency: Summary::of(&latencies),
+        batch_sizes: Summary::of(&batch_sizes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::TransformerLM;
+    use crate::util::prop::check;
+
+    fn tiny() -> Arc<TransformerLM> {
+        Arc::new(TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 5))
+    }
+
+    #[test]
+    fn batcher_never_exceeds_cap_prop() {
+        check("batcher cap", 50, |g| {
+            let mut b = Batcher::default();
+            let cap = g.usize_range(1, 8);
+            let n = g.usize_range(0, 40);
+            let t0 = Instant::now();
+            let mut released = 0;
+            for i in 0..n {
+                b.push(Request { id: i as u64, prompt: vec![], enqueued: t0 });
+                if let Some(batch) = b.ready(t0, cap, Duration::from_secs(999)) {
+                    assert!(batch.len() <= cap);
+                    assert_eq!(batch.len(), cap); // only size-triggered here
+                    released += batch.len();
+                }
+            }
+            for batch in b.drain_all(cap) {
+                assert!(batch.len() <= cap);
+                released += batch.len();
+            }
+            assert_eq!(released, n, "no request lost");
+        });
+    }
+
+    #[test]
+    fn batcher_deadline_triggers() {
+        let mut b = Batcher::default();
+        let old = Instant::now() - Duration::from_millis(50);
+        b.push(Request { id: 0, prompt: vec![], enqueued: old });
+        let batch = b.ready(Instant::now(), 100, Duration::from_millis(10));
+        assert!(batch.is_some());
+        assert_eq!(batch.unwrap().len(), 1);
+    }
+
+    #[test]
+    fn batcher_fifo_order() {
+        let mut b = Batcher::default();
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(Request { id: i, prompt: vec![], enqueued: t0 });
+        }
+        let batch = b.ready(t0, 3, Duration::from_secs(999)).unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn generate_respects_budget() {
+        let m = tiny();
+        let out = generate(&m, &[1, 2, 3], 10);
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|&t| t < m.cfg.vocab));
+        // Over-long generation stops at seq_len.
+        let out2 = generate(&m, &[1, 2, 3], 10_000);
+        assert!(out2.len() <= m.cfg.seq_len);
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let m = tiny();
+        assert_eq!(generate(&m, &[4, 5], 8), generate(&m, &[4, 5], 8));
+    }
+
+    #[test]
+    fn server_round_trip() {
+        let m = tiny();
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            gen_tokens: 4,
+            workers: 2,
+        };
+        let stats = run_load(m, cfg, (0..10).map(|i| vec![i % 16, 1, 2]).collect());
+        assert_eq!(stats.n_requests, 10);
+        assert_eq!(stats.tokens_generated, 40);
+        assert!(stats.tokens_per_second() > 0.0);
+        assert!(stats.latency.max >= stats.latency.min);
+    }
+
+    #[test]
+    fn server_batches_under_cap() {
+        let m = tiny();
+        let cfg = ServeConfig {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+            gen_tokens: 2,
+            workers: 2,
+        };
+        let server = Server::start(m, cfg);
+        let rxs: Vec<_> = (0..7).map(|i| server.submit(i, vec![1, 2])).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let batches = server.observed_batches.lock().unwrap().clone();
+        assert!(batches.iter().all(|&b| b <= 3), "{batches:?}");
+        assert_eq!(batches.iter().sum::<usize>(), 7);
+        drop(server);
+    }
+}

@@ -1,0 +1,281 @@
+//! Synthetic language corpus with controlled structure.
+//!
+//! The generator is a sparse first-order Markov chain over a Zipf-weighted
+//! vocabulary, with two kinds of planted long-range structure:
+//!
+//! * **facts** — trigger→answer pairs `(a ⇒ b at distance Δ)`: whenever `a`
+//!   is emitted, `b` is force-emitted Δ steps later. Recalling `b` given the
+//!   distant `a` requires attention, giving a "hard" task whose accuracy
+//!   degrades first under compression (the MMLU proxy).
+//! * **templates** — high-probability bigrams, the "easy" local structure
+//!   (zero-shot proxy).
+//!
+//! The same generator provides train, calibration, and held-out evaluation
+//! streams from independent seeds.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// Markov successors per token.
+    pub branching: usize,
+    /// Probability mass on the Markov structure (rest is Zipf noise).
+    pub structure_prob: f64,
+    /// Number of planted fact pairs.
+    pub n_facts: usize,
+    /// Fact distance Δ.
+    pub fact_gap: usize,
+    /// Probability a fact trigger fires at any position.
+    pub fact_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 256,
+            branching: 4,
+            structure_prob: 0.85,
+            n_facts: 24,
+            fact_gap: 8,
+            fact_rate: 0.06,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl CorpusConfig {
+    pub fn for_vocab(vocab: usize, seed: u64) -> CorpusConfig {
+        CorpusConfig { vocab, n_facts: (vocab / 10).max(8), seed, ..Default::default() }
+    }
+}
+
+/// One (inputs, targets) batch: `targets[i] = inputs[i+1]` per sequence.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub inputs: Vec<Vec<usize>>,  // [batch][seq]
+    pub targets: Vec<Vec<usize>>, // [batch][seq]
+}
+
+/// The corpus: fixed transition structure + per-stream emission state.
+pub struct SyntheticCorpus {
+    pub cfg: CorpusConfig,
+    /// successors[t] = the `branching` likely next tokens after t.
+    pub successors: Vec<Vec<usize>>,
+    /// successor probability weights (Zipf over the branch slots).
+    branch_weights: Vec<f64>,
+    /// Zipf weights over the full vocabulary (noise distribution).
+    zipf: Vec<f64>,
+    /// fact pairs: trigger token → answer token.
+    pub facts: Vec<(usize, usize)>,
+}
+
+impl SyntheticCorpus {
+    pub fn new(cfg: CorpusConfig) -> SyntheticCorpus {
+        let mut rng = Rng::new(cfg.seed);
+        let successors: Vec<Vec<usize>> = (0..cfg.vocab)
+            .map(|_| (0..cfg.branching).map(|_| rng.below(cfg.vocab)).collect())
+            .collect();
+        let branch_weights: Vec<f64> =
+            (0..cfg.branching).map(|i| 1.0 / (i + 1) as f64).collect();
+        let zipf: Vec<f64> = (0..cfg.vocab).map(|i| 1.0 / (i + 1) as f64).collect();
+        // Facts use distinct trigger tokens (and avoid token 0 which is
+        // heavily used by the Zipf noise).
+        let mut triggers: Vec<usize> = (1..cfg.vocab).collect();
+        rng.shuffle(&mut triggers);
+        let facts: Vec<(usize, usize)> = triggers
+            .iter()
+            .take(cfg.n_facts)
+            .map(|&a| (a, rng.range(1, cfg.vocab)))
+            .collect();
+        SyntheticCorpus { cfg, successors, branch_weights, zipf, facts }
+    }
+
+    fn fact_answer(&self, trigger: usize) -> Option<usize> {
+        self.facts.iter().find(|&&(a, _)| a == trigger).map(|&(_, b)| b)
+    }
+
+    /// Generate one sequence of `len` tokens with the given stream rng.
+    pub fn sequence(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(len);
+        // pending forced emissions: (position, token)
+        let mut pending: Vec<(usize, usize)> = Vec::new();
+        let mut cur = rng.below(self.cfg.vocab);
+        for pos in 0..len {
+            // Forced fact completion?
+            let forced = pending
+                .iter()
+                .position(|&(p, _)| p == pos)
+                .map(|i| pending.swap_remove(i).1);
+            let tok = if let Some(t) = forced {
+                t
+            } else if rng.f64() < self.cfg.structure_prob {
+                let slot = rng.weighted(&self.branch_weights);
+                self.successors[cur][slot]
+            } else {
+                rng.weighted(&self.zipf)
+            };
+            // A trigger token always schedules its answer Δ steps out, so
+            // the fact relation is fully reliable (learnable to ~100%).
+            if let Some(ans) = self.fact_answer(tok) {
+                let at = pos + self.cfg.fact_gap;
+                if at < len && !pending.iter().any(|&(p, _)| p == at) {
+                    pending.push((at, ans));
+                }
+            }
+            out.push(tok);
+            cur = tok;
+        }
+        out
+    }
+
+    /// A batch of next-token-prediction sequences.
+    pub fn batch(&self, batch_size: usize, seq_len: usize, rng: &mut Rng) -> Batch {
+        let mut inputs = Vec::with_capacity(batch_size);
+        let mut targets = Vec::with_capacity(batch_size);
+        for _ in 0..batch_size {
+            let s = self.sequence(seq_len + 1, rng);
+            inputs.push(s[..seq_len].to_vec());
+            targets.push(s[1..].to_vec());
+        }
+        Batch { inputs, targets }
+    }
+
+    /// Independent deterministic stream (train=0, calib=1, eval=2, ...).
+    pub fn stream(&self, stream_id: u64) -> Rng {
+        Rng::new(self.cfg.seed ^ (0x5EED << 8) ^ stream_id.wrapping_mul(0x9E37_79B9))
+    }
+
+    /// “Hard” task instances (MMLU proxy): sequences where a fact trigger
+    /// fired, returning (prefix ending right before the answer, answer).
+    pub fn fact_probes(&self, n: usize, seq_len: usize, rng: &mut Rng) -> Vec<(Vec<usize>, usize)> {
+        let mut probes = Vec::new();
+        let gap = self.cfg.fact_gap;
+        while probes.len() < n {
+            let s = self.sequence(seq_len, rng);
+            // find trigger positions whose answer landed in-sequence
+            for i in 0..s.len().saturating_sub(gap) {
+                if let Some(ans) = self.fact_answer(s[i]) {
+                    if s[i + gap] == ans && i + gap >= 2 {
+                        probes.push((s[..i + gap].to_vec(), ans));
+                        if probes.len() >= n {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        probes
+    }
+
+    /// “Easy” task instances (zero-shot proxy): predict the most likely
+    /// Markov successor after a structured context.
+    pub fn bigram_probes(&self, n: usize, ctx_len: usize, rng: &mut Rng) -> Vec<(Vec<usize>, usize)> {
+        let mut probes = Vec::new();
+        while probes.len() < n {
+            let s = self.sequence(ctx_len + 1, rng);
+            let last = s[ctx_len - 1];
+            // only probe when the actual continuation is the top successor
+            let top = self.successors[last][0];
+            if s[ctx_len] == top {
+                probes.push((s[..ctx_len].to_vec(), top));
+            }
+        }
+        probes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> SyntheticCorpus {
+        SyntheticCorpus::new(CorpusConfig::default())
+    }
+
+    #[test]
+    fn sequences_deterministic_per_stream() {
+        let c = corpus();
+        let a = c.sequence(100, &mut c.stream(1));
+        let b = c.sequence(100, &mut c.stream(1));
+        let d = c.sequence(100, &mut c.stream(2));
+        assert_eq!(a, b);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = corpus();
+        let s = c.sequence(1000, &mut c.stream(0));
+        assert!(s.iter().all(|&t| t < c.cfg.vocab));
+    }
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let c = corpus();
+        let b = c.batch(4, 32, &mut c.stream(3));
+        assert_eq!(b.inputs.len(), 4);
+        assert_eq!(b.inputs[0].len(), 32);
+        assert_eq!(b.targets[0].len(), 32);
+        // target is input shifted by one within the underlying sequence
+        // (verified structurally: regenerate from the same stream)
+        let mut rng = c.stream(3);
+        let s = c.sequence(33, &mut rng);
+        assert_eq!(b.inputs[0], s[..32].to_vec());
+        assert_eq!(b.targets[0], s[1..].to_vec());
+    }
+
+    #[test]
+    fn markov_structure_present() {
+        // Next token should be a known successor far more often than chance.
+        let c = corpus();
+        let s = c.sequence(5000, &mut c.stream(4));
+        let hits = s
+            .windows(2)
+            .filter(|w| c.successors[w[0]].contains(&w[1]))
+            .count();
+        let rate = hits as f64 / (s.len() - 1) as f64;
+        assert!(rate > 0.5, "structure rate {rate}");
+    }
+
+    #[test]
+    fn facts_fire_at_gap() {
+        let c = corpus();
+        let s = c.sequence(4000, &mut c.stream(5));
+        let gap = c.cfg.fact_gap;
+        let mut fired = 0;
+        let mut honored = 0;
+        for i in 0..s.len() - gap {
+            if let Some(ans) = c.fact_answer(s[i]) {
+                fired += 1;
+                if s[i + gap] == ans {
+                    honored += 1;
+                }
+            }
+        }
+        assert!(fired > 10, "need triggers in 4k tokens, got {fired}");
+        let frac = honored as f64 / fired as f64;
+        assert!(frac > 0.8, "facts honored only {frac}");
+    }
+
+    #[test]
+    fn probes_well_formed() {
+        let c = corpus();
+        let probes = c.fact_probes(20, 64, &mut c.stream(6));
+        assert_eq!(probes.len(), 20);
+        for (ctx, ans) in &probes {
+            assert!(!ctx.is_empty() && *ans < c.cfg.vocab);
+            // trigger for ans must appear exactly gap before the end
+            let trig = c.facts.iter().find(|&&(_, b)| b == *ans);
+            assert!(trig.is_some() || true); // multiple facts may share answers
+            assert!(ctx.len() >= c.cfg.fact_gap);
+        }
+        let bi = c.bigram_probes(20, 16, &mut c.stream(7));
+        assert_eq!(bi.len(), 20);
+        for (ctx, ans) in &bi {
+            assert_eq!(ctx.len(), 16);
+            assert_eq!(c.successors[ctx[15]][0], *ans);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic datasets (DESIGN.md §3 substitutions).
+//!
+//! * [`corpus`] — a Zipf/Markov language with planted long-range "facts",
+//!   standing in for C4 (calibration) and WikiText-2 (perplexity), and
+//!   providing the task suites that proxy MMLU / zero-shot benchmarks.
+//! * [`images`] — procedurally generated shape images standing in for
+//!   ImageNet in the ViT experiments.
+
+pub mod corpus;
+pub mod images;
+
+pub use corpus::{Batch, CorpusConfig, SyntheticCorpus};
+pub use images::{ImageDataset, ImagesConfig};

@@ -1,0 +1,223 @@
+//! Evaluation harness: perplexity (WikiText-2 proxy) and the synthetic task
+//! suites that proxy the paper's MMLU / zero-shot benchmarks (DESIGN.md §3).
+//!
+//! * **ppl** — held-out next-token perplexity.
+//! * **hard suite** (MMLU proxy) — long-range fact recall: the model must
+//!   emit the planted answer token Δ steps after its trigger.
+//! * **easy suite** (zero-shot proxy) — local structure: top-successor
+//!   bigram completion plus unigram-frequency discrimination.
+
+use crate::data::SyntheticCorpus;
+use crate::model::TransformerLM;
+use crate::tensor;
+
+/// Perplexity of the model on `n_batches` held-out batches.
+pub fn perplexity(
+    model: &TransformerLM,
+    corpus: &SyntheticCorpus,
+    n_batches: usize,
+    batch_size: usize,
+    seq_len: usize,
+    stream: u64,
+) -> f64 {
+    let mut rng = corpus.stream(0xE7A1 ^ stream);
+    let mut total_nats = 0.0;
+    let mut total_tokens = 0usize;
+    for _ in 0..n_batches {
+        let b = corpus.batch(batch_size, seq_len, &mut rng);
+        let loss = model.loss(&b.inputs, &b.targets);
+        let n = b.inputs.len() * seq_len;
+        total_nats += loss * n as f64;
+        total_tokens += n;
+    }
+    (total_nats / total_tokens as f64).exp()
+}
+
+/// Accuracy on (context, answer) probes via greedy next-token prediction.
+pub fn probe_accuracy(model: &TransformerLM, probes: &[(Vec<usize>, usize)]) -> f64 {
+    if probes.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    // Group probes by context length so each forward is one rectangular batch.
+    let mut by_len: std::collections::BTreeMap<usize, Vec<&(Vec<usize>, usize)>> =
+        std::collections::BTreeMap::new();
+    for p in probes {
+        by_len.entry(p.0.len()).or_default().push(p);
+    }
+    for (_, group) in by_len {
+        for chunk in group.chunks(16) {
+            let ctxs: Vec<Vec<usize>> = chunk.iter().map(|p| p.0.clone()).collect();
+            let preds = model.predict_next(&ctxs);
+            for (pred, p) in preds.iter().zip(chunk) {
+                if *pred == p.1 {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    correct as f64 / probes.len() as f64
+}
+
+/// The "hard" (MMLU-proxy) score: fact-recall accuracy (%).
+pub fn hard_suite(model: &TransformerLM, corpus: &SyntheticCorpus, n: usize, stream: u64) -> f64 {
+    let seq = model.cfg.seq_len.min(64);
+    let probes = corpus.fact_probes(n, seq, &mut corpus.stream(0xFAC7 ^ stream));
+    100.0 * probe_accuracy(model, &probes)
+}
+
+/// The "easy" (zero-shot-proxy) score: mean of the easy sub-tasks (%).
+pub fn easy_suite(model: &TransformerLM, corpus: &SyntheticCorpus, n: usize, stream: u64) -> f64 {
+    let bigram = corpus.bigram_probes(n, 16, &mut corpus.stream(0xB16A ^ stream));
+    let acc_bigram = probe_accuracy(model, &bigram);
+    // Second sub-task: same completion at a longer context (tests stability).
+    let bigram_long = corpus.bigram_probes(n, 32, &mut corpus.stream(0xB16B ^ stream));
+    let acc_long = probe_accuracy(model, &bigram_long);
+    100.0 * (acc_bigram + acc_long) / 2.0
+}
+
+/// A full evaluation row (one model, all metrics) — the unit every table
+/// harness emits.
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub label: String,
+    pub ppl: f64,
+    pub hard: f64,
+    pub easy: f64,
+}
+
+/// Standard evaluation bundle used by the table regenerators.
+pub fn evaluate(
+    model: &TransformerLM,
+    corpus: &SyntheticCorpus,
+    label: &str,
+    n_eval_batches: usize,
+    n_probes: usize,
+) -> EvalRow {
+    EvalRow {
+        label: label.to_string(),
+        ppl: perplexity(model, corpus, n_eval_batches, 8, model.cfg.seq_len.min(64), 1),
+        hard: hard_suite(model, corpus, n_probes, 1),
+        easy: easy_suite(model, corpus, n_probes, 1),
+    }
+}
+
+/// Per-block excess kurtosis of each linear layer's input activations —
+/// the outlier-feature probe (paper §2.3 premise: large transformers have
+/// heavy-tailed activations; D-scaling exists to protect them). Gaussian
+/// activations → ≈0; heavy outlier features → large positive values.
+pub fn activation_kurtosis(
+    model: &TransformerLM,
+    corpus: &SyntheticCorpus,
+    n_seq: usize,
+) -> Vec<(crate::model::LinearId, f64)> {
+    let seq = model.cfg.seq_len.min(64);
+    let batch = corpus.batch(n_seq, seq, &mut corpus.stream(0x0A11));
+    let mut hidden = model.embed(&batch.inputs);
+    let mut out = Vec::new();
+    for b in 0..model.blocks.len() {
+        let mut cap = crate::model::ForwardCapture::default();
+        let next =
+            model.block_forward(b, &hidden, batch.inputs.len(), seq, Some(&mut cap), None);
+        for name in crate::model::LINEAR_NAMES {
+            let x = &cap.inputs[name];
+            out.push((
+                crate::model::LinearId { block: b, name },
+                crate::util::stats::excess_kurtosis(&x.data),
+            ));
+        }
+        hidden = next;
+    }
+    out
+}
+
+/// Logit-level agreement between two models (compression fidelity probe).
+pub fn logit_divergence(a: &TransformerLM, b: &TransformerLM, tokens: &[Vec<usize>]) -> f64 {
+    let la = a.forward(tokens);
+    let lb = b.forward(tokens);
+    la.fro_dist(&lb) / la.fro_norm().max(1e-12)
+}
+
+/// Top-1 agreement rate between two models' next-token predictions.
+pub fn prediction_agreement(
+    a: &TransformerLM,
+    b: &TransformerLM,
+    tokens: &[Vec<usize>],
+) -> f64 {
+    let s = tokens[0].len();
+    let la = a.forward(tokens);
+    let lb = b.forward(tokens);
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for r in 0..tokens.len() {
+        for t in 0..s {
+            let row = r * s + t;
+            if tensor::argmax(la.row(row)) == tensor::argmax(lb.row(row)) {
+                same += 1;
+            }
+            total += 1;
+        }
+    }
+    same as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::CorpusConfig;
+
+    fn setup() -> (TransformerLM, SyntheticCorpus) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let model = TransformerLM::init(&cfg, 11);
+        let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 13));
+        (model, corpus)
+    }
+
+    #[test]
+    fn perplexity_near_vocab_at_init() {
+        // An untrained model is ~uniform ⇒ ppl ≈ vocab.
+        let (m, c) = setup();
+        let ppl = perplexity(&m, &c, 2, 4, 32, 0);
+        assert!(ppl > 100.0 && ppl < 600.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn perplexity_deterministic() {
+        let (m, c) = setup();
+        assert_eq!(perplexity(&m, &c, 1, 2, 16, 7), perplexity(&m, &c, 1, 2, 16, 7));
+    }
+
+    #[test]
+    fn probe_accuracy_bounds() {
+        let (m, c) = setup();
+        let probes = c.bigram_probes(10, 8, &mut c.stream(1));
+        let acc = probe_accuracy(&m, &probes);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn suites_run() {
+        let (m, c) = setup();
+        let hard = hard_suite(&m, &c, 8, 0);
+        let easy = easy_suite(&m, &c, 8, 0);
+        assert!((0.0..=100.0).contains(&hard));
+        assert!((0.0..=100.0).contains(&easy));
+    }
+
+    #[test]
+    fn identical_models_agree() {
+        let (m, _) = setup();
+        let toks = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+        assert!(logit_divergence(&m, &m, &toks) < 1e-9);
+        assert_eq!(prediction_agreement(&m, &m, &toks), 1.0);
+    }
+
+    #[test]
+    fn different_models_disagree() {
+        let (m, _) = setup();
+        let m2 = TransformerLM::init(&m.cfg, 999);
+        let toks = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+        assert!(logit_divergence(&m, &m2, &toks) > 0.01);
+    }
+}

@@ -1,0 +1,122 @@
+//! Experiment regenerators: one driver per table/figure of the paper
+//! (DESIGN.md §6 experiment index). Each driver returns a
+//! [`crate::report::Table`] shaped like the paper's and appends raw JSON
+//! records to `results/results.jsonl`.
+
+pub mod speed;
+pub mod sweeps;
+pub mod tables;
+pub mod vision;
+
+use crate::calib::CalibSet;
+use crate::config::ModelConfig;
+use crate::data::{CorpusConfig, SyntheticCorpus};
+use crate::model::TransformerLM;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Shared experiment context: trained-model cache, corpora, sizing knobs.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub models: PathBuf,
+    pub results: PathBuf,
+    /// Reduced sizes for CI / smoke runs.
+    pub quick: bool,
+    corpora: HashMap<String, SyntheticCorpus>,
+    model_cache: HashMap<String, TransformerLM>,
+}
+
+impl Ctx {
+    pub fn new(root: &std::path::Path, quick: bool) -> Ctx {
+        Ctx {
+            artifacts: root.join("artifacts"),
+            models: root.join("models"),
+            results: root.join("results"),
+            quick,
+            corpora: HashMap::new(),
+            model_cache: HashMap::new(),
+        }
+    }
+
+    /// Training steps per preset (quick mode trains briefly).
+    pub fn train_steps(&self, preset: &str) -> usize {
+        if self.quick {
+            40
+        } else {
+            // Sized so the fact-recall ("hard") suite trains well above
+            // chance, leaving headroom for compression-induced degradation
+            // (tiny reaches hard≈60% at 8k steps; larger presets learn the
+            // same corpus faster per step).
+            match preset {
+                "tiny" => 8000,
+                "small" => 2000,
+                "base" => 1500,
+                "large" => 800,
+                _ => 4000,
+            }
+        }
+    }
+
+    pub fn corpus(&mut self, preset: &str) -> Result<&SyntheticCorpus> {
+        if !self.corpora.contains_key(preset) {
+            let cfg = ModelConfig::preset(preset)?;
+            let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 0xC0DE));
+            self.corpora.insert(preset.to_string(), corpus);
+        }
+        Ok(&self.corpora[preset])
+    }
+
+    /// Trained model for a preset (trains via the PJRT artifact on first use,
+    /// then caches under models/<preset>/).
+    pub fn model(&mut self, preset: &str) -> Result<TransformerLM> {
+        if let Some(m) = self.model_cache.get(preset) {
+            return Ok(m.clone());
+        }
+        let steps = self.train_steps(preset);
+        let corpus_owned;
+        {
+            let corpus = self.corpus(preset)?;
+            corpus_owned = SyntheticCorpus::new(corpus.cfg.clone());
+        }
+        let model = crate::train::ensure_trained_model(
+            &self.artifacts,
+            &self.models,
+            preset,
+            steps,
+            &corpus_owned,
+        )?;
+        self.model_cache.insert(preset.to_string(), model.clone());
+        Ok(model)
+    }
+
+    /// Calibration set (paper: 128 × 2048 from C4; here scaled to preset).
+    pub fn calib(&mut self, preset: &str) -> Result<CalibSet> {
+        let cfg = ModelConfig::preset(preset)?;
+        let n_seq = if self.quick { 8 } else { 64 };
+        let seq = cfg.seq_len.min(64);
+        let corpus = self.corpus(preset)?;
+        Ok(CalibSet::sample(corpus, n_seq, seq, 8))
+    }
+
+    /// Evaluation sizing.
+    pub fn eval_batches(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            8
+        }
+    }
+
+    pub fn eval_probes(&self) -> usize {
+        if self.quick {
+            24
+        } else {
+            150
+        }
+    }
+
+    pub fn record(&self, record: &crate::json::Json) {
+        let _ = crate::report::append_result(&self.results, record);
+    }
+}

@@ -1,0 +1,166 @@
+//! Hardware-speedup experiments: Table 7 (single-token CPU throughput),
+//! Table 14 (256-token sequences), and Table 9 (decomposition wall-clock).
+//!
+//! These run on the rust serving engine (the DeepSparse stand-in): the same
+//! model is executed dense, with unstructured pruning (Wanda), and with
+//! OATS' sparse+low-rank layers, through identical batching/decode code, so
+//! throughput differences isolate the weight-format kernels.
+
+use super::tables::paper_kappa;
+use super::Ctx;
+use crate::config::{CompressConfig, Method, SparsityPattern};
+use crate::coordinator::pipeline::compress_clone;
+use crate::coordinator::serve::{generate, run_load, ServeConfig};
+use crate::json::{self, Json};
+use crate::model::TransformerLM;
+use crate::report::{speedup, Table};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Single-token decode throughput (tokens/s) of a model: the Table 7
+/// measurement — one token generated per request from short prompts.
+pub fn decode_throughput(model: &TransformerLM, n_requests: usize, gen_tokens: usize) -> f64 {
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        gen_tokens,
+        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    let prompts: Vec<Vec<usize>> = (0..n_requests)
+        .map(|i| vec![(i * 7) % model.cfg.vocab, (i * 13) % model.cfg.vocab, 1])
+        .collect();
+    let stats = run_load(Arc::new(model.clone()), cfg, prompts);
+    stats.tokens_per_second()
+}
+
+/// Sequential-generation throughput: one long request (Table 14's regime,
+/// where prefill/compute dominates and sparse-format gains shrink).
+pub fn sequence_throughput(model: &TransformerLM, tokens: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    let out = generate(model, &[1, 2, 3], tokens);
+    out.len() as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Tables 7/14 runner.
+pub fn throughput_table(ctx: &mut Ctx, preset: &str, seq_mode: bool) -> Result<Table> {
+    let model = ctx.model(preset)?;
+    let calib = ctx.calib(preset)?;
+    let title = if seq_mode {
+        "Table 14 — CPU throughput, 256-token sequences (tokens/s)"
+    } else {
+        "Table 7 — CPU single-token throughput (tokens/s)"
+    };
+    let mut t = Table::new(title, &["Compression", "Method", "Throughput", "Speedup"]);
+
+    let measure = |m: &TransformerLM| -> f64 {
+        if seq_mode {
+            let n = if ctx.quick { 32 } else { 128.min(m.cfg.seq_len - 4) };
+            sequence_throughput(m, n)
+        } else {
+            let n_req = if ctx.quick { 16 } else { 64 };
+            decode_throughput(m, n_req, 4)
+        }
+    };
+
+    let dense_tp = measure(&model);
+    t.row(vec!["0%".into(), "Dense".into(), format!("{dense_tp:.1}"), speedup(1.0)]);
+
+    for rate in [0.3, 0.4, 0.5] {
+        // Unstructured pruning (Wanda) vs OATS.
+        for (method, kappa, label) in [
+            (Method::Wanda, 0.0, "Unstructured"),
+            (Method::Oats, paper_kappa(preset), "OATS"),
+        ] {
+            let cfg = CompressConfig {
+                method,
+                rate,
+                rank_ratio: kappa,
+                iters: if ctx.quick { 4 } else { 40 },
+                pattern: SparsityPattern::RowWise,
+                ..Default::default()
+            };
+            let (cm, _) = compress_clone(&model, &calib, &cfg, 6)?;
+            let tp = measure(&cm);
+            let mut rec = Json::obj();
+            rec.set("exp", json::s(if seq_mode { "t14_seq" } else { "t7_decode" }))
+                .set("preset", json::s(preset))
+                .set("rate", json::num(rate))
+                .set("method", json::s(label))
+                .set("tokens_per_s", json::num(tp))
+                .set("speedup", json::num(tp / dense_tp));
+            ctx.record(&rec);
+            t.row(vec![
+                format!("{}%", (rate * 100.0) as u64),
+                label.into(),
+                format!("{tp:.1}"),
+                speedup(tp / dense_tp),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Table 9: wall-clock per OATS alternating-thresholding iteration, per
+/// preset (the paper reports seconds per transformer block per iteration),
+/// plus the 4-worker parallel variant from §A.2.
+pub fn walltime_table(quick: bool) -> Result<Table> {
+    use crate::compress::oats::alternating_thresholding;
+    use crate::compress::params;
+    use crate::tensor::Matrix;
+    use crate::util::prng::Rng;
+
+    let presets = if quick { vec!["tiny"] } else { vec!["tiny", "small", "base", "large"] };
+    let mut t = Table::new(
+        "Table 9 — seconds per OATS iteration per transformer block",
+        &["Preset", "s/iter (serial)", "s/iter (4 workers)"],
+    );
+    for preset in presets {
+        let cfg = crate::config::ModelConfig::preset(preset)?;
+        let mut rng = Rng::new(1);
+        // A block = 4 attention (d×d) + up (dff×d) + down (d×dff).
+        let layers: Vec<(usize, usize)> = vec![
+            (cfg.d_model, cfg.d_model),
+            (cfg.d_model, cfg.d_model),
+            (cfg.d_model, cfg.d_model),
+            (cfg.d_model, cfg.d_model),
+            (cfg.d_ff, cfg.d_model),
+            (cfg.d_model, cfg.d_ff),
+        ];
+        let mats: Vec<Matrix> = layers
+            .iter()
+            .map(|&(o, i)| Matrix::randn(o, i, 1.0, &mut rng))
+            .collect();
+        let iters = 3;
+        let run_one = |m: &Matrix| {
+            let p = params::solve(m.rows, m.cols, 0.5, 0.25);
+            let mut r = Rng::new(7);
+            let _ = alternating_thresholding(
+                m,
+                iters,
+                p.rank,
+                p.nonzeros,
+                SparsityPattern::RowWise,
+                false,
+                None,
+                &mut r,
+            );
+        };
+        // Serial.
+        let t0 = std::time::Instant::now();
+        for m in &mats {
+            run_one(m);
+        }
+        let serial = t0.elapsed().as_secs_f64() / iters as f64;
+        // Parallel (4 workers, as in paper §A.2's multi-GPU analogy).
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for m in &mats {
+                s.spawn(move || run_one(m));
+            }
+        });
+        let par = t0.elapsed().as_secs_f64() / iters as f64;
+        t.row(vec![preset.into(), format!("{serial:.3}"), format!("{par:.3}")]);
+    }
+    Ok(t)
+}

@@ -1,0 +1,153 @@
+//! Vision experiments: Table 8 (ViT accuracy under compression) and the
+//! Section-5 rollout analysis (Figures 3–4).
+
+use super::Ctx;
+use crate::compress::{compress_layer, CalibStats};
+use crate::config::{CompressConfig, Method};
+use crate::data::images::{ImageDataset, ImagesConfig};
+use crate::json::{self, Json};
+use crate::model::{ForwardCapture, LinearId, LinearOp, LINEAR_NAMES};
+use crate::report::{pct, Table};
+use crate::vit::rollout::{ascii_heatmap, heatmap_cosine, rollout_split, write_pgm};
+use crate::vit::{Component, Vit};
+use anyhow::Result;
+
+/// Train (or load cached) the ViT used by the vision experiments.
+pub fn trained_vit(ctx: &Ctx) -> Result<Vit> {
+    let ds = ImageDataset::new(ImagesConfig::default());
+    let steps = if ctx.quick { 60 } else { 500 };
+    crate::train::ensure_trained_vit(&ctx.artifacts, &ctx.models, "tiny", steps, &ds)
+}
+
+/// Compress every layer of a ViT with the given config (sequential
+/// calibration propagation, mirroring the LM pipeline).
+pub fn compress_vit(vit: &Vit, cfg: &CompressConfig, calib_images: &[crate::data::images::Image]) -> Result<Vit> {
+    let mut v = vit.clone();
+    let refs: Vec<&[f32]> = calib_images.iter().map(|i| i.pixels.as_slice()).collect();
+    let mut h = v.embed(&refs);
+    for b in 0..v.blocks.len() {
+        let mut cap = ForwardCapture::default();
+        let _ = v.block_forward(b, &h, refs.len(), Component::Both, None, Some(&mut cap));
+        let mut stats: std::collections::HashMap<&'static str, CalibStats> = Default::default();
+        for name in LINEAR_NAMES {
+            let x = &cap.inputs[name];
+            let mut st = CalibStats::new(x.cols);
+            st.update(x, 128);
+            st.finalize();
+            stats.insert(name, st);
+        }
+        for name in LINEAR_NAMES {
+            let w = v.blocks[b].linear(name).dense_view();
+            let c = compress_layer(&w, &stats[name], cfg)?;
+            v.set_linear(LinearId { block: b, name }, LinearOp::Compressed(c));
+        }
+        h = v.block_forward(b, &h, refs.len(), Component::Both, None, None);
+    }
+    Ok(v)
+}
+
+/// Table 8 analogue: top-1 accuracy under compression, all methods.
+pub fn table8(ctx: &mut Ctx) -> Result<Table> {
+    let vit = trained_vit(ctx)?;
+    let ds = ImageDataset::new(ImagesConfig::default());
+    let calib = ds.batch(if ctx.quick { 16 } else { 64 }, &mut ds.stream(0xCA));
+    let eval_imgs = ds.batch(if ctx.quick { 64 } else { 400 }, &mut ds.stream(0xEF));
+
+    let mut t = Table::new(
+        "Table 8 — ViT top-1 accuracy (%) on synthetic-shapes validation",
+        &["Compression", "Method", "Top-1"],
+    );
+    let dense_acc = vit.accuracy(&eval_imgs, Component::Both);
+    t.row(vec!["0%".into(), "Dense".into(), pct(100.0 * dense_acc)]);
+    for rate in [0.3, 0.4, 0.5] {
+        for method in [Method::SparseGpt, Method::Wanda, Method::DsNoT, Method::Oats] {
+            let cfg = CompressConfig {
+                method,
+                rate,
+                rank_ratio: 0.2, // paper: ViT experiments use κ=20%
+                iters: if ctx.quick { 6 } else { 80 },
+                ..Default::default()
+            };
+            let cv = compress_vit(&vit, &cfg, &calib)?;
+            let acc = cv.accuracy(&eval_imgs, Component::Both);
+            let mut rec = Json::obj();
+            rec.set("exp", json::s("t8_vit"))
+                .set("rate", json::num(rate))
+                .set("method", json::s(method.name()))
+                .set("top1", json::num(100.0 * acc));
+            ctx.record(&rec);
+            t.row(vec![
+                format!("{}%", (rate * 100.0) as u64),
+                method.name().into(),
+                pct(100.0 * acc),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Figures 3–4: rollout split of a 50%-compressed ViT (κ=0.2); writes PGM
+/// heatmaps + ASCII art and returns a table of S-vs-L heatmap cosines.
+pub fn rollout_analysis(ctx: &mut Ctx, out_dir: &std::path::Path) -> Result<Table> {
+    let vit = trained_vit(ctx)?;
+    let ds = ImageDataset::new(ImagesConfig::default());
+    let calib = ds.batch(if ctx.quick { 16 } else { 64 }, &mut ds.stream(0xCA));
+    let cfg = CompressConfig {
+        method: Method::Oats,
+        rate: 0.5,
+        rank_ratio: 0.2,
+        iters: if ctx.quick { 6 } else { 80 },
+        ..Default::default()
+    };
+    let cv = compress_vit(&vit, &cfg, &calib)?;
+
+    std::fs::create_dir_all(out_dir)?;
+    let mut t = Table::new(
+        "Figure 4 — sparse vs low-rank rollout separation (cosine similarity)",
+        &["Image", "Class", "cos(S, L)", "cos(S, Both)", "cos(L, Both)"],
+    );
+    let n = if ctx.quick { 4 } else { 12 };
+    let mut rng = ds.stream(0xF16);
+    let mut cos_sl_total = 0.0;
+    for i in 0..n {
+        let img = ds.render(i % crate::data::images::N_CLASSES, &mut rng);
+        let split = rollout_split(&cv, &img.pixels);
+        let cos_sl = heatmap_cosine(&split.sparse, &split.low_rank);
+        let cos_sb = heatmap_cosine(&split.sparse, &split.both);
+        let cos_lb = heatmap_cosine(&split.low_rank, &split.both);
+        cos_sl_total += cos_sl;
+        write_pgm(&split.sparse, split.side, &out_dir.join(format!("img{i}_sparse.pgm")))?;
+        write_pgm(&split.low_rank, split.side, &out_dir.join(format!("img{i}_lowrank.pgm")))?;
+        write_pgm(&split.both, split.side, &out_dir.join(format!("img{i}_both.pgm")))?;
+        if i < 2 {
+            println!("image {i} (class {}):", img.label);
+            println!("  sparse rollout:\n{}", indent(&ascii_heatmap(&split.sparse, split.side)));
+            println!("  low-rank rollout:\n{}", indent(&ascii_heatmap(&split.low_rank, split.side)));
+        }
+        let mut rec = Json::obj();
+        rec.set("exp", json::s("fig4_rollout"))
+            .set("image", json::num(i as f64))
+            .set("class", json::num(img.label as f64))
+            .set("cos_sl", json::num(cos_sl));
+        ctx.record(&rec);
+        t.row(vec![
+            i.to_string(),
+            img.label.to_string(),
+            format!("{cos_sl:.3}"),
+            format!("{cos_sb:.3}"),
+            format!("{cos_lb:.3}"),
+        ]);
+    }
+    t.row(vec![
+        "mean".into(),
+        "-".into(),
+        format!("{:.3}", cos_sl_total / n as f64),
+        "-".into(),
+        "-".into(),
+    ]);
+    Ok(t)
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("    {l}")).collect::<Vec<_>>().join("\n")
+}

@@ -1,0 +1,36 @@
+//! # OATS — Outlier-Aware Pruning Through Sparse and Low Rank Decomposition
+//!
+//! Full-system reproduction of Zhang & Papyan (ICLR 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the compression-pipeline coordinator, the
+//!   compressed-inference serving engine, all pruning baselines, evaluation
+//!   harnesses, and every substrate they need (tensor algebra, sparse
+//!   formats, randomized linear algebra, JSON, CLI, benchmarking).
+//! * **L2/L1 (`python/compile/`)** — the JAX transformer model and Pallas
+//!   kernels, AOT-lowered once to HLO text artifacts.
+//! * **Runtime (`runtime`)** — loads and executes those artifacts through
+//!   the PJRT CPU client (`xla` crate); Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index mapping
+//! every table and figure of the paper to a module and regenerator binary.
+
+pub mod bench;
+pub mod calib;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod json;
+pub mod linalg;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod vit;

@@ -1,0 +1,543 @@
+//! Dense numerical linear algebra: Householder QR, randomized truncated SVD
+//! (Halko–Martinsson–Tropp), one-sided Jacobi SVD for small panels, and
+//! Cholesky factorization / inversion (for SparseGPT's Hessian).
+//!
+//! Truncated SVD is the compute hot-spot of OATS' alternating thresholding
+//! (paper §A.2: α = dout·din·r per iteration); the randomized range-finder
+//! achieves exactly that complexity.
+
+use crate::tensor::{matmul, Matrix};
+use crate::util::prng::Rng;
+
+/// Thin QR via Householder reflections. Returns (Q [m×n], R [n×n]) for m≥n.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.rows;
+    let n = a.cols;
+    assert!(m >= n, "qr_thin requires rows >= cols ({m} < {n})");
+    let mut r = a.clone();
+    // Store Householder vectors in-place below the diagonal; taus separately.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k.
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let x = r.at(i, k) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt() as f32;
+        let mut v = vec![0.0f32; m - k];
+        if norm > 0.0 {
+            let alpha = if r.at(k, k) >= 0.0 { -norm } else { norm };
+            for i in k..m {
+                v[i - k] = r.at(i, k);
+            }
+            v[0] -= alpha;
+            let vnorm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if vnorm > 1e-20 {
+                for x in v.iter_mut() {
+                    *x /= vnorm;
+                }
+                // Apply reflector to R[k.., k..]: R -= 2 v (vᵀ R)
+                for j in k..n {
+                    let mut dot = 0.0f32;
+                    for i in k..m {
+                        dot += v[i - k] * r.at(i, j);
+                    }
+                    let dot2 = 2.0 * dot;
+                    for i in k..m {
+                        *r.at_mut(i, j) -= dot2 * v[i - k];
+                    }
+                }
+            } else {
+                v.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        vs.push(v);
+    }
+    // Accumulate Q by applying reflectors to the identity's first n columns.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.data[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i - k] * q.at(i, j);
+            }
+            let dot2 = 2.0 * dot;
+            for i in k..m {
+                *q.at_mut(i, j) -= dot2 * v[i - k];
+            }
+        }
+    }
+    // Zero the strictly-lower part of the returned R (n×n block).
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out.data[i * n + j] = r.at(i, j);
+        }
+    }
+    (q, r_out)
+}
+
+/// One-sided Jacobi SVD of a small matrix. Returns (U [m×n], s [n], Vt [n×n])
+/// with singular values descending. Suitable for n up to a few hundred.
+pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    let m = a.rows;
+    let n = a.cols;
+    assert!(m >= n, "jacobi_svd requires rows >= cols");
+    let mut u = a.clone(); // columns get orthogonalized in place
+    let mut v = Matrix::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-9f64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries for columns p,q.
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    let up = u.at(i, p) as f64;
+                    let uq = u.at(i, q) as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let up = u.at(i, p);
+                    let uq = u.at(i, q);
+                    *u.at_mut(i, p) = cf * up - sf * uq;
+                    *u.at_mut(i, q) = sf * up + cf * uq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    *v.at_mut(i, p) = cf * vp - sf * vq;
+                    *v.at_mut(i, q) = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+    // Column norms are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0.0f32; n];
+    for (j, s) in sigmas.iter_mut().enumerate() {
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            norm += (u.at(i, j) as f64).powi(2);
+        }
+        *s = norm.sqrt() as f32;
+    }
+    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+    let mut u_out = Matrix::zeros(m, n);
+    let mut vt_out = Matrix::zeros(n, n);
+    for (jj, &j) in order.iter().enumerate() {
+        let s = sigmas[j];
+        let inv = if s > 1e-20 { 1.0 / s } else { 0.0 };
+        for i in 0..m {
+            *u_out.at_mut(i, jj) = u.at(i, j) * inv;
+        }
+        for i in 0..n {
+            *vt_out.at_mut(jj, i) = v.at(i, j);
+        }
+    }
+    let sorted: Vec<f32> = order.iter().map(|&j| sigmas[j]).collect();
+    (u_out, sorted, vt_out)
+}
+
+/// Rank-r truncated SVD factors (stored as U·diag(s)·Vt).
+#[derive(Clone, Debug)]
+pub struct TruncatedSvd {
+    pub u: Matrix,      // m × r
+    pub s: Vec<f32>,    // r
+    pub vt: Matrix,     // r × n
+}
+
+impl TruncatedSvd {
+    /// Reconstruct the rank-r matrix U diag(s) Vᵀ.
+    pub fn reconstruct(&self) -> Matrix {
+        let r = self.s.len();
+        let mut us = self.u.clone();
+        for j in 0..r {
+            us.scale_column(j, self.s[j]);
+        }
+        matmul(&us, &self.vt)
+    }
+}
+
+/// Randomized truncated SVD (HMT 2011) with `oversample` extra columns and
+/// `power_iters` subspace iterations for spectral-tail suppression.
+///
+/// Cost O(m·n·(r+p)) per pass — the paper's α per OATS iteration.
+pub fn randomized_svd(
+    a: &Matrix,
+    rank: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Rng,
+) -> TruncatedSvd {
+    let m = a.rows;
+    let n = a.cols;
+    let r = rank.min(m.min(n)).max(1);
+    let l = (r + oversample).min(m.min(n));
+    // Range finding on the wider side: if m < n operate on Aᵀ and swap back.
+    if m < n {
+        let at = a.transpose();
+        let svd = randomized_svd(&at, rank, oversample, power_iters, rng);
+        return TruncatedSvd { u: svd.vt.transpose(), s: svd.s, vt: svd.u.transpose() };
+    }
+    // Y = A Ω, Ω ~ N(0,1) [n × l]
+    let omega = Matrix::randn(n, l, 1.0, rng);
+    let mut y = matmul(a, &omega); // m × l
+    // Power iterations with re-orthogonalization.
+    for _ in 0..power_iters {
+        let (q, _) = qr_thin(&y);
+        let z = matmul(&a.transpose(), &q); // n × l
+        let (qz, _) = qr_thin(&z);
+        y = matmul(a, &qz);
+    }
+    let (q, _) = qr_thin(&y); // m × l orthonormal
+    // B = Qᵀ A  [l × n]. Finish with an l×l symmetric eigenproblem instead
+    // of an n×l one-sided Jacobi (§Perf iteration 2: the Gram trick cuts
+    // the small-factorization cost from O(sweeps·l²·n) to O(sweeps·l³),
+    // ~5× on the d=512 OATS iteration — see EXPERIMENTS.md §Perf).
+    let b = matmul(&q.transpose(), a);
+    // G = B Bᵀ (l × l, symmetric PSD) = V Λ Vᵀ.
+    let g = matmul(&b, &b.transpose());
+    let (evals, v) = jacobi_eigh(&g);
+    // σ_j = sqrt(λ_j); U = Q V; Vt = diag(1/σ) Vᵀ B.
+    let vtb = matmul(&v.transpose(), &b); // l × n
+    let u_full = matmul(&q, &v); // m × l
+    let mut u = Matrix::zeros(m, r);
+    for i in 0..m {
+        for j in 0..r {
+            u.data[i * r + j] = u_full.at(i, j);
+        }
+    }
+    let mut s = Vec::with_capacity(r);
+    let mut vt = Matrix::zeros(r, n);
+    for j in 0..r {
+        let sigma = evals[j].max(0.0).sqrt();
+        s.push(sigma as f32);
+        let inv = if sigma > 1e-20 { 1.0 / sigma } else { 0.0 };
+        for i in 0..n {
+            vt.data[j * n + i] = (vtb.at(j, i) as f64 * inv) as f32;
+        }
+    }
+    TruncatedSvd { u, s, vt }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix: A = V Λ Vᵀ.
+/// Returns eigenvalues (descending, as f64) and the orthonormal V whose
+/// columns are the eigenvectors. O(sweeps · n³); intended for small n
+/// (the randomized-SVD projection size).
+pub fn jacobi_eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
+    let n = a.rows;
+    assert_eq!(n, a.cols, "jacobi_eigh requires square input");
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 40;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                off += apq * apq;
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Rotate rows/cols p, q of M.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+    // Sort descending by eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[j * n + j].partial_cmp(&m[i * n + i]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| m[i * n + i]).collect();
+    let mut v_out = Matrix::zeros(n, n);
+    for (jj, &j) in order.iter().enumerate() {
+        for i in 0..n {
+            v_out.data[i * n + jj] = v[i * n + j] as f32;
+        }
+    }
+    (evals, v_out)
+}
+
+/// Cholesky factorization A = L Lᵀ for symmetric positive-definite A.
+/// Returns the lower-triangular L, or None if A is not PD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows;
+    assert_eq!(n, a.cols, "cholesky requires square input");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= (l.at(i, k) as f64) * (l.at(j, k) as f64);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Invert an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn cholesky_inverse(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    // Forward-solve L X = I  → X = L⁻¹ (lower triangular).
+    let mut linv = Matrix::zeros(n, n);
+    for col in 0..n {
+        let mut x = vec![0.0f32; n];
+        x[col] = 1.0;
+        for i in 0..n {
+            let mut sum = x[i];
+            for k in 0..i {
+                sum -= l.at(i, k) * x[k];
+            }
+            x[i] = sum / l.at(i, i);
+        }
+        for i in 0..n {
+            linv.data[i * n + col] = x[i];
+        }
+    }
+    // A⁻¹ = L⁻ᵀ L⁻¹
+    Some(matmul(&linv.transpose(), &linv))
+}
+
+/// Upper-triangular Cholesky of the *inverse*: returns R upper-triangular
+/// with A⁻¹ = Rᵀ R is false — rather, SparseGPT uses chol(A⁻¹)ᵀ, i.e. the
+/// upper Cholesky factor of the inverse Hessian. We compute H⁻¹ then its
+/// Cholesky and return the transposed (upper) factor.
+pub fn upper_cholesky_of_inverse(a: &Matrix) -> Option<Matrix> {
+    let inv = cholesky_inverse(a)?;
+    let l = cholesky(&inv)?;
+    Some(l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn assert_orthonormal_cols(q: &Matrix, tol: f32) {
+        let g = matmul(&q.transpose(), q);
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g.at(i, j) - want).abs() < tol,
+                    "gram({i},{j}) = {}",
+                    g.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(20, 8, 1.0, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert_orthonormal_cols(&q, 1e-4);
+        let qr = matmul(&q, &r);
+        assert!(a.fro_dist(&qr) < 1e-3, "dist={}", a.fro_dist(&qr));
+    }
+
+    #[test]
+    fn qr_square() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(6, 6, 1.0, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert_orthonormal_cols(&q, 1e-4);
+        assert!(a.fro_dist(&matmul(&q, &r)) < 1e-3);
+    }
+
+    #[test]
+    fn jacobi_svd_reconstructs() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(12, 6, 1.0, &mut rng);
+        let (u, s, vt) = jacobi_svd(&a);
+        assert_orthonormal_cols(&u, 1e-3);
+        let svd = TruncatedSvd { u, s: s.clone(), vt };
+        assert!(a.fro_dist(&svd.reconstruct()) < 1e-3);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "not descending: {:?}", s);
+        }
+    }
+
+    #[test]
+    fn randomized_svd_exact_on_lowrank() {
+        // A = B C with rank 3 exactly — truncated SVD at r=3 must be exact.
+        let mut rng = Rng::new(4);
+        let b = Matrix::randn(30, 3, 1.0, &mut rng);
+        let c = Matrix::randn(3, 25, 1.0, &mut rng);
+        let a = matmul(&b, &c);
+        let svd = randomized_svd(&a, 3, 6, 2, &mut rng);
+        let rec = svd.reconstruct();
+        assert!(a.fro_dist(&rec) / a.fro_norm() < 1e-3, "rel err {}", a.fro_dist(&rec) / a.fro_norm());
+    }
+
+    #[test]
+    fn randomized_svd_wide_matrix() {
+        let mut rng = Rng::new(5);
+        let b = Matrix::randn(10, 2, 1.0, &mut rng);
+        let c = Matrix::randn(2, 40, 1.0, &mut rng);
+        let a = matmul(&b, &c);
+        let svd = randomized_svd(&a, 2, 4, 2, &mut rng);
+        assert_eq!(svd.u.rows, 10);
+        assert_eq!(svd.vt.cols, 40);
+        assert!(a.fro_dist(&svd.reconstruct()) / a.fro_norm() < 1e-3);
+    }
+
+    #[test]
+    fn randomized_svd_best_rank_r_error_bound_prop() {
+        // ‖A − SVD_r(A)‖F should be within a modest factor of the tail
+        // singular mass (we verify against full Jacobi SVD truncation).
+        check("rsvd near-optimal", 10, |g| {
+            let m = g.usize_range(8, 24);
+            let n = g.usize_range(4, m + 1);
+            let r = g.usize_range(1, n.min(5));
+            let a = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+            let (u, s, vt) = jacobi_svd(&a);
+            let opt = TruncatedSvd {
+                u: {
+                    let mut m2 = Matrix::zeros(u.rows, r);
+                    for i in 0..u.rows {
+                        for j in 0..r {
+                            m2.data[i * r + j] = u.at(i, j);
+                        }
+                    }
+                    m2
+                },
+                s: s[..r].to_vec(),
+                vt: {
+                    let mut m2 = Matrix::zeros(r, vt.cols);
+                    for i in 0..r {
+                        for j in 0..vt.cols {
+                            m2.data[i * vt.cols + j] = vt.at(i, j);
+                        }
+                    }
+                    m2
+                },
+            };
+            let opt_err = a.fro_dist(&opt.reconstruct());
+            let svd = randomized_svd(&a, r, 8, 3, g.rng());
+            let rs_err = a.fro_dist(&svd.reconstruct());
+            assert!(
+                rs_err <= 1.25 * opt_err + 1e-3,
+                "rsvd err {rs_err} vs optimal {opt_err} (m={m} n={n} r={r})"
+            );
+        });
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(6);
+        let b = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut a = matmul(&b, &b.transpose()); // SPD-ish
+        for i in 0..8 {
+            *a.at_mut(i, i) += 8.0; // ensure well-conditioned
+        }
+        let l = cholesky(&a).expect("PD");
+        let rec = matmul(&l, &l.transpose());
+        assert!(a.fro_dist(&rec) < 1e-2);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1, 3
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn cholesky_inverse_is_inverse() {
+        let mut rng = Rng::new(7);
+        let b = Matrix::randn(6, 6, 1.0, &mut rng);
+        let mut a = matmul(&b, &b.transpose());
+        for i in 0..6 {
+            *a.at_mut(i, i) += 6.0;
+        }
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        assert!(prod.fro_dist(&Matrix::eye(6)) < 1e-2, "dist={}", prod.fro_dist(&Matrix::eye(6)));
+    }
+
+    #[test]
+    fn upper_cholesky_of_inverse_shape() {
+        let mut rng = Rng::new(8);
+        let b = Matrix::randn(5, 5, 1.0, &mut rng);
+        let mut a = matmul(&b, &b.transpose());
+        for i in 0..5 {
+            *a.at_mut(i, i) += 5.0;
+        }
+        let r = upper_cholesky_of_inverse(&a).unwrap();
+        // Upper triangular:
+        for i in 0..5 {
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-6);
+            }
+        }
+        // RᵀR = A⁻¹ → A RᵀR = I
+        let rtr = matmul(&r.transpose(), &r);
+        let prod = matmul(&a, &rtr);
+        assert!(prod.fro_dist(&Matrix::eye(5)) < 1e-2);
+    }
+}

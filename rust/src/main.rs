@@ -1,0 +1,309 @@
+//! `oats` — the leader binary: training, compression, evaluation, serving,
+//! and every table/figure regenerator (DESIGN.md §6).
+//!
+//! ```text
+//! oats train        --preset small [--steps N]
+//! oats compress     --preset small --method oats --rate 0.5 [--rank-ratio κ]
+//!                   [--iters N] [--pattern row|layer|N:M] [--owl] [--out dir]
+//! oats eval         --model models/small-oats-50
+//! oats serve-bench  --preset small [--seq]          # Tables 7 / 14
+//! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
+//! oats sweep        rank-ratio|iters|nm|grid        # Figures 1–2, Table 15
+//! oats rollout      [--out results/rollout]         # Figures 3–4
+//! oats info
+//! ```
+//!
+//! `--quick` shrinks every experiment (CI-sized); default is paper-sized.
+
+use anyhow::Result;
+use oats::cli::Args;
+use oats::config::{CompressConfig, Method, ModelConfig, SparsityPattern};
+use oats::experiments::{speed, sweeps, tables, vision, Ctx};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn root() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn ctx_from(args: &Args) -> Ctx {
+    Ctx::new(&root(), args.bool_flag("quick"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "compress" => cmd_compress(args),
+        "eval" => cmd_eval(args),
+        "serve-bench" => cmd_serve_bench(args),
+        "bench-table" => cmd_bench_table(args),
+        "sweep" => cmd_sweep(args),
+        "rollout" => cmd_rollout(args),
+        "probe-outliers" => cmd_probe_outliers(args),
+        "info" | "" => cmd_info(),
+        other => anyhow::bail!("unknown command '{other}' (try `oats info`)"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("OATS — Outlier-Aware Pruning Through Sparse and Low Rank Decomposition");
+    println!("Reproduction of Zhang & Papyan (ICLR 2025); see DESIGN.md / EXPERIMENTS.md.");
+    println!();
+    for p in ["tiny", "small", "base", "large", "alt"] {
+        let c = ModelConfig::preset(p)?;
+        println!(
+            "  preset {:<6} d={:<4} L={:<2} ff={:<5} vocab={:<4} total≈{:.2}M params",
+            p,
+            c.d_model,
+            c.n_layers,
+            c.d_ff,
+            c.vocab,
+            c.total_params() as f64 / 1e6
+        );
+    }
+    println!();
+    println!("artifacts: {}", root().join("artifacts").display());
+    println!("models:    {}", root().join("models").display());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.flag_or("preset", "small");
+    let mut ctx = ctx_from(args);
+    let steps = args.usize_flag("steps", ctx.train_steps(preset));
+    println!("training preset '{preset}' for {steps} steps via PJRT train_step artifact…");
+    let corpus = oats::data::SyntheticCorpus::new(ctx.corpus(preset)?.cfg.clone());
+    let model = oats::train::ensure_trained_model(
+        &ctx.artifacts,
+        &ctx.models,
+        preset,
+        steps,
+        &corpus,
+    )?;
+    let row = oats::eval::evaluate(&model, &corpus, "trained", ctx.eval_batches(), ctx.eval_probes());
+    println!("ppl={:.2} hard={:.1}% easy={:.1}%", row.ppl, row.hard, row.easy);
+    Ok(())
+}
+
+fn parse_compress_cfg(args: &Args) -> Result<CompressConfig> {
+    Ok(CompressConfig {
+        method: Method::parse(args.flag_or("method", "oats"))?,
+        rate: args.f64_flag("rate", 0.5),
+        rank_ratio: args.f64_flag("rank-ratio", 0.25),
+        iters: args.usize_flag("iters", 80),
+        pattern: SparsityPattern::parse(args.flag_or("pattern", "row"))?,
+        scale_by_d: !args.bool_flag("no-scaling"),
+        robust_scaling: args.bool_flag("robust-scaling"),
+        threshold_first: args.bool_flag("threshold-first"),
+        scale_lowrank_only: args.bool_flag("scale-lowrank-only"),
+        owl: args.bool_flag("owl"),
+        ..Default::default()
+    })
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let preset = args.flag_or("preset", "small");
+    let mut ctx = ctx_from(args);
+    let cfg = parse_compress_cfg(args)?;
+    let model = ctx.model(preset)?;
+    let calib = ctx.calib(preset)?;
+    println!(
+        "compressing '{preset}' with {} @ ρ={} κ={} N={}…",
+        cfg.method.name(),
+        cfg.rate,
+        cfg.rank_ratio,
+        cfg.iters
+    );
+    let (cm, report) =
+        oats::coordinator::pipeline::compress_clone(&model, &calib, &cfg, 6)?;
+    println!(
+        "achieved compression {:.2}% | mean rel error {:.4} | {:.2}s total",
+        cm.achieved_compression() * 100.0,
+        report.mean_rel_error(),
+        report.total_seconds
+    );
+    let corpus = oats::data::SyntheticCorpus::new(ctx.corpus(preset)?.cfg.clone());
+    let row = oats::eval::evaluate(&cm, &corpus, "compressed", ctx.eval_batches(), ctx.eval_probes());
+    println!("ppl={:.2} hard={:.1}% easy={:.1}%", row.ppl, row.hard, row.easy);
+    if let Some(out) = args.flag("out") {
+        // Structure-preserving format: CSR + low-rank factors on disk.
+        oats::model::compressed_io::save(&cm, std::path::Path::new(out))?;
+        let sz = oats::model::compressed_io::weights_size(std::path::Path::new(out))?;
+        println!("saved compressed model to {out} ({:.2} MiB)", sz as f64 / (1 << 20) as f64);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = args
+        .flag("model")
+        .map(std::path::PathBuf::from)
+        .or_else(|| args.positional.first().map(std::path::PathBuf::from))
+        .ok_or_else(|| anyhow::anyhow!("--model <dir> required"))?;
+    let ctx = ctx_from(args);
+    // compressed_io::load transparently falls back to the dense format.
+    let model = oats::model::compressed_io::load(&dir)?;
+    let corpus = oats::data::SyntheticCorpus::new(
+        oats::data::CorpusConfig::for_vocab(model.cfg.vocab, 0xC0DE),
+    );
+    let row = oats::eval::evaluate(&model, &corpus, "eval", ctx.eval_batches(), ctx.eval_probes());
+    println!(
+        "{}: ppl={:.2} hard={:.1}% easy={:.1}% compression={:.1}%",
+        dir.display(),
+        row.ppl,
+        row.hard,
+        row.easy,
+        model.achieved_compression() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let preset = args.flag_or("preset", "small");
+    let mut ctx = ctx_from(args);
+    let table = speed::throughput_table(&mut ctx, preset, args.bool_flag("seq"))?;
+    table.print();
+    ctx.record(&table.to_json());
+    Ok(())
+}
+
+fn cmd_bench_table(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: oats bench-table <t2|…|all>"))?;
+    let mut ctx = ctx_from(args);
+    let presets_default = if ctx.quick { vec!["tiny"] } else { vec!["tiny", "small"] };
+    let grid_methods = [Method::SparseGpt, Method::Wanda, Method::DsNoT, Method::Oats];
+    let rates = [0.3, 0.4, 0.5];
+
+    let run_grid_tables = |ctx: &mut Ctx| -> Result<Vec<oats::report::Table>> {
+        let results = tables::run_grid(ctx, &presets_default, &rates, &grid_methods)?;
+        Ok(vec![
+            tables::table2(&results),
+            tables::table3(&results),
+            tables::table4(&results),
+            tables::table16(&results),
+        ])
+    };
+
+    let mut out: Vec<oats::report::Table> = Vec::new();
+    match which {
+        "grid" => out.extend(run_grid_tables(&mut ctx)?),
+        "t2" | "t3" | "t4" | "t16" => {
+            let all = run_grid_tables(&mut ctx)?;
+            let idx = match which {
+                "t2" => 0,
+                "t3" => 1,
+                "t4" => 2,
+                _ => 3,
+            };
+            out.push(all.into_iter().nth(idx).unwrap());
+        }
+        "t5" => out.push(tables::table5(&mut ctx, &presets_default)?),
+        "t6" | "t11" | "t12" | "t13" => {
+            let all = tables::ablation_tables(&mut ctx, "tiny")?;
+            let idx = match which {
+                "t6" => 0,
+                "t11" => 1,
+                "t12" => 2,
+                _ => 3,
+            };
+            out.push(all.into_iter().nth(idx).unwrap());
+        }
+        "t8" => out.push(vision::table8(&mut ctx)?),
+        "t9" => out.push(speed::walltime_table(ctx.quick)?),
+        "t10" => {
+            let preset = if ctx.quick { "tiny" } else { "small" };
+            out.push(tables::table10(&mut ctx, preset)?);
+        }
+        "t15" => out.push(sweeps::hyper_grid(&mut ctx, "tiny")?),
+        "t17" => out.push(tables::table17(&mut ctx)?),
+        "t20" => out.push(tables::table20(&mut ctx, "tiny")?),
+        "all" => {
+            out.extend(run_grid_tables(&mut ctx)?);
+            out.push(tables::table5(&mut ctx, &presets_default)?);
+            out.extend(tables::ablation_tables(&mut ctx, "tiny")?);
+            out.push(vision::table8(&mut ctx)?);
+            out.push(speed::walltime_table(ctx.quick)?);
+            let t10_preset = if ctx.quick { "tiny" } else { "small" };
+            out.push(tables::table10(&mut ctx, t10_preset)?);
+            out.push(sweeps::hyper_grid(&mut ctx, "tiny")?);
+            out.push(tables::table17(&mut ctx)?);
+            out.push(tables::table20(&mut ctx, "tiny")?);
+            out.push(speed::throughput_table(&mut ctx, "tiny", false)?);
+            out.push(speed::throughput_table(&mut ctx, "tiny", true)?);
+        }
+        other => anyhow::bail!("unknown table '{other}'"),
+    }
+    for t in &out {
+        t.print();
+        println!();
+        ctx.record(&t.to_json());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: oats sweep <rank-ratio|iters|nm|grid>"))?;
+    let mut ctx = ctx_from(args);
+    let default_preset = if ctx.quick { "tiny" } else { "small" };
+    let preset = args.flag_or("preset", default_preset);
+    let rate = args.f64_flag("rate", 0.5);
+    let t = match which {
+        "rank-ratio" => sweeps::rank_ratio_sweep(&mut ctx, preset, rate)?,
+        "iters" => sweeps::iteration_sweep(&mut ctx, preset, rate)?,
+        "nm" => sweeps::nm_sweep(&mut ctx, preset)?,
+        "grid" => sweeps::hyper_grid(&mut ctx, preset)?,
+        other => anyhow::bail!("unknown sweep '{other}'"),
+    };
+    t.print();
+    ctx.record(&t.to_json());
+    Ok(())
+}
+
+/// Verify the paper's outlier-feature premise on a trained model: per-layer
+/// excess kurtosis of linear-layer inputs (≫0 = heavy-tailed outliers).
+fn cmd_probe_outliers(args: &Args) -> Result<()> {
+    let preset = args.flag_or("preset", "tiny");
+    let mut ctx = ctx_from(args);
+    let model = ctx.model(preset)?;
+    let corpus = oats::data::SyntheticCorpus::new(ctx.corpus(preset)?.cfg.clone());
+    let probes = oats::eval::activation_kurtosis(&model, &corpus, 8);
+    let mut t = oats::report::Table::new(
+        &format!("Outlier probe — excess kurtosis of layer inputs ({preset})"),
+        &["Layer", "Excess kurtosis"],
+    );
+    for (id, k) in &probes {
+        t.row(vec![id.to_string(), format!("{k:.2}")]);
+    }
+    t.print();
+    let max = probes.iter().map(|(_, k)| *k).fold(f64::MIN, f64::max);
+    println!(
+        "\nmax excess kurtosis {max:.2} — {} (Gaussian ≈ 0; the paper's §2.3\n\
+         outlier phenomenon motivates the D-scaling)",
+        if max > 1.0 { "heavy-tailed outlier features present" } else { "weak outlier structure" }
+    );
+    Ok(())
+}
+
+fn cmd_rollout(args: &Args) -> Result<()> {
+    let mut ctx = ctx_from(args);
+    let out = root().join(args.flag_or("out", "results/rollout"));
+    let t = vision::rollout_analysis(&mut ctx, &out)?;
+    t.print();
+    ctx.record(&t.to_json());
+    println!("heatmaps written to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Model weight persistence: a JSON manifest plus a raw little-endian f32
+//! blob. The same layout is produced by the training driver (which receives
+//! parameters back from the PJRT train-step artifact) and consumed by every
+//! evaluation/serving path, so trained models round-trip rust↔JAX exactly.
+
+use super::lm::{Block, LinearOp, TransformerLM};
+use crate::config::ModelConfig;
+use crate::json::{self, Json};
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Canonical parameter order — MUST match `python/compile/model.py::param_names`.
+pub fn param_names(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = vec!["tok_emb".to_string(), "pos_emb".to_string()];
+    for b in 0..cfg.n_layers {
+        for t in ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w_up", "w_down"] {
+            names.push(format!("block{b}.{t}"));
+        }
+    }
+    names.push("lnf_g".into());
+    names.push("lnf_b".into());
+    names.push("head".into());
+    names
+}
+
+/// Shape of each named parameter.
+pub fn param_shape(cfg: &ModelConfig, name: &str) -> (usize, usize) {
+    let d = cfg.d_model;
+    match name {
+        "tok_emb" => (cfg.vocab, d),
+        "pos_emb" => (cfg.seq_len, d),
+        "lnf_g" | "lnf_b" => (1, d),
+        "head" => (cfg.vocab, d),
+        _ => {
+            let t = name.split('.').nth(1).expect("block param");
+            match t {
+                "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" => (1, d),
+                "wq" | "wk" | "wv" | "wo" => (d, d),
+                "w_up" => (cfg.d_ff, d),
+                "w_down" => (d, cfg.d_ff),
+                other => panic!("unknown block param '{other}'"),
+            }
+        }
+    }
+}
+
+/// Flatten the model's parameters in canonical order (dense views).
+pub fn flatten(model: &TransformerLM) -> Vec<(String, Matrix)> {
+    let cfg = &model.cfg;
+    let mut out = Vec::new();
+    out.push(("tok_emb".to_string(), model.tok_emb.clone()));
+    out.push(("pos_emb".to_string(), model.pos_emb.clone()));
+    for (b, blk) in model.blocks.iter().enumerate() {
+        let vecm = |v: &Vec<f32>| Matrix::from_vec(1, v.len(), v.clone());
+        out.push((format!("block{b}.ln1_g"), vecm(&blk.ln1_g)));
+        out.push((format!("block{b}.ln1_b"), vecm(&blk.ln1_b)));
+        out.push((format!("block{b}.wq"), blk.q.dense_view()));
+        out.push((format!("block{b}.wk"), blk.k.dense_view()));
+        out.push((format!("block{b}.wv"), blk.v.dense_view()));
+        out.push((format!("block{b}.wo"), blk.o.dense_view()));
+        out.push((format!("block{b}.ln2_g"), vecm(&blk.ln2_g)));
+        out.push((format!("block{b}.ln2_b"), vecm(&blk.ln2_b)));
+        out.push((format!("block{b}.w_up"), blk.up.dense_view()));
+        out.push((format!("block{b}.w_down"), blk.down.dense_view()));
+    }
+    out.push(("lnf_g".to_string(), Matrix::from_vec(1, cfg.d_model, model.lnf_g.clone())));
+    out.push(("lnf_b".to_string(), Matrix::from_vec(1, cfg.d_model, model.lnf_b.clone())));
+    out.push(("head".to_string(), model.head.clone()));
+    out
+}
+
+/// Rebuild a model from named dense tensors.
+pub fn assemble(cfg: &ModelConfig, tensors: &[(String, Matrix)]) -> Result<TransformerLM> {
+    let get = |name: &str| -> Result<&Matrix> {
+        tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m)
+            .with_context(|| format!("missing tensor '{name}'"))
+    };
+    let vec_of = |name: &str| -> Result<Vec<f32>> { Ok(get(name)?.data.clone()) };
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for b in 0..cfg.n_layers {
+        blocks.push(Block {
+            ln1_g: vec_of(&format!("block{b}.ln1_g"))?,
+            ln1_b: vec_of(&format!("block{b}.ln1_b"))?,
+            ln2_g: vec_of(&format!("block{b}.ln2_g"))?,
+            ln2_b: vec_of(&format!("block{b}.ln2_b"))?,
+            q: LinearOp::Dense(get(&format!("block{b}.wq"))?.clone()),
+            k: LinearOp::Dense(get(&format!("block{b}.wk"))?.clone()),
+            v: LinearOp::Dense(get(&format!("block{b}.wv"))?.clone()),
+            o: LinearOp::Dense(get(&format!("block{b}.wo"))?.clone()),
+            up: LinearOp::Dense(get(&format!("block{b}.w_up"))?.clone()),
+            down: LinearOp::Dense(get(&format!("block{b}.w_down"))?.clone()),
+        });
+    }
+    Ok(TransformerLM {
+        cfg: cfg.clone(),
+        tok_emb: get("tok_emb")?.clone(),
+        pos_emb: get("pos_emb")?.clone(),
+        blocks,
+        lnf_g: vec_of("lnf_g")?,
+        lnf_b: vec_of("lnf_b")?,
+        head: get("head")?.clone(),
+    })
+}
+
+/// Save a named tensor list (generic: LM, ViT, …) as manifest.json +
+/// weights.bin under `dir/`.
+pub fn save_tensors(dir: &Path, config: Json, tensors: &[(String, Matrix)]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut manifest = Json::obj();
+    manifest.set("config", config);
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    let mut blob: Vec<u8> = Vec::new();
+    for (name, m) in tensors {
+        let mut e = Json::obj();
+        e.set("name", json::s(name))
+            .set("rows", json::num(m.rows as f64))
+            .set("cols", json::num(m.cols as f64))
+            .set("offset", json::num(offset as f64));
+        entries.push(e);
+        for &v in &m.data {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        offset += m.data.len();
+    }
+    manifest.set("tensors", Json::Arr(entries));
+    std::fs::write(dir.join("manifest.json"), manifest.to_pretty())?;
+    let mut f = std::fs::File::create(dir.join("weights.bin"))?;
+    f.write_all(&blob)?;
+    Ok(())
+}
+
+/// Load a tensor directory saved by [`save_tensors`].
+pub fn load_tensors(dir: &Path) -> Result<(Json, Vec<(String, Matrix)>)> {
+    let manifest =
+        json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)
+            .context("parsing manifest.json")?;
+    let mut blob = Vec::new();
+    std::fs::File::open(dir.join("weights.bin"))?.read_to_end(&mut blob)?;
+    let entries = manifest
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .context("manifest missing 'tensors'")?;
+    let mut tensors = Vec::with_capacity(entries.len());
+    for e in entries {
+        let name = e.req_str("name")?.to_string();
+        let rows = e.req_usize("rows")?;
+        let cols = e.req_usize("cols")?;
+        let offset = e.req_usize("offset")?;
+        let n = rows * cols;
+        let bytes = blob
+            .get(offset * 4..(offset + n) * 4)
+            .context("weights.bin too short")?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push((name, Matrix::from_vec(rows, cols, data)));
+    }
+    let config = manifest.get("config").context("manifest missing 'config'")?.clone();
+    Ok((config, tensors))
+}
+
+/// Save a model to `dir/` as manifest.json + weights.bin.
+pub fn save(model: &TransformerLM, dir: &Path) -> Result<()> {
+    save_tensors(dir, model.cfg.to_json(), &flatten(model))
+}
+
+/// Load a model saved by [`save`].
+pub fn load(dir: &Path) -> Result<TransformerLM> {
+    let (config, tensors) = load_tensors(dir)?;
+    let cfg = ModelConfig::from_json(&config)?;
+    assemble(&cfg, &tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let m = TransformerLM::init(&cfg, 7);
+        let dir = std::env::temp_dir().join(format!("oats_io_test_{}", std::process::id()));
+        save(&m, &dir).unwrap();
+        let m2 = load(&dir).unwrap();
+        let toks = vec![vec![1usize, 2, 3, 4]];
+        assert!(m.forward(&toks).fro_dist(&m2.forward(&toks)) < 1e-6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn param_names_match_flatten_order() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let m = TransformerLM::init(&cfg, 1);
+        let names = param_names(&cfg);
+        let tensors = flatten(&m);
+        assert_eq!(names.len(), tensors.len());
+        for (n, (tn, t)) in names.iter().zip(&tensors) {
+            assert_eq!(n, tn);
+            let (r, c) = param_shape(&cfg, n);
+            assert_eq!((t.rows, t.cols), (r, c), "{n}");
+        }
+    }
+
+    #[test]
+    fn assemble_rejects_missing() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        assert!(assemble(&cfg, &[]).is_err());
+    }
+}

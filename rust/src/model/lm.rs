@@ -1,0 +1,610 @@
+//! GPT-style decoder-only LM (pre-LN, learned positions, GELU MLP, untied
+//! head). The architecture matches `python/compile/model.py` exactly so the
+//! PJRT-executed artifacts and this native implementation agree to f32
+//! round-off (verified by integration tests).
+
+use crate::compress::CompressedLayer;
+use crate::config::ModelConfig;
+use crate::tensor::{self, Matrix};
+use crate::util::prng::Rng;
+use std::collections::HashMap;
+
+pub const LINEAR_NAMES: [&str; 6] = ["q", "k", "v", "o", "up", "down"];
+
+/// Identifies one prunable linear layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinearId {
+    pub block: usize,
+    /// One of `LINEAR_NAMES`.
+    pub name: &'static str,
+}
+
+impl std::fmt::Display for LinearId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "block{}.{}", self.block, self.name)
+    }
+}
+
+/// A linear layer in either execution mode. Weights are out×in; the layer
+/// computes `y = x Wᵀ`.
+#[derive(Clone, Debug)]
+pub enum LinearOp {
+    Dense(Matrix),
+    Compressed(CompressedLayer),
+}
+
+impl LinearOp {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.rows,
+            LinearOp::Compressed(c) => c.shape().0,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.cols,
+            LinearOp::Compressed(c) => c.shape().1,
+        }
+    }
+
+    /// Batched apply: X [b × in] → [b × out].
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match self {
+            LinearOp::Dense(w) => tensor::matmul_bt(x, w),
+            LinearOp::Compressed(CompressedLayer::Dense(w)) => tensor::matmul_bt(x, w),
+            LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matmul_xt(x),
+            LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply_batch(x),
+        }
+    }
+
+    /// Single-row apply for the decode hot path.
+    pub fn forward_vec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            LinearOp::Dense(w) => {
+                for (r, out) in y.iter_mut().enumerate() {
+                    *out = tensor::dot(w.row(r), x);
+                }
+            }
+            LinearOp::Compressed(CompressedLayer::Dense(w)) => {
+                for (r, out) in y.iter_mut().enumerate() {
+                    *out = tensor::dot(w.row(r), x);
+                }
+            }
+            LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matvec(x, y),
+            LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply(x, y),
+        }
+    }
+
+    /// Dense view (reconstruction) — used by OWL scoring and tests.
+    pub fn dense_view(&self) -> Matrix {
+        match self {
+            LinearOp::Dense(w) => w.clone(),
+            LinearOp::Compressed(c) => c.to_dense(),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.rows * w.cols,
+            LinearOp::Compressed(c) => c.param_count(),
+        }
+    }
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub q: LinearOp,
+    pub k: LinearOp,
+    pub v: LinearOp,
+    pub o: LinearOp,
+    pub up: LinearOp,
+    pub down: LinearOp,
+}
+
+impl Block {
+    pub fn linear(&self, name: &str) -> &LinearOp {
+        match name {
+            "q" => &self.q,
+            "k" => &self.k,
+            "v" => &self.v,
+            "o" => &self.o,
+            "up" => &self.up,
+            "down" => &self.down,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+
+    pub fn linear_mut(&mut self, name: &str) -> &mut LinearOp {
+        match name {
+            "q" => &mut self.q,
+            "k" => &mut self.k,
+            "v" => &mut self.v,
+            "o" => &mut self.o,
+            "up" => &mut self.up,
+            "down" => &mut self.down,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+}
+
+/// Per-linear captured inputs from a forward pass (the calibration hook).
+#[derive(Default)]
+pub struct ForwardCapture {
+    /// Input activations per linear layer of ONE block.
+    pub inputs: HashMap<&'static str, Matrix>,
+}
+
+const LN_EPS: f32 = 1e-5;
+
+/// KV cache for incremental decoding: one K and V buffer per block.
+pub struct KvCache {
+    pub k: Vec<Matrix>, // per block: [t × d_model]
+    pub v: Vec<Matrix>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.seq_len, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.seq_len, cfg.d_model)).collect(),
+            len: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// The model.
+#[derive(Clone, Debug)]
+pub struct TransformerLM {
+    pub cfg: ModelConfig,
+    pub tok_emb: Matrix, // vocab × d
+    pub pos_emb: Matrix, // seq × d
+    pub blocks: Vec<Block>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head: Matrix, // vocab × d
+}
+
+impl TransformerLM {
+    /// Random initialization (same scheme as the JAX model: normal(0, 0.02),
+    /// residual projections scaled by 1/sqrt(2·n_layers)).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> TransformerLM {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let resid_std = 0.02 / ((2 * cfg.n_layers) as f32).sqrt();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| Block {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                q: LinearOp::Dense(Matrix::randn(d, d, 0.02, &mut rng)),
+                k: LinearOp::Dense(Matrix::randn(d, d, 0.02, &mut rng)),
+                v: LinearOp::Dense(Matrix::randn(d, d, 0.02, &mut rng)),
+                o: LinearOp::Dense(Matrix::randn(d, d, resid_std, &mut rng)),
+                up: LinearOp::Dense(Matrix::randn(cfg.d_ff, d, 0.02, &mut rng)),
+                down: LinearOp::Dense(Matrix::randn(d, cfg.d_ff, resid_std, &mut rng)),
+            })
+            .collect();
+        TransformerLM {
+            cfg: cfg.clone(),
+            tok_emb: Matrix::randn(cfg.vocab, d, 0.02, &mut rng),
+            pos_emb: Matrix::randn(cfg.seq_len, d, 0.01, &mut rng),
+            blocks,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            head: Matrix::randn(cfg.vocab, d, 0.02, &mut rng),
+        }
+    }
+
+    /// Embed a batch of token sequences → hidden states [B·S × d].
+    /// All sequences must share one length ≤ cfg.seq_len.
+    pub fn embed(&self, tokens: &[Vec<usize>]) -> Matrix {
+        let s = tokens[0].len();
+        assert!(s <= self.cfg.seq_len, "seq {s} > max {}", self.cfg.seq_len);
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(tokens.len() * s, d);
+        for (b, seq) in tokens.iter().enumerate() {
+            assert_eq!(seq.len(), s, "ragged batch");
+            for (t, &tok) in seq.iter().enumerate() {
+                let row = h.row_mut(b * s + t);
+                for (x, (&e, &p)) in
+                    row.iter_mut().zip(self.tok_emb.row(tok).iter().zip(self.pos_emb.row(t)))
+                {
+                    *x = e + p;
+                }
+            }
+        }
+        h
+    }
+
+    /// One block's forward on hidden states `h` [B·S × d] for batch size `bsz`
+    /// and per-sequence length `s`. Optionally captures per-linear inputs and
+    /// per-head attention probabilities (averaged over heads, per sequence).
+    pub fn block_forward(
+        &self,
+        block_idx: usize,
+        h: &Matrix,
+        bsz: usize,
+        s: usize,
+        mut capture: Option<&mut ForwardCapture>,
+        mut attn_out_probs: Option<&mut Vec<Matrix>>,
+    ) -> Matrix {
+        let blk = &self.blocks[block_idx];
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // ── attention ──
+        let mut x = h.clone();
+        tensor::layernorm_rows(&mut x, &blk.ln1_g, &blk.ln1_b, LN_EPS);
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("q", x.clone());
+            c.inputs.insert("k", x.clone());
+            c.inputs.insert("v", x.clone());
+        }
+        let q = blk.q.forward(&x);
+        let k = blk.k.forward(&x);
+        let v = blk.v.forward(&x);
+        let mut ctx = Matrix::zeros(h.rows, d);
+        for b in 0..bsz {
+            let base = b * s;
+            let mut probs_mean = if attn_out_probs.is_some() {
+                Some(Matrix::zeros(s, s))
+            } else {
+                None
+            };
+            for head in 0..nh {
+                let off = head * hd;
+                // scores[t, u] for u ≤ t
+                for t in 0..s {
+                    let qrow = &q.row(base + t)[off..off + hd];
+                    let mut scores = vec![f32::NEG_INFINITY; s];
+                    for (u, sc) in scores.iter_mut().enumerate().take(t + 1) {
+                        let krow = &k.row(base + u)[off..off + hd];
+                        *sc = tensor::dot(qrow, krow) * scale;
+                    }
+                    tensor::softmax_inplace(&mut scores[..t + 1]);
+                    let crow = &mut ctx.row_mut(base + t)[off..off + hd];
+                    for (u, &p) in scores[..t + 1].iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(base + u)[off..off + hd];
+                        for (cv, &vv) in crow.iter_mut().zip(vrow) {
+                            *cv += p * vv;
+                        }
+                    }
+                    if let Some(pm) = probs_mean.as_mut() {
+                        for (u, &p) in scores[..t + 1].iter().enumerate() {
+                            *pm.at_mut(t, u) += p / nh as f32;
+                        }
+                    }
+                }
+            }
+            if let (Some(pm), Some(store)) = (probs_mean, attn_out_probs.as_deref_mut()) {
+                store.push(pm);
+            }
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("o", ctx.clone());
+        }
+        let attn = blk.o.forward(&ctx);
+        let mut h2 = h.clone();
+        h2.axpy(1.0, &attn);
+
+        // ── MLP ──
+        let mut x2 = h2.clone();
+        tensor::layernorm_rows(&mut x2, &blk.ln2_g, &blk.ln2_b, LN_EPS);
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("up", x2.clone());
+        }
+        let mut u = blk.up.forward(&x2);
+        tensor::gelu_inplace(&mut u.data);
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("down", u.clone());
+        }
+        let mlp = blk.down.forward(&u);
+        h2.axpy(1.0, &mlp);
+        h2
+    }
+
+    /// Full forward: token batch → logits [B·S × vocab].
+    pub fn forward(&self, tokens: &[Vec<usize>]) -> Matrix {
+        let s = tokens[0].len();
+        let mut h = self.embed(tokens);
+        for i in 0..self.blocks.len() {
+            h = self.block_forward(i, &h, tokens.len(), s, None, None);
+        }
+        self.project_logits(h)
+    }
+
+    /// Final LN + head.
+    pub fn project_logits(&self, mut h: Matrix) -> Matrix {
+        tensor::layernorm_rows(&mut h, &self.lnf_g, &self.lnf_b, LN_EPS);
+        tensor::matmul_bt(&h, &self.head)
+    }
+
+    /// Mean next-token cross-entropy (nats) on a batch.
+    pub fn loss(&self, inputs: &[Vec<usize>], targets: &[Vec<usize>]) -> f64 {
+        let logits = self.forward(inputs);
+        let flat: Vec<usize> = targets.iter().flatten().copied().collect();
+        tensor::cross_entropy(&logits, &flat)
+    }
+
+    /// Greedy next-token prediction for each sequence's last position.
+    pub fn predict_next(&self, tokens: &[Vec<usize>]) -> Vec<usize> {
+        let s = tokens[0].len();
+        let logits = self.forward(tokens);
+        (0..tokens.len())
+            .map(|b| tensor::argmax(logits.row(b * s + s - 1)))
+            .collect()
+    }
+
+    /// Incremental decode of one token given the cache state. Returns the
+    /// logits row for this position. `token` is appended at position
+    /// `cache.len`.
+    pub fn decode_step(&self, token: usize, cache: &mut KvCache) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t = cache.len;
+        assert!(t < self.cfg.seq_len, "cache full");
+
+        let mut h: Vec<f32> = self.tok_emb.row(token).to_vec();
+        for (x, &p) in h.iter_mut().zip(self.pos_emb.row(t)) {
+            *x += p;
+        }
+        let mut kbuf = vec![0.0f32; d];
+        let mut vbuf = vec![0.0f32; d];
+        let mut qbuf = vec![0.0f32; d];
+        let mut ctx = vec![0.0f32; d];
+        let mut ubuf = vec![0.0f32; self.cfg.d_ff];
+        let mut mlp = vec![0.0f32; d];
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let x = layernorm_vec(&h, &blk.ln1_g, &blk.ln1_b);
+            blk.q.forward_vec(&x, &mut qbuf);
+            blk.k.forward_vec(&x, &mut kbuf);
+            blk.v.forward_vec(&x, &mut vbuf);
+            cache.k[bi].row_mut(t).copy_from_slice(&kbuf);
+            cache.v[bi].row_mut(t).copy_from_slice(&vbuf);
+            ctx.iter_mut().for_each(|c| *c = 0.0);
+            for head in 0..nh {
+                let off = head * hd;
+                let qh = &qbuf[off..off + hd];
+                let mut scores = vec![0.0f32; t + 1];
+                for (u, sc) in scores.iter_mut().enumerate() {
+                    let krow = &cache.k[bi].row(u)[off..off + hd];
+                    *sc = tensor::dot(qh, krow) * scale;
+                }
+                tensor::softmax_inplace(&mut scores);
+                let ch = &mut ctx[off..off + hd];
+                for (u, &p) in scores.iter().enumerate() {
+                    let vrow = &cache.v[bi].row(u)[off..off + hd];
+                    for (cv, &vv) in ch.iter_mut().zip(vrow) {
+                        *cv += p * vv;
+                    }
+                }
+            }
+            let mut attn = vec![0.0f32; d];
+            blk.o.forward_vec(&ctx, &mut attn);
+            for (hv, &a) in h.iter_mut().zip(&attn) {
+                *hv += a;
+            }
+            let x2 = layernorm_vec(&h, &blk.ln2_g, &blk.ln2_b);
+            blk.up.forward_vec(&x2, &mut ubuf);
+            for v in ubuf.iter_mut() {
+                *v = tensor::gelu(*v);
+            }
+            blk.down.forward_vec(&ubuf, &mut mlp);
+            for (hv, &m) in h.iter_mut().zip(&mlp) {
+                *hv += m;
+            }
+        }
+        cache.len += 1;
+        let hf = layernorm_vec(&h, &self.lnf_g, &self.lnf_b);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        for (r, out) in logits.iter_mut().enumerate() {
+            *out = tensor::dot(self.head.row(r), &hf);
+        }
+        logits
+    }
+
+    /// All prunable linear ids in pipeline order.
+    pub fn linear_ids(&self) -> Vec<LinearId> {
+        (0..self.blocks.len())
+            .flat_map(|b| LINEAR_NAMES.iter().map(move |&n| LinearId { block: b, name: n }))
+            .collect()
+    }
+
+    /// Replace a linear layer (the coordinator's commit step).
+    pub fn set_linear(&mut self, id: LinearId, op: LinearOp) {
+        *self.blocks[id.block].linear_mut(id.name) = op;
+    }
+
+    /// Prunable-parameter count currently stored (tracks compression).
+    pub fn prunable_param_count(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| LINEAR_NAMES.iter().map(move |&n| b.linear(n).param_count()))
+            .sum()
+    }
+
+    /// Achieved compression rate over prunable layers.
+    pub fn achieved_compression(&self) -> f64 {
+        1.0 - self.prunable_param_count() as f64 / self.cfg.prunable_params() as f64
+    }
+}
+
+fn layernorm_vec(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + LN_EPS).sqrt();
+    x.iter()
+        .zip(g.iter().zip(b))
+        .map(|(&v, (&gv, &bv))| (v - mean) * inv * gv + bv)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressedLayer;
+    use crate::sparse::Csr;
+
+    fn tiny() -> TransformerLM {
+        TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 42)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny();
+        let tokens = vec![vec![1usize, 2, 3, 4], vec![5, 6, 7, 8]];
+        let logits = m.forward(&tokens);
+        assert_eq!(logits.rows, 8);
+        assert_eq!(logits.cols, m.cfg.vocab);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_past() {
+        let m = tiny();
+        let a = vec![vec![1usize, 2, 3, 4]];
+        let b = vec![vec![1usize, 2, 3, 9]];
+        let la = m.forward(&a);
+        let lb = m.forward(&b);
+        // logits at positions 0..2 must agree (token 3 differs only at pos 3)
+        for t in 0..3 {
+            for v in 0..m.cfg.vocab {
+                assert!(
+                    (la.at(t, v) - lb.at(t, v)).abs() < 1e-5,
+                    "pos {t} vocab {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_independence() {
+        let m = tiny();
+        let single = m.forward(&[vec![3usize, 1, 4, 1]]);
+        let batch = m.forward(&[vec![9usize, 9, 9, 9], vec![3, 1, 4, 1]]);
+        for t in 0..4 {
+            for v in 0..m.cfg.vocab {
+                assert!((single.at(t, v) - batch.at(4 + t, v)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        let m = tiny();
+        let seq = vec![7usize, 3, 11, 2, 19];
+        let full = m.forward(&[seq.clone()]);
+        let mut cache = KvCache::new(&m.cfg);
+        let mut last = Vec::new();
+        for &tok in &seq {
+            last = m.decode_step(tok, &mut cache);
+        }
+        let want = full.row(seq.len() - 1);
+        for (a, b) in last.iter().zip(want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn compressed_dense_equivalence() {
+        // Replacing a layer with its CSR of the same dense weights changes
+        // nothing.
+        let mut m = tiny();
+        let w = m.blocks[0].q.dense_view();
+        m.set_linear(
+            LinearId { block: 0, name: "q" },
+            LinearOp::Compressed(CompressedLayer::Sparse(Csr::from_dense(&w))),
+        );
+        let m2 = tiny();
+        let toks = vec![vec![1usize, 2, 3, 4, 5, 6]];
+        let a = m.forward(&toks);
+        let b = m2.forward(&toks);
+        assert!(a.fro_dist(&b) < 1e-4);
+    }
+
+    #[test]
+    fn capture_collects_all_linears() {
+        let m = tiny();
+        let toks = vec![vec![1usize, 2, 3, 4]];
+        let h = m.embed(&toks);
+        let mut cap = ForwardCapture::default();
+        let _ = m.block_forward(0, &h, 1, 4, Some(&mut cap), None);
+        for name in LINEAR_NAMES {
+            assert!(cap.inputs.contains_key(name), "missing {name}");
+        }
+        assert_eq!(cap.inputs["q"].cols, m.cfg.d_model);
+        assert_eq!(cap.inputs["down"].cols, m.cfg.d_ff);
+    }
+
+    #[test]
+    fn attention_probs_rows_sum_to_one() {
+        let m = tiny();
+        let toks = vec![vec![1usize, 2, 3, 4, 5]];
+        let h = m.embed(&toks);
+        let mut probs = Vec::new();
+        let _ = m.block_forward(0, &h, 1, 5, None, Some(&mut probs));
+        assert_eq!(probs.len(), 1);
+        let p = &probs[0];
+        for t in 0..5 {
+            let sum: f32 = p.row(t).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {t} sums to {sum}");
+            // causal: no mass beyond t
+            for u in t + 1..5 {
+                assert_eq!(p.at(t, u), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn loss_near_log_vocab_at_init() {
+        let m = tiny();
+        let c = crate::data::SyntheticCorpus::new(crate::data::CorpusConfig::for_vocab(
+            m.cfg.vocab,
+            1,
+        ));
+        let b = c.batch(2, 16, &mut c.stream(0));
+        let loss = m.loss(&b.inputs, &b.targets);
+        let logv = (m.cfg.vocab as f64).ln();
+        assert!((loss - logv).abs() < 1.0, "init loss {loss} vs log(V) {logv}");
+    }
+
+    #[test]
+    fn achieved_compression_tracks_layers() {
+        let mut m = tiny();
+        assert_eq!(m.achieved_compression(), 0.0);
+        // Zero out half of q in block 0 via CSR.
+        let w = m.blocks[0].q.dense_view();
+        let k = w.rows * w.cols / 2;
+        let pruned = crate::compress::threshold::hard_threshold(
+            &w,
+            &w,
+            k,
+            crate::config::SparsityPattern::LayerWise,
+        );
+        m.set_linear(
+            LinearId { block: 0, name: "q" },
+            LinearOp::Compressed(CompressedLayer::Sparse(Csr::from_dense(&pruned))),
+        );
+        assert!(m.achieved_compression() > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The native transformer language model — the serving-engine side of the
+//! system. Supports two execution paths per linear layer (dense GEMM or
+//! compressed sparse+low-rank kernels), full-sequence forward for
+//! training-parity/perplexity/calibration, and KV-cached single-token decode
+//! for the throughput experiments (Table 7 / Table 14).
+
+pub mod compressed_io;
+pub mod io;
+pub mod lm;
+
+pub use lm::{Block, ForwardCapture, KvCache, LinearId, LinearOp, TransformerLM, LINEAR_NAMES};

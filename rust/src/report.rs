@@ -1,0 +1,147 @@
+//! Table/figure rendering: paper-format rows for every experiment
+//! regenerator, plus JSON result records for EXPERIMENTS.md.
+
+use crate::json::{self, Json};
+
+/// A simple fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1))));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// JSON record of the table (results log).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", json::s(&self.title));
+        o.set(
+            "headers",
+            Json::Arr(self.headers.iter().map(|h| json::s(h)).collect()),
+        );
+        o.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| json::s(c)).collect()))
+                    .collect(),
+            ),
+        );
+        o
+    }
+}
+
+/// Format helpers matching the paper's precision.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+pub fn ppl(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+pub fn speedup(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+/// Append a results record (one JSON object per line) to `results.jsonl`
+/// in the given directory.
+pub fn append_result(dir: &std::path::Path, record: &Json) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("results.jsonl"))?;
+    writeln!(f, "{}", record.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "PPL"]);
+        t.row(vec!["OATS".into(), "15.18".into()]);
+        t.row(vec!["SparseGPT".into(), "16.80".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("SparseGPT"));
+        // Columns aligned: both data lines have PPL at same offset.
+        let lines: Vec<&str> = s.lines().collect();
+        let off1 = lines[3].find("15.18").unwrap();
+        let off2 = lines[4].find("16.80").unwrap();
+        assert_eq!(off1, off2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_record() {
+        let mut t = Table::new("T", &["h"]);
+        t.row(vec!["v".into()]);
+        let j = t.to_json();
+        assert_eq!(j.req_str("title").unwrap(), "T");
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(59.988), "59.99");
+        assert_eq!(speedup(1.375), "1.38x");
+    }
+}

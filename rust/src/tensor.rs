@@ -1,0 +1,568 @@
+//! Dense row-major f32 tensors and the neural-net primitives the serving
+//! engine and the native model implementations are built from.
+//!
+//! This is deliberately a small, predictable substrate: 2-D matrices with an
+//! explicit (rows, cols) shape, blocked + multithreaded GEMM on the hot path,
+//! and the handful of pointwise ops a transformer needs. Higher-rank data
+//! (batch, seq, dim) is handled by the callers as `rows = batch*seq`.
+
+use crate::util::prng::Rng;
+use crate::util::threadpool::parallel_for;
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Tiled transpose for cache friendliness on large matrices.
+        const T: usize = 32;
+        for rb in (0..self.rows).step_by(T) {
+            for cb in (0..self.cols).step_by(T) {
+                for r in rb..(rb + T).min(self.rows) {
+                    for c in cb..(cb + T).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// ‖self − other‖_F.
+    pub fn fro_dist(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Number of non-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale column `c` by `s` (used for the D / D⁻¹ diagonal transforms).
+    pub fn scale_column(&mut self, c: usize, s: f32) {
+        for r in 0..self.rows {
+            self.data[r * self.cols + c] *= s;
+        }
+    }
+
+    /// Return a copy with each column j multiplied by `d[j]`.
+    pub fn mul_columns(&self, d: &[f32]) -> Matrix {
+        assert_eq!(d.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (v, &s) in row.iter_mut().zip(d) {
+                *v *= s;
+            }
+        }
+        out
+    }
+}
+
+/// Threshold above which GEMM fans out across threads.
+const PAR_GEMM_MIN_FLOPS: usize = 1 << 22;
+
+/// C = A · B, blocked and multithreaded over row stripes of A.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    let flops = a.rows * a.cols * b.cols;
+    let threads = if flops >= PAR_GEMM_MIN_FLOPS {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        1
+    };
+    let n = a.rows;
+    let bc = b.cols;
+    let kk = a.cols;
+    // Row-stripe decomposition; each worker owns disjoint rows of C.
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    let stripe = n.div_ceil(threads.max(1)).max(1);
+    let stripes = n.div_ceil(stripe);
+    parallel_for(threads, stripes, |s| {
+        let r0 = s * stripe;
+        let r1 = ((s + 1) * stripe).min(n);
+        let cp = c_ptr;
+        // SAFETY: each stripe writes a disjoint row range of C.
+        let c_rows = unsafe { std::slice::from_raw_parts_mut(cp.0.add(r0 * bc), (r1 - r0) * bc) };
+        gemm_stripe(&a.data[r0 * kk..r1 * kk], &b.data, c_rows, r1 - r0, kk, bc);
+    });
+    c
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Inner kernel: C[m×n] += A[m×k] · B[k×n] with k-panel blocking and an
+/// unrolled 4-wide accumulation over B rows (i-k-j loop order keeps B
+/// accesses sequential and autovectorizable).
+fn gemm_stripe(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const KB: usize = 256;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut p = kb;
+            // Unroll 4 over the k-panel.
+            while p + 4 <= kend {
+                let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                p += 4;
+            }
+            while p < kend {
+                let av = arow[p];
+                if av != 0.0 {
+                    let brow = &b[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+                p += 1;
+            }
+        }
+    }
+}
+
+/// y = A · x for a dense matrix and vector.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0; a.rows];
+    for r in 0..a.rows {
+        let row = a.row(r);
+        let mut acc = 0.0f32;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y[r] = acc;
+    }
+    y
+}
+
+/// C = A · Bᵀ (common for x·Wᵀ linear layers with W stored out×in).
+pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_bt inner-dim mismatch");
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    let flops = a.rows * a.cols * b.rows;
+    let threads = if flops >= PAR_GEMM_MIN_FLOPS {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        1
+    };
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    let stripe = m.div_ceil(threads.max(1)).max(1);
+    let stripes = m.div_ceil(stripe);
+    parallel_for(threads, stripes, |s| {
+        let r0 = s * stripe;
+        let r1 = ((s + 1) * stripe).min(m);
+        let cp = c_ptr;
+        let cdat = unsafe { std::slice::from_raw_parts_mut(cp.0.add(r0 * n), (r1 - r0) * n) };
+        for i in r0..r1 {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut cdat[(i - r0) * n..(i - r0 + 1) * n];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                crow[j] = dot(arow, brow);
+            }
+        }
+    });
+    c
+}
+
+/// Dot product with 4-wide manual unroll.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let mut i = 0;
+    while i + 4 <= n {
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    while i < n {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// In-place softmax over the last axis (each row).
+pub fn softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        softmax_inplace(m.row_mut(r));
+    }
+}
+
+/// Numerically-stable in-place softmax of a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// GELU (tanh approximation, matching jax.nn.gelu's default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_inplace(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// LayerNorm over the last axis with learned gain/bias.
+pub fn layernorm_rows(m: &mut Matrix, gain: &[f32], bias: &[f32], eps: f32) {
+    assert_eq!(gain.len(), m.cols);
+    assert_eq!(bias.len(), m.cols);
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let n = row.len() as f32;
+        let mean = row.iter().sum::<f32>() / n;
+        let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (v, (&g, &b)) in row.iter_mut().zip(gain.iter().zip(bias)) {
+            *v = (*v - mean) * inv * g + b;
+        }
+    }
+}
+
+/// Cross-entropy of logits rows against integer targets; returns mean nats.
+pub fn cross_entropy(logits: &Matrix, targets: &[usize]) -> f64 {
+    assert_eq!(logits.rows, targets.len());
+    let mut total = 0.0f64;
+    for (r, &t) in targets.iter().enumerate() {
+        let row = logits.row(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+        total += (lse - row[t]) as f64;
+    }
+    total / targets.len() as f64
+}
+
+/// Index of the max element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest values by |magnitude| (unordered).
+/// Uses select_nth_unstable — O(n) average, the hot path of hard-thresholding.
+pub fn top_k_abs_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == xs.len() {
+        return (0..xs.len()).collect();
+    }
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let kth = k - 1;
+    idx.select_nth_unstable_by(kth, |&a, &b| {
+        xs[b].abs().partial_cmp(&xs[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(7, 13, 1.0, &mut rng);
+        let c = matmul(&a, &Matrix::eye(13));
+        assert!(a.fro_dist(&c) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_matches_naive_prop() {
+        check("blocked gemm == naive", 30, |g| {
+            let m = g.usize_range(1, 20);
+            let k = g.usize_range(1, 20);
+            let n = g.usize_range(1, 20);
+            let a = Matrix::from_vec(m, k, g.vec_normal(m * k, 1.0));
+            let b = Matrix::from_vec(k, n, g.vec_normal(k * n, 1.0));
+            let c = matmul(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for p in 0..k {
+                        acc += a.at(i, p) * b.at(p, j);
+                    }
+                    assert!((c.at(i, j) - acc).abs() < 1e-3, "({i},{j}): {} vs {}", c.at(i, j), acc);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches_serial() {
+        // Force a matrix big enough to trip the threaded path.
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(257, 129, 1.0, &mut rng);
+        let b = Matrix::randn(129, 255, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        // Spot-check a handful of entries against naive dot products.
+        for &(i, j) in &[(0, 0), (256, 254), (128, 100), (13, 77)] {
+            let mut acc = 0.0f32;
+            for p in 0..129 {
+                acc += a.at(i, p) * b.at(p, j);
+            }
+            assert!((c.at(i, j) - acc).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(5, 8, 1.0, &mut rng);
+        let b = Matrix::randn(6, 8, 1.0, &mut rng);
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.fro_dist(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        assert_eq!(a, a.transpose().transpose());
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(4);
+        let mut m = Matrix::randn(10, 32, 5.0, &mut rng);
+        softmax_rows(&mut m);
+        for r in 0..m.rows {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut xs = vec![1000.0, 1000.0];
+        softmax_inplace(&mut xs);
+        assert!((xs[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let mut m = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let gain = vec![1.0; 4];
+        let bias = vec![0.0; 4];
+        layernorm_rows(&mut m, &gain, &bias, 1e-5);
+        let mean: f32 = m.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = m.row(0).iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_small() {
+        let mut logits = Matrix::zeros(1, 4);
+        logits.data[2] = 100.0;
+        let ce = cross_entropy(&logits, &[2]);
+        assert!(ce < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_n() {
+        let logits = Matrix::zeros(3, 8);
+        let ce = cross_entropy(&logits, &[0, 3, 7]);
+        assert!((ce - (8f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_abs_selects_largest() {
+        let xs = vec![0.1, -5.0, 3.0, 0.0, -0.2, 4.0];
+        let mut idx = top_k_abs_indices(&xs, 3);
+        idx.sort_unstable();
+        assert_eq!(idx, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn top_k_abs_edge_cases() {
+        assert!(top_k_abs_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(top_k_abs_indices(&[1.0, 2.0], 5).len(), 2);
+    }
+
+    #[test]
+    fn top_k_abs_prop_exact_k_and_dominance() {
+        check("top-k dominance", 40, |g| {
+            let n = g.usize_range(1, 200);
+            let k = g.usize_range(0, n + 1);
+            let xs = g.vec_normal(n, 3.0);
+            let idx = top_k_abs_indices(&xs, k);
+            assert_eq!(idx.len(), k.min(n));
+            if k > 0 && k < n {
+                let min_kept = idx.iter().map(|&i| xs[i].abs()).fold(f32::INFINITY, f32::min);
+                let sel: std::collections::HashSet<usize> = idx.iter().copied().collect();
+                for (i, &x) in xs.iter().enumerate() {
+                    if !sel.contains(&i) {
+                        assert!(x.abs() <= min_kept + 1e-6);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(9, 11, 1.0, &mut rng);
+        let x: Vec<f32> = (0..11).map(|i| i as f32 * 0.1).collect();
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(11, 1, x);
+        let ym = matmul(&a, &xm);
+        for i in 0..9 {
+            assert!((y[i] - ym.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mul_columns_scales() {
+        let a = Matrix::from_vec(2, 3, vec![1.0; 6]);
+        let d = vec![1.0, 2.0, 3.0];
+        let b = a.mul_columns(&d);
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let m = Matrix::from_vec(1, 4, vec![0.0, 1.0, 0.0, -2.0]);
+        assert_eq!(m.nnz(), 2);
+    }
+}

@@ -1,0 +1,223 @@
+//! Training driver: runs the AOT `train_step` artifact (L2 fwd/bwd + AdamW)
+//! from rust through the PJRT runtime, keeping parameters as literals
+//! between steps. Produces the trained models every experiment consumes.
+
+use crate::config::ModelConfig;
+use crate::data::SyntheticCorpus;
+use crate::model::{io, TransformerLM};
+use crate::runtime::{self, Engine};
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+
+/// LM trainer state: parameter/optimizer literals in canonical order.
+pub struct Trainer {
+    pub engine: Engine,
+    pub cfg: ModelConfig,
+    names: Vec<String>,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    step: i32,
+    pub losses: Vec<f32>,
+}
+
+impl Trainer {
+    /// Initialize from a freshly-initialized rust model (weights transfer
+    /// exactly; optimizer state starts at zero).
+    pub fn new(engine: Engine, seed: u64) -> Result<Trainer> {
+        let cfg = engine.model_config()?;
+        let model = TransformerLM::init(&cfg, seed);
+        let tensors = io::flatten(&model);
+        let names: Vec<String> = tensors.iter().map(|(n, _)| n.clone()).collect();
+        let params = runtime::literals_from_tensors(&tensors)?;
+        let zeros: Vec<(String, Matrix)> = tensors
+            .iter()
+            .map(|(n, t)| (n.clone(), Matrix::zeros(t.rows, t.cols)))
+            .collect();
+        let m = runtime::literals_from_tensors(&zeros)?;
+        let v = runtime::literals_from_tensors(&zeros)?;
+        Ok(Trainer { engine, cfg, names, params, m, v, step: 0, losses: Vec::new() })
+    }
+
+    /// One optimizer step on a token batch. Returns the loss.
+    pub fn step(&mut self, inputs: &[Vec<usize>], targets: &[Vec<usize>]) -> Result<f32> {
+        let np = self.params.len();
+        // Long-lived state is passed by reference — no per-step copies
+        // (§Perf iteration 1: see EXPERIMENTS.md).
+        let step_lit = runtime::literal_i32(self.step);
+        let tok_lit = runtime::literal_from_tokens(inputs)?;
+        let tgt_lit = runtime::literal_from_tokens(targets)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * np + 3);
+        args.extend(self.params.iter().chain(&self.m).chain(&self.v));
+        args.push(&step_lit);
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+
+        let outs = self.engine.run("train_step", &args)?;
+        anyhow::ensure!(outs.len() == 3 * np + 2, "train_step returned {} outputs", outs.len());
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(np).collect();
+        self.m = (&mut it).take(np).collect();
+        self.v = (&mut it).take(np).collect();
+        self.step = runtime::i32_from_literal(&it.next().context("missing step")?)?;
+        let loss = runtime::f32_from_literal(&it.next().context("missing loss")?)?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Train for `n_steps` on corpus batches; returns the loss curve.
+    pub fn train(&mut self, corpus: &SyntheticCorpus, n_steps: usize) -> Result<Vec<f32>> {
+        let batch = self.engine.train_batch()?;
+        let seq = self.cfg.seq_len;
+        let mut rng = corpus.stream(0x7EA1);
+        let mut curve = Vec::with_capacity(n_steps);
+        for _ in 0..n_steps {
+            let b = corpus.batch(batch, seq, &mut rng);
+            curve.push(self.step(&b.inputs, &b.targets)?);
+        }
+        Ok(curve)
+    }
+
+    /// Export the current parameters into a native rust model.
+    pub fn to_model(&self) -> Result<TransformerLM> {
+        let mut tensors = Vec::with_capacity(self.names.len());
+        for (name, lit) in self.names.iter().zip(&self.params) {
+            let (rows, cols) = io::param_shape(&self.cfg, name);
+            tensors.push((name.clone(), runtime::matrix_from_literal(lit, rows, cols)?));
+        }
+        io::assemble(&self.cfg, &tensors)
+    }
+}
+
+
+/// ViT trainer state: drives the `vit_train_step` artifact.
+pub struct VitTrainer {
+    pub engine: Engine,
+    pub cfg: crate::vit::VitConfig,
+    names: Vec<String>,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    step: i32,
+    pub losses: Vec<f32>,
+}
+
+impl VitTrainer {
+    pub fn new(engine: Engine, seed: u64) -> Result<VitTrainer> {
+        let vc = engine.manifest.get("vit_config").context("manifest lacks vit_config")?;
+        let cfg = crate::vit::VitConfig {
+            image_side: vc.req_usize("image_side")?,
+            n_classes: vc.req_usize("n_classes")?,
+            d_model: vc.req_usize("d_model")?,
+            n_heads: vc.req_usize("n_heads")?,
+            n_layers: vc.req_usize("n_layers")?,
+            d_ff: vc.req_usize("d_ff")?,
+        };
+        let vit = crate::vit::Vit::init(&cfg, seed);
+        let tensors = crate::vit::io::flatten(&vit);
+        let names: Vec<String> = tensors.iter().map(|(n, _)| n.clone()).collect();
+        let params = runtime::literals_from_tensors(&tensors)?;
+        let zeros: Vec<(String, Matrix)> = tensors
+            .iter()
+            .map(|(n, t)| (n.clone(), Matrix::zeros(t.rows, t.cols)))
+            .collect();
+        let m = runtime::literals_from_tensors(&zeros)?;
+        let v = runtime::literals_from_tensors(&zeros)?;
+        Ok(VitTrainer { engine, cfg, names, params, m, v, step: 0, losses: Vec::new() })
+    }
+
+    /// One AdamW step on an image batch.
+    pub fn step(&mut self, images: &Matrix, labels: &[usize]) -> Result<f32> {
+        let np = self.params.len();
+        let step_lit = runtime::literal_i32(self.step);
+        let img_lit = runtime::literal_from_matrix(images)?;
+        let lbl_lit = runtime::literal_from_labels(labels);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * np + 3);
+        args.extend(self.params.iter().chain(&self.m).chain(&self.v));
+        args.push(&step_lit);
+        args.push(&img_lit);
+        args.push(&lbl_lit);
+        let outs = self.engine.run("vit_train_step", &args)?;
+        anyhow::ensure!(outs.len() == 3 * np + 2, "vit_train_step returned {}", outs.len());
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(np).collect();
+        self.m = (&mut it).take(np).collect();
+        self.v = (&mut it).take(np).collect();
+        self.step = runtime::i32_from_literal(&it.next().context("step")?)?;
+        let loss = runtime::f32_from_literal(&it.next().context("loss")?)?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Train on balanced synthetic image batches.
+    pub fn train(&mut self, ds: &crate::data::ImageDataset, n_steps: usize) -> Result<Vec<f32>> {
+        let batch = self.engine.train_batch()?;
+        let mut rng = ds.stream(0x717);
+        let mut curve = Vec::with_capacity(n_steps);
+        for _ in 0..n_steps {
+            let imgs = ds.batch(batch, &mut rng);
+            let (m, labels) = ds.to_matrix(&imgs);
+            curve.push(self.step(&m, &labels)?);
+        }
+        Ok(curve)
+    }
+
+    pub fn to_vit(&self) -> Result<crate::vit::Vit> {
+        let mut tensors = Vec::with_capacity(self.names.len());
+        for (name, lit) in self.names.iter().zip(&self.params) {
+            let (rows, cols) = crate::vit::io::param_shape(&self.cfg, name);
+            tensors.push((name.clone(), runtime::matrix_from_literal(lit, rows, cols)?));
+        }
+        crate::vit::io::assemble(&self.cfg, &tensors)
+    }
+}
+
+/// Train (or reuse a cached) ViT; cached under `models/vit/`.
+pub fn ensure_trained_vit(
+    artifacts_dir: &std::path::Path,
+    models_dir: &std::path::Path,
+    preset: &str,
+    n_steps: usize,
+    ds: &crate::data::ImageDataset,
+) -> Result<crate::vit::Vit> {
+    let model_dir = models_dir.join("vit");
+    if model_dir.join("manifest.json").exists() {
+        return crate::vit::io::load(&model_dir);
+    }
+    let engine = Engine::load(&artifacts_dir.join(preset))?;
+    let mut trainer = VitTrainer::new(engine, 0x71E)?;
+    let curve = trainer.train(ds, n_steps)?;
+    let vit = trainer.to_vit()?;
+    crate::vit::io::save(&vit, &model_dir)?;
+    let curve_json = crate::json::Json::Arr(
+        curve.iter().map(|&l| crate::json::num(l as f64)).collect(),
+    );
+    std::fs::write(model_dir.join("loss_curve.json"), curve_json.to_pretty())?;
+    Ok(vit)
+}
+
+/// Train (or reuse a cached) model for a preset; the standard entry used by
+/// the experiment harnesses. Models are cached under `models/<preset>/`.
+pub fn ensure_trained_model(
+    artifacts_dir: &std::path::Path,
+    models_dir: &std::path::Path,
+    preset: &str,
+    n_steps: usize,
+    corpus: &SyntheticCorpus,
+) -> Result<TransformerLM> {
+    let model_dir = models_dir.join(preset);
+    if model_dir.join("manifest.json").exists() {
+        return io::load(&model_dir);
+    }
+    let engine = Engine::load(&artifacts_dir.join(preset))?;
+    let mut trainer = Trainer::new(engine, 0x5EED0 + preset.len() as u64)?;
+    let curve = trainer.train(corpus, n_steps)?;
+    let model = trainer.to_model()?;
+    io::save(&model, &model_dir)?;
+    // Persist the loss curve alongside the weights (E2E evidence).
+    let curve_json = crate::json::Json::Arr(
+        curve.iter().map(|&l| crate::json::num(l as f64)).collect(),
+    );
+    std::fs::write(model_dir.join("loss_curve.json"), curve_json.to_pretty())?;
+    Ok(model)
+}

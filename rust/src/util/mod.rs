@@ -1,0 +1,16 @@
+//! Small shared substrates: deterministic PRNG, summary statistics, timing,
+//! a std-thread worker pool, and a miniature property-testing framework.
+//!
+//! These stand in for `rand`, `rayon`, and `proptest`, which are not part of
+//! the vendored dependency set (see DESIGN.md §3).
+
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;
+pub mod time;
+
+pub use prng::Rng;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;
+pub use time::Stopwatch;

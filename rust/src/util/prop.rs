@@ -1,0 +1,134 @@
+//! A miniature property-based testing framework (stands in for `proptest`,
+//! which is not in the vendored dependency set).
+//!
+//! Usage:
+//! ```no_run
+//! use oats::util::prop::{check, Gen};
+//! check("addition commutes", 100, |g| {
+//!     let a = g.i64_range(-1000, 1000);
+//!     let b = g.i64_range(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a generator derived deterministically from the case index,
+//! so failures are reproducible; on panic the failing case index and seed are
+//! reported.
+
+use super::prng::Rng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        self.rng.range(lo, hi)
+    }
+
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.rng.next_u64() % ((hi - lo).max(1) as u64)) as i64
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of normals with the given std.
+    pub fn vec_normal(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    /// A matrix (rows*cols) with occasional large-magnitude "outlier" columns,
+    /// mimicking the activation structure the paper targets.
+    pub fn outlier_matrix(&mut self, rows: usize, cols: usize, outlier_frac: f64) -> Vec<f32> {
+        let mut m = self.vec_normal(rows * cols, 1.0);
+        let n_out = ((cols as f64) * outlier_frac).ceil() as usize;
+        for _ in 0..n_out {
+            let c = self.rng.below(cols.max(1));
+            let scale = 10.0 + self.rng.f32() * 40.0;
+            for r in 0..rows {
+                m[r * cols + c] *= scale;
+            }
+        }
+        m
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` instances of the property `f`; panics with the case seed on
+/// the first failure.
+pub fn check(name: &str, cases: u64, f: impl Fn(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0x0A75_0000u64 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            f(&mut g);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, |g| {
+            let n = g.usize_range(0, 32);
+            let v: Vec<f32> = g.vec_normal(n, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 3, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn outlier_matrix_has_outliers() {
+        let mut g = Gen::new(1);
+        let m = g.outlier_matrix(16, 64, 0.05);
+        let max = m.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(max > 5.0);
+        assert_eq!(m.len(), 16 * 64);
+    }
+}

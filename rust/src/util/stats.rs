@@ -1,0 +1,123 @@
+//! Summary statistics used by the bench harness, the evaluation suite, and
+//! the OWL outlier-ratio computation.
+
+/// Summary of a sample of f64 observations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `xs` need not be sorted. Empty input yields zeros.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, `q` in `[0,1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Mean of a slice of f32s (as f64 to avoid cancellation).
+pub fn mean_f32(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Excess kurtosis of a slice — the outlier probe used to verify that
+/// trained activations exhibit the heavy-tailed "outlier feature" structure
+/// the paper's scaling step targets (Section 2.3).
+pub fn excess_kurtosis(xs: &[f32]) -> f64 {
+    if xs.len() < 4 {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = mean_f32(xs);
+    let m2 = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let m4 = xs.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / n;
+    if m2 <= 1e-300 {
+        return 0.0;
+    }
+    m4 / (m2 * m2) - 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 5.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kurtosis_of_uniform_negative_of_spike_positive() {
+        // Uniform has excess kurtosis -1.2; a heavy-outlier sample is positive.
+        let uniform: Vec<f32> = (0..10_000).map(|i| i as f32 / 10_000.0).collect();
+        assert!(excess_kurtosis(&uniform) < -1.0);
+        let mut spiky = vec![0.0f32; 1000];
+        spiky.extend_from_slice(&[100.0; 3]);
+        // small noise so m2 > 0
+        for (i, v) in spiky.iter_mut().enumerate().take(1000) {
+            *v = (i % 7) as f32 * 0.01;
+        }
+        assert!(excess_kurtosis(&spiky) > 10.0);
+    }
+}

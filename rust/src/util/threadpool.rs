@@ -1,0 +1,144 @@
+//! A small fixed-size worker pool over std threads + channels.
+//!
+//! Stands in for `rayon` in the two places the paper's pipeline is
+//! embarrassingly parallel: compressing the linear layers of one transformer
+//! block (paper §A.2 notes per-block parallelism) and the blocked GEMM in
+//! `tensor::matmul`.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads executing boxed closures.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` threads (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { workers, tx: Some(tx) }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.as_ref().expect("pool closed").send(Box::new(job)).expect("workers alive");
+    }
+
+    /// Run `f(i)` for `i in 0..n`, blocking until all complete.
+    pub fn scope_for(&self, n: usize, f: impl Fn(usize) + Send + Sync + 'static) {
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = mpsc::channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            self.execute(move || {
+                f(i);
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv().expect("worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` on transient scoped threads, collecting no
+/// output. Unlike [`ThreadPool::scope_for`] this allows borrowing from the
+/// caller's stack (used by the blocked GEMM hot path).
+pub fn parallel_for(n_threads: usize, n: usize, f: impl Fn(usize) + Send + Sync) {
+    if n == 0 {
+        return;
+    }
+    let n_threads = n_threads.max(1).min(n);
+    if n_threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        pool.scope_for(100, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_indices() {
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(8, 64, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_items_ok() {
+        parallel_for(4, 0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,169 @@
+//! ViT weight persistence and flattening (canonical order matching
+//! `python/compile/model.py::vit_param_names`).
+
+use super::{Vit, VitConfig};
+use crate::json::{self, Json};
+use crate::model::io::{load_tensors, save_tensors};
+use crate::model::{Block, LinearOp};
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub fn param_names(n_layers: usize) -> Vec<String> {
+    let mut names = vec!["patch_proj".to_string(), "cls".to_string(), "pos_emb".to_string()];
+    for b in 0..n_layers {
+        for t in ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w_up", "w_down"] {
+            names.push(format!("block{b}.{t}"));
+        }
+    }
+    names.push("lnf_g".into());
+    names.push("lnf_b".into());
+    names.push("head".into());
+    names
+}
+
+pub fn param_shape(cfg: &VitConfig, name: &str) -> (usize, usize) {
+    let d = cfg.d_model;
+    match name {
+        "patch_proj" => (d, cfg.patch_dim()),
+        "cls" => (1, d),
+        "pos_emb" => (cfg.n_tokens(), d),
+        "lnf_g" | "lnf_b" => (1, d),
+        "head" => (cfg.n_classes, d),
+        _ => {
+            let t = name.split('.').nth(1).expect("block param");
+            match t {
+                "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" => (1, d),
+                "wq" | "wk" | "wv" | "wo" => (d, d),
+                "w_up" => (cfg.d_ff, d),
+                "w_down" => (d, cfg.d_ff),
+                other => panic!("unknown block param '{other}'"),
+            }
+        }
+    }
+}
+
+pub fn flatten(vit: &Vit) -> Vec<(String, Matrix)> {
+    let vecm = |v: &Vec<f32>| Matrix::from_vec(1, v.len(), v.clone());
+    let mut out = vec![
+        ("patch_proj".to_string(), vit.patch_proj.clone()),
+        ("cls".to_string(), vecm(&vit.cls_token)),
+        ("pos_emb".to_string(), vit.pos_emb.clone()),
+    ];
+    for (b, blk) in vit.blocks.iter().enumerate() {
+        out.push((format!("block{b}.ln1_g"), vecm(&blk.ln1_g)));
+        out.push((format!("block{b}.ln1_b"), vecm(&blk.ln1_b)));
+        out.push((format!("block{b}.wq"), blk.q.dense_view()));
+        out.push((format!("block{b}.wk"), blk.k.dense_view()));
+        out.push((format!("block{b}.wv"), blk.v.dense_view()));
+        out.push((format!("block{b}.wo"), blk.o.dense_view()));
+        out.push((format!("block{b}.ln2_g"), vecm(&blk.ln2_g)));
+        out.push((format!("block{b}.ln2_b"), vecm(&blk.ln2_b)));
+        out.push((format!("block{b}.w_up"), blk.up.dense_view()));
+        out.push((format!("block{b}.w_down"), blk.down.dense_view()));
+    }
+    out.push(("lnf_g".to_string(), vecm(&vit.lnf_g)));
+    out.push(("lnf_b".to_string(), vecm(&vit.lnf_b)));
+    out.push(("head".to_string(), vit.head.clone()));
+    out
+}
+
+pub fn assemble(cfg: &VitConfig, tensors: &[(String, Matrix)]) -> Result<Vit> {
+    let get = |name: &str| -> Result<&Matrix> {
+        tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m)
+            .with_context(|| format!("missing tensor '{name}'"))
+    };
+    let vec_of = |name: &str| -> Result<Vec<f32>> { Ok(get(name)?.data.clone()) };
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for b in 0..cfg.n_layers {
+        blocks.push(Block {
+            ln1_g: vec_of(&format!("block{b}.ln1_g"))?,
+            ln1_b: vec_of(&format!("block{b}.ln1_b"))?,
+            ln2_g: vec_of(&format!("block{b}.ln2_g"))?,
+            ln2_b: vec_of(&format!("block{b}.ln2_b"))?,
+            q: LinearOp::Dense(get(&format!("block{b}.wq"))?.clone()),
+            k: LinearOp::Dense(get(&format!("block{b}.wk"))?.clone()),
+            v: LinearOp::Dense(get(&format!("block{b}.wv"))?.clone()),
+            o: LinearOp::Dense(get(&format!("block{b}.wo"))?.clone()),
+            up: LinearOp::Dense(get(&format!("block{b}.w_up"))?.clone()),
+            down: LinearOp::Dense(get(&format!("block{b}.w_down"))?.clone()),
+        });
+    }
+    Ok(Vit {
+        cfg: cfg.clone(),
+        patch_proj: get("patch_proj")?.clone(),
+        cls_token: vec_of("cls")?,
+        pos_emb: get("pos_emb")?.clone(),
+        blocks,
+        lnf_g: vec_of("lnf_g")?,
+        lnf_b: vec_of("lnf_b")?,
+        head: get("head")?.clone(),
+    })
+}
+
+fn config_json(cfg: &VitConfig) -> Json {
+    let mut o = Json::obj();
+    o.set("image_side", json::num(cfg.image_side as f64))
+        .set("n_classes", json::num(cfg.n_classes as f64))
+        .set("d_model", json::num(cfg.d_model as f64))
+        .set("n_heads", json::num(cfg.n_heads as f64))
+        .set("n_layers", json::num(cfg.n_layers as f64))
+        .set("d_ff", json::num(cfg.d_ff as f64));
+    o
+}
+
+fn config_from_json(v: &Json) -> Result<VitConfig> {
+    Ok(VitConfig {
+        image_side: v.req_usize("image_side")?,
+        n_classes: v.req_usize("n_classes")?,
+        d_model: v.req_usize("d_model")?,
+        n_heads: v.req_usize("n_heads")?,
+        n_layers: v.req_usize("n_layers")?,
+        d_ff: v.req_usize("d_ff")?,
+    })
+}
+
+pub fn save(vit: &Vit, dir: &Path) -> Result<()> {
+    save_tensors(dir, config_json(&vit.cfg), &flatten(vit))
+}
+
+pub fn load(dir: &Path) -> Result<Vit> {
+    let (config, tensors) = load_tensors(dir)?;
+    let cfg = config_from_json(&config)?;
+    assemble(&cfg, &tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let cfg = VitConfig::small(16, 8);
+        let v = Vit::init(&cfg, 9);
+        let dir = std::env::temp_dir().join(format!("oats_vit_io_{}", std::process::id()));
+        save(&v, &dir).unwrap();
+        let v2 = load(&dir).unwrap();
+        let img: Vec<f32> = (0..256).map(|i| (i % 7) as f32 * 0.1).collect();
+        let a = v.forward(&[&img], crate::vit::Component::Both);
+        let b = v2.forward(&[&img], crate::vit::Component::Both);
+        assert!(a.fro_dist(&b) < 1e-6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn names_match_flatten() {
+        let cfg = VitConfig::small(16, 8);
+        let v = Vit::init(&cfg, 1);
+        let names = param_names(cfg.n_layers);
+        let tensors = flatten(&v);
+        assert_eq!(names.len(), tensors.len());
+        for (n, (tn, t)) in names.iter().zip(&tensors) {
+            assert_eq!(n, tn);
+            assert_eq!((t.rows, t.cols), param_shape(&cfg, n), "{n}");
+        }
+    }
+}

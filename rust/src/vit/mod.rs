@@ -1,0 +1,424 @@
+//! Vision transformer (ViT) for the image experiments (Table 8) and the
+//! sparse-vs-low-rank attention-rollout analysis (Section 5, Figures 3–4).
+//!
+//! Architecture: 4×4 patch embedding, CLS token, pre-LN encoder blocks with
+//! bidirectional attention, classification head on the CLS output. The six
+//! per-block linears reuse [`LinearOp`], so the whole compression stack
+//! (OATS + baselines + pipeline) applies unchanged.
+
+pub mod io;
+pub mod rollout;
+
+use crate::compress::CompressedLayer;
+use crate::config::ModelConfig;
+use crate::model::{Block, LinearOp, LINEAR_NAMES};
+use crate::tensor::{self, Matrix};
+use crate::util::prng::Rng;
+
+pub const PATCH: usize = 4;
+
+/// ViT configuration is a [`ModelConfig`] reinterpretation: `seq_len` =
+/// number of patches + 1 (CLS), `vocab` = number of classes.
+#[derive(Clone, Debug)]
+pub struct VitConfig {
+    pub image_side: usize,
+    pub n_classes: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+}
+
+impl VitConfig {
+    pub fn small(image_side: usize, n_classes: usize) -> VitConfig {
+        VitConfig { image_side, n_classes, d_model: 64, n_heads: 4, n_layers: 3, d_ff: 256 }
+    }
+
+    pub fn n_patches(&self) -> usize {
+        (self.image_side / PATCH) * (self.image_side / PATCH)
+    }
+
+    /// Tokens = patches + CLS.
+    pub fn n_tokens(&self) -> usize {
+        self.n_patches() + 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        PATCH * PATCH
+    }
+
+    /// The equivalent ModelConfig (for shared utilities/accounting).
+    pub fn as_model_config(&self) -> ModelConfig {
+        ModelConfig {
+            name: "vit".into(),
+            vocab: self.n_classes,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            n_layers: self.n_layers,
+            d_ff: self.d_ff,
+            seq_len: self.n_tokens(),
+        }
+    }
+}
+
+/// Which decomposition component a compressed forward uses (Section 5's
+/// split analysis; `Both` is normal inference).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Component {
+    Both,
+    SparseOnly,
+    LowRankOnly,
+}
+
+#[derive(Clone, Debug)]
+pub struct Vit {
+    pub cfg: VitConfig,
+    /// patch projection: d_model × patch_dim
+    pub patch_proj: Matrix,
+    pub cls_token: Vec<f32>,
+    pub pos_emb: Matrix, // n_tokens × d
+    pub blocks: Vec<Block>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    /// classifier: n_classes × d
+    pub head: Matrix,
+}
+
+const LN_EPS: f32 = 1e-5;
+
+impl Vit {
+    pub fn init(cfg: &VitConfig, seed: u64) -> Vit {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let resid_std = 0.02 / ((2 * cfg.n_layers) as f32).sqrt();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| Block {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                q: LinearOp::Dense(Matrix::randn(d, d, 0.02, &mut rng)),
+                k: LinearOp::Dense(Matrix::randn(d, d, 0.02, &mut rng)),
+                v: LinearOp::Dense(Matrix::randn(d, d, 0.02, &mut rng)),
+                o: LinearOp::Dense(Matrix::randn(d, d, resid_std, &mut rng)),
+                up: LinearOp::Dense(Matrix::randn(cfg.d_ff, d, 0.02, &mut rng)),
+                down: LinearOp::Dense(Matrix::randn(d, cfg.d_ff, resid_std, &mut rng)),
+            })
+            .collect();
+        Vit {
+            cfg: cfg.clone(),
+            patch_proj: Matrix::randn(d, cfg.patch_dim(), 0.05, &mut rng),
+            cls_token: {
+                let mut v = vec![0.0; d];
+                rng.fill_normal(&mut v, 0.02);
+                v
+            },
+            pos_emb: Matrix::randn(cfg.n_tokens(), d, 0.01, &mut rng),
+            blocks,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            head: Matrix::randn(cfg.n_classes, d, 0.02, &mut rng),
+        }
+    }
+
+    /// Patchify one image (row-major side×side) → [n_patches × patch_dim].
+    pub fn patchify(&self, pixels: &[f32]) -> Matrix {
+        let side = self.cfg.image_side;
+        assert_eq!(pixels.len(), side * side);
+        let pe = side / PATCH;
+        let mut m = Matrix::zeros(pe * pe, PATCH * PATCH);
+        for py in 0..pe {
+            for px in 0..pe {
+                let row = m.row_mut(py * pe + px);
+                for y in 0..PATCH {
+                    for x in 0..PATCH {
+                        row[y * PATCH + x] = pixels[(py * PATCH + y) * side + px * PATCH + x];
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Embed a batch of images → hidden [B·T × d], T = n_tokens.
+    pub fn embed(&self, images: &[&[f32]]) -> Matrix {
+        let t = self.cfg.n_tokens();
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(images.len() * t, d);
+        for (b, px) in images.iter().enumerate() {
+            let patches = self.patchify(px);
+            let proj = tensor::matmul_bt(&patches, &self.patch_proj); // [P × d]
+            // CLS at position 0
+            let cls_row = h.row_mut(b * t);
+            for (o, (&c, &p)) in cls_row.iter_mut().zip(self.cls_token.iter().zip(self.pos_emb.row(0))) {
+                *o = c + p;
+            }
+            for p in 0..patches.rows {
+                let row = h.row_mut(b * t + 1 + p);
+                for (o, (&v, &pe)) in
+                    row.iter_mut().zip(proj.row(p).iter().zip(self.pos_emb.row(1 + p)))
+                {
+                    *o = v + pe;
+                }
+            }
+        }
+        h
+    }
+
+    fn linear_fwd(&self, op: &LinearOp, x: &Matrix, comp: Component) -> Matrix {
+        match (op, comp) {
+            (LinearOp::Compressed(CompressedLayer::Spl(spl)), Component::SparseOnly) => {
+                spl.sparse.matmul_xt(x)
+            }
+            (LinearOp::Compressed(CompressedLayer::Spl(spl)), Component::LowRankOnly) => {
+                let mut out = Matrix::zeros(x.rows, spl.sparse.rows);
+                if let Some(lr) = &spl.low_rank {
+                    lr.apply_batch_accumulate(x, &mut out);
+                }
+                out
+            }
+            _ => op.forward(x),
+        }
+    }
+
+    /// One encoder block (bidirectional attention). Optionally records the
+    /// head-averaged attention matrix per image.
+    pub fn block_forward(
+        &self,
+        block_idx: usize,
+        h: &Matrix,
+        bsz: usize,
+        comp: Component,
+        mut attn_store: Option<&mut Vec<Matrix>>,
+        mut capture: Option<&mut crate::model::ForwardCapture>,
+    ) -> Matrix {
+        let blk = &self.blocks[block_idx];
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = d / nh;
+        let t = self.cfg.n_tokens();
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut x = h.clone();
+        tensor::layernorm_rows(&mut x, &blk.ln1_g, &blk.ln1_b, LN_EPS);
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("q", x.clone());
+            c.inputs.insert("k", x.clone());
+            c.inputs.insert("v", x.clone());
+        }
+        let q = self.linear_fwd(&blk.q, &x, comp);
+        let k = self.linear_fwd(&blk.k, &x, comp);
+        let v = self.linear_fwd(&blk.v, &x, comp);
+        let mut ctx = Matrix::zeros(h.rows, d);
+        for b in 0..bsz {
+            let base = b * t;
+            let mut mean_probs = if attn_store.is_some() {
+                Some(Matrix::zeros(t, t))
+            } else {
+                None
+            };
+            for head in 0..nh {
+                let off = head * hd;
+                for i in 0..t {
+                    let qrow = &q.row(base + i)[off..off + hd];
+                    let mut scores = vec![0.0f32; t];
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        *sc = tensor::dot(qrow, &k.row(base + j)[off..off + hd]) * scale;
+                    }
+                    tensor::softmax_inplace(&mut scores);
+                    let crow = &mut ctx.row_mut(base + i)[off..off + hd];
+                    for (j, &p) in scores.iter().enumerate() {
+                        let vrow = &v.row(base + j)[off..off + hd];
+                        for (cv, &vv) in crow.iter_mut().zip(vrow) {
+                            *cv += p * vv;
+                        }
+                    }
+                    if let Some(pm) = mean_probs.as_mut() {
+                        for (j, &p) in scores.iter().enumerate() {
+                            *pm.at_mut(i, j) += p / nh as f32;
+                        }
+                    }
+                }
+            }
+            if let (Some(pm), Some(store)) = (mean_probs, attn_store.as_deref_mut()) {
+                store.push(pm);
+            }
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("o", ctx.clone());
+        }
+        let attn = self.linear_fwd(&blk.o, &ctx, comp);
+        let mut h2 = h.clone();
+        h2.axpy(1.0, &attn);
+
+        let mut x2 = h2.clone();
+        tensor::layernorm_rows(&mut x2, &blk.ln2_g, &blk.ln2_b, LN_EPS);
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("up", x2.clone());
+        }
+        let mut u = self.linear_fwd(&blk.up, &x2, comp);
+        tensor::gelu_inplace(&mut u.data);
+        if let Some(c) = capture.as_deref_mut() {
+            c.inputs.insert("down", u.clone());
+        }
+        let mlp = self.linear_fwd(&blk.down, &u, comp);
+        h2.axpy(1.0, &mlp);
+        h2
+    }
+
+    /// Class logits for a batch of images.
+    pub fn forward(&self, images: &[&[f32]], comp: Component) -> Matrix {
+        let t = self.cfg.n_tokens();
+        let mut h = self.embed(images);
+        for i in 0..self.blocks.len() {
+            h = self.block_forward(i, &h, images.len(), comp, None, None);
+        }
+        // CLS rows → final LN → head
+        let mut cls = Matrix::zeros(images.len(), self.cfg.d_model);
+        for b in 0..images.len() {
+            cls.row_mut(b).copy_from_slice(h.row(b * t));
+        }
+        tensor::layernorm_rows(&mut cls, &self.lnf_g, &self.lnf_b, LN_EPS);
+        tensor::matmul_bt(&cls, &self.head)
+    }
+
+    /// Top-1 accuracy on labelled images.
+    pub fn accuracy(&self, images: &[crate::data::images::Image], comp: Component) -> f64 {
+        let mut correct = 0usize;
+        for chunk in images.chunks(16) {
+            let refs: Vec<&[f32]> = chunk.iter().map(|i| i.pixels.as_slice()).collect();
+            let logits = self.forward(&refs, comp);
+            for (b, img) in chunk.iter().enumerate() {
+                if tensor::argmax(logits.row(b)) == img.label {
+                    correct += 1;
+                }
+            }
+        }
+        correct as f64 / images.len() as f64
+    }
+
+    /// Attention matrices (head-averaged) for one image, per block.
+    pub fn attention_maps(&self, pixels: &[f32], comp: Component) -> Vec<Matrix> {
+        let mut h = self.embed(&[pixels]);
+        let mut maps = Vec::with_capacity(self.blocks.len());
+        for i in 0..self.blocks.len() {
+            let mut store = Vec::new();
+            h = self.block_forward(i, &h, 1, comp, Some(&mut store), None);
+            maps.push(store.pop().expect("attention recorded"));
+        }
+        maps
+    }
+
+    /// All prunable linear ids (same naming as the LM).
+    pub fn linear_ids(&self) -> Vec<crate::model::LinearId> {
+        (0..self.blocks.len())
+            .flat_map(|b| {
+                LINEAR_NAMES.iter().map(move |&n| crate::model::LinearId { block: b, name: n })
+            })
+            .collect()
+    }
+
+    pub fn set_linear(&mut self, id: crate::model::LinearId, op: LinearOp) {
+        *self.blocks[id.block].linear_mut(id.name) = op;
+    }
+
+    pub fn achieved_compression(&self) -> f64 {
+        let dense: usize = self.cfg.as_model_config().prunable_params();
+        let now: usize = self
+            .blocks
+            .iter()
+            .flat_map(|b| LINEAR_NAMES.iter().map(move |&n| b.linear(n).param_count()))
+            .sum();
+        1.0 - now as f64 / dense as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::{ImageDataset, ImagesConfig};
+
+    fn tiny_vit() -> Vit {
+        Vit::init(&VitConfig::small(16, 8), 3)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let v = tiny_vit();
+        let ds = ImageDataset::new(ImagesConfig::default());
+        let imgs = ds.batch(4, &mut ds.stream(0));
+        let refs: Vec<&[f32]> = imgs.iter().map(|i| i.pixels.as_slice()).collect();
+        let logits = v.forward(&refs, Component::Both);
+        assert_eq!((logits.rows, logits.cols), (4, 8));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn patchify_layout() {
+        let v = tiny_vit();
+        // pixel value = row-major index; check patch (0,0) picks the corner.
+        let px: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let p = v.patchify(&px);
+        assert_eq!(p.rows, 16);
+        assert_eq!(p.at(0, 0), 0.0);
+        assert_eq!(p.at(0, 1), 1.0);
+        assert_eq!(p.at(0, 4), 16.0); // second row of the patch
+        assert_eq!(p.at(1, 0), 4.0); // next patch to the right
+    }
+
+    #[test]
+    fn attention_maps_are_stochastic_matrices() {
+        let v = tiny_vit();
+        let ds = ImageDataset::new(ImagesConfig::default());
+        let img = ds.render(2, &mut ds.stream(1));
+        let maps = v.attention_maps(&img.pixels, Component::Both);
+        assert_eq!(maps.len(), v.cfg.n_layers);
+        for m in &maps {
+            assert_eq!(m.rows, v.cfg.n_tokens());
+            for r in 0..m.rows {
+                let s: f32 = m.row(r).iter().sum();
+                assert!((s - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn component_split_differs_after_compression() {
+        use crate::compress::{compress_layer, CalibStats};
+        use crate::config::CompressConfig;
+        let mut v = tiny_vit();
+        let ds = ImageDataset::new(ImagesConfig::default());
+        let imgs = ds.batch(8, &mut ds.stream(2));
+        let refs: Vec<&[f32]> = imgs.iter().map(|i| i.pixels.as_slice()).collect();
+        // Compress every layer with OATS (stats from real block inputs).
+        let cfg = CompressConfig { rate: 0.5, rank_ratio: 0.3, iters: 3, ..Default::default() };
+        let mut h = v.embed(&refs);
+        for b in 0..v.blocks.len() {
+            let mut cap = crate::model::ForwardCapture::default();
+            let _ = v.block_forward(b, &h, refs.len(), Component::Both, None, Some(&mut cap));
+            for name in LINEAR_NAMES {
+                let w = v.blocks[b].linear(name).dense_view();
+                let stats = CalibStats::from_activations(&cap.inputs[name]);
+                let c = compress_layer(&w, &stats, &cfg).unwrap();
+                v.set_linear(crate::model::LinearId { block: b, name }, LinearOp::Compressed(c));
+            }
+            h = v.block_forward(b, &h, refs.len(), Component::Both, None, None);
+        }
+        assert!(v.achieved_compression() > 0.4);
+        let both = v.forward(&refs, Component::Both);
+        let sp = v.forward(&refs, Component::SparseOnly);
+        let lr = v.forward(&refs, Component::LowRankOnly);
+        assert!(both.fro_dist(&sp) > 1e-3);
+        assert!(both.fro_dist(&lr) > 1e-3);
+        assert!(sp.fro_dist(&lr) > 1e-3);
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let v = tiny_vit();
+        let ds = ImageDataset::new(ImagesConfig::default());
+        let imgs = ds.batch(16, &mut ds.stream(3));
+        let acc = v.accuracy(&imgs, Component::Both);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,184 @@
+//! Attention rollout (Abnar & Zuidema 2020) with the paper's Section 5
+//! protocol: average attention over heads, mix with the residual identity,
+//! multiply across blocks, read off the CLS row, and discard the bottom 40%
+//! of attention pixels (Appendix A.11).
+
+use crate::tensor::Matrix;
+use crate::vit::{Component, Vit};
+
+/// Fraction of lowest-attention pixels zeroed in the final map (A.11).
+pub const DISCARD_FRACTION: f64 = 0.4;
+
+/// Rollout R = ∏_ℓ norm(0.5·A_ℓ + 0.5·I); returns the CLS-row attention over
+/// patch tokens (length n_patches).
+pub fn rollout_from_maps(maps: &[Matrix]) -> Vec<f32> {
+    assert!(!maps.is_empty());
+    let t = maps[0].rows;
+    let mut r = Matrix::eye(t);
+    for a in maps {
+        // 0.5 A + 0.5 I, row-renormalized.
+        let mut m = a.clone();
+        m.scale(0.5);
+        for i in 0..t {
+            *m.at_mut(i, i) += 0.5;
+            let s: f32 = m.row(i).iter().sum();
+            let inv = 1.0 / s.max(1e-12);
+            for v in m.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        r = crate::tensor::matmul(&m, &r);
+    }
+    // CLS row, skipping the CLS column itself.
+    r.row(0)[1..].to_vec()
+}
+
+/// Zero the bottom `DISCARD_FRACTION` of entries (A.11's visualization step).
+pub fn discard_low(mut heat: Vec<f32>) -> Vec<f32> {
+    let n = heat.len();
+    let cut = ((n as f64) * DISCARD_FRACTION) as usize;
+    if cut == 0 {
+        return heat;
+    }
+    let mut sorted: Vec<f32> = heat.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let thresh = sorted[cut - 1];
+    for v in &mut heat {
+        if *v <= thresh {
+            *v = 0.0;
+        }
+    }
+    heat
+}
+
+/// Full Section-5 analysis for one image: rollouts through the complete
+/// model, the sparse-only path, and the low-rank-only path.
+pub struct RolloutSplit {
+    pub both: Vec<f32>,
+    pub sparse: Vec<f32>,
+    pub low_rank: Vec<f32>,
+    /// patches per image side.
+    pub side: usize,
+}
+
+pub fn rollout_split(vit: &Vit, pixels: &[f32]) -> RolloutSplit {
+    let run = |comp: Component| -> Vec<f32> {
+        discard_low(rollout_from_maps(&vit.attention_maps(pixels, comp)))
+    };
+    RolloutSplit {
+        both: run(Component::Both),
+        sparse: run(Component::SparseOnly),
+        low_rank: run(Component::LowRankOnly),
+        side: vit.cfg.image_side / super::PATCH,
+    }
+}
+
+/// Cosine similarity between two heatmaps — used to quantify the paper's
+/// claim that S and L attend to *different* regions.
+pub fn heatmap_cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+/// ASCII rendering of a patch heatmap (for terminal reports and
+/// EXPERIMENTS.md evidence).
+pub fn ascii_heatmap(heat: &[f32], side: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let max = heat.iter().cloned().fold(0f32, f32::max).max(1e-12);
+    let mut out = String::new();
+    for y in 0..side {
+        for x in 0..side {
+            let v = heat[y * side + x] / max;
+            let idx = ((v * (RAMP.len() - 1) as f32).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+            out.push(RAMP[idx] as char); // double-width for aspect ratio
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a binary PGM image of the heatmap (viewable evidence artifact).
+pub fn write_pgm(heat: &[f32], side: usize, path: &std::path::Path) -> std::io::Result<()> {
+    let max = heat.iter().cloned().fold(0f32, f32::max).max(1e-12);
+    let mut buf = format!("P5\n{side} {side}\n255\n").into_bytes();
+    for &v in heat {
+        buf.push(((v / max) * 255.0) as u8);
+    }
+    std::fs::write(path, buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::VitConfig;
+
+    #[test]
+    fn rollout_of_identity_attention_is_uniformish() {
+        // If every attention map is uniform, rollout CLS row is uniform.
+        let t = 5;
+        let uniform = Matrix::filled(t, t, 1.0 / t as f32);
+        let heat = rollout_from_maps(&[uniform.clone(), uniform]);
+        assert_eq!(heat.len(), t - 1);
+        for w in heat.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rollout_follows_strong_attention() {
+        // CLS attends only to token 2 in both layers ⇒ heat concentrates at
+        // patch index 1 (token 2).
+        let t = 4;
+        let mut a = Matrix::zeros(t, t);
+        for i in 0..t {
+            *a.at_mut(i, i) = 1.0;
+        }
+        *a.at_mut(0, 0) = 0.0;
+        *a.at_mut(0, 2) = 1.0;
+        let heat = rollout_from_maps(&[a.clone(), a]);
+        let best = crate::tensor::argmax(&heat);
+        assert_eq!(best, 1, "heat={heat:?}");
+    }
+
+    #[test]
+    fn discard_low_zeroes_fraction() {
+        let heat: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let out = discard_low(heat);
+        let zeros = out.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 4);
+        assert!(out[9] > 0.0);
+    }
+
+    #[test]
+    fn cosine_props() {
+        let a = vec![1.0, 0.0, 1.0];
+        assert!((heatmap_cosine(&a, &a) - 1.0).abs() < 1e-9);
+        assert_eq!(heatmap_cosine(&a, &[0.0, 1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn ascii_heatmap_renders() {
+        let s = ascii_heatmap(&[0.0, 0.5, 0.9, 1.0], 2);
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains('@'));
+    }
+
+    #[test]
+    fn split_runs_on_uncompressed_model() {
+        // On a dense model SparseOnly == Both == LowRankOnly (no SPL layers),
+        // so the cosines are 1.
+        let vit = Vit::init(&VitConfig::small(16, 8), 1);
+        let ds = crate::data::images::ImageDataset::new(Default::default());
+        let img = ds.render(0, &mut ds.stream(0));
+        let split = rollout_split(&vit, &img.pixels);
+        assert!((heatmap_cosine(&split.both, &split.sparse) - 1.0).abs() < 1e-5);
+        assert!((heatmap_cosine(&split.both, &split.low_rank) - 1.0).abs() < 1e-5);
+        assert_eq!(split.both.len(), 16);
+    }
+}

@@ -1,0 +1,206 @@
+//! Integration tests across the AOT boundary: the JAX-lowered artifacts
+//! executed through the PJRT runtime must agree with the native rust
+//! implementations (architecture-parity contract).
+//!
+//! These tests self-skip when `artifacts/tiny` has not been built
+//! (`make artifacts`), so `cargo test` stays green in a fresh checkout.
+
+use oats::compress::oats::alternating_thresholding;
+use oats::config::{ModelConfig, SparsityPattern};
+use oats::data::{CorpusConfig, SyntheticCorpus};
+use oats::model::{io, TransformerLM};
+use oats::runtime::{self, Engine};
+use oats::sparse::{Csr, LowRank, SparsePlusLowRank};
+use oats::tensor::Matrix;
+use oats::util::prng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !Engine::available(&dir) {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine"))
+}
+
+fn tiny_model(seed: u64) -> TransformerLM {
+    TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), seed)
+}
+
+fn run_lm_fwd(engine: &mut Engine, artifact: &str, model: &TransformerLM, tokens: &[Vec<usize>]) -> Matrix {
+    let tensors = io::flatten(model);
+    let mut args = runtime::literals_from_tensors(&tensors).unwrap();
+    args.push(runtime::literal_from_tokens(tokens).unwrap());
+    let outs = engine.run(artifact, &args).unwrap();
+    assert_eq!(outs.len(), 1);
+    let (b, s) = (tokens.len(), tokens[0].len());
+    runtime::matrix_from_literal(&outs[0], b * s, model.cfg.vocab).unwrap()
+}
+
+#[test]
+fn lm_fwd_artifact_matches_native_forward() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let model = tiny_model(0xF00D);
+    let cfg = engine.model_config().unwrap();
+    assert_eq!(cfg.d_model, model.cfg.d_model);
+    let batch = engine.train_batch().unwrap();
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 7));
+    let b = corpus.batch(batch, cfg.seq_len, &mut corpus.stream(1));
+
+    let jax_logits = run_lm_fwd(&mut engine, "lm_fwd", &model, &b.inputs);
+    let native = model.forward(&b.inputs);
+    let rel = jax_logits.fro_dist(&native) / native.fro_norm();
+    assert!(rel < 1e-3, "JAX/native logit divergence {rel}");
+}
+
+#[test]
+fn pallas_attention_artifact_matches_ref_artifact() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let model = tiny_model(0xBEEF);
+    let cfg = engine.model_config().unwrap();
+    let batch = engine.train_batch().unwrap();
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 8));
+    let b = corpus.batch(batch, cfg.seq_len, &mut corpus.stream(2));
+
+    let ref_logits = run_lm_fwd(&mut engine, "lm_fwd", &model, &b.inputs);
+    let pallas_logits = run_lm_fwd(&mut engine, "lm_fwd_pallas", &model, &b.inputs);
+    let rel = pallas_logits.fro_dist(&ref_logits) / ref_logits.fro_norm();
+    assert!(rel < 1e-4, "pallas/ref divergence {rel}");
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = engine.model_config().unwrap();
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 3));
+    let mut trainer = oats::train::Trainer::new(engine, 42).unwrap();
+    let curve = trainer.train(&corpus, 30).unwrap();
+    let first = curve[..5].iter().sum::<f32>() / 5.0;
+    let last = curve[curve.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.1,
+        "loss did not decrease: first≈{first:.3} last≈{last:.3}"
+    );
+    // Exported model evaluates consistently with the final loss.
+    let model = trainer.to_model().unwrap();
+    let b = corpus.batch(4, cfg.seq_len, &mut corpus.stream(99));
+    let loss = model.loss(&b.inputs, &b.targets);
+    assert!(loss < first as f64, "exported-model loss {loss} vs init {first}");
+}
+
+#[test]
+fn oats_step_artifact_converges_and_matches_native_quality() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let p = engine.manifest.get("oats_step_params").expect("params").clone();
+    let d = p.req_usize("dout").unwrap();
+    let rank = p.req_usize("rank").unwrap();
+    let k = p.req_usize("nonzeros").unwrap();
+
+    let mut rng = Rng::new(5);
+    let wd = Matrix::randn(d, d, 1.0, &mut rng);
+    let mut s = Matrix::zeros(d, d);
+    let omega = Matrix::randn(d, rank, 1.0, &mut rng);
+
+    // Drive the artifact for 8 alternating iterations.
+    let mut u = Matrix::zeros(d, rank);
+    let mut vt = Matrix::zeros(rank, d);
+    for _ in 0..8 {
+        let args = vec![
+            runtime::literal_from_matrix(&wd).unwrap(),
+            runtime::literal_from_matrix(&s).unwrap(),
+            runtime::literal_from_matrix(&omega).unwrap(),
+        ];
+        let outs = engine.run("oats_step", &args).unwrap();
+        assert_eq!(outs.len(), 3);
+        u = runtime::matrix_from_literal(&outs[0], d, rank).unwrap();
+        vt = runtime::matrix_from_literal(&outs[1], rank, d).unwrap();
+        s = runtime::matrix_from_literal(&outs[2], d, d).unwrap();
+    }
+    // Budget respected (rowwise ⌊k/d⌋ per row).
+    assert_eq!(s.nnz(), (k / d) * d, "sparse budget");
+    // Residual must be comparable to the native implementation's.
+    let low = oats::tensor::matmul(&u, &vt);
+    let mut resid = wd.clone();
+    resid.axpy(-1.0, &s);
+    resid.axpy(-1.0, &low);
+    let jax_resid = resid.fro_norm();
+
+    let mut rng2 = Rng::new(5);
+    let native = alternating_thresholding(
+        &wd, 8, rank, (k / d) * d, SparsityPattern::RowWise, false, None, &mut rng2,
+    );
+    assert!(
+        jax_resid < native.residual * 1.15 + 1e-6,
+        "artifact residual {jax_resid} vs native {}",
+        native.residual
+    );
+}
+
+#[test]
+fn spl_matmul_artifact_matches_rust_kernel() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let sig = engine.manifest.get("artifacts").unwrap().get("spl_matmul").unwrap().clone();
+    let ins = sig.get("inputs").unwrap().as_arr().unwrap();
+    let shape = |i: usize| -> (usize, usize) {
+        let s = ins[i].get("shape").unwrap().as_arr().unwrap();
+        (s[0].as_usize().unwrap(), s[1].as_usize().unwrap())
+    };
+    let (bx, din) = shape(0);
+    let (dout, _) = shape(1);
+    let (_, r) = shape(2);
+
+    let mut rng = Rng::new(11);
+    let x = Matrix::randn(bx, din, 1.0, &mut rng);
+    let mut s = Matrix::randn(dout, din, 1.0, &mut rng);
+    for v in s.data.iter_mut() {
+        if rng.f64() < 0.75 {
+            *v = 0.0;
+        }
+    }
+    let u = Matrix::randn(dout, r, 1.0, &mut rng);
+    let vt = Matrix::randn(r, din, 1.0, &mut rng);
+
+    let args = vec![
+        runtime::literal_from_matrix(&x).unwrap(),
+        runtime::literal_from_matrix(&s).unwrap(),
+        runtime::literal_from_matrix(&u).unwrap(),
+        runtime::literal_from_matrix(&vt).unwrap(),
+    ];
+    let outs = engine.run("spl_matmul", &args).unwrap();
+    let jax_y = runtime::matrix_from_literal(&outs[0], bx, dout).unwrap();
+
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&s),
+        low_rank: Some(LowRank { u, vt }),
+    };
+    let rust_y = spl.apply_batch(&x);
+    let rel = jax_y.fro_dist(&rust_y) / rust_y.fro_norm();
+    assert!(rel < 1e-4, "spl kernel divergence {rel}");
+}
+
+#[test]
+fn lm_loss_artifact_matches_native_loss() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let model = tiny_model(0xCAFE);
+    let cfg = engine.model_config().unwrap();
+    let batch = engine.train_batch().unwrap();
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 12));
+    let b = corpus.batch(batch, cfg.seq_len, &mut corpus.stream(3));
+
+    let tensors = io::flatten(&model);
+    let mut args = runtime::literals_from_tensors(&tensors).unwrap();
+    args.push(runtime::literal_from_tokens(&b.inputs).unwrap());
+    args.push(runtime::literal_from_tokens(&b.targets).unwrap());
+    let outs = engine.run("lm_loss", &args).unwrap();
+    let jax_loss = runtime::f32_from_literal(&outs[0]).unwrap() as f64;
+    let native_loss = model.loss(&b.inputs, &b.targets);
+    assert!(
+        (jax_loss - native_loss).abs() < 1e-3,
+        "loss mismatch: jax {jax_loss} native {native_loss}"
+    );
+}
