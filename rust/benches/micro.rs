@@ -1,17 +1,75 @@
-//! Micro-benchmarks for the §Perf pass: GEMM, CSR GEMM, the fused
-//! sparse+low-rank apply, randomized SVD, and one full OATS iteration.
+//! Micro-benchmarks for the §Perf pass: GEMM, the sparse kernel family
+//! (scalar CSR vs tiled BCSR vs fused sparse+low-rank), randomized SVD, and
+//! one full OATS iteration.
 //!
-//! Run: `cargo bench --bench micro`
+//! Run: `cargo bench --bench micro` (add `-- --quick` for the CI smoke
+//! sizing). Emits `BENCH_micro.json` (see `$OATS_BENCH_DIR`), including
+//! named csr→bcsr speedup comparisons at 50–70 % sparsity on a realistic
+//! layer shape (2048×2048, batch 8).
 
 use oats::bench::{black_box, Bench};
 use oats::linalg::randomized_svd;
-use oats::sparse::{Csr, LowRank, SparsePlusLowRank};
+use oats::sparse::{Bcsr, Csr, LowRank, PackedLinear, SparsePlusLowRank};
 use oats::tensor::{matmul, matmul_bt, Matrix};
 use oats::util::prng::Rng;
+use oats::util::prop::random_sparse;
+
+/// Kernel-family comparison on one layer shape: dense GEMM vs scalar CSR vs
+/// tiled BCSR vs the fused sparse+low-rank path.
+fn kernel_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
+    println!("-- kernel comparison {d}x{d}, batch {batch} --");
+    let x = Matrix::randn(batch, d, 1.0, rng);
+    let w = Matrix::randn(d, d, 1.0, rng);
+    let dense_name = format!("dense gemm_bt {d}x{d} b{batch}");
+    let flops = (2 * batch * d * d) as f64;
+    b.run_with_units(&dense_name, Some(flops), || {
+        black_box(matmul_bt(&x, &w));
+    });
+
+    for pct in [50u32, 60, 70] {
+        let s = random_sparse(d, d, pct as f64 / 100.0, rng);
+        let csr = Csr::from_dense(&s);
+        let bcsr = Bcsr::from_dense(&s);
+        let macs = (2 * batch * csr.nnz()) as f64;
+        let csr_name = format!("csr({pct}%) matmul_xt {d}x{d} b{batch}");
+        let bcsr_name = format!("bcsr({pct}%) matmul_xt {d}x{d} b{batch}");
+        b.run_with_units(&csr_name, Some(macs), || {
+            black_box(csr.matmul_xt(&x));
+        });
+        b.run_with_units(&bcsr_name, Some(macs), || {
+            black_box(bcsr.matmul_xt(&x));
+        });
+        let _ = b.compare(&format!("bcsr_vs_csr_{pct}pct_{d}_b{batch}"), &csr_name, &bcsr_name);
+        let _ = b.compare(&format!("bcsr_vs_dense_{pct}pct_{d}_b{batch}"), &dense_name, &bcsr_name);
+    }
+
+    // The OATS operating point ρ=0.5, κ=0.25: nnz = 0.375 d², r = d/16 —
+    // unfused (scalar CSR + two GEMMs) vs the fused tiled path.
+    let s = random_sparse(d, d, 0.625, rng);
+    let r = d / 16;
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&s),
+        low_rank: Some(LowRank {
+            u: Matrix::randn(d, r, 1.0, rng),
+            vt: Matrix::randn(r, d, 1.0, rng),
+        }),
+    };
+    let packed = PackedLinear::from_spl(&spl, batch);
+    println!("  plan: {}", packed.plan.describe());
+    let unfused_name = format!("spl unfused(csr+gemm) {d}x{d} b{batch}");
+    let fused_name = format!("spl fused({}) {d}x{d} b{batch}", packed.plan.choice.name());
+    b.run(&unfused_name, || {
+        black_box(spl.apply_batch(&x));
+    });
+    b.run(&fused_name, || {
+        black_box(packed.forward(&x));
+    });
+    let _ = b.compare(&format!("fused_vs_unfused_{d}_b{batch}"), &unfused_name, &fused_name);
+}
 
 fn main() {
     let mut rng = Rng::new(1);
-    let mut b = Bench::default();
+    let mut b = Bench::from_env();
     println!("== micro benches (d=512 layer scale) ==");
 
     let d = 512;
@@ -26,38 +84,10 @@ fn main() {
         black_box(matmul_bt(&x, &a));
     });
 
-    // 50% sparse CSR
-    let mut s = Matrix::randn(d, d, 1.0, &mut rng);
-    for v in s.data.iter_mut() {
-        if rng.f64() < 0.5 {
-            *v = 0.0;
-        }
-    }
+    // single-vector decode path at layer scale
+    let s = random_sparse(d, d, 0.5, &mut rng);
     let csr = Csr::from_dense(&s);
-    b.run_with_units("csr(50%) matmul_xt 64xd", Some((2 * 64 * csr.nnz()) as f64), || {
-        black_box(csr.matmul_xt(&x));
-    });
-
-    // OATS layer at ρ=0.5, κ=0.25: nnz = 0.375 d², r ≈ 0.0625 d
-    let mut s2 = Matrix::randn(d, d, 1.0, &mut rng);
-    for v in s2.data.iter_mut() {
-        if rng.f64() < 0.625 {
-            *v = 0.0;
-        }
-    }
-    let r = d / 16;
-    let spl = SparsePlusLowRank {
-        sparse: Csr::from_dense(&s2),
-        low_rank: Some(LowRank {
-            u: Matrix::randn(d, r, 1.0, &mut rng),
-            vt: Matrix::randn(r, d, 1.0, &mut rng),
-        }),
-    };
-    b.run("spl(ρ=.5,κ=.25) apply_batch 64xd", || {
-        black_box(spl.apply_batch(&x));
-    });
-
-    // single-vector decode path
+    let bcsr = Bcsr::from_dense(&s);
     let xv: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
     let mut y = vec![0.0f32; d];
     b.run("dense matvec d=512", || {
@@ -70,12 +100,29 @@ fn main() {
         csr.matvec(&xv, &mut y);
         black_box(&y);
     });
+    b.run("bcsr(50%) matvec d=512", || {
+        bcsr.matvec(&xv, &mut y);
+        black_box(&y);
+    });
+    let r = d / 16;
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&random_sparse(d, d, 0.625, &mut rng)),
+        low_rank: Some(LowRank {
+            u: Matrix::randn(d, r, 1.0, &mut rng),
+            vt: Matrix::randn(r, d, 1.0, &mut rng),
+        }),
+    };
     b.run("spl apply d=512", || {
         spl.apply(&xv, &mut y);
         black_box(&y);
     });
 
-    // randomized SVD — the OATS hot spot
+    // The kernel-family comparisons the dispatch layer is built on:
+    // a serving-sized layer (2048², batch 8) plus the d=512 scale.
+    kernel_comparison(&mut b, 512, 8, &mut rng);
+    kernel_comparison(&mut b, 2048, 8, &mut rng);
+
+    // randomized SVD — the OATS compression hot spot
     let w = Matrix::randn(d, d, 1.0, &mut rng);
     for rank in [16, 32, 64] {
         let mut r2 = Rng::new(9);
@@ -99,4 +146,6 @@ fn main() {
             &mut r3,
         ));
     });
+
+    b.write_json("micro").expect("write BENCH_micro.json");
 }

@@ -3,7 +3,9 @@
 //! summary statistics, and a uniform report format shared by all
 //! `rust/benches/*` targets and the §Perf iteration logs.
 
+use crate::json::{self, Json};
 use crate::util::stats::Summary;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// One benchmark's collected timings.
@@ -20,6 +22,25 @@ impl BenchResult {
     /// units/second at the mean time, if a unit count was attached.
     pub fn throughput(&self) -> Option<f64> {
         self.units_per_iter.map(|u| u / self.summary.mean)
+    }
+
+    /// Machine-readable record (one element of `BENCH_*.json`'s `results`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", json::s(&self.name))
+            .set("mean_s", json::num(self.summary.mean))
+            .set("p50_s", json::num(self.summary.p50))
+            .set("p95_s", json::num(self.summary.p95))
+            .set("min_s", json::num(self.summary.min))
+            .set("max_s", json::num(self.summary.max))
+            .set("samples", json::num(self.summary.n as f64));
+        if let Some(u) = self.units_per_iter {
+            o.set("units_per_iter", json::num(u));
+        }
+        if let Some(tp) = self.throughput() {
+            o.set("units_per_s", json::num(tp));
+        }
+        o
     }
 
     pub fn report_line(&self) -> String {
@@ -59,17 +80,41 @@ pub struct Bench {
     /// Hard cap on total sampling time.
     pub max_seconds: f64,
     pub results: Vec<BenchResult>,
+    /// Named (label, base, other, speedup) comparisons recorded via
+    /// [`Bench::compare`]; emitted into the JSON report.
+    pub comparisons: Vec<(String, String, String, f64)>,
 }
 
 impl Default for Bench {
     fn default() -> Self {
-        Bench { warmup_iters: 3, samples: 20, max_seconds: 30.0, results: Vec::new() }
+        Bench {
+            warmup_iters: 3,
+            samples: 20,
+            max_seconds: 30.0,
+            results: Vec::new(),
+            comparisons: Vec::new(),
+        }
     }
 }
 
 impl Bench {
     pub fn quick() -> Self {
-        Bench { warmup_iters: 1, samples: 5, max_seconds: 10.0, results: Vec::new() }
+        Bench { warmup_iters: 1, samples: 5, max_seconds: 10.0, ..Default::default() }
+    }
+
+    /// `quick()` when `--quick` was passed (CI bench-smoke mode:
+    /// `cargo bench --bench micro -- --quick`) or `$OATS_BENCH_QUICK` is
+    /// truthy (anything but empty/`0`/`false`); full sampling otherwise.
+    pub fn from_env() -> Self {
+        let env_quick = matches!(
+            std::env::var("OATS_BENCH_QUICK").ok().as_deref(),
+            Some(v) if !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+        );
+        if env_quick || std::env::args().any(|a| a == "--quick") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
     }
 
     /// Run a benchmark; `f` is one iteration. Returns the recorded result.
@@ -115,6 +160,54 @@ impl Bench {
         let b = self.results.iter().find(|r| r.name == other)?;
         Some(a.summary.mean / b.summary.mean)
     }
+
+    /// Record a named base-vs-other comparison for the JSON report.
+    /// Returns the speedup if both names exist.
+    pub fn compare(&mut self, label: &str, base: &str, other: &str) -> Option<f64> {
+        let s = self.speedup(base, other)?;
+        println!("  speedup {label}: {s:.2}x ({base} -> {other})");
+        self.comparisons.push((label.to_string(), base.to_string(), other.to_string(), s));
+        Some(s)
+    }
+
+    /// The whole suite as one machine-readable document.
+    pub fn to_json(&self, suite: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("suite", json::s(suite))
+            .set("schema", json::s("oats-bench-v1"))
+            .set("warmup_iters", json::num(self.warmup_iters as f64))
+            .set("sample_budget", json::num(self.samples as f64));
+        o.set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
+        let comps: Vec<Json> = self
+            .comparisons
+            .iter()
+            .map(|(label, base, other, s)| {
+                let mut c = Json::obj();
+                c.set("label", json::s(label))
+                    .set("base", json::s(base))
+                    .set("other", json::s(other))
+                    .set("speedup", json::num(*s));
+                c
+            })
+            .collect();
+        o.set("comparisons", Json::Arr(comps));
+        o
+    }
+
+    /// Write `BENCH_<suite>.json` into `$OATS_BENCH_DIR` (default: cwd)
+    /// so CI can collect the artifacts (see `benches/micro.rs`).
+    pub fn write_json(&self, suite: &str) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("OATS_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_json_to(suite, std::path::Path::new(&dir))
+    }
+
+    /// [`Bench::write_json`] with an explicit output directory.
+    pub fn write_json_to(&self, suite: &str, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{suite}.json"));
+        std::fs::write(&path, self.to_json(suite).to_pretty())?;
+        println!("bench json -> {}", path.display());
+        Ok(path)
+    }
 }
 
 /// Prevent the optimizer from eliding a computed value.
@@ -129,12 +222,50 @@ mod tests {
 
     #[test]
     fn bench_records_samples() {
-        let mut b = Bench { warmup_iters: 1, samples: 5, max_seconds: 5.0, results: vec![] };
+        let mut b = Bench { warmup_iters: 1, samples: 5, max_seconds: 5.0, ..Default::default() };
         b.run("noop", || {
             black_box(1 + 1);
         });
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].summary.n >= 1);
+    }
+
+    #[test]
+    fn json_report_structure() {
+        let mut b = Bench::quick();
+        b.run_with_units("a", Some(10.0), || {
+            black_box(2 * 2);
+        });
+        b.run("b", || {
+            black_box(3 * 3);
+        });
+        b.compare("a_vs_b", "a", "b").unwrap();
+        let j = b.to_json("unit");
+        assert_eq!(j.get("suite").and_then(crate::json::Json::as_str), Some("unit"));
+        assert_eq!(j.get("results").and_then(crate::json::Json::as_arr).unwrap().len(), 2);
+        let comps = j.get("comparisons").and_then(crate::json::Json::as_arr).unwrap();
+        assert_eq!(comps.len(), 1);
+        assert!(comps[0].req_f64("speedup").unwrap() > 0.0);
+        // Round-trips through the parser (what CI consumers do).
+        let parsed = crate::json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("schema").and_then(crate::json::Json::as_str), Some("oats-bench-v1"));
+    }
+
+    #[test]
+    fn write_json_emits_bench_file() {
+        // Explicit-directory variant: no process-global env mutation (tests
+        // run concurrently in this process).
+        let dir = std::env::temp_dir().join(format!("oats_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut b = Bench::quick();
+        b.run("x", || {
+            black_box(1);
+        });
+        let path = b.write_json_to("unittest", &dir).unwrap();
+        assert!(path.ends_with("BENCH_unittest.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::json::parse(&text).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -15,6 +15,18 @@
 //! See `DESIGN.md` for the system inventory and the experiment index mapping
 //! every table and figure of the paper to a module and regenerator binary.
 
+// Style-lint families the numeric-kernel code intentionally trades away
+// (index-heavy loops, wide argument lists on the algorithm entry points,
+// `to_string` on the hand-rolled Json). Correctness lints stay on; CI runs
+// `clippy -- -D warnings`.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::inherent_to_string,
+    clippy::type_complexity
+)]
+
 pub mod bench;
 pub mod calib;
 pub mod cli;

@@ -11,7 +11,7 @@ use super::lm::{LinearOp, TransformerLM, LINEAR_NAMES};
 use crate::compress::CompressedLayer;
 use crate::config::ModelConfig;
 use crate::json::{self, Json};
-use crate::sparse::{Csr, LowRank, SparsePlusLowRank};
+use crate::sparse::{Csr, LowRank, PackedLinear, PackedSparse, SparsePlusLowRank};
 use crate::tensor::Matrix;
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
@@ -70,18 +70,47 @@ fn read_tensor(entry: &Json, bytes: &[u8]) -> Result<Matrix> {
     Ok(Matrix::from_vec(rows, cols, read_f32(bytes, off, rows * cols)?))
 }
 
-fn linear_entry(blob: &mut Blob, op: &LinearOp) -> Json {
+/// Recover the portable (dense/CSR/SPL) structure of a packed layer: the
+/// on-disk format is pack-agnostic; `load_packed` re-derives kernel plans.
+fn unpacked_layer(p: &PackedLinear) -> CompressedLayer {
+    let csr = match p.sparse() {
+        PackedSparse::Dense(w) => {
+            // A Dense *plan* can still hold a sparse weight (density above
+            // the GEMM cutoff); keep the sparse structure on disk so the
+            // round-trip preserves compression accounting.
+            if p.low_rank().is_none() {
+                if w.nnz() == w.rows * w.cols {
+                    return CompressedLayer::Dense(w.clone());
+                }
+                return CompressedLayer::Sparse(Csr::from_dense(w));
+            }
+            Csr::from_dense(w)
+        }
+        PackedSparse::Csr(c) => c.clone(),
+        PackedSparse::Bcsr(b) => b.to_csr(),
+        PackedSparse::Nm(nm) => nm.to_csr(),
+    };
+    match p.low_rank() {
+        Some(lr) => CompressedLayer::Spl(SparsePlusLowRank {
+            sparse: csr,
+            low_rank: Some(lr.clone()),
+        }),
+        None => CompressedLayer::Sparse(csr),
+    }
+}
+
+fn compressed_entry(blob: &mut Blob, layer: &CompressedLayer) -> Json {
     let mut e = Json::obj();
-    match op {
-        LinearOp::Dense(w) | LinearOp::Compressed(CompressedLayer::Dense(w)) => {
+    match layer {
+        CompressedLayer::Dense(w) => {
             e.set("kind", json::s("dense"));
             e.set("tensor", tensor_entry(blob, w));
         }
-        LinearOp::Compressed(CompressedLayer::Sparse(csr)) => {
+        CompressedLayer::Sparse(csr) => {
             e.set("kind", json::s("csr"));
             e.set("csr", csr_entry(blob, csr));
         }
-        LinearOp::Compressed(CompressedLayer::Spl(spl)) => {
+        CompressedLayer::Spl(spl) => {
             e.set("kind", json::s("spl"));
             e.set("csr", csr_entry(blob, &spl.sparse));
             if let Some(lr) = &spl.low_rank {
@@ -91,6 +120,19 @@ fn linear_entry(blob: &mut Blob, op: &LinearOp) -> Json {
         }
     }
     e
+}
+
+fn linear_entry(blob: &mut Blob, op: &LinearOp) -> Json {
+    match op {
+        LinearOp::Dense(w) => {
+            let mut e = Json::obj();
+            e.set("kind", json::s("dense"));
+            e.set("tensor", tensor_entry(blob, w));
+            e
+        }
+        LinearOp::Compressed(c) => compressed_entry(blob, c),
+        LinearOp::Packed(p) => compressed_entry(blob, &unpacked_layer(p)),
+    }
 }
 
 fn csr_entry(blob: &mut Blob, csr: &Csr) -> Json {
@@ -237,6 +279,16 @@ pub fn load(dir: &Path) -> Result<TransformerLM> {
     })
 }
 
+/// Load a compressed checkpoint and pre-pack every compressed layer into
+/// the serving format its kernel plan selects for `batch_hint` — the
+/// deployment path: checkpoints go straight from disk into BCSR/N:M/CSR
+/// tiles without materializing dense weights.
+pub fn load_packed(dir: &Path, batch_hint: usize) -> Result<TransformerLM> {
+    let mut model = load(dir)?;
+    model.pack_for_serving(batch_hint);
+    Ok(model)
+}
+
 /// On-disk size of the weights blob (bytes) — deployment accounting.
 pub fn weights_size(dir: &Path) -> Result<u64> {
     Ok(std::fs::metadata(dir.join("weights.bin"))?.len())
@@ -294,6 +346,38 @@ mod tests {
         );
         std::fs::remove_dir_all(&dense_dir).unwrap();
         std::fs::remove_dir_all(&comp_dir).unwrap();
+    }
+
+    #[test]
+    fn load_packed_preserves_numerics_and_derives_plans() {
+        let m = compressed_model();
+        let dir = std::env::temp_dir().join(format!("oats_cio_p_{}", std::process::id()));
+        save(&m, &dir).unwrap();
+        let packed = load_packed(&dir, 8).unwrap();
+        // Every compressed linear got a kernel plan at load time.
+        assert_eq!(packed.kernel_plans().len(), m.cfg.n_layers * 6);
+        assert_eq!(packed.prunable_param_count(), m.prunable_param_count());
+        let toks = vec![vec![2usize, 4, 6, 8, 10, 12]];
+        let d = m.forward(&toks).fro_dist(&packed.forward(&toks));
+        assert!(d < 1e-3, "packed load diverges: {d}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn saving_a_packed_model_keeps_portable_format() {
+        let m = compressed_model().packed_for_serving(8);
+        let dir = std::env::temp_dir().join(format!("oats_cio_pk_{}", std::process::id()));
+        save(&m, &dir).unwrap();
+        let m2 = load(&dir).unwrap();
+        // Round-trips back to the portable structure with identical numerics.
+        assert!(matches!(
+            m2.blocks[0].q,
+            LinearOp::Compressed(CompressedLayer::Spl(_))
+        ));
+        assert_eq!(m2.prunable_param_count(), m.prunable_param_count());
+        let toks = vec![vec![1usize, 3, 5, 7]];
+        assert!(m.forward(&toks).fro_dist(&m2.forward(&toks)) < 1e-3);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

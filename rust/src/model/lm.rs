@@ -5,6 +5,7 @@
 
 use crate::compress::CompressedLayer;
 use crate::config::ModelConfig;
+use crate::sparse::{KernelPlan, PackedLinear};
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
 use std::collections::HashMap;
@@ -31,6 +32,10 @@ impl std::fmt::Display for LinearId {
 pub enum LinearOp {
     Dense(Matrix),
     Compressed(CompressedLayer),
+    /// Pre-packed for serving: the sparse term re-tiled into the format a
+    /// [`KernelPlan`] selected for this shape/density/batch (BCSR, packed
+    /// N:M, CSR, or dense), with the low-rank term fused in.
+    Packed(Box<PackedLinear>),
 }
 
 impl LinearOp {
@@ -38,6 +43,7 @@ impl LinearOp {
         match self {
             LinearOp::Dense(w) => w.rows,
             LinearOp::Compressed(c) => c.shape().0,
+            LinearOp::Packed(p) => p.shape().0,
         }
     }
 
@@ -45,6 +51,7 @@ impl LinearOp {
         match self {
             LinearOp::Dense(w) => w.cols,
             LinearOp::Compressed(c) => c.shape().1,
+            LinearOp::Packed(p) => p.shape().1,
         }
     }
 
@@ -55,6 +62,7 @@ impl LinearOp {
             LinearOp::Compressed(CompressedLayer::Dense(w)) => tensor::matmul_bt(x, w),
             LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matmul_xt(x),
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply_batch(x),
+            LinearOp::Packed(p) => p.forward(x),
         }
     }
 
@@ -73,6 +81,7 @@ impl LinearOp {
             }
             LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matvec(x, y),
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply(x, y),
+            LinearOp::Packed(p) => p.forward_vec(x, y),
         }
     }
 
@@ -81,6 +90,7 @@ impl LinearOp {
         match self {
             LinearOp::Dense(w) => w.clone(),
             LinearOp::Compressed(c) => c.to_dense(),
+            LinearOp::Packed(p) => p.to_dense(),
         }
     }
 
@@ -88,6 +98,29 @@ impl LinearOp {
         match self {
             LinearOp::Dense(w) => w.rows * w.cols,
             LinearOp::Compressed(c) => c.param_count(),
+            LinearOp::Packed(p) => p.param_count(),
+        }
+    }
+
+    /// Pre-pack a compressed layer into its planned serving format; `None`
+    /// when there is nothing to pack (dense or already packed).
+    pub fn pack(&self, batch_hint: usize) -> Option<LinearOp> {
+        match self {
+            LinearOp::Compressed(CompressedLayer::Sparse(csr)) => {
+                Some(LinearOp::Packed(Box::new(PackedLinear::from_csr(csr, batch_hint))))
+            }
+            LinearOp::Compressed(CompressedLayer::Spl(spl)) => {
+                Some(LinearOp::Packed(Box::new(PackedLinear::from_spl(spl, batch_hint))))
+            }
+            _ => None,
+        }
+    }
+
+    /// The kernel plan, if this layer has been packed.
+    pub fn kernel_plan(&self) -> Option<&KernelPlan> {
+        match self {
+            LinearOp::Packed(p) => Some(&p.plan),
+            _ => None,
         }
     }
 }
@@ -422,6 +455,78 @@ impl TransformerLM {
         logits
     }
 
+    /// One lockstep decode step for a batch of independent sequences: the
+    /// six linears and the head run as [b × d] batched products (where the
+    /// packed BCSR/fused kernels pay off), while attention stays
+    /// per-sequence over each sequence's own KV cache (positions may be
+    /// ragged). Mirrors [`TransformerLM::decode_step`] exactly — for dense
+    /// layers the arithmetic is identical operation-for-operation.
+    ///
+    /// Returns the logits [b × vocab] for each sequence's new position.
+    pub fn decode_step_batch(&self, tokens: &[usize], caches: &mut [&mut KvCache]) -> Matrix {
+        let b = tokens.len();
+        assert_eq!(b, caches.len(), "one cache per sequence");
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut h = Matrix::zeros(b, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let t = caches[i].len;
+            assert!(t < self.cfg.seq_len, "cache full (seq {i})");
+            let row = h.row_mut(i);
+            let emb = self.tok_emb.row(tok).iter().zip(self.pos_emb.row(t));
+            for (x, (&e, &p)) in row.iter_mut().zip(emb) {
+                *x = e + p;
+            }
+        }
+
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let mut x = h.clone();
+            tensor::layernorm_rows(&mut x, &blk.ln1_g, &blk.ln1_b, LN_EPS);
+            let q = blk.q.forward(&x);
+            let k = blk.k.forward(&x);
+            let v = blk.v.forward(&x);
+            let mut ctx = Matrix::zeros(b, d);
+            for i in 0..b {
+                let t = caches[i].len;
+                caches[i].k[bi].row_mut(t).copy_from_slice(k.row(i));
+                caches[i].v[bi].row_mut(t).copy_from_slice(v.row(i));
+                for head in 0..nh {
+                    let off = head * hd;
+                    let qh = &q.row(i)[off..off + hd];
+                    let mut scores = vec![0.0f32; t + 1];
+                    for (u, sc) in scores.iter_mut().enumerate() {
+                        let krow = &caches[i].k[bi].row(u)[off..off + hd];
+                        *sc = tensor::dot(qh, krow) * scale;
+                    }
+                    tensor::softmax_inplace(&mut scores);
+                    let ch = &mut ctx.row_mut(i)[off..off + hd];
+                    for (u, &p) in scores.iter().enumerate() {
+                        let vrow = &caches[i].v[bi].row(u)[off..off + hd];
+                        for (cv, &vv) in ch.iter_mut().zip(vrow) {
+                            *cv += p * vv;
+                        }
+                    }
+                }
+            }
+            let attn = blk.o.forward(&ctx);
+            h.axpy(1.0, &attn);
+            let mut x2 = h.clone();
+            tensor::layernorm_rows(&mut x2, &blk.ln2_g, &blk.ln2_b, LN_EPS);
+            let mut u = blk.up.forward(&x2);
+            tensor::gelu_inplace(&mut u.data);
+            let mlp = blk.down.forward(&u);
+            h.axpy(1.0, &mlp);
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        tensor::layernorm_rows(&mut h, &self.lnf_g, &self.lnf_b, LN_EPS);
+        tensor::matmul_bt(&h, &self.head)
+    }
+
     /// All prunable linear ids in pipeline order.
     pub fn linear_ids(&self) -> Vec<LinearId> {
         (0..self.blocks.len())
@@ -432,6 +537,58 @@ impl TransformerLM {
     /// Replace a linear layer (the coordinator's commit step).
     pub fn set_linear(&mut self, id: LinearId, op: LinearOp) {
         *self.blocks[id.block].linear_mut(id.name) = op;
+    }
+
+    /// Pre-pack every compressed linear into the serving format its
+    /// [`KernelPlan`] selects for `batch_hint` (checkpoint→serve path).
+    /// Returns the number of layers packed.
+    pub fn pack_for_serving(&mut self, batch_hint: usize) -> usize {
+        let mut packed = 0;
+        for blk in &mut self.blocks {
+            for name in LINEAR_NAMES {
+                let op = blk.linear_mut(name);
+                if let Some(p) = op.pack(batch_hint) {
+                    *op = p;
+                    packed += 1;
+                }
+            }
+        }
+        packed
+    }
+
+    /// Clone-and-pack convenience for serving startup (the original model
+    /// keeps its portable representation).
+    pub fn packed_for_serving(&self, batch_hint: usize) -> TransformerLM {
+        let mut m = self.clone();
+        m.pack_for_serving(batch_hint);
+        m
+    }
+
+    /// True if any linear still carries a packable compressed format.
+    pub fn needs_packing(&self) -> bool {
+        self.blocks.iter().any(|b| {
+            LINEAR_NAMES.iter().any(|&n| {
+                matches!(
+                    b.linear(n),
+                    LinearOp::Compressed(
+                        CompressedLayer::Sparse(_) | CompressedLayer::Spl(_)
+                    )
+                )
+            })
+        })
+    }
+
+    /// Kernel plans of all packed layers, in pipeline order.
+    pub fn kernel_plans(&self) -> Vec<(LinearId, KernelPlan)> {
+        let mut out = Vec::new();
+        for (b, blk) in self.blocks.iter().enumerate() {
+            for name in LINEAR_NAMES {
+                if let Some(p) = blk.linear(name).kernel_plan() {
+                    out.push((LinearId { block: b, name }, p.clone()));
+                }
+            }
+        }
+        out
     }
 
     /// Prunable-parameter count currently stored (tracks compression).
@@ -554,6 +711,102 @@ mod tests {
         }
         assert_eq!(cap.inputs["q"].cols, m.cfg.d_model);
         assert_eq!(cap.inputs["down"].cols, m.cfg.d_ff);
+    }
+
+    #[test]
+    fn packed_model_matches_unpacked_forward_and_decode() {
+        let mut m = tiny();
+        // Compress two layers (one CSR-only, one SPL) then pack.
+        let wq = m.blocks[0].q.dense_view();
+        let pruned = crate::compress::threshold::hard_threshold(
+            &wq,
+            &wq,
+            wq.rows * wq.cols / 2,
+            crate::config::SparsityPattern::RowWise,
+        );
+        m.set_linear(
+            LinearId { block: 0, name: "q" },
+            LinearOp::Compressed(CompressedLayer::Sparse(Csr::from_dense(&pruned))),
+        );
+        let wu = m.blocks[1].up.dense_view();
+        let spl = crate::sparse::SparsePlusLowRank {
+            sparse: Csr::from_dense(&crate::compress::threshold::hard_threshold(
+                &wu,
+                &wu,
+                wu.rows * wu.cols / 3,
+                crate::config::SparsityPattern::RowWise,
+            )),
+            low_rank: None,
+        };
+        m.set_linear(
+            LinearId { block: 1, name: "up" },
+            LinearOp::Compressed(CompressedLayer::Spl(spl)),
+        );
+
+        let packed = m.packed_for_serving(8);
+        assert_eq!(packed.kernel_plans().len(), 2);
+        assert_eq!(packed.prunable_param_count(), m.prunable_param_count());
+
+        let toks = vec![vec![1usize, 2, 3, 4, 5, 6]];
+        let a = m.forward(&toks);
+        let b = packed.forward(&toks);
+        assert!(a.fro_dist(&b) < 1e-3, "packed forward diverges: {}", a.fro_dist(&b));
+
+        let mut c1 = KvCache::new(&m.cfg);
+        let mut c2 = KvCache::new(&packed.cfg);
+        let mut l1 = Vec::new();
+        let mut l2 = Vec::new();
+        for &t in &[3usize, 9, 1, 7] {
+            l1 = m.decode_step(t, &mut c1);
+            l2 = packed.decode_step(t, &mut c2);
+        }
+        for (x, y) in l1.iter().zip(&l2) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn decode_step_batch_matches_scalar_decode() {
+        let m = tiny();
+        let seqs = [vec![7usize, 3, 11, 2], vec![5usize, 1, 9, 14]];
+        // Scalar reference: decode each sequence independently.
+        let mut want = Vec::new();
+        for s in &seqs {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut logits = Vec::new();
+            for &t in s {
+                logits = m.decode_step(t, &mut cache);
+            }
+            want.push(logits);
+        }
+        // Lockstep batched decode over both sequences.
+        let mut c0 = KvCache::new(&m.cfg);
+        let mut c1 = KvCache::new(&m.cfg);
+        let mut got = Matrix::zeros(0, 0);
+        for step in 0..seqs[0].len() {
+            let tokens = [seqs[0][step], seqs[1][step]];
+            let mut caches = [&mut c0, &mut c1];
+            got = m.decode_step_batch(&tokens, &mut caches);
+        }
+        assert_eq!(got.rows, 2);
+        for (i, w) in want.iter().enumerate() {
+            for (a, b) in got.row(i).iter().zip(w) {
+                assert!((a - b).abs() < 1e-4, "seq {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_is_idempotent_and_skips_dense() {
+        let mut m = tiny();
+        assert_eq!(m.pack_for_serving(4), 0, "all-dense model has nothing to pack");
+        let w = m.blocks[0].q.dense_view();
+        m.set_linear(
+            LinearId { block: 0, name: "q" },
+            LinearOp::Compressed(CompressedLayer::Sparse(Csr::from_dense(&w))),
+        );
+        assert_eq!(m.pack_for_serving(4), 1);
+        assert_eq!(m.pack_for_serving(4), 0, "second pack is a no-op");
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Compressed-sparse-row matrices: the scalar, row-at-a-time baseline
+//! kernel. The tiled [`crate::sparse::Bcsr`] format supersedes it on the
+//! batched hot path; CSR remains the portable on-disk format
+//! (`model/compressed_io.rs`) and the dispatch choice for small layers.
+
+use crate::tensor::Matrix;
+use crate::util::threadpool::{parallel_for, SendPtr};
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,  // rows+1
+    pub indices: Vec<u32>, // nnz column ids
+    pub values: Vec<f32>,  // nnz
+}
+
+impl Csr {
+    /// Convert from dense, dropping exact zeros.
+    pub fn from_dense(m: &Matrix) -> Csr {
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                m.data[r * self.cols + self.indices[i] as usize] = self.values[i];
+            }
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of entries that are zero.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// y = A·x (sparse matvec).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            let mut acc = 0.0f32;
+            for i in lo..hi {
+                acc += self.values[i] * x[self.indices[i] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// C = X · Aᵀ for activations X [b × cols]: each output row c_i gets the
+    /// sparse dot of A's rows against x_i. This is the layout linear layers
+    /// use (W stored out×in, activations row-major), so A-row values stream
+    /// sequentially while X rows stay cache-resident.
+    pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols, "csr matmul_xt dim mismatch");
+        let mut out = Matrix::zeros(x.rows, self.rows);
+        let threads = if x.rows * self.nnz() >= (1 << 20) {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            1
+        };
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let n_out = self.rows;
+        parallel_for(threads, x.rows, |b| {
+            let xrow = x.row(b);
+            let op = out_ptr;
+            // SAFETY: each b writes a disjoint output row.
+            let orow = unsafe { std::slice::from_raw_parts_mut(op.0.add(b * n_out), n_out) };
+            for r in 0..n_out {
+                let lo = self.indptr[r] as usize;
+                let hi = self.indptr[r + 1] as usize;
+                let mut acc = 0.0f32;
+                let idx = &self.indices[lo..hi];
+                let val = &self.values[lo..hi];
+                for (&c, &v) in idx.iter().zip(val) {
+                    acc += v * xrow[c as usize];
+                }
+                orow[r] = acc;
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, random_sparse};
+
+    #[test]
+    fn csr_roundtrip_prop() {
+        check("csr dense roundtrip", 30, |g| {
+            let rows = g.usize_range(1, 30);
+            let cols = g.usize_range(1, 30);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let m = random_sparse(rows, cols, 0.7, &mut rng);
+            let csr = Csr::from_dense(&m);
+            assert_eq!(csr.to_dense(), m);
+            assert_eq!(csr.nnz(), m.nnz());
+        });
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense() {
+        check("csr matvec == dense", 30, |g| {
+            let rows = g.usize_range(1, 40);
+            let cols = g.usize_range(1, 40);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let m = random_sparse(rows, cols, 0.6, &mut rng);
+            let x = g.vec_normal(cols, 1.0);
+            let csr = Csr::from_dense(&m);
+            let mut y = vec![0.0; rows];
+            csr.matvec(&x, &mut y);
+            let yd = crate::tensor::matvec(&m, &x);
+            for (a, b) in y.iter().zip(&yd) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn csr_matmul_xt_matches_dense() {
+        let mut rng = Rng::new(2);
+        let w = random_sparse(17, 23, 0.7, &mut rng);
+        let x = Matrix::randn(5, 23, 1.0, &mut rng);
+        let csr = Csr::from_dense(&w);
+        let got = csr.matmul_xt(&x);
+        let want = crate::tensor::matmul_bt(&x, &w);
+        assert!(got.fro_dist(&want) < 1e-4);
+    }
+}

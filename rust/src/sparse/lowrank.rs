@@ -1,0 +1,99 @@
+//! Low-rank factor pairs L = U · Vᵀ, stored factored exactly as the paper
+//! does (Section 2.1) to cut memory.
+
+use crate::tensor::{matmul, Matrix};
+
+/// Low-rank factor pair L = U · Vt (U: out×r, Vt: r×in).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LowRank {
+    pub u: Matrix,  // out × r
+    pub vt: Matrix, // r × in
+}
+
+impl LowRank {
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        matmul(&self.u, &self.vt)
+    }
+
+    /// Parameter count of the factorization.
+    pub fn params(&self) -> usize {
+        self.u.rows * self.u.cols + self.vt.rows * self.vt.cols
+    }
+
+    /// y += U (Vt x): two skinny matvecs, O((out+in)·r).
+    pub fn apply_accumulate(&self, x: &[f32], y: &mut [f32]) {
+        let r = self.rank();
+        let mut t = vec![0.0f32; r];
+        for i in 0..r {
+            let vrow = self.vt.row(i);
+            let mut acc = 0.0f32;
+            for (a, b) in vrow.iter().zip(x) {
+                acc += a * b;
+            }
+            t[i] = acc;
+        }
+        for (row, yv) in y.iter_mut().enumerate() {
+            let urow = self.u.row(row);
+            let mut acc = 0.0f32;
+            for (a, b) in urow.iter().zip(&t) {
+                acc += a * b;
+            }
+            *yv += acc;
+        }
+    }
+
+    /// C += X·(U Vt)ᵀ = (X·Vtᵀ)·Uᵀ — batched form, two dense skinny GEMMs.
+    pub fn apply_batch_accumulate(&self, x: &Matrix, out: &mut Matrix) {
+        // t = X · Vtᵀ : [b × r]
+        let t = crate::tensor::matmul_bt(x, &self.vt);
+        // out += t · Uᵀ : [b × out]
+        let contrib = crate::tensor::matmul_bt(&t, &self.u);
+        out.axpy(1.0, &contrib);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn lowrank_apply_matches_dense() {
+        let mut rng = Rng::new(3);
+        let lr = LowRank {
+            u: Matrix::randn(12, 3, 1.0, &mut rng),
+            vt: Matrix::randn(3, 9, 1.0, &mut rng),
+        };
+        let x: Vec<f32> = (0..9).map(|i| (i as f32).sin()).collect();
+        let mut y = vec![0.0; 12];
+        lr.apply_accumulate(&x, &mut y);
+        let dense = lr.to_dense();
+        let want = crate::tensor::matvec(&dense, &x);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lowrank_batch_matches_single() {
+        let mut rng = Rng::new(4);
+        let lr = LowRank {
+            u: Matrix::randn(8, 2, 1.0, &mut rng),
+            vt: Matrix::randn(2, 6, 1.0, &mut rng),
+        };
+        let x = Matrix::randn(4, 6, 1.0, &mut rng);
+        let mut batch = Matrix::zeros(4, 8);
+        lr.apply_batch_accumulate(&x, &mut batch);
+        for b in 0..4 {
+            let mut y = vec![0.0; 8];
+            lr.apply_accumulate(x.row(b), &mut y);
+            for (a, &bv) in y.iter().zip(batch.row(b)) {
+                assert!((a - bv).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Sparse and structured weight formats for the compressed serving engine,
+//! plus the kernel-dispatch layer that picks between them.
+//!
+//! This module is the DeepSparse substitute (DESIGN.md §3): Table 7's CPU
+//! speedups are reproduced by executing compressed layers through these
+//! kernels instead of dense GEMM. The tree:
+//!
+//! * [`csr`] — scalar compressed-sparse-row baseline (row-at-a-time).
+//! * [`bcsr`] — tiled block-CSR: cache-sized row/column tiles with a
+//!   batch-vectorized `X·Aᵀ` kernel that streams the weight values once per
+//!   batch instead of once per activation row.
+//! * [`nm`] — N:M semi-structured patterns and their packed kernel.
+//! * [`lowrank`] — `U·Vᵀ` factor pairs.
+//! * [`spl`] — the OATS `S + U·Vᵀ` composite, including the fused
+//!   sparse-plus-low-rank kernel.
+//! * [`plan`] — [`KernelPlan`]: picks dense/CSR/BCSR/N:M per layer from
+//!   measured nnz density and shape, and [`PackedLinear`], the pre-packed
+//!   executable form the serving engine runs.
+
+pub mod bcsr;
+pub mod csr;
+pub mod lowrank;
+pub mod nm;
+pub mod plan;
+pub mod spl;
+
+pub use bcsr::Bcsr;
+pub use csr::Csr;
+pub use lowrank::LowRank;
+pub use nm::{NmPacked, NmPattern};
+pub use plan::{KernelChoice, KernelPlan, PackedLinear, PackedSparse};
+pub use spl::SparsePlusLowRank;
+
+/// Cost model used for the N:M / acceleration analyses (Figure 2, DESIGN.md
+/// §5): effective FLOPs + bytes moved for one application of the layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Dense layer cost for a single token.
+pub fn dense_cost(dout: usize, din: usize) -> LayerCost {
+    LayerCost { flops: 2.0 * dout as f64 * din as f64, bytes: 4.0 * (dout * din) as f64 }
+}
+
+/// Sparse+low-rank cost for a single token: CSR nnz MACs (with index
+/// overhead) plus two dense skinny products.
+pub fn spl_cost(nnz: usize, dout: usize, din: usize, rank: usize) -> LayerCost {
+    let lr_flops = 2.0 * rank as f64 * (dout + din) as f64;
+    LayerCost {
+        flops: 2.0 * nnz as f64 + lr_flops,
+        bytes: 8.0 * nnz as f64 + 4.0 * (rank * (dout + din)) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_orders_correctly() {
+        // At 50% unstructured sparsity vs 25% sparse + rank putting same params,
+        // the low-rank variant should do fewer raw bytes per useful FLOP... we
+        // just sanity check monotonicity here.
+        let d = dense_cost(1024, 1024);
+        let s = spl_cost(524_288, 1024, 1024, 0);
+        assert!(s.flops < d.flops);
+        let s2 = spl_cost(262_144, 1024, 1024, 128);
+        assert!(s2.flops < d.flops);
+    }
+}

@@ -1,0 +1,352 @@
+//! N:M semi-structured sparsity: the pattern descriptor (paper §2.2) and a
+//! packed execution format mirroring sparse-tensor-core layouts — `n` value
+//! slots + in-group offsets per group of `m` consecutive columns, giving the
+//! kernel a fixed, branch-free iteration structure.
+
+use crate::tensor::Matrix;
+use crate::util::threadpool::{parallel_for, SendPtr};
+
+/// N:M sparsity pattern descriptor: at most `n` nonzeros per group of `m`
+/// consecutive entries along each row (NVIDIA sparse-tensor-core layout;
+/// paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NmPattern {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmPattern {
+    pub const TWO_FOUR: NmPattern = NmPattern { n: 2, m: 4 };
+    pub const TWO_EIGHT: NmPattern = NmPattern { n: 2, m: 8 };
+
+    /// Check that a dense matrix satisfies the pattern (trailing partial
+    /// groups are allowed up to ceil(n * len/m) nonzeros).
+    pub fn validates(&self, w: &Matrix) -> bool {
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for g in (0..row.len()).step_by(self.m) {
+                let end = (g + self.m).min(row.len());
+                let nnz = row[g..end].iter().filter(|&&v| v != 0.0).count();
+                let cap = if end - g == self.m {
+                    self.n
+                } else {
+                    // partial trailing group: proportional cap, rounded up
+                    (self.n * (end - g)).div_ceil(self.m)
+                };
+                if nnz > cap {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Implied sparsity (fraction zero) of a full pattern.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.n as f64 / self.m as f64
+    }
+
+    /// [`NmPattern::validates`] directly on a CSR matrix — O(nnz + rows ·
+    /// cols/m), no dense materialization. Robust to unsorted per-row column
+    /// indices (a malformed checkpoint must fail validation, not falsely
+    /// pass it).
+    pub fn validates_csr(&self, csr: &crate::sparse::Csr) -> bool {
+        let groups = csr.cols.div_ceil(self.m).max(1);
+        let mut counts = vec![0u32; groups];
+        for r in 0..csr.rows {
+            counts.iter_mut().for_each(|c| *c = 0);
+            let lo = csr.indptr[r] as usize;
+            let hi = csr.indptr[r + 1] as usize;
+            for &c in &csr.indices[lo..hi] {
+                let g = c as usize / self.m;
+                counts[g] += 1;
+                let start = g * self.m;
+                let end = (start + self.m).min(csr.cols);
+                let cap = if end - start == self.m {
+                    self.n
+                } else {
+                    (self.n * (end - start)).div_ceil(self.m)
+                };
+                if counts[g] as usize > cap {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Packed N:M matrix: per (row, group) exactly `n` slots, each a value plus
+/// its offset inside the group. Underfull groups pad with zero-value slots
+/// (offset 0 — the product contributes nothing), so the kernel loop bounds
+/// are compile-time-predictable per matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NmPacked {
+    pub rows: usize,
+    pub cols: usize,
+    pub pattern: NmPattern,
+    groups_per_row: usize,
+    /// `rows * groups_per_row * n` value slots.
+    values: Vec<f32>,
+    /// Same length; offset of each slot inside its group (`< m ≤ 256`).
+    offsets: Vec<u8>,
+    nnz: usize,
+}
+
+impl NmPacked {
+    /// Pack a dense matrix; `None` if it violates the pattern (or the group
+    /// width exceeds the `u8` offset range).
+    pub fn pack(w: &Matrix, pattern: NmPattern) -> Option<NmPacked> {
+        if pattern.m > 256 || pattern.n == 0 || !pattern.validates(w) {
+            return None;
+        }
+        let groups_per_row = w.cols.div_ceil(pattern.m).max(1);
+        let slots = w.rows * groups_per_row * pattern.n;
+        let mut values = vec![0.0f32; slots];
+        let mut offsets = vec![0u8; slots];
+        let mut nnz = 0usize;
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for g in 0..groups_per_row {
+                let base = g * pattern.m;
+                let end = (base + pattern.m).min(w.cols);
+                let slot0 = (r * groups_per_row + g) * pattern.n;
+                let mut k = 0usize;
+                for (off, &v) in row[base..end].iter().enumerate() {
+                    if v != 0.0 {
+                        // A partial trailing group can legally hold up to
+                        // ceil(n·len/m) ≤ n nonzeros, so k < n always.
+                        values[slot0 + k] = v;
+                        offsets[slot0 + k] = off as u8;
+                        k += 1;
+                        nnz += 1;
+                    }
+                }
+            }
+        }
+        let (rows, cols) = (w.rows, w.cols);
+        Some(NmPacked { rows, cols, pattern, groups_per_row, values, offsets, nnz })
+    }
+
+    /// Stored nonzero count (zero-padding slots excluded).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Portable CSR view — O(nnz), no dense temporary. Groups and in-group
+    /// offsets are stored ascending, so indices come out ascending.
+    pub fn to_csr(&self) -> crate::sparse::Csr {
+        let n = self.pattern.n;
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::with_capacity(self.nnz);
+        let mut values = Vec::with_capacity(self.nnz);
+        indptr.push(0u32);
+        for r in 0..self.rows {
+            for g in 0..self.groups_per_row {
+                let base = (g * self.pattern.m) as u32;
+                let slot0 = (r * self.groups_per_row + g) * n;
+                for k in 0..n {
+                    let v = self.values[slot0 + k];
+                    if v != 0.0 {
+                        indices.push(base + self.offsets[slot0 + k] as u32);
+                        values.push(v);
+                    }
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        crate::sparse::Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let n = self.pattern.n;
+        for r in 0..self.rows {
+            for g in 0..self.groups_per_row {
+                let base = g * self.pattern.m;
+                let slot0 = (r * self.groups_per_row + g) * n;
+                for k in 0..n {
+                    let v = self.values[slot0 + k];
+                    if v != 0.0 {
+                        m.data[r * self.cols + base + self.offsets[slot0 + k] as usize] = v;
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let n = self.pattern.n;
+        for (r, yv) in y.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for g in 0..self.groups_per_row {
+                let base = g * self.pattern.m;
+                let slot0 = (r * self.groups_per_row + g) * n;
+                for k in 0..n {
+                    acc += self.values[slot0 + k] * x[base + self.offsets[slot0 + k] as usize];
+                }
+            }
+            *yv = acc;
+        }
+    }
+
+    /// C = X · Aᵀ via the transposed-panel trick (see `bcsr`): the inner loop
+    /// is a b-wide axpy per slot.
+    pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols, "nm matmul_xt dim mismatch");
+        let b = x.rows;
+        let xt = x.transpose();
+        let mut out = Matrix::zeros(b, self.rows);
+        let n = self.pattern.n;
+        let threads = if b * self.nnz >= (1 << 20) {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            1
+        };
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let n_out = self.rows;
+        let stripe = 64usize;
+        let stripes = self.rows.div_ceil(stripe);
+        parallel_for(threads, stripes, |s| {
+            let r0 = s * stripe;
+            let r1 = (r0 + stripe).min(self.rows);
+            let mut acc = vec![0.0f32; (r1 - r0) * b];
+            for (lr, r) in (r0..r1).enumerate() {
+                let arow = &mut acc[lr * b..(lr + 1) * b];
+                for g in 0..self.groups_per_row {
+                    let base = g * self.pattern.m;
+                    let slot0 = (r * self.groups_per_row + g) * n;
+                    for k in 0..n {
+                        let v = self.values[slot0 + k];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let xrow = xt.row(base + self.offsets[slot0 + k] as usize);
+                        for (a, &xv) in arow.iter_mut().zip(xrow) {
+                            *a += v * xv;
+                        }
+                    }
+                }
+            }
+            let op = out_ptr;
+            for (lr, r) in (r0..r1).enumerate() {
+                for (bi, &av) in acc[lr * b..(lr + 1) * b].iter().enumerate() {
+                    // SAFETY: stripes own disjoint output columns.
+                    unsafe { *op.0.add(bi * n_out + r) = av };
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::threshold::hard_threshold;
+    use crate::config::SparsityPattern;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    #[test]
+    fn nm_pattern_validation() {
+        // 2:4-valid row
+        let ok = Matrix::from_vec(1, 8, vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0]);
+        assert!(NmPattern::TWO_FOUR.validates(&ok));
+        // violating group
+        let bad = Matrix::from_vec(1, 8, vec![1.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(!NmPattern::TWO_FOUR.validates(&bad));
+    }
+
+    #[test]
+    fn nm_pattern_partial_group() {
+        // 6 cols with 2:4: trailing group of 2 may hold ceil(2*2/4)=1 nonzero.
+        let ok = Matrix::from_vec(1, 6, vec![1.0, 2.0, 0.0, 0.0, 5.0, 0.0]);
+        assert!(NmPattern::TWO_FOUR.validates(&ok));
+        let bad = Matrix::from_vec(1, 6, vec![1.0, 2.0, 0.0, 0.0, 5.0, 6.0]);
+        assert!(!NmPattern::TWO_FOUR.validates(&bad));
+    }
+
+    #[test]
+    fn nm_sparsity_values() {
+        assert!((NmPattern::TWO_FOUR.sparsity() - 0.5).abs() < 1e-12);
+        assert!((NmPattern::TWO_EIGHT.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validates_csr_agrees_with_dense_prop() {
+        check("validates_csr == validates", 30, |g| {
+            let rows = g.usize_range(1, 40);
+            let cols = g.usize_range(1, 60);
+            let pat = *g.choose(&[NmPattern::TWO_FOUR, NmPattern::TWO_EIGHT]);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            // Mix of conforming and violating matrices.
+            let w = if g.bool() {
+                let dense = Matrix::randn(rows, cols, 1.0, &mut rng);
+                hard_threshold(&dense, &dense, 0, SparsityPattern::Nm { n: pat.n, m: pat.m })
+            } else {
+                let mut m = Matrix::randn(rows, cols, 1.0, &mut rng);
+                for v in &mut m.data {
+                    if rng.f64() < 0.5 {
+                        *v = 0.0;
+                    }
+                }
+                m
+            };
+            let csr = crate::sparse::Csr::from_dense(&w);
+            assert_eq!(pat.validates_csr(&csr), pat.validates(&w));
+        });
+    }
+
+    #[test]
+    fn nm_pack_rejects_violations() {
+        let bad = Matrix::from_vec(1, 8, vec![1.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(NmPacked::pack(&bad, NmPattern::TWO_FOUR).is_none());
+    }
+
+    #[test]
+    fn nm_pack_roundtrip_prop() {
+        check("nm pack/to_dense roundtrip", 25, |g| {
+            let rows = g.usize_range(1, 40);
+            let cols = g.usize_range(1, 70);
+            let pat = *g.choose(&[NmPattern::TWO_FOUR, NmPattern::TWO_EIGHT]);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+            let pruned = hard_threshold(&w, &w, 0, SparsityPattern::Nm { n: pat.n, m: pat.m });
+            let packed = NmPacked::pack(&pruned, pat).expect("pruned matrix must validate");
+            assert_eq!(packed.to_dense(), pruned);
+            assert_eq!(packed.nnz(), pruned.nnz());
+            assert_eq!(packed.to_csr(), crate::sparse::Csr::from_dense(&pruned));
+        });
+    }
+
+    #[test]
+    fn nm_kernels_match_dense_prop() {
+        check("nm matvec/matmul_xt == dense", 25, |g| {
+            let rows = g.usize_range(1, 50);
+            let cols = g.usize_range(1, 60);
+            let b = g.usize_range(1, 6);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+            let pruned = hard_threshold(&w, &w, 0, SparsityPattern::Nm { n: 2, m: 4 });
+            let packed = NmPacked::pack(&pruned, NmPattern::TWO_FOUR).unwrap();
+
+            let x = g.vec_normal(cols, 1.0);
+            let mut y = vec![0.0; rows];
+            packed.matvec(&x, &mut y);
+            let want = crate::tensor::matvec(&pruned, &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4);
+            }
+
+            let xb = Matrix::randn(b, cols, 1.0, &mut rng);
+            let got = packed.matmul_xt(&xb);
+            let wantb = crate::tensor::matmul_bt(&xb, &pruned);
+            assert!(got.fro_dist(&wantb) < 1e-3);
+        });
+    }
+}

@@ -1,0 +1,415 @@
+//! The kernel-dispatch layer: picks the execution format for each compressed
+//! layer from its measured nnz density and shape, and owns the pre-packed
+//! executable form ([`PackedLinear`]) the serving engine runs.
+//!
+//! Selection policy (see README "Kernel dispatch" for the rationale):
+//!
+//! 1. **Dense** when density > [`DENSE_DENSITY_CUTOFF`] — index-carrying
+//!    formats pay ≥ 2–8 bytes of index per nonzero, so near-dense layers run
+//!    faster through plain GEMM.
+//! 2. **N:M packed** when the weight exactly satisfies a known N:M pattern
+//!    *and* the slots would be well utilized (≥ [`NM_MIN_UTILIZATION`]) —
+//!    a 90 %-sparse matrix trivially validates 2:4 but would waste most of
+//!    its slots.
+//! 3. **BCSR** when the layer is big enough to tile
+//!    (≥ [`BCSR_MIN_ELEMENTS`] entries) *and* the expected batch is
+//!    ≥ [`BCSR_MIN_BATCH`] — the batched cache-tiled kernel (its edge over
+//!    scalar CSR is amortizing weight streaming across the batch).
+//! 4. **CSR** otherwise (small layers or single-stream decode).
+
+use super::bcsr::Bcsr;
+use super::csr::Csr;
+use super::lowrank::LowRank;
+use super::nm::{NmPacked, NmPattern};
+use super::spl::{fused_matmul, SparsePlusLowRank};
+use crate::tensor::Matrix;
+
+/// Above this density the dense GEMM path wins over index-based formats.
+pub const DENSE_DENSITY_CUTOFF: f64 = 0.7;
+/// Minimum `density / pattern_density` for the N:M packed format (slot
+/// utilization; below this CSR/BCSR carry fewer wasted slots).
+pub const NM_MIN_UTILIZATION: f64 = 0.7;
+/// Minimum rows·cols for BCSR — smaller layers stay CSR.
+pub const BCSR_MIN_ELEMENTS: usize = 1 << 14;
+/// Minimum expected batch for BCSR — its win over scalar CSR is amortizing
+/// weight streaming over the batch; single-stream decode keeps CSR.
+pub const BCSR_MIN_BATCH: usize = 2;
+
+/// N:M patterns the planner probes, tightest (sparsest) first.
+const NM_CANDIDATES: [NmPattern; 2] = [NmPattern::TWO_EIGHT, NmPattern::TWO_FOUR];
+
+/// Which kernel family a layer executes through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    Dense,
+    Csr,
+    Bcsr,
+    Nm { n: usize, m: usize },
+}
+
+impl KernelChoice {
+    pub fn name(&self) -> String {
+        match self {
+            KernelChoice::Dense => "dense".into(),
+            KernelChoice::Csr => "csr".into(),
+            KernelChoice::Bcsr => "bcsr".into(),
+            KernelChoice::Nm { n, m } => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// A per-layer execution plan, derived at load/pack time.
+#[derive(Clone, Debug)]
+pub struct KernelPlan {
+    pub choice: KernelChoice,
+    /// Measured nnz density of the sparse term.
+    pub density: f64,
+    pub rows: usize,
+    pub cols: usize,
+    /// Expected batch size the plan was made for (1 = decode-only).
+    pub batch_hint: usize,
+}
+
+impl KernelPlan {
+    /// Decide a format from measured shape + density (+ optional exact N:M
+    /// structure detected by the caller).
+    pub fn choose(
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        nm: Option<NmPattern>,
+        batch_hint: usize,
+    ) -> KernelPlan {
+        let elems = (rows * cols).max(1);
+        let density = nnz as f64 / elems as f64;
+        let choice = if density > DENSE_DENSITY_CUTOFF {
+            KernelChoice::Dense
+        } else if let Some(p) = nm.filter(|p| {
+            let pattern_density = p.n as f64 / p.m as f64;
+            density / pattern_density >= NM_MIN_UTILIZATION
+        }) {
+            KernelChoice::Nm { n: p.n, m: p.m }
+        } else if elems >= BCSR_MIN_ELEMENTS && batch_hint >= BCSR_MIN_BATCH {
+            KernelChoice::Bcsr
+        } else {
+            KernelChoice::Csr
+        };
+        KernelPlan { choice, density, rows, cols, batch_hint }
+    }
+
+    /// One-line human-readable summary (serving startup logs).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}x{} density {:.2} batch {} -> {}",
+            self.rows,
+            self.cols,
+            self.density,
+            self.batch_hint,
+            self.choice.name()
+        )
+    }
+}
+
+/// Probe a dense view for an exactly-satisfied, well-utilized N:M pattern.
+fn detect_nm(w: &Matrix, nnz: usize) -> Option<NmPattern> {
+    let density = nnz as f64 / (w.rows * w.cols).max(1) as f64;
+    NM_CANDIDATES
+        .iter()
+        .copied()
+        .find(|p| density / (p.n as f64 / p.m as f64) >= NM_MIN_UTILIZATION && p.validates(w))
+}
+
+/// [`detect_nm`] on CSR structure: the cheap density gate runs first, and
+/// the full scan is `validates_csr` (O(nnz), no dense temporary).
+fn detect_nm_csr(csr: &Csr) -> Option<NmPattern> {
+    let density = csr.nnz() as f64 / (csr.rows * csr.cols).max(1) as f64;
+    NM_CANDIDATES.iter().copied().find(|p| {
+        density / (p.n as f64 / p.m as f64) >= NM_MIN_UTILIZATION && p.validates_csr(csr)
+    })
+}
+
+/// The packed sparse term, in whichever format the plan selected.
+#[derive(Clone, Debug)]
+pub enum PackedSparse {
+    Dense(Matrix),
+    Csr(Csr),
+    Bcsr(Bcsr),
+    Nm(NmPacked),
+}
+
+/// A linear layer packed for execution: the planned sparse-term format plus
+/// the (optional) low-rank term. This is what compressed checkpoints load
+/// into and what the serving engine's batched decode runs.
+#[derive(Clone, Debug)]
+pub struct PackedLinear {
+    pub plan: KernelPlan,
+    sparse: PackedSparse,
+    low_rank: Option<LowRank>,
+}
+
+impl PackedLinear {
+    /// Pack an OATS sparse-plus-low-rank layer.
+    pub fn from_spl(spl: &SparsePlusLowRank, batch_hint: usize) -> PackedLinear {
+        Self::from_csr_parts(&spl.sparse, spl.low_rank.clone(), batch_hint)
+    }
+
+    /// Pack a sparse-only layer (Wanda/SparseGPT/magnitude outputs).
+    pub fn from_csr(csr: &Csr, batch_hint: usize) -> PackedLinear {
+        Self::from_csr_parts(csr, None, batch_hint)
+    }
+
+    fn from_csr_parts(csr: &Csr, low_rank: Option<LowRank>, batch_hint: usize) -> PackedLinear {
+        // Plan and pack straight from the CSR structure: the density-gated
+        // N:M probe and the BCSR re-tiling are O(nnz); a dense temporary is
+        // materialized only on the (rare) Dense / N:M plans that need one.
+        let nm = detect_nm_csr(csr);
+        let mut plan = KernelPlan::choose(csr.rows, csr.cols, csr.nnz(), nm, batch_hint);
+        let sparse = match plan.choice {
+            KernelChoice::Dense => PackedSparse::Dense(csr.to_dense()),
+            KernelChoice::Csr => PackedSparse::Csr(csr.clone()),
+            KernelChoice::Bcsr => PackedSparse::Bcsr(Bcsr::from_csr(csr)),
+            KernelChoice::Nm { n, m } => {
+                match NmPacked::pack(&csr.to_dense(), NmPattern { n, m }) {
+                    Some(packed) => PackedSparse::Nm(packed),
+                    // Defensive: probe and packer disagreeing means a
+                    // malformed checkpoint — degrade to the always-correct
+                    // CSR form rather than panicking in the load path.
+                    None => {
+                        plan.choice = KernelChoice::Csr;
+                        PackedSparse::Csr(csr.clone())
+                    }
+                }
+            }
+        };
+        PackedLinear { plan, sparse, low_rank }
+    }
+
+    /// Pack from a dense weight, sparsifying if the zero structure warrants.
+    pub fn from_dense(w: &Matrix, batch_hint: usize) -> PackedLinear {
+        let nnz = w.nnz();
+        let nm = detect_nm(w, nnz);
+        let plan = KernelPlan::choose(w.rows, w.cols, nnz, nm, batch_hint);
+        let sparse = match plan.choice {
+            KernelChoice::Dense => PackedSparse::Dense(w.clone()),
+            KernelChoice::Csr => PackedSparse::Csr(Csr::from_dense(w)),
+            KernelChoice::Bcsr => PackedSparse::Bcsr(Bcsr::from_dense(w)),
+            KernelChoice::Nm { n, m } => {
+                let packed = NmPacked::pack(w, NmPattern { n, m })
+                    .expect("detect_nm validated the pattern");
+                PackedSparse::Nm(packed)
+            }
+        };
+        PackedLinear { plan, sparse, low_rank: None }
+    }
+
+    pub fn sparse(&self) -> &PackedSparse {
+        &self.sparse
+    }
+
+    pub fn low_rank(&self) -> Option<&LowRank> {
+        self.low_rank.as_ref()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.plan.rows, self.plan.cols)
+    }
+
+    /// Nonzero-parameter count (same accounting as the unpacked layer —
+    /// a Dense-planned sparse layer still counts only its nonzeros).
+    pub fn param_count(&self) -> usize {
+        let sparse = match &self.sparse {
+            PackedSparse::Dense(w) => w.nnz(),
+            PackedSparse::Csr(c) => c.nnz(),
+            PackedSparse::Bcsr(b) => b.nnz(),
+            PackedSparse::Nm(n) => n.nnz(),
+        };
+        sparse + self.low_rank.as_ref().map_or(0, |lr| lr.params())
+    }
+
+    /// Dense reconstruction (evaluation / re-serialization).
+    pub fn to_dense(&self) -> Matrix {
+        let mut d = match &self.sparse {
+            PackedSparse::Dense(w) => w.clone(),
+            PackedSparse::Csr(c) => c.to_dense(),
+            PackedSparse::Bcsr(b) => b.to_dense(),
+            PackedSparse::Nm(n) => n.to_dense(),
+        };
+        if let Some(lr) = &self.low_rank {
+            d.axpy(1.0, &lr.to_dense());
+        }
+        d
+    }
+
+    /// Batched apply `C = X·Wᵀ` through the planned kernel.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match &self.sparse {
+            PackedSparse::Bcsr(b) => fused_matmul(b, self.low_rank.as_ref(), x),
+            PackedSparse::Dense(w) => {
+                let mut out = crate::tensor::matmul_bt(x, w);
+                if let Some(lr) = &self.low_rank {
+                    lr.apply_batch_accumulate(x, &mut out);
+                }
+                out
+            }
+            PackedSparse::Csr(c) => {
+                let mut out = c.matmul_xt(x);
+                if let Some(lr) = &self.low_rank {
+                    lr.apply_batch_accumulate(x, &mut out);
+                }
+                out
+            }
+            PackedSparse::Nm(nm) => {
+                let mut out = nm.matmul_xt(x);
+                if let Some(lr) = &self.low_rank {
+                    lr.apply_batch_accumulate(x, &mut out);
+                }
+                out
+            }
+        }
+    }
+
+    /// Single-row apply for the decode hot path.
+    pub fn forward_vec(&self, x: &[f32], y: &mut [f32]) {
+        match &self.sparse {
+            PackedSparse::Dense(w) => {
+                for (r, out) in y.iter_mut().enumerate() {
+                    *out = crate::tensor::dot(w.row(r), x);
+                }
+            }
+            PackedSparse::Csr(c) => c.matvec(x, y),
+            PackedSparse::Bcsr(b) => b.matvec(x, y),
+            PackedSparse::Nm(nm) => nm.matvec(x, y),
+        }
+        if let Some(lr) = &self.low_rank {
+            lr.apply_accumulate(x, y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsityPattern;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, random_sparse};
+
+    #[test]
+    fn plan_picks_dense_for_dense_layers() {
+        let p = KernelPlan::choose(128, 128, 128 * 128, None, 8);
+        assert_eq!(p.choice, KernelChoice::Dense);
+        let p = KernelPlan::choose(128, 128, (128 * 128 * 9) / 10, None, 8);
+        assert_eq!(p.choice, KernelChoice::Dense);
+    }
+
+    #[test]
+    fn plan_picks_bcsr_for_large_sparse() {
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, None, 8);
+        assert_eq!(p.choice, KernelChoice::Bcsr);
+        assert!((p.density - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_picks_csr_for_small_layers() {
+        let p = KernelPlan::choose(32, 32, 300, None, 8);
+        assert_eq!(p.choice, KernelChoice::Csr);
+    }
+
+    #[test]
+    fn plan_picks_csr_for_single_stream_decode() {
+        // Large + sparse, but batch 1: BCSR's batch amortization is gone.
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, None, 1);
+        assert_eq!(p.choice, KernelChoice::Csr);
+        assert_eq!(p.batch_hint, 1);
+    }
+
+    #[test]
+    fn plan_prefers_nm_when_tight() {
+        // Exactly 2:4-pruned layer: density 0.5, utilization 1.0.
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, Some(NmPattern::TWO_FOUR), 8);
+        assert_eq!(p.choice, KernelChoice::Nm { n: 2, m: 4 });
+        // 90 % sparse would waste slots: not N:M even though it validates.
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 10, Some(NmPattern::TWO_FOUR), 8);
+        assert_eq!(p.choice, KernelChoice::Bcsr);
+    }
+
+    #[test]
+    fn packed_from_nm_pruned_selects_nm_kernel() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(64, 256, 1.0, &mut rng);
+        let pruned = crate::compress::threshold::hard_threshold(
+            &w,
+            &w,
+            0,
+            SparsityPattern::Nm { n: 2, m: 4 },
+        );
+        let packed = PackedLinear::from_csr(&Csr::from_dense(&pruned), 8);
+        assert_eq!(packed.plan.choice, KernelChoice::Nm { n: 2, m: 4 });
+        assert!(packed.to_dense().fro_dist(&pruned) < 1e-12);
+    }
+
+    #[test]
+    fn packed_forward_matches_unpacked_prop() {
+        check("packed forward == spl apply_batch", 15, |g| {
+            let rows = g.usize_range(2, 90);
+            let cols = g.usize_range(2, 90);
+            let b = g.usize_range(1, 9);
+            let r = g.usize_range(1, 6);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let s = random_sparse(rows, cols, 0.6, &mut rng);
+            let spl = SparsePlusLowRank {
+                sparse: Csr::from_dense(&s),
+                low_rank: Some(LowRank {
+                    u: Matrix::randn(rows, r, 1.0, &mut rng),
+                    vt: Matrix::randn(r, cols, 1.0, &mut rng),
+                }),
+            };
+            let packed = PackedLinear::from_spl(&spl, b);
+            let x = Matrix::randn(b, cols, 1.0, &mut rng);
+            let got = packed.forward(&x);
+            let want = spl.apply_batch(&x);
+            assert!(got.fro_dist(&want) < 1e-3, "dist {}", got.fro_dist(&want));
+
+            let mut y1 = vec![0.0; rows];
+            let mut y2 = vec![0.0; rows];
+            packed.forward_vec(x.row(0), &mut y1);
+            spl.apply(x.row(0), &mut y2);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn packed_param_count_matches_logical() {
+        let mut rng = Rng::new(8);
+        let s = random_sparse(200, 200, 0.65, &mut rng);
+        let spl = SparsePlusLowRank {
+            sparse: Csr::from_dense(&s),
+            low_rank: Some(LowRank {
+                u: Matrix::randn(200, 12, 1.0, &mut rng),
+                vt: Matrix::randn(12, 200, 1.0, &mut rng),
+            }),
+        };
+        let packed = PackedLinear::from_spl(&spl, 8);
+        assert_eq!(packed.plan.choice, KernelChoice::Bcsr);
+        assert_eq!(packed.param_count(), spl.param_count());
+        assert_eq!(packed.shape(), (200, 200));
+    }
+
+    #[test]
+    fn packed_from_dense_keeps_dense() {
+        let mut rng = Rng::new(9);
+        let w = Matrix::randn(40, 40, 1.0, &mut rng);
+        let packed = PackedLinear::from_dense(&w, 4);
+        assert_eq!(packed.plan.choice, KernelChoice::Dense);
+        let x = Matrix::randn(2, 40, 1.0, &mut rng);
+        let want = crate::tensor::matmul_bt(&x, &w);
+        assert!(packed.forward(&x).fro_dist(&want) < 1e-5);
+    }
+
+    #[test]
+    fn plan_describe_mentions_choice() {
+        let p = KernelPlan::choose(256, 256, 100, None, 8);
+        assert!(p.describe().contains("csr") || p.describe().contains("bcsr"));
+    }
+}

@@ -1,0 +1,174 @@
+//! The OATS compressed layer: W ≈ S + L with S sparse and L = U·Vᵀ low
+//! rank, and the fused kernel that evaluates both terms in one pass over
+//! the output.
+
+use super::bcsr::Bcsr;
+use super::csr::Csr;
+use super::lowrank::LowRank;
+use crate::tensor::Matrix;
+
+/// The OATS compressed layer: W ≈ S + L with S sparse (CSR) and L low-rank.
+#[derive(Clone, Debug)]
+pub struct SparsePlusLowRank {
+    pub sparse: Csr,
+    pub low_rank: Option<LowRank>,
+}
+
+impl SparsePlusLowRank {
+    /// Dense reconstruction S + U·Vt.
+    pub fn to_dense(&self) -> Matrix {
+        let mut d = self.sparse.to_dense();
+        if let Some(lr) = &self.low_rank {
+            d.axpy(1.0, &lr.to_dense());
+        }
+        d
+    }
+
+    /// Nonzero-parameter count (paper's compression accounting, Eq. ρ):
+    /// k + r(dout + din).
+    pub fn param_count(&self) -> usize {
+        self.sparse.nnz() + self.low_rank.as_ref().map_or(0, |lr| lr.params())
+    }
+
+    /// Achieved compression rate vs the dense layer.
+    pub fn compression_rate(&self) -> f64 {
+        1.0 - self.param_count() as f64 / (self.sparse.rows * self.sparse.cols) as f64
+    }
+
+    /// y = (S + UVt) x — the fused serving kernel (single vector).
+    pub fn apply(&self, x: &[f32], y: &mut [f32]) {
+        self.sparse.matvec(x, y);
+        if let Some(lr) = &self.low_rank {
+            lr.apply_accumulate(x, y);
+        }
+    }
+
+    /// C = X (S + UVt)ᵀ — batched serving kernel (scalar CSR + two GEMMs).
+    pub fn apply_batch(&self, x: &Matrix) -> Matrix {
+        let mut out = self.sparse.matmul_xt(x);
+        if let Some(lr) = &self.low_rank {
+            lr.apply_batch_accumulate(x, &mut out);
+        }
+        out
+    }
+
+    /// C = X (S + UVt)ᵀ through the tiled fused kernel: S is packed to BCSR
+    /// and each output tile receives its sparse and low-rank contributions in
+    /// one accumulator pass (one write per output element).
+    ///
+    /// This convenience packs S on every call; the serving engine keeps the
+    /// packing alive across calls via [`crate::sparse::PackedLinear`].
+    pub fn matmul_fused(&self, x: &Matrix) -> Matrix {
+        let bcsr = Bcsr::from_csr(&self.sparse);
+        fused_matmul(&bcsr, self.low_rank.as_ref(), x)
+    }
+}
+
+/// Fused sparse-plus-low-rank product `C = X·Sᵀ + X·(U·Vt)ᵀ` over a
+/// pre-packed BCSR sparse term.
+///
+/// The activation block is transposed once (Xᵀ [in × b]); the rank-space
+/// projection `T = Vt·Xᵀ` [r × b] is computed once; then a single pass over
+/// the row tiles of S accumulates `S·Xᵀ` and `U·T` together — each
+/// activation row streams through both terms exactly once.
+pub fn fused_matmul(sparse: &Bcsr, low_rank: Option<&LowRank>, x: &Matrix) -> Matrix {
+    assert_eq!(x.cols, sparse.cols, "fused_matmul dim mismatch");
+    let xt = x.transpose();
+    let mut out = Matrix::zeros(x.rows, sparse.rows);
+    match low_rank {
+        Some(lr) => {
+            // T = Vt · Xᵀ : [r × b] — the Σ·Vᵀx rank-space projection.
+            let t = crate::tensor::matmul(&lr.vt, &xt);
+            sparse.fused_xt(&xt, Some((&lr.u, &t)), &mut out);
+        }
+        None => sparse.fused_xt(&xt, None, &mut out),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, random_sparse};
+
+    fn random_spl(rows: usize, cols: usize, r: usize, rng: &mut Rng) -> SparsePlusLowRank {
+        let s = random_sparse(rows, cols, 0.7, rng);
+        SparsePlusLowRank {
+            sparse: Csr::from_dense(&s),
+            low_rank: Some(LowRank {
+                u: Matrix::randn(rows, r, 1.0, rng),
+                vt: Matrix::randn(r, cols, 1.0, rng),
+            }),
+        }
+    }
+
+    #[test]
+    fn spl_apply_matches_dense_reconstruction_prop() {
+        check("spl apply == dense(S+L)·x", 20, |g| {
+            let rows = g.usize_range(2, 24);
+            let cols = g.usize_range(2, 24);
+            let r = g.usize_range(1, cols.min(rows).min(4) + 1);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let s = random_sparse(rows, cols, 0.8, &mut rng);
+            let spl = SparsePlusLowRank {
+                sparse: Csr::from_dense(&s),
+                low_rank: Some(LowRank {
+                    u: Matrix::randn(rows, r, 1.0, &mut rng),
+                    vt: Matrix::randn(r, cols, 1.0, &mut rng),
+                }),
+            };
+            let x = g.vec_normal(cols, 1.0);
+            let mut y = vec![0.0; rows];
+            spl.apply(&x, &mut y);
+            let want = crate::tensor::matvec(&spl.to_dense(), &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn spl_fused_matches_apply_batch_prop() {
+        check("fused == apply_batch", 20, |g| {
+            let rows = g.usize_range(2, 100);
+            let cols = g.usize_range(2, 100);
+            let b = g.usize_range(1, 9);
+            let r = g.usize_range(1, 8);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let spl = random_spl(rows, cols, r, &mut rng);
+            let x = Matrix::randn(b, cols, 1.0, &mut rng);
+            let fused = spl.matmul_fused(&x);
+            let unfused = spl.apply_batch(&x);
+            assert!(fused.fro_dist(&unfused) < 1e-3, "dist {}", fused.fro_dist(&unfused));
+        });
+    }
+
+    #[test]
+    fn spl_fused_without_low_rank() {
+        let mut rng = Rng::new(6);
+        let s = random_sparse(40, 30, 0.6, &mut rng);
+        let spl = SparsePlusLowRank { sparse: Csr::from_dense(&s), low_rank: None };
+        let x = Matrix::randn(3, 30, 1.0, &mut rng);
+        let fused = spl.matmul_fused(&x);
+        let want = crate::tensor::matmul_bt(&x, &s);
+        assert!(fused.fro_dist(&want) < 1e-4);
+    }
+
+    #[test]
+    fn spl_param_count_and_rate() {
+        let mut rng = Rng::new(5);
+        let s = random_sparse(10, 10, 0.9, &mut rng);
+        let nnz = s.nnz();
+        let spl = SparsePlusLowRank {
+            sparse: Csr::from_dense(&s),
+            low_rank: Some(LowRank {
+                u: Matrix::randn(10, 2, 1.0, &mut rng),
+                vt: Matrix::randn(2, 10, 1.0, &mut rng),
+            }),
+        };
+        assert_eq!(spl.param_count(), nnz + 2 * 20);
+        let rate = spl.compression_rate();
+        assert!((rate - (1.0 - (nnz as f64 + 40.0) / 100.0)).abs() < 1e-12);
+    }
+}

@@ -7,7 +7,7 @@
 //! (batch, seq, dim) is handled by the callers as `rows = batch*seq`.
 
 use crate::util::prng::Rng;
-use crate::util::threadpool::parallel_for;
+use crate::util::threadpool::{parallel_for, SendPtr};
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, Debug, PartialEq)]
@@ -169,11 +169,6 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     });
     c
 }
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Inner kernel: C[m×n] += A[m×k] · B[k×n] with k-panel blocking and an
 /// unrolled 4-wide accumulation over B rows (i-k-j loop order keeps B

@@ -16,6 +16,20 @@
 //! reported.
 
 use super::prng::Rng;
+use crate::tensor::Matrix;
+
+/// N(0,1) matrix with ~`sparsity` fraction of entries zeroed — the shared
+/// generator for the kernel tests and benches. Convention: the third
+/// argument is the ZERO fraction (not the keep fraction).
+pub fn random_sparse(rows: usize, cols: usize, sparsity: f64, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::randn(rows, cols, 1.0, rng);
+    for v in &mut m.data {
+        if rng.f64() < sparsity {
+            *v = 0.0;
+        }
+    }
+    m
+}
 
 /// Value generator handed to each property case.
 pub struct Gen {

@@ -77,6 +77,14 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Raw-pointer wrapper for disjoint-write parallelism with [`parallel_for`]:
+/// the caller guarantees each worker writes a disjoint address set. Shared
+/// by the GEMM and sparse kernels so the unsafe surface lives in one place.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Run `f(i)` for `i in 0..n` on transient scoped threads, collecting no
 /// output. Unlike [`ThreadPool::scope_for`] this allows borrowing from the
 /// caller's stack (used by the blocked GEMM hot path).

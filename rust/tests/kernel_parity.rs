@@ -1,0 +1,196 @@
+//! Kernel-parity contract: every sparse execution format (CSR, tiled BCSR,
+//! packed N:M) and the fused sparse-plus-low-rank path must agree with the
+//! dense reference to within 1e-4, across random shapes, sparsities, tile
+//! geometries, batch sizes, and ranks. This is the gate that lets the
+//! dispatch layer pick formats freely without touching model outputs.
+
+use oats::compress::threshold::hard_threshold;
+use oats::config::SparsityPattern;
+use oats::sparse::{
+    Bcsr, Csr, KernelChoice, LowRank, NmPacked, NmPattern, PackedLinear, SparsePlusLowRank,
+};
+use oats::tensor::{matmul_bt, matvec, Matrix};
+use oats::util::prng::Rng;
+use oats::util::prop::{check, random_sparse};
+
+const TOL: f32 = 1e-4;
+
+/// Per-element |a-b| ≤ TOL·max(1, |a|): absolute near zero, relative for
+/// large magnitudes (accumulation order differs between kernels).
+fn assert_close(label: &str, got: &Matrix, want: &Matrix) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{label}: shape");
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        let tol = TOL * w.abs().max(1.0);
+        assert!(
+            (g - w).abs() <= tol,
+            "{label}: element {i} diverges: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn dense_csr_bcsr_batched_parity_prop() {
+    check("dense == csr == bcsr (batched)", 40, |g| {
+        let rows = g.usize_range(1, 180);
+        let cols = g.usize_range(1, 180);
+        let batch = g.usize_range(1, 12);
+        let sparsity = g.f64_unit();
+        let rt = *g.choose(&[1usize, 7, 64, 256]);
+        let ct = *g.choose(&[8usize, 100, 512]);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 24) as u64);
+        let w = random_sparse(rows, cols, sparsity, &mut rng);
+        let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+
+        let want = matmul_bt(&x, &w);
+        assert_close("csr", &Csr::from_dense(&w).matmul_xt(&x), &want);
+        let bcsr = Bcsr::from_dense_tiled(&w, rt, ct);
+        assert_close("bcsr", &bcsr.matmul_xt(&x), &want);
+    });
+}
+
+#[test]
+fn dense_csr_bcsr_matvec_parity_prop() {
+    check("dense == csr == bcsr (matvec)", 40, |g| {
+        let rows = g.usize_range(1, 200);
+        let cols = g.usize_range(1, 200);
+        let sparsity = g.f64_unit();
+        let mut rng = Rng::new(g.usize_range(0, 1 << 24) as u64);
+        let w = random_sparse(rows, cols, sparsity, &mut rng);
+        let x = g.vec_normal(cols, 1.0);
+        let want = matvec(&w, &x);
+
+        let mut y = vec![0.0f32; rows];
+        Csr::from_dense(&w).matvec(&x, &mut y);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() <= TOL * b.abs().max(1.0), "csr matvec: {a} vs {b}");
+        }
+        Bcsr::from_dense(&w).matvec(&x, &mut y);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() <= TOL * b.abs().max(1.0), "bcsr matvec: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn fused_spl_parity_prop() {
+    check("fused spl == dense(S + UVt)", 40, |g| {
+        let rows = g.usize_range(2, 160);
+        let cols = g.usize_range(2, 160);
+        let batch = g.usize_range(1, 10);
+        let rank = g.usize_range(1, 17);
+        let sparsity = 0.3 + 0.65 * g.f64_unit();
+        let mut rng = Rng::new(g.usize_range(0, 1 << 24) as u64);
+        let s = random_sparse(rows, cols, sparsity, &mut rng);
+        // Scaled-down factors keep |W| O(1) so the shared tolerance is fair.
+        let spl = SparsePlusLowRank {
+            sparse: Csr::from_dense(&s),
+            low_rank: Some(LowRank {
+                u: Matrix::randn(rows, rank, 0.3, &mut rng),
+                vt: Matrix::randn(rank, cols, 0.3, &mut rng),
+            }),
+        };
+        let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+        let want = matmul_bt(&x, &spl.to_dense());
+        assert_close("spl fused", &spl.matmul_fused(&x), &want);
+        assert_close("spl unfused", &spl.apply_batch(&x), &want);
+    });
+}
+
+#[test]
+fn nm_packed_parity_prop() {
+    check("nm packed == dense", 30, |g| {
+        let rows = g.usize_range(1, 80);
+        let cols = g.usize_range(1, 120);
+        let batch = g.usize_range(1, 8);
+        let pat = *g.choose(&[NmPattern::TWO_FOUR, NmPattern::TWO_EIGHT]);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 24) as u64);
+        let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let pruned = hard_threshold(&w, &w, 0, SparsityPattern::Nm { n: pat.n, m: pat.m });
+        let packed = NmPacked::pack(&pruned, pat).expect("pruned layer satisfies pattern");
+        let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+        assert_close("nm matmul_xt", &packed.matmul_xt(&x), &matmul_bt(&x, &pruned));
+
+        let xv = g.vec_normal(cols, 1.0);
+        let mut y = vec![0.0f32; rows];
+        packed.matvec(&xv, &mut y);
+        for (a, b) in y.iter().zip(&matvec(&pruned, &xv)) {
+            assert!((a - b).abs() <= TOL * b.abs().max(1.0), "nm matvec: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn packed_linear_parity_across_all_plans_prop() {
+    // Whatever format the dispatch layer picks, the packed layer must match
+    // the portable representation.
+    check("packed linear == unpacked, any plan", 30, |g| {
+        let rows = g.usize_range(2, 220);
+        let cols = g.usize_range(2, 220);
+        let batch = g.usize_range(1, 10);
+        let sparsity = g.f64_unit();
+        let with_lr = g.bool();
+        let rank = g.usize_range(1, 9);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 24) as u64);
+        let s = random_sparse(rows, cols, sparsity, &mut rng);
+        let spl = SparsePlusLowRank {
+            sparse: Csr::from_dense(&s),
+            low_rank: with_lr.then(|| LowRank {
+                u: Matrix::randn(rows, rank, 0.3, &mut rng),
+                vt: Matrix::randn(rank, cols, 0.3, &mut rng),
+            }),
+        };
+        let packed = PackedLinear::from_spl(&spl, batch);
+        let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+        let want = matmul_bt(&x, &spl.to_dense());
+        let label = format!("plan {}", packed.plan.choice.name());
+        assert_close(&label, &packed.forward(&x), &want);
+
+        let mut y = vec![0.0f32; rows];
+        packed.forward_vec(x.row(0), &mut y);
+        let mut want_v = vec![0.0f32; rows];
+        spl.apply(x.row(0), &mut want_v);
+        for (a, b) in y.iter().zip(&want_v) {
+            assert!((a - b).abs() <= TOL * b.abs().max(1.0), "{label} vec: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn dispatch_covers_every_kernel_family() {
+    // Construct layers that should hit each plan branch, and verify parity
+    // plus the expected choice.
+    let mut rng = Rng::new(77);
+    let b = 8;
+
+    // Dense: 95% density.
+    let w = random_sparse(200, 200, 0.05, &mut rng);
+    let p = PackedLinear::from_csr(&Csr::from_dense(&w), b);
+    assert_eq!(p.plan.choice, KernelChoice::Dense);
+
+    // CSR: small sparse layer.
+    let w = random_sparse(32, 32, 0.5, &mut rng);
+    let p = PackedLinear::from_csr(&Csr::from_dense(&w), b);
+    assert_eq!(p.plan.choice, KernelChoice::Csr);
+
+    // BCSR: large unstructured-sparse layer.
+    let w = random_sparse(256, 256, 0.5, &mut rng);
+    let p = PackedLinear::from_csr(&Csr::from_dense(&w), b);
+    assert_eq!(p.plan.choice, KernelChoice::Bcsr);
+
+    // N:M: exactly 2:4-pruned layer.
+    let w = Matrix::randn(128, 256, 1.0, &mut rng);
+    let pruned = hard_threshold(&w, &w, 0, SparsityPattern::Nm { n: 2, m: 4 });
+    let p = PackedLinear::from_csr(&Csr::from_dense(&pruned), b);
+    assert_eq!(p.plan.choice, KernelChoice::Nm { n: 2, m: 4 });
+
+    // All four parities on one shared input.
+    for (label, w) in [
+        ("dense-plan", random_sparse(200, 200, 0.05, &mut rng)),
+        ("csr-plan", random_sparse(32, 32, 0.5, &mut rng)),
+        ("bcsr-plan", random_sparse(256, 256, 0.5, &mut rng)),
+    ] {
+        let p = PackedLinear::from_csr(&Csr::from_dense(&w), b);
+        let x = Matrix::randn(b, w.cols, 1.0, &mut rng);
+        assert_close(label, &p.forward(&x), &matmul_bt(&x, &w));
+    }
+}

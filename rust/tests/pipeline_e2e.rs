@@ -112,6 +112,7 @@ fn serving_engine_runs_compressed_model() {
             max_wait: std::time::Duration::from_millis(1),
             gen_tokens: 4,
             workers: 2,
+            prepack: true,
         },
         (0..12).map(|i| vec![i % 16, 2, 3]).collect(),
     );

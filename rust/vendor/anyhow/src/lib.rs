@@ -1,0 +1,261 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The repository builds fully offline (no registry access), so instead of
+//! the crates.io `anyhow` this shim provides the surface the codebase uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics match upstream where it matters:
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole cause chain joined by `": "` (what `main.rs` relies on
+//!   for one-line error reports).
+//! * `Debug` (what `.unwrap()` shows) prints the message followed by a
+//!   `Caused by:` list.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its source chain.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` — the crate-wide error-carrying result.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error value. `chain[0]` is the outermost context, the
+/// last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    /// Sealed marker for error types `Context` accepts on the `Err` side:
+    /// std errors and `anyhow::Error` itself. (Same sealed-trait trick as
+    /// upstream; coherence holds because `Error` is not a `std::error::Error`.)
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> crate::Error;
+    }
+
+    impl IntoAnyhow for crate::Error {
+        fn into_anyhow(self) -> crate::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, converting the failure into [`Error`].
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoAnyhow> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_layers_and_alternate_display() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        assert_eq!(Some(7u8).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u8, std::io::Error> = Ok(1);
+        let v = ok.with_context(|| -> String { panic!("must not evaluate") }).unwrap();
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too large: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too large: 12");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+
+    #[test]
+    fn context_on_anyhow_error_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let causes: Vec<&str> = e.chain().collect();
+        assert_eq!(causes, vec!["outer", "inner"]);
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let r: Result<()> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+}

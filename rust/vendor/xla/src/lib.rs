@@ -1,0 +1,239 @@
+//! Offline stub of the `xla` (PJRT) crate.
+//!
+//! The serving/compression stack never needs PJRT — only training and the
+//! AOT-artifact parity tests do — so environments without the real XLA
+//! runtime build against this stub: the API surface `runtime/` and `train.rs`
+//! consume compiles unchanged, [`Literal`] host-side plumbing is fully
+//! functional, and anything that would actually execute on a device
+//! ([`PjRtClient::cpu`], [`PjRtLoadedExecutable::execute`]) returns
+//! [`Error::BackendUnavailable`]. Artifact-dependent tests gate on
+//! `Engine::available(..)` and self-skip, so `cargo test` stays green.
+//!
+//! Dropping the real `xla` crate in (same names, same signatures) re-enables
+//! the PJRT path without touching the callers.
+
+use std::borrow::Borrow;
+
+/// Stub error type mirroring `xla::Error`'s role.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// Raised by every operation that needs a real PJRT backend.
+    BackendUnavailable(&'static str),
+    /// Host-side usage errors (shape mismatch, wrong element type, …).
+    Usage(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::BackendUnavailable(what) => {
+                write!(f, "PJRT backend unavailable (stub xla crate): {what}")
+            }
+            Error::Usage(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold (the subset the runtime uses).
+/// Public only because it appears in the sealed [`NativeType`] signatures.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Sealed conversion trait for native element types.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Elements
+    where
+        Self: Sized;
+    #[doc(hidden)]
+    fn unwrap(e: &Elements) -> Option<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Elements {
+        Elements::F32(data)
+    }
+    fn unwrap(e: &Elements) -> Option<Vec<f32>> {
+        match e {
+            Elements::F32(v) => Some(v.clone()),
+            Elements::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Elements {
+        Elements::I32(data)
+    }
+    fn unwrap(e: &Elements) -> Option<Vec<i32>> {
+        match e {
+            Elements::I32(v) => Some(v.clone()),
+            Elements::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side literal: flat element storage plus a shape. Fully functional in
+/// the stub (the runtime's Literal⇄Matrix plumbing is pure host code).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Elements,
+    shape: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            data: T::wrap(data.to_vec()),
+            shape: vec![data.len() as i64],
+            tuple: None,
+        }
+    }
+
+    /// Scalar literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { data: T::wrap(vec![x]), shape: vec![], tuple: None }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error::Usage(format!(
+                "reshape to {dims:?} ({want} elements) from {have} elements"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), shape: dims.to_vec(), tuple: None })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Elements::F32(v) => v.len(),
+            Elements::I32(v) => v.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Flat element vector, checked against the requested native type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error::Usage("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(parts) => Ok(parts),
+            None => Ok(vec![self]),
+        }
+    }
+}
+
+/// Stub HLO module handle.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _path: String,
+}
+
+impl HloModuleProto {
+    /// Parsing HLO text requires the real XLA parser.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        Err(Error::BackendUnavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub device buffer returned by `execute`.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::BackendUnavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub compiled executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub PJRT client: construction fails so callers degrade gracefully.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::BackendUnavailable(
+            "PjRtClient::cpu — build against the real xla crate to run AOT artifacts",
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::BackendUnavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.shape(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).element_count(), 1);
+    }
+
+    #[test]
+    fn backend_calls_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtLoadedExecutable.execute::<Literal>(&[]).unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
