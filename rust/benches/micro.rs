@@ -1,21 +1,24 @@
 //! Micro-benchmarks for the §Perf pass: GEMM, the sparse kernel family
-//! (scalar CSR vs tiled BCSR vs fused sparse+low-rank), randomized SVD, and
-//! one full OATS iteration.
+//! (scalar CSR vs tiled BCSR vs i8-quantized BCSR vs fused
+//! sparse+low-rank), randomized SVD, and one full OATS iteration.
 //!
 //! Run: `cargo bench --bench micro` (add `-- --quick` for the CI smoke
 //! sizing). Emits `BENCH_micro.json` (see `$OATS_BENCH_DIR`), including
-//! named csr→bcsr speedup comparisons at 50–70 % sparsity on a realistic
-//! layer shape (2048×2048, batch 8).
+//! named csr→bcsr and bcsr→qbcsr speedup comparisons at 50–70 % sparsity
+//! on a realistic layer shape (2048×2048, batch 8), plus
+//! `metrics` entries recording the bcsr vs qbcsr byte footprints. CI's
+//! perf gate reads the csr→bcsr and bcsr→qbcsr `comparisons[].speedup`
+//! values against conservative floors.
 
 use oats::bench::{black_box, Bench};
 use oats::linalg::randomized_svd;
-use oats::sparse::{Bcsr, Csr, LowRank, PackedLinear, SparsePlusLowRank};
+use oats::sparse::{Bcsr, Csr, LowRank, PackOptions, PackedLinear, QBcsr, SparsePlusLowRank};
 use oats::tensor::{matmul, matmul_bt, Matrix};
 use oats::util::prng::Rng;
 use oats::util::prop::random_sparse;
 
 /// Kernel-family comparison on one layer shape: dense GEMM vs scalar CSR vs
-/// tiled BCSR vs the fused sparse+low-rank path.
+/// tiled BCSR vs i8-quantized BCSR vs the fused sparse+low-rank paths.
 fn kernel_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
     println!("-- kernel comparison {d}x{d}, batch {batch} --");
     let x = Matrix::randn(batch, d, 1.0, rng);
@@ -30,17 +33,29 @@ fn kernel_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
         let s = random_sparse(d, d, pct as f64 / 100.0, rng);
         let csr = Csr::from_dense(&s);
         let bcsr = Bcsr::from_dense(&s);
+        let qbcsr = QBcsr::quantize(&bcsr);
         let macs = (2 * batch * csr.nnz()) as f64;
         let csr_name = format!("csr({pct}%) matmul_xt {d}x{d} b{batch}");
         let bcsr_name = format!("bcsr({pct}%) matmul_xt {d}x{d} b{batch}");
+        let qbcsr_name = format!("qbcsr({pct}%) matmul_xt {d}x{d} b{batch}");
         b.run_with_units(&csr_name, Some(macs), || {
             black_box(csr.matmul_xt(&x));
         });
         b.run_with_units(&bcsr_name, Some(macs), || {
             black_box(bcsr.matmul_xt(&x));
         });
+        b.run_with_units(&qbcsr_name, Some(macs), || {
+            black_box(qbcsr.matmul_xt(&x));
+        });
         let _ = b.compare(&format!("bcsr_vs_csr_{pct}pct_{d}_b{batch}"), &csr_name, &bcsr_name);
         let _ = b.compare(&format!("bcsr_vs_dense_{pct}pct_{d}_b{batch}"), &dense_name, &bcsr_name);
+        let _ = b.compare(&format!("qbcsr_vs_bcsr_{pct}pct_{d}_b{batch}"), &bcsr_name, &qbcsr_name);
+        // Memory-footprint comparison of the two tile formats (i8 values
+        // plus one f32 scale per tile vs f32 values).
+        b.metric(&format!("bcsr_bytes_{pct}pct_{d}"), bcsr.memory_bytes() as f64);
+        b.metric(&format!("qbcsr_bytes_{pct}pct_{d}"), qbcsr.memory_bytes() as f64);
+        let ratio = qbcsr.memory_bytes() as f64 / bcsr.memory_bytes() as f64;
+        b.metric(&format!("qbcsr_vs_bcsr_bytes_ratio_{pct}pct_{d}"), ratio);
     }
 
     // The OATS operating point ρ=0.5, κ=0.25: nnz = 0.375 d², r = d/16 —
@@ -65,6 +80,16 @@ fn kernel_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
         black_box(packed.forward(&x));
     });
     let _ = b.compare(&format!("fused_vs_unfused_{d}_b{batch}"), &unfused_name, &fused_name);
+
+    // The same operating point through the i8-quantized tiles (low-rank
+    // term stays f32), plan telemetry included.
+    let qpacked = PackedLinear::from_spl_with(&spl, &PackOptions::quantized(batch));
+    println!("  plan: {}", qpacked.plan.describe());
+    let qfused_name = format!("spl fused-q({}) {d}x{d} b{batch}", qpacked.plan.choice.name());
+    b.run(&qfused_name, || {
+        black_box(qpacked.forward(&x));
+    });
+    let _ = b.compare(&format!("qfused_vs_fused_{d}_b{batch}"), &fused_name, &qfused_name);
 }
 
 fn main() {
@@ -102,6 +127,11 @@ fn main() {
     });
     b.run("bcsr(50%) matvec d=512", || {
         bcsr.matvec(&xv, &mut y);
+        black_box(&y);
+    });
+    let qbcsr = QBcsr::quantize(&bcsr);
+    b.run("qbcsr(50%) matvec d=512", || {
+        qbcsr.matvec(&xv, &mut y);
         black_box(&y);
     });
     let r = d / 16;

@@ -83,6 +83,9 @@ pub struct Bench {
     /// Named (label, base, other, speedup) comparisons recorded via
     /// [`Bench::compare`]; emitted into the JSON report.
     pub comparisons: Vec<(String, String, String, f64)>,
+    /// Named scalar metrics (memory footprints, ratios) recorded via
+    /// [`Bench::metric`]; emitted into the JSON report alongside timings.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bench {
@@ -93,6 +96,7 @@ impl Default for Bench {
             max_seconds: 30.0,
             results: Vec::new(),
             comparisons: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 }
@@ -170,6 +174,13 @@ impl Bench {
         Some(s)
     }
 
+    /// Record a named scalar metric (e.g. a packed format's byte footprint)
+    /// for the JSON report.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("  metric {name}: {value}");
+        self.metrics.push((name.to_string(), value));
+    }
+
     /// The whole suite as one machine-readable document.
     pub fn to_json(&self, suite: &str) -> Json {
         let mut o = Json::obj();
@@ -191,6 +202,16 @@ impl Bench {
             })
             .collect();
         o.set("comparisons", Json::Arr(comps));
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|(name, value)| {
+                let mut m = Json::obj();
+                m.set("name", json::s(name)).set("value", json::num(*value));
+                m
+            })
+            .collect();
+        o.set("metrics", Json::Arr(metrics));
         o
     }
 
@@ -240,12 +261,16 @@ mod tests {
             black_box(3 * 3);
         });
         b.compare("a_vs_b", "a", "b").unwrap();
+        b.metric("bytes_ratio", 0.5);
         let j = b.to_json("unit");
         assert_eq!(j.get("suite").and_then(crate::json::Json::as_str), Some("unit"));
         assert_eq!(j.get("results").and_then(crate::json::Json::as_arr).unwrap().len(), 2);
         let comps = j.get("comparisons").and_then(crate::json::Json::as_arr).unwrap();
         assert_eq!(comps.len(), 1);
         assert!(comps[0].req_f64("speedup").unwrap() > 0.0);
+        let metrics = j.get("metrics").and_then(crate::json::Json::as_arr).unwrap();
+        assert_eq!(metrics.len(), 1);
+        assert_eq!(metrics[0].req_f64("value").unwrap(), 0.5);
         // Round-trips through the parser (what CI consumers do).
         let parsed = crate::json::parse(&j.to_pretty()).unwrap();
         assert_eq!(parsed.get("schema").and_then(crate::json::Json::as_str), Some("oats-bench-v1"));

@@ -102,8 +102,8 @@ pub fn compress(w: &Matrix, stats: &CalibStats, cfg: &CompressConfig) -> Result<
     // Initialize from both Wanda and SparseGPT masks; keep the refinement
     // with the lower weighted reconstruction error (the paper reports the
     // better of the two per benchmark, §A.14).
-    let wanda_init = wanda::compress(w, stats, &CompressConfig { method: Method::Wanda, ..cfg.clone() })?
-        .to_dense();
+    let wanda_cfg = CompressConfig { method: Method::Wanda, ..cfg.clone() };
+    let wanda_init = wanda::compress(w, stats, &wanda_cfg)?.to_dense();
     let sgpt_init = super::sparsegpt::compress(
         w,
         stats,

@@ -18,6 +18,7 @@ pub mod wanda;
 use crate::config::{CompressConfig, Method};
 use crate::sparse::{Csr, SparsePlusLowRank};
 use crate::tensor::Matrix;
+use crate::util::prng::Rng;
 use anyhow::Result;
 
 /// Per-layer activation statistics gathered by the calibration pipeline
@@ -29,10 +30,14 @@ pub struct CalibStats {
     pub gram: Matrix,
     /// Column means E[x_j] (DSNoT's reconstruction-error criterion).
     pub col_mean: Vec<f32>,
-    /// A row subsample of X for the robust (median) scaling ablation (A.3).
+    /// A row subsample of X for the robust (median) scaling ablation (A.3):
+    /// a deterministic reservoir over ALL observed rows, so late-batch
+    /// activations are represented, not just the first batch.
     pub sample_rows: Matrix,
     /// Number of rows (batch·seq) accumulated.
     pub n_samples: usize,
+    /// Deterministic stream driving the sample-row reservoir.
+    reservoir_rng: Rng,
 }
 
 impl CalibStats {
@@ -42,6 +47,7 @@ impl CalibStats {
             col_mean: vec![0.0; din],
             sample_rows: Matrix::zeros(0, din),
             n_samples: 0,
+            reservoir_rng: Rng::new(0xCA11B ^ din as u64),
         }
     }
 
@@ -67,11 +73,22 @@ impl CalibStats {
                 *m += v;
             }
         }
-        // Keep the first `keep_samples` rows for the robust-scaling ablation.
-        let want = keep_samples.saturating_sub(self.sample_rows.rows);
-        for r in 0..x.rows.min(want) {
-            self.sample_rows.data.extend_from_slice(x.row(r));
-            self.sample_rows.rows += 1;
+        // Reservoir-sample `keep_samples` rows (Algorithm R, deterministic
+        // stream) over every row ever observed. Keeping only the FIRST
+        // `keep_samples` rows biased the robust-scaling median toward the
+        // first calibration batch; the reservoir gives every row an equal
+        // chance regardless of arrival order.
+        for r in 0..x.rows {
+            if self.sample_rows.rows < keep_samples {
+                self.sample_rows.data.extend_from_slice(x.row(r));
+                self.sample_rows.rows += 1;
+            } else if self.sample_rows.rows > 0 {
+                let seen = self.n_samples + r;
+                let j = self.reservoir_rng.below(seen + 1);
+                if j < self.sample_rows.rows {
+                    self.sample_rows.row_mut(j).copy_from_slice(x.row(r));
+                }
+            }
         }
         self.n_samples += x.rows;
     }
@@ -247,6 +264,41 @@ mod tests {
         let stats = CalibStats::from_activations(&x);
         let d = stats.robust_scale();
         assert!((d[0] - 2.0).abs() < 1e-6); // median(1,10,2)=2
+    }
+
+    #[test]
+    fn reservoir_keeps_all_rows_when_under_capacity() {
+        // Streams shorter than the reservoir keep every row, in order —
+        // the first-fill path is unchanged.
+        let mut rng = Rng::new(6);
+        let x = Matrix::randn(10, 3, 1.0, &mut rng);
+        let mut s = CalibStats::new(3);
+        s.update(&x, 64);
+        s.finalize();
+        assert_eq!(s.sample_rows, x);
+    }
+
+    #[test]
+    fn reservoir_sees_late_batch_outliers() {
+        // The old behavior kept only the FIRST `keep_samples` rows, so a
+        // late outlier regime could never move the robust scale. With 8
+        // early rows at |x| = 1 and 1024 late rows at |x| = 100 through a
+        // reservoir of 8, the deterministic reservoir is dominated by late
+        // rows and the median sits at the late scale.
+        let mut s = CalibStats::new(2);
+        s.update(&Matrix::filled(8, 2, 1.0), 8);
+        for _ in 0..16 {
+            s.update(&Matrix::filled(64, 2, 100.0), 8);
+        }
+        s.finalize();
+        assert_eq!(s.sample_rows.rows, 8, "reservoir never exceeds capacity");
+        assert_eq!(s.n_samples, 8 + 16 * 64);
+        let d = s.robust_scale();
+        assert!(
+            (d[0] - 100.0).abs() < 1e-6,
+            "median must reflect the late batches, got {}",
+            d[0]
+        );
     }
 
     #[test]

@@ -100,8 +100,10 @@ mod tests {
             assert!((achieved - rate).abs() < 0.02, "achieved {achieved} target {rate}");
             // Individual rates stay within 2λ of the target (λ map plus the
             // parameter-weighted renormalization shift, each bounded by λ).
+            let lo = rate - 2.0 * lambda - 1e-9;
+            let hi = rate + 2.0 * lambda + 1e-9;
             for &r in &rates {
-                assert!(r >= rate - 2.0 * lambda - 1e-9 && r <= rate + 2.0 * lambda + 1e-9, "r={r} target {rate}");
+                assert!(r >= lo && r <= hi, "r={r} target {rate}");
             }
         });
     }

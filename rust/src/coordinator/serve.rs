@@ -9,8 +9,10 @@
 //! are recorded in [`ServeStats`].
 
 use crate::model::{KvCache, TransformerLM};
+use crate::sparse::PackOptions;
 use crate::tensor::argmax;
 use crate::util::stats::Summary;
+use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -28,6 +30,11 @@ pub struct ServeConfig {
     /// Pre-pack compressed layers into their planned kernel formats
     /// (BCSR/N:M/CSR per `sparse::KernelPlan`) at server startup.
     pub prepack: bool,
+    /// Opt-in i8 tile quantization while pre-packing: BCSR-planned layers
+    /// upgrade to QBcsr when their per-tile quantization error passes the
+    /// plan gate (`sparse::QBCSR_MAX_REL_ERROR`); checkpoints on disk stay
+    /// f32.
+    pub quantize: bool,
 }
 
 impl Default for ServeConfig {
@@ -38,7 +45,15 @@ impl Default for ServeConfig {
             gen_tokens: 16,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             prepack: true,
+            quantize: false,
         }
+    }
+}
+
+impl ServeConfig {
+    /// The packing policy this serving configuration implies.
+    pub fn pack_options(&self) -> PackOptions {
+        PackOptions { batch_hint: self.max_batch, quantize: self.quantize, ..Default::default() }
     }
 }
 
@@ -79,12 +94,16 @@ impl Batcher {
 
     /// Release a batch if the policy triggers: the queue has `max_batch`
     /// requests, or the oldest request has waited past `max_wait`.
-    pub fn ready(&mut self, now: Instant, max_batch: usize, max_wait: Duration) -> Option<Vec<Request>> {
+    pub fn ready(
+        &mut self,
+        now: Instant,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Option<Vec<Request>> {
         if self.queue.is_empty() {
             return None;
         }
-        let deadline_hit =
-            now.duration_since(self.queue.front().unwrap().enqueued) >= max_wait;
+        let deadline_hit = now.duration_since(self.queue.front().unwrap().enqueued) >= max_wait;
         if self.queue.len() >= max_batch || deadline_hit {
             let n = self.queue.len().min(max_batch);
             Some(self.queue.drain(..n).collect())
@@ -121,8 +140,14 @@ impl ServeStats {
     }
 }
 
-/// Greedy-generate `n` tokens from `prompt` (single-stream decode).
+/// Greedy-generate `n` tokens from `prompt` (single-stream decode). An
+/// empty prompt yields an empty completion: there are no logits to decode
+/// from (the buffer would stay all-zero and argmax would emit token 0
+/// forever).
 pub fn generate(model: &TransformerLM, prompt: &[usize], n: usize) -> Vec<usize> {
+    if prompt.is_empty() {
+        return Vec::new();
+    }
     let mut cache = KvCache::new(&model.cfg);
     let mut logits = vec![0.0f32; model.cfg.vocab];
     let budget = model.cfg.seq_len;
@@ -179,9 +204,13 @@ pub fn generate_batch(
         }
     });
     // Phase 2: lockstep batched generation over the still-active sequences.
+    // Empty prompts never activate (matching `generate`: no logits to
+    // decode from), so they return empty completions.
     let mut out: Vec<Vec<usize>> = (0..b).map(|_| Vec::with_capacity(n)).collect();
     for _ in 0..n {
-        let active: Vec<usize> = (0..b).filter(|&i| states[i].0.len < budget).collect();
+        let active: Vec<usize> = (0..b)
+            .filter(|&i| !prompts[i].is_empty() && states[i].0.len < budget)
+            .collect();
         if active.is_empty() {
             break;
         }
@@ -208,9 +237,44 @@ pub fn generate_batch(
     out
 }
 
+/// One queued submission: the request plus its response channel.
+type Submission = (Request, mpsc::Sender<Response>);
+
+/// Pull requests into the batcher: block up to `poll` for the first one,
+/// then drain everything already queued with `try_recv`, so a burst enters
+/// the batcher in ONE pump. (Pulling a single request per poll cycle made a
+/// burst of N requests take N cycles to assemble, splintering
+/// deadline-triggered dispatch into undersized batches.) Returns true once
+/// the request channel has disconnected.
+fn pump_requests(
+    rx: &mpsc::Receiver<Submission>,
+    poll: Duration,
+    batcher: &mut Batcher,
+    resp_txs: &mut HashMap<u64, mpsc::Sender<Response>>,
+) -> bool {
+    match rx.recv_timeout(poll) {
+        Ok((req, tx)) => {
+            resp_txs.insert(req.id, tx);
+            batcher.push(req);
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => return false,
+        Err(mpsc::RecvTimeoutError::Disconnected) => return true,
+    }
+    loop {
+        match rx.try_recv() {
+            Ok((req, tx)) => {
+                resp_txs.insert(req.id, tx);
+                batcher.push(req);
+            }
+            Err(mpsc::TryRecvError::Empty) => return false,
+            Err(mpsc::TryRecvError::Disconnected) => return true,
+        }
+    }
+}
+
 /// The server: owns the batcher thread and the batched-decode executor.
 pub struct Server {
-    req_tx: Option<mpsc::Sender<(Request, mpsc::Sender<Response>)>>,
+    req_tx: Option<mpsc::Sender<Submission>>,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     pub observed_batches: Arc<Mutex<Vec<usize>>>,
 }
@@ -221,28 +285,24 @@ impl Server {
         // so pre-pack each compressed layer for that batch shape once, up
         // front, instead of running scalar CSR per request.
         let model = if cfg.prepack && model.needs_packing() {
-            Arc::new(model.packed_for_serving(cfg.max_batch))
+            Arc::new(model.packed_for_serving_with(&cfg.pack_options()))
         } else {
             model
         };
-        let (req_tx, req_rx) = mpsc::channel::<(Request, mpsc::Sender<Response>)>();
+        let (req_tx, req_rx) = mpsc::channel::<Submission>();
         let observed_batches = Arc::new(Mutex::new(Vec::new()));
         let observed = Arc::clone(&observed_batches);
 
         let handle = std::thread::spawn(move || {
             let mut batcher = Batcher::default();
-            let mut resp_txs: std::collections::HashMap<u64, mpsc::Sender<Response>> =
-                std::collections::HashMap::new();
+            let mut resp_txs: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
             let mut closed = false;
             loop {
-                // Pull requests (with a short poll so deadlines fire).
-                match req_rx.recv_timeout(Duration::from_micros(200)) {
-                    Ok((req, tx)) => {
-                        resp_txs.insert(req.id, tx);
-                        batcher.push(req);
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                // Pull requests (with a short poll so deadlines fire),
+                // draining any queued burst in one pump.
+                let poll = Duration::from_micros(200);
+                if pump_requests(&req_rx, poll, &mut batcher, &mut resp_txs) {
+                    closed = true;
                 }
                 let now = Instant::now();
                 let batches: Vec<Vec<Request>> = if closed {
@@ -323,7 +383,7 @@ pub fn run_load(
     // must not bias the measured throughput of compressed models (the dense
     // baseline pays no equivalent cost).
     let model = if cfg.prepack && model.needs_packing() {
-        Arc::new(model.packed_for_serving(cfg.max_batch))
+        Arc::new(model.packed_for_serving_with(&cfg.pack_options()))
     } else {
         model
     };
@@ -418,6 +478,27 @@ mod tests {
     }
 
     #[test]
+    fn pump_drains_queued_burst_in_one_call() {
+        // The serve loop must not need one poll cycle per request: a burst
+        // already sitting in the channel enters the batcher in one pump.
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        for i in 0..5u64 {
+            let (rtx, _rrx) = mpsc::channel();
+            tx.send((Request { id: i, prompt: vec![1], enqueued: t0 }, rtx)).unwrap();
+        }
+        let mut b = Batcher::default();
+        let mut txs = HashMap::new();
+        let closed = pump_requests(&rx, Duration::from_millis(10), &mut b, &mut txs);
+        assert!(!closed);
+        assert_eq!(b.len(), 5, "burst must enter the batcher in one pump");
+        assert_eq!(txs.len(), 5);
+        // Disconnect is reported once the senders are gone.
+        drop(tx);
+        assert!(pump_requests(&rx, Duration::from_millis(1), &mut b, &mut txs));
+    }
+
+    #[test]
     fn generate_respects_budget() {
         let m = tiny();
         let out = generate(&m, &[1, 2, 3], 10);
@@ -437,14 +518,18 @@ mod tests {
     #[test]
     fn generate_batch_matches_scalar_generate() {
         // Dense model: the batched lockstep path is arithmetically identical
-        // to per-sequence scalar decode, ragged prompt lengths included.
+        // to per-sequence scalar decode, ragged prompt lengths included —
+        // and an empty prompt yields an empty completion in both paths
+        // (decoding from the all-zero logits buffer would emit token 0).
         let m = tiny();
-        let prompts = vec![vec![1usize, 2, 3], vec![4usize, 5], vec![9usize]];
+        let prompts = vec![vec![1usize, 2, 3], vec![], vec![4usize, 5], vec![9usize]];
         let batch = generate_batch(&m, &prompts, 6, 2);
-        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.len(), 4);
         for (p, got) in prompts.iter().zip(&batch) {
             assert_eq!(got, &generate(&m, p, 6), "prompt {p:?}");
         }
+        assert!(batch[1].is_empty(), "empty prompt must yield empty completion");
+        assert!(generate(&m, &[], 5).is_empty());
         assert!(generate_batch(&m, &[], 4, 2).is_empty());
     }
 
@@ -466,6 +551,7 @@ mod tests {
             gen_tokens: 4,
             workers: 2,
             prepack: true,
+            quantize: false,
         };
         let stats = run_load(m, cfg, (0..10).map(|i| vec![i % 16, 1, 2]).collect());
         assert_eq!(stats.n_requests, 10);
@@ -524,6 +610,7 @@ mod tests {
             gen_tokens: 2,
             workers: 2,
             prepack: true,
+            quantize: false,
         };
         let server = Server::start(m, cfg);
         let rxs: Vec<_> = (0..7).map(|i| server.submit(i, vec![1, 2])).collect();
@@ -534,5 +621,28 @@ mod tests {
         assert!(batches.iter().all(|&b| b <= 3), "{batches:?}");
         assert_eq!(batches.iter().sum::<usize>(), 7);
         drop(server);
+    }
+
+    #[test]
+    fn server_dispatches_prequeued_burst_as_one_batch() {
+        // A burst of exactly max_batch requests must assemble into ONE
+        // size-triggered batch: the pump drains the queued burst and the
+        // generous deadline never fires first.
+        let m = tiny();
+        let cfg = ServeConfig {
+            max_batch: 6,
+            max_wait: Duration::from_secs(30),
+            gen_tokens: 2,
+            workers: 2,
+            prepack: true,
+            quantize: false,
+        };
+        let server = Server::start(m, cfg);
+        let rxs: Vec<_> = (0..6).map(|i| server.submit(i, vec![1, 2])).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let batches = server.observed_batches.lock().unwrap().clone();
+        assert_eq!(batches, vec![6], "burst must dispatch as a single full batch");
     }
 }

@@ -171,7 +171,12 @@ impl SyntheticCorpus {
 
     /// “Easy” task instances (zero-shot proxy): predict the most likely
     /// Markov successor after a structured context.
-    pub fn bigram_probes(&self, n: usize, ctx_len: usize, rng: &mut Rng) -> Vec<(Vec<usize>, usize)> {
+    pub fn bigram_probes(
+        &self,
+        n: usize,
+        ctx_len: usize,
+        rng: &mut Rng,
+    ) -> Vec<(Vec<usize>, usize)> {
         let mut probes = Vec::new();
         while probes.len() < n {
             let s = self.sequence(ctx_len + 1, rng);

@@ -27,6 +27,7 @@ pub fn decode_throughput(model: &TransformerLM, n_requests: usize, gen_tokens: u
         gen_tokens,
         workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         prepack: true,
+        quantize: false,
     };
     let prompts: Vec<Vec<usize>> = (0..n_requests)
         .map(|i| vec![(i * 7) % model.cfg.vocab, (i * 13) % model.cfg.vocab, 1])

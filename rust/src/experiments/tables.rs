@@ -51,7 +51,8 @@ pub fn run_grid(
         let corpus_cfg = ctx.corpus(preset)?.cfg.clone();
         let corpus = crate::data::SyntheticCorpus::new(corpus_cfg);
         // Dense reference row.
-        let dense_row = eval::evaluate(&model, &corpus, "Dense", ctx.eval_batches(), ctx.eval_probes());
+        let (eb, ep) = (ctx.eval_batches(), ctx.eval_probes());
+        let dense_row = eval::evaluate(&model, &corpus, "Dense", eb, ep);
         out.push(GridResult {
             preset: preset.into(),
             rate: 0.0,
@@ -84,7 +85,13 @@ pub fn run_grid(
                     .set("easy", json::num(row.easy))
                     .set("achieved", json::num(achieved));
                 ctx.record(&rec);
-                out.push(GridResult { preset: preset.into(), rate, method, row, achieved_rate: achieved });
+                out.push(GridResult {
+                    preset: preset.into(),
+                    rate,
+                    method,
+                    row,
+                    achieved_rate: achieved,
+                });
             }
         }
     }
@@ -210,7 +217,8 @@ pub fn table5(ctx: &mut Ctx, presets: &[&str]) -> Result<Table> {
                 ..Default::default()
             };
             let (cm, _) = compress_clone(&model, &calib, &cfg, 6)?;
-            let row = eval::evaluate(&cm, &corpus, method.name(), ctx.eval_batches(), ctx.eval_probes());
+            let (eb, ep) = (ctx.eval_batches(), ctx.eval_probes());
+            let row = eval::evaluate(&cm, &corpus, method.name(), eb, ep);
             let mut rec = Json::obj();
             rec.set("exp", json::s("t5_owl60"))
                 .set("preset", json::s(preset))

@@ -21,7 +21,11 @@ pub fn trained_vit(ctx: &Ctx) -> Result<Vit> {
 
 /// Compress every layer of a ViT with the given config (sequential
 /// calibration propagation, mirroring the LM pipeline).
-pub fn compress_vit(vit: &Vit, cfg: &CompressConfig, calib_images: &[crate::data::images::Image]) -> Result<Vit> {
+pub fn compress_vit(
+    vit: &Vit,
+    cfg: &CompressConfig,
+    calib_images: &[crate::data::images::Image],
+) -> Result<Vit> {
     let mut v = vit.clone();
     let refs: Vec<&[f32]> = calib_images.iter().map(|i| i.pixels.as_slice()).collect();
     let mut h = v.embed(&refs);
@@ -122,7 +126,8 @@ pub fn rollout_analysis(ctx: &mut Ctx, out_dir: &std::path::Path) -> Result<Tabl
         if i < 2 {
             println!("image {i} (class {}):", img.label);
             println!("  sparse rollout:\n{}", indent(&ascii_heatmap(&split.sparse, split.side)));
-            println!("  low-rank rollout:\n{}", indent(&ascii_heatmap(&split.low_rank, split.side)));
+            let lowrank_map = ascii_heatmap(&split.low_rank, split.side);
+            println!("  low-rank rollout:\n{}", indent(&lowrank_map));
         }
         let mut rec = Json::obj();
         rec.set("exp", json::s("fig4_rollout"))

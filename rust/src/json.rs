@@ -251,7 +251,10 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => {
+                let c = other.map(|c| c as char);
+                anyhow::bail!("unexpected {c:?} at byte {}", self.pos)
+            }
         }
     }
 
@@ -269,8 +272,8 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        let numeric = |c: u8| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-');
+        while matches!(self.peek(), Some(c) if numeric(c)) {
             self.pos += 1;
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])?;

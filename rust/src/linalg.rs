@@ -432,7 +432,8 @@ mod tests {
         let a = matmul(&b, &c);
         let svd = randomized_svd(&a, 3, 6, 2, &mut rng);
         let rec = svd.reconstruct();
-        assert!(a.fro_dist(&rec) / a.fro_norm() < 1e-3, "rel err {}", a.fro_dist(&rec) / a.fro_norm());
+        let rel = a.fro_dist(&rec) / a.fro_norm();
+        assert!(rel < 1e-3, "rel err {rel}");
     }
 
     #[test]

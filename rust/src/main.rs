@@ -86,7 +86,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         steps,
         &corpus,
     )?;
-    let row = oats::eval::evaluate(&model, &corpus, "trained", ctx.eval_batches(), ctx.eval_probes());
+    let (eb, ep) = (ctx.eval_batches(), ctx.eval_probes());
+    let row = oats::eval::evaluate(&model, &corpus, "trained", eb, ep);
     println!("ppl={:.2} hard={:.1}% easy={:.1}%", row.ppl, row.hard, row.easy);
     Ok(())
 }
@@ -129,7 +130,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
         report.total_seconds
     );
     let corpus = oats::data::SyntheticCorpus::new(ctx.corpus(preset)?.cfg.clone());
-    let row = oats::eval::evaluate(&cm, &corpus, "compressed", ctx.eval_batches(), ctx.eval_probes());
+    let (eb, ep) = (ctx.eval_batches(), ctx.eval_probes());
+    let row = oats::eval::evaluate(&cm, &corpus, "compressed", eb, ep);
     println!("ppl={:.2} hard={:.1}% easy={:.1}%", row.ppl, row.hard, row.easy);
     if let Some(out) = args.flag("out") {
         // Structure-preserving format: CSR + low-rank factors on disk.

@@ -11,7 +11,7 @@ use super::lm::{LinearOp, TransformerLM, LINEAR_NAMES};
 use crate::compress::CompressedLayer;
 use crate::config::ModelConfig;
 use crate::json::{self, Json};
-use crate::sparse::{Csr, LowRank, PackedLinear, PackedSparse, SparsePlusLowRank};
+use crate::sparse::{Csr, LowRank, PackOptions, PackedLinear, PackedSparse, SparsePlusLowRank};
 use crate::tensor::Matrix;
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
@@ -88,6 +88,10 @@ fn unpacked_layer(p: &PackedLinear) -> CompressedLayer {
         }
         PackedSparse::Csr(c) => c.clone(),
         PackedSparse::Bcsr(b) => b.to_csr(),
+        // i8 tiles dequantize for the portable format: the on-disk
+        // checkpoint never stores quantized values (quantization is a
+        // pack-time decision, re-made on the next load).
+        PackedSparse::QBcsr(q) => q.to_csr(),
         PackedSparse::Nm(nm) => nm.to_csr(),
     };
     match p.low_rank() {
@@ -284,8 +288,15 @@ pub fn load(dir: &Path) -> Result<TransformerLM> {
 /// deployment path: checkpoints go straight from disk into BCSR/N:M/CSR
 /// tiles without materializing dense weights.
 pub fn load_packed(dir: &Path, batch_hint: usize) -> Result<TransformerLM> {
+    load_packed_with(dir, &PackOptions::for_batch(batch_hint))
+}
+
+/// [`load_packed`] with explicit packing options: `opts.quantize` turns on
+/// i8 BCSR tiles (per-tile error gate included) at load time. The on-disk
+/// format is unchanged — quantization happens while packing.
+pub fn load_packed_with(dir: &Path, opts: &PackOptions) -> Result<TransformerLM> {
     let mut model = load(dir)?;
-    model.pack_for_serving(batch_hint);
+    model.pack_for_serving_with(opts);
     Ok(model)
 }
 
@@ -361,6 +372,40 @@ mod tests {
         let d = m.forward(&toks).fro_dist(&packed.forward(&toks));
         assert!(d < 1e-3, "packed load diverges: {d}");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_packed_quantized_gates_per_layer_and_stays_close() {
+        let m = compressed_model();
+        let dir = std::env::temp_dir().join(format!("oats_cio_q_{}", std::process::id()));
+        save(&m, &dir).unwrap();
+        let base = load_packed(&dir, 8).unwrap();
+        let qm = load_packed_with(&dir, &PackOptions::quantized(8)).unwrap();
+        assert_eq!(qm.kernel_plans().len(), m.cfg.n_layers * 6);
+        assert_eq!(qm.prunable_param_count(), m.prunable_param_count());
+        // The tiny preset's up/down layers (256×64) are BCSR-planned;
+        // well-behaved compressed weights pass the error gate and upgrade.
+        let n_q = qm
+            .kernel_plans()
+            .iter()
+            .filter(|(_, p)| p.choice == crate::sparse::KernelChoice::QBcsr)
+            .count();
+        assert!(n_q > 0, "no layer upgraded to qbcsr: {:?}", qm.kernel_plans());
+        // Quantization is bounded by the plan gate: outputs stay close to
+        // the f32-packed model.
+        let toks = vec![vec![2usize, 4, 6, 8, 10, 12]];
+        let want = base.forward(&toks);
+        let rel = want.fro_dist(&qm.forward(&toks)) / want.fro_norm().max(1e-12);
+        assert!(rel < 0.1, "quantized serving drifted: rel {rel}");
+        // Saving the quantized-packed model round-trips through the
+        // portable f32 structure (same nnz accounting, no i8 on disk).
+        let dir2 = std::env::temp_dir().join(format!("oats_cio_q2_{}", std::process::id()));
+        save(&qm, &dir2).unwrap();
+        let back = load(&dir2).unwrap();
+        assert_eq!(back.prunable_param_count(), m.prunable_param_count());
+        assert!(qm.forward(&toks).fro_dist(&back.forward(&toks)) < 1e-3);
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&dir2).unwrap();
     }
 
     #[test]

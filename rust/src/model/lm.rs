@@ -5,7 +5,7 @@
 
 use crate::compress::CompressedLayer;
 use crate::config::ModelConfig;
-use crate::sparse::{KernelPlan, PackedLinear};
+use crate::sparse::{KernelPlan, PackOptions, PackedLinear};
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
 use std::collections::HashMap;
@@ -105,12 +105,18 @@ impl LinearOp {
     /// Pre-pack a compressed layer into its planned serving format; `None`
     /// when there is nothing to pack (dense or already packed).
     pub fn pack(&self, batch_hint: usize) -> Option<LinearOp> {
+        self.pack_with(&PackOptions::for_batch(batch_hint))
+    }
+
+    /// [`LinearOp::pack`] with explicit packing options (the i8 tile
+    /// quantization opt-in).
+    pub fn pack_with(&self, opts: &PackOptions) -> Option<LinearOp> {
         match self {
             LinearOp::Compressed(CompressedLayer::Sparse(csr)) => {
-                Some(LinearOp::Packed(Box::new(PackedLinear::from_csr(csr, batch_hint))))
+                Some(LinearOp::Packed(Box::new(PackedLinear::from_csr_with(csr, opts))))
             }
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => {
-                Some(LinearOp::Packed(Box::new(PackedLinear::from_spl(spl, batch_hint))))
+                Some(LinearOp::Packed(Box::new(PackedLinear::from_spl_with(spl, opts))))
             }
             _ => None,
         }
@@ -543,11 +549,17 @@ impl TransformerLM {
     /// [`KernelPlan`] selects for `batch_hint` (checkpoint→serve path).
     /// Returns the number of layers packed.
     pub fn pack_for_serving(&mut self, batch_hint: usize) -> usize {
+        self.pack_for_serving_with(&PackOptions::for_batch(batch_hint))
+    }
+
+    /// [`TransformerLM::pack_for_serving`] with explicit packing options
+    /// (the i8 tile quantization opt-in rides through here).
+    pub fn pack_for_serving_with(&mut self, opts: &PackOptions) -> usize {
         let mut packed = 0;
         for blk in &mut self.blocks {
             for name in LINEAR_NAMES {
                 let op = blk.linear_mut(name);
-                if let Some(p) = op.pack(batch_hint) {
+                if let Some(p) = op.pack_with(opts) {
                     *op = p;
                     packed += 1;
                 }
@@ -559,8 +571,13 @@ impl TransformerLM {
     /// Clone-and-pack convenience for serving startup (the original model
     /// keeps its portable representation).
     pub fn packed_for_serving(&self, batch_hint: usize) -> TransformerLM {
+        self.packed_for_serving_with(&PackOptions::for_batch(batch_hint))
+    }
+
+    /// [`TransformerLM::packed_for_serving`] with explicit packing options.
+    pub fn packed_for_serving_with(&self, opts: &PackOptions) -> TransformerLM {
         let mut m = self.clone();
-        m.pack_for_serving(batch_hint);
+        m.pack_for_serving_with(opts);
         m
     }
 

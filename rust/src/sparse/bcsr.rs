@@ -32,12 +32,12 @@ pub const DEFAULT_COL_TILE: usize = 512;
 
 /// One (row-tile × col-tile) block: a local CSR with in-tile column offsets.
 #[derive(Clone, Debug, PartialEq)]
-struct Tile {
+pub(crate) struct Tile {
     /// len = rows-in-tile + 1, offsets into `cols`/`values`.
-    indptr: Vec<u32>,
+    pub(crate) indptr: Vec<u32>,
     /// Column offsets relative to the tile's first column (< col_tile ≤ 65536).
-    cols: Vec<u16>,
-    values: Vec<f32>,
+    pub(crate) cols: Vec<u16>,
+    pub(crate) values: Vec<f32>,
 }
 
 /// Block-compressed-sparse-row matrix with cache-sized tiles.
@@ -154,11 +154,26 @@ impl Bcsr {
         1.0 - self.nnz as f64 / (self.rows * self.cols).max(1) as f64
     }
 
-    fn n_col_tiles(&self) -> usize {
+    /// In-memory footprint of the packed representation (indptr + u16
+    /// column offsets + f32 values) — the baseline the i8 quantized format
+    /// is compared against.
+    pub fn memory_bytes(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| 4 * t.indptr.len() + 2 * t.cols.len() + 4 * t.values.len())
+            .sum()
+    }
+
+    /// Tiles in row-tile-major order — the quantizer's input view.
+    pub(crate) fn tiles(&self) -> &[Tile] {
+        &self.tiles
+    }
+
+    pub(crate) fn n_col_tiles(&self) -> usize {
         self.cols.div_ceil(self.col_tile).max(1)
     }
 
-    fn n_row_tiles(&self) -> usize {
+    pub(crate) fn n_row_tiles(&self) -> usize {
         self.rows.div_ceil(self.row_tile).max(1)
     }
 

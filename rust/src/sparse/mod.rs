@@ -13,15 +13,20 @@
 //! * [`lowrank`] — `U·Vᵀ` factor pairs.
 //! * [`spl`] — the OATS `S + U·Vᵀ` composite, including the fused
 //!   sparse-plus-low-rank kernel.
-//! * [`plan`] — [`KernelPlan`]: picks dense/CSR/BCSR/N:M per layer from
-//!   measured nnz density and shape, and [`PackedLinear`], the pre-packed
-//!   executable form the serving engine runs.
+//! * [`quant`] — [`QBcsr`]: i8-quantized BCSR tiles with per-tile f32
+//!   scales, the opt-in compression axis the planner gates on measured
+//!   quantization error.
+//! * [`plan`] — [`KernelPlan`]: picks dense/CSR/BCSR/QBcsr/N:M per layer
+//!   from measured nnz density, shape, and (for the i8 upgrade) per-tile
+//!   quantization error, and [`PackedLinear`], the pre-packed executable
+//!   form the serving engine runs.
 
 pub mod bcsr;
 pub mod csr;
 pub mod lowrank;
 pub mod nm;
 pub mod plan;
+pub mod quant;
 pub mod spl;
 
 pub use bcsr::Bcsr;
@@ -29,6 +34,8 @@ pub use csr::Csr;
 pub use lowrank::LowRank;
 pub use nm::{NmPacked, NmPattern};
 pub use plan::{KernelChoice, KernelPlan, PackedLinear, PackedSparse};
+pub use plan::{PackOptions, QuantGate, QBCSR_MAX_REL_ERROR};
+pub use quant::QBcsr;
 pub use spl::SparsePlusLowRank;
 
 /// Cost model used for the N:M / acceleration analyses (Figure 2, DESIGN.md

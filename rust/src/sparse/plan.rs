@@ -16,11 +16,19 @@
 //!    ≥ [`BCSR_MIN_BATCH`] — the batched cache-tiled kernel (its edge over
 //!    scalar CSR is amortizing weight streaming across the batch).
 //! 4. **CSR** otherwise (small layers or single-stream decode).
+//!
+//! On top of the layout ladder sits the first accuracy/speed arbitration:
+//! when packing opts into i8 tiles ([`PackOptions::quantize`]), a
+//! BCSR-planned layer is quantized and upgraded to **QBcsr** only if its
+//! measured per-tile relative quantization error stays within the
+//! configured bound ([`QuantGate`]); otherwise the plan falls back to f32
+//! BCSR and records the rejected error for telemetry.
 
 use super::bcsr::Bcsr;
 use super::csr::Csr;
 use super::lowrank::LowRank;
 use super::nm::{NmPacked, NmPattern};
+use super::quant::{self, QBcsr};
 use super::spl::{fused_matmul, SparsePlusLowRank};
 use crate::tensor::Matrix;
 
@@ -34,6 +42,9 @@ pub const BCSR_MIN_ELEMENTS: usize = 1 << 14;
 /// Minimum expected batch for BCSR — its win over scalar CSR is amortizing
 /// weight streaming over the batch; single-stream decode keeps CSR.
 pub const BCSR_MIN_BATCH: usize = 2;
+/// Default per-tile relative Frobenius quantization-error bound for the i8
+/// upgrade: above this the plan keeps f32 BCSR.
+pub const QBCSR_MAX_REL_ERROR: f64 = 0.05;
 
 /// N:M patterns the planner probes, tightest (sparsest) first.
 const NM_CANDIDATES: [NmPattern; 2] = [NmPattern::TWO_EIGHT, NmPattern::TWO_FOUR];
@@ -44,6 +55,8 @@ pub enum KernelChoice {
     Dense,
     Csr,
     Bcsr,
+    /// i8-quantized BCSR tiles with per-tile f32 scales.
+    QBcsr,
     Nm { n: usize, m: usize },
 }
 
@@ -53,8 +66,50 @@ impl KernelChoice {
             KernelChoice::Dense => "dense".into(),
             KernelChoice::Csr => "csr".into(),
             KernelChoice::Bcsr => "bcsr".into(),
+            KernelChoice::QBcsr => "qbcsr".into(),
             KernelChoice::Nm { n, m } => format!("{n}:{m}"),
         }
+    }
+}
+
+/// The i8-upgrade arbitration input: the measured per-tile relative
+/// quantization error of the candidate [`QBcsr`] packing, against the
+/// configured bound. Only a BCSR-planned layer consults the gate.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantGate {
+    /// Worst per-tile relative Frobenius error, measured at pack time.
+    pub rel_error: f64,
+    /// Maximum acceptable error; above it the plan keeps f32 BCSR.
+    pub bound: f64,
+}
+
+/// How to pack a layer: the expected batch shape plus the (opt-in) i8
+/// quantization policy.
+#[derive(Clone, Copy, Debug)]
+pub struct PackOptions {
+    /// Expected batch size (1 = decode-only).
+    pub batch_hint: usize,
+    /// Quantize BCSR-planned layers to i8 tiles (gated on measured error).
+    pub quantize: bool,
+    /// Per-tile relative error bound for the quantization gate.
+    pub max_quant_rel_error: f64,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        PackOptions { batch_hint: 1, quantize: false, max_quant_rel_error: QBCSR_MAX_REL_ERROR }
+    }
+}
+
+impl PackOptions {
+    /// f32-only packing for the given batch shape (the historical default).
+    pub fn for_batch(batch_hint: usize) -> PackOptions {
+        PackOptions { batch_hint, ..Default::default() }
+    }
+
+    /// i8-opt-in packing with the default error gate.
+    pub fn quantized(batch_hint: usize) -> PackOptions {
+        PackOptions { batch_hint, quantize: true, ..Default::default() }
     }
 }
 
@@ -68,21 +123,29 @@ pub struct KernelPlan {
     pub cols: usize,
     /// Expected batch size the plan was made for (1 = decode-only).
     pub batch_hint: usize,
+    /// Measured per-tile relative quantization error, when i8 quantization
+    /// was evaluated — recorded whether the gate accepted (choice QBcsr) or
+    /// rejected it (choice stays Bcsr), for telemetry.
+    pub quant_rel_error: Option<f64>,
 }
 
 impl KernelPlan {
     /// Decide a format from measured shape + density (+ optional exact N:M
-    /// structure detected by the caller).
+    /// structure detected by the caller). When `quant` carries a measured
+    /// quantization error, a BCSR choice upgrades to QBcsr only if the
+    /// error is within the gate's bound — the dispatch layer's first
+    /// accuracy/speed arbitration.
     pub fn choose(
         rows: usize,
         cols: usize,
         nnz: usize,
         nm: Option<NmPattern>,
         batch_hint: usize,
+        quant: Option<QuantGate>,
     ) -> KernelPlan {
         let elems = (rows * cols).max(1);
         let density = nnz as f64 / elems as f64;
-        let choice = if density > DENSE_DENSITY_CUTOFF {
+        let mut choice = if density > DENSE_DENSITY_CUTOFF {
             KernelChoice::Dense
         } else if let Some(p) = nm.filter(|p| {
             let pattern_density = p.n as f64 / p.m as f64;
@@ -94,13 +157,26 @@ impl KernelPlan {
         } else {
             KernelChoice::Csr
         };
-        KernelPlan { choice, density, rows, cols, batch_hint }
+        let mut quant_rel_error = None;
+        if let (KernelChoice::Bcsr, Some(g)) = (choice, quant) {
+            quant_rel_error = Some(g.rel_error);
+            if g.rel_error <= g.bound {
+                choice = KernelChoice::QBcsr;
+            }
+        }
+        KernelPlan { choice, density, rows, cols, batch_hint, quant_rel_error }
     }
 
-    /// One-line human-readable summary (serving startup logs).
+    /// One-line human-readable summary (serving startup logs). Includes the
+    /// measured quantization error whenever the i8 gate was consulted, so
+    /// gate rejections are visible.
     pub fn describe(&self) -> String {
+        let qerr = match self.quant_rel_error {
+            Some(e) => format!(" qerr {e:.4}"),
+            None => String::new(),
+        };
         format!(
-            "{}x{} density {:.2} batch {} -> {}",
+            "{}x{} density {:.2} batch {} -> {}{qerr}",
             self.rows,
             self.cols,
             self.density,
@@ -128,12 +204,32 @@ fn detect_nm_csr(csr: &Csr) -> Option<NmPattern> {
     })
 }
 
+/// Evaluate the i8 upgrade for a BCSR-planned layer: quantize, measure the
+/// per-tile error, and let [`KernelPlan::choose`] arbitrate through a
+/// [`QuantGate`]. Returns the quantized tiles when the gate accepts;
+/// re-derives `plan` either way so the measured error lands in telemetry.
+fn quantize_gated(
+    bcsr: &Bcsr,
+    nm: Option<NmPattern>,
+    opts: &PackOptions,
+    plan: &mut KernelPlan,
+) -> Option<QBcsr> {
+    if !opts.quantize {
+        return None;
+    }
+    let q = QBcsr::quantize(bcsr);
+    let gate = QuantGate { rel_error: q.max_tile_rel_error(), bound: opts.max_quant_rel_error };
+    *plan = KernelPlan::choose(plan.rows, plan.cols, bcsr.nnz(), nm, opts.batch_hint, Some(gate));
+    (plan.choice == KernelChoice::QBcsr).then_some(q)
+}
+
 /// The packed sparse term, in whichever format the plan selected.
 #[derive(Clone, Debug)]
 pub enum PackedSparse {
     Dense(Matrix),
     Csr(Csr),
     Bcsr(Bcsr),
+    QBcsr(QBcsr),
     Nm(NmPacked),
 }
 
@@ -150,24 +246,45 @@ pub struct PackedLinear {
 impl PackedLinear {
     /// Pack an OATS sparse-plus-low-rank layer.
     pub fn from_spl(spl: &SparsePlusLowRank, batch_hint: usize) -> PackedLinear {
-        Self::from_csr_parts(&spl.sparse, spl.low_rank.clone(), batch_hint)
+        Self::from_spl_with(spl, &PackOptions::for_batch(batch_hint))
+    }
+
+    /// [`PackedLinear::from_spl`] with explicit packing options (the i8
+    /// quantization opt-in path).
+    pub fn from_spl_with(spl: &SparsePlusLowRank, opts: &PackOptions) -> PackedLinear {
+        Self::from_csr_parts(&spl.sparse, spl.low_rank.clone(), opts)
     }
 
     /// Pack a sparse-only layer (Wanda/SparseGPT/magnitude outputs).
     pub fn from_csr(csr: &Csr, batch_hint: usize) -> PackedLinear {
-        Self::from_csr_parts(csr, None, batch_hint)
+        Self::from_csr_with(csr, &PackOptions::for_batch(batch_hint))
     }
 
-    fn from_csr_parts(csr: &Csr, low_rank: Option<LowRank>, batch_hint: usize) -> PackedLinear {
+    /// [`PackedLinear::from_csr`] with explicit packing options.
+    pub fn from_csr_with(csr: &Csr, opts: &PackOptions) -> PackedLinear {
+        Self::from_csr_parts(csr, None, opts)
+    }
+
+    fn from_csr_parts(csr: &Csr, low_rank: Option<LowRank>, opts: &PackOptions) -> PackedLinear {
         // Plan and pack straight from the CSR structure: the density-gated
         // N:M probe and the BCSR re-tiling are O(nnz); a dense temporary is
         // materialized only on the (rare) Dense / N:M plans that need one.
         let nm = detect_nm_csr(csr);
-        let mut plan = KernelPlan::choose(csr.rows, csr.cols, csr.nnz(), nm, batch_hint);
+        let mut plan =
+            KernelPlan::choose(csr.rows, csr.cols, csr.nnz(), nm, opts.batch_hint, None);
         let sparse = match plan.choice {
             KernelChoice::Dense => PackedSparse::Dense(csr.to_dense()),
             KernelChoice::Csr => PackedSparse::Csr(csr.clone()),
-            KernelChoice::Bcsr => PackedSparse::Bcsr(Bcsr::from_csr(csr)),
+            KernelChoice::Bcsr => {
+                let bcsr = Bcsr::from_csr(csr);
+                match quantize_gated(&bcsr, nm, opts, &mut plan) {
+                    Some(q) => PackedSparse::QBcsr(q),
+                    None => PackedSparse::Bcsr(bcsr),
+                }
+            }
+            // The base ladder never emits QBcsr directly; it only appears
+            // via the gate above.
+            KernelChoice::QBcsr => unreachable!("qbcsr requires the quantization gate"),
             KernelChoice::Nm { n, m } => {
                 match NmPacked::pack(&csr.to_dense(), NmPattern { n, m }) {
                     Some(packed) => PackedSparse::Nm(packed),
@@ -186,13 +303,25 @@ impl PackedLinear {
 
     /// Pack from a dense weight, sparsifying if the zero structure warrants.
     pub fn from_dense(w: &Matrix, batch_hint: usize) -> PackedLinear {
+        Self::from_dense_with(w, &PackOptions::for_batch(batch_hint))
+    }
+
+    /// [`PackedLinear::from_dense`] with explicit packing options.
+    pub fn from_dense_with(w: &Matrix, opts: &PackOptions) -> PackedLinear {
         let nnz = w.nnz();
         let nm = detect_nm(w, nnz);
-        let plan = KernelPlan::choose(w.rows, w.cols, nnz, nm, batch_hint);
+        let mut plan = KernelPlan::choose(w.rows, w.cols, nnz, nm, opts.batch_hint, None);
         let sparse = match plan.choice {
             KernelChoice::Dense => PackedSparse::Dense(w.clone()),
             KernelChoice::Csr => PackedSparse::Csr(Csr::from_dense(w)),
-            KernelChoice::Bcsr => PackedSparse::Bcsr(Bcsr::from_dense(w)),
+            KernelChoice::Bcsr => {
+                let bcsr = Bcsr::from_dense(w);
+                match quantize_gated(&bcsr, nm, opts, &mut plan) {
+                    Some(q) => PackedSparse::QBcsr(q),
+                    None => PackedSparse::Bcsr(bcsr),
+                }
+            }
+            KernelChoice::QBcsr => unreachable!("qbcsr requires the quantization gate"),
             KernelChoice::Nm { n, m } => {
                 let packed = NmPacked::pack(w, NmPattern { n, m })
                     .expect("detect_nm validated the pattern");
@@ -221,17 +350,21 @@ impl PackedLinear {
             PackedSparse::Dense(w) => w.nnz(),
             PackedSparse::Csr(c) => c.nnz(),
             PackedSparse::Bcsr(b) => b.nnz(),
+            PackedSparse::QBcsr(q) => q.nnz(),
             PackedSparse::Nm(n) => n.nnz(),
         };
         sparse + self.low_rank.as_ref().map_or(0, |lr| lr.params())
     }
 
-    /// Dense reconstruction (evaluation / re-serialization).
+    /// Dense reconstruction (evaluation / re-serialization). A QBcsr term
+    /// dequantizes — the round-off it carries is exactly what the plan gate
+    /// bounded at pack time.
     pub fn to_dense(&self) -> Matrix {
         let mut d = match &self.sparse {
             PackedSparse::Dense(w) => w.clone(),
             PackedSparse::Csr(c) => c.to_dense(),
             PackedSparse::Bcsr(b) => b.to_dense(),
+            PackedSparse::QBcsr(q) => q.to_dense(),
             PackedSparse::Nm(n) => n.to_dense(),
         };
         if let Some(lr) = &self.low_rank {
@@ -244,6 +377,7 @@ impl PackedLinear {
     pub fn forward(&self, x: &Matrix) -> Matrix {
         match &self.sparse {
             PackedSparse::Bcsr(b) => fused_matmul(b, self.low_rank.as_ref(), x),
+            PackedSparse::QBcsr(q) => quant::fused_matmul(q, self.low_rank.as_ref(), x),
             PackedSparse::Dense(w) => {
                 let mut out = crate::tensor::matmul_bt(x, w);
                 if let Some(lr) = &self.low_rank {
@@ -278,6 +412,7 @@ impl PackedLinear {
             }
             PackedSparse::Csr(c) => c.matvec(x, y),
             PackedSparse::Bcsr(b) => b.matvec(x, y),
+            PackedSparse::QBcsr(q) => q.matvec(x, y),
             PackedSparse::Nm(nm) => nm.matvec(x, y),
         }
         if let Some(lr) = &self.low_rank {
@@ -295,29 +430,29 @@ mod tests {
 
     #[test]
     fn plan_picks_dense_for_dense_layers() {
-        let p = KernelPlan::choose(128, 128, 128 * 128, None, 8);
+        let p = KernelPlan::choose(128, 128, 128 * 128, None, 8, None);
         assert_eq!(p.choice, KernelChoice::Dense);
-        let p = KernelPlan::choose(128, 128, (128 * 128 * 9) / 10, None, 8);
+        let p = KernelPlan::choose(128, 128, (128 * 128 * 9) / 10, None, 8, None);
         assert_eq!(p.choice, KernelChoice::Dense);
     }
 
     #[test]
     fn plan_picks_bcsr_for_large_sparse() {
-        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, None, 8);
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, None, 8, None);
         assert_eq!(p.choice, KernelChoice::Bcsr);
         assert!((p.density - 0.5).abs() < 1e-9);
     }
 
     #[test]
     fn plan_picks_csr_for_small_layers() {
-        let p = KernelPlan::choose(32, 32, 300, None, 8);
+        let p = KernelPlan::choose(32, 32, 300, None, 8, None);
         assert_eq!(p.choice, KernelChoice::Csr);
     }
 
     #[test]
     fn plan_picks_csr_for_single_stream_decode() {
         // Large + sparse, but batch 1: BCSR's batch amortization is gone.
-        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, None, 1);
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, None, 1, None);
         assert_eq!(p.choice, KernelChoice::Csr);
         assert_eq!(p.batch_hint, 1);
     }
@@ -325,11 +460,86 @@ mod tests {
     #[test]
     fn plan_prefers_nm_when_tight() {
         // Exactly 2:4-pruned layer: density 0.5, utilization 1.0.
-        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, Some(NmPattern::TWO_FOUR), 8);
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 2, Some(NmPattern::TWO_FOUR), 8, None);
         assert_eq!(p.choice, KernelChoice::Nm { n: 2, m: 4 });
         // 90 % sparse would waste slots: not N:M even though it validates.
-        let p = KernelPlan::choose(256, 256, 256 * 256 / 10, Some(NmPattern::TWO_FOUR), 8);
+        let p = KernelPlan::choose(256, 256, 256 * 256 / 10, Some(NmPattern::TWO_FOUR), 8, None);
         assert_eq!(p.choice, KernelChoice::Bcsr);
+    }
+
+    #[test]
+    fn plan_quant_gate_arbitrates_bcsr_upgrade() {
+        let nnz = 256 * 256 / 2;
+        // Within the bound: the BCSR plan upgrades to i8 tiles.
+        let ok = QuantGate { rel_error: 0.01, bound: QBCSR_MAX_REL_ERROR };
+        let p = KernelPlan::choose(256, 256, nnz, None, 8, Some(ok));
+        assert_eq!(p.choice, KernelChoice::QBcsr);
+        assert_eq!(p.quant_rel_error, Some(0.01));
+        // Over the bound: fall back to f32 BCSR, error still recorded.
+        let bad = QuantGate { rel_error: 0.2, bound: QBCSR_MAX_REL_ERROR };
+        let p = KernelPlan::choose(256, 256, nnz, None, 8, Some(bad));
+        assert_eq!(p.choice, KernelChoice::Bcsr);
+        assert_eq!(p.quant_rel_error, Some(0.2));
+        assert!(p.describe().contains("qerr"));
+        // The gate only applies to BCSR-planned layers: a small layer stays
+        // CSR even with a passing gate.
+        let p = KernelPlan::choose(32, 32, 300, None, 8, Some(ok));
+        assert_eq!(p.choice, KernelChoice::Csr);
+        assert_eq!(p.quant_rel_error, None);
+    }
+
+    #[test]
+    fn packed_quantized_upgrades_and_gates() {
+        // Well-behaved random weights quantize within the default bound.
+        let mut rng = Rng::new(12);
+        let w = random_sparse(128, 256, 0.45, &mut rng);
+        let q = PackedLinear::from_csr_with(&Csr::from_dense(&w), &PackOptions::quantized(8));
+        assert_eq!(q.plan.choice, KernelChoice::QBcsr);
+        assert!(q.plan.quant_rel_error.unwrap() <= QBCSR_MAX_REL_ERROR);
+        assert!(q.plan.describe().contains("qbcsr"));
+        assert_eq!(q.param_count(), w.nnz());
+
+        // Outlier-dominated weights trip the per-tile gate: one huge value
+        // makes the i8 step so coarse the 0.3s collapse to zero (see
+        // `prop::outlier_dominated`).
+        let w = crate::util::prop::outlier_dominated(128, 256);
+        let g = PackedLinear::from_csr_with(&Csr::from_dense(&w), &PackOptions::quantized(8));
+        assert_eq!(g.plan.choice, KernelChoice::Bcsr, "error gate must fall back to f32");
+        assert!(g.plan.quant_rel_error.unwrap() > QBCSR_MAX_REL_ERROR);
+
+        // Opt-out default never quantizes.
+        let w2 = random_sparse(128, 256, 0.45, &mut rng);
+        let p = PackedLinear::from_csr(&Csr::from_dense(&w2), 8);
+        assert_eq!(p.plan.choice, KernelChoice::Bcsr);
+        assert_eq!(p.plan.quant_rel_error, None);
+    }
+
+    #[test]
+    fn packed_quantized_forward_matches_dequantized_reference() {
+        let mut rng = Rng::new(13);
+        let s = random_sparse(200, 200, 0.6, &mut rng);
+        let spl = SparsePlusLowRank {
+            sparse: Csr::from_dense(&s),
+            low_rank: Some(LowRank {
+                u: Matrix::randn(200, 8, 0.3, &mut rng),
+                vt: Matrix::randn(8, 200, 0.3, &mut rng),
+            }),
+        };
+        let packed = PackedLinear::from_spl_with(&spl, &PackOptions::quantized(6));
+        assert_eq!(packed.plan.choice, KernelChoice::QBcsr);
+        let x = Matrix::randn(6, 200, 1.0, &mut rng);
+        // The kernel must reproduce dense math on its OWN dequantized
+        // weights exactly (quantization error lives in the weights, not the
+        // kernel).
+        let want = crate::tensor::matmul_bt(&x, &packed.to_dense());
+        let got = packed.forward(&x);
+        assert!(got.fro_dist(&want) < 1e-3, "dist {}", got.fro_dist(&want));
+
+        let mut y = vec![0.0; 200];
+        packed.forward_vec(x.row(0), &mut y);
+        for (a, b) in y.iter().zip(got.row(0)) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
     }
 
     #[test]
@@ -409,7 +619,7 @@ mod tests {
 
     #[test]
     fn plan_describe_mentions_choice() {
-        let p = KernelPlan::choose(256, 256, 100, None, 8);
+        let p = KernelPlan::choose(256, 256, 100, None, 8, None);
         assert!(p.describe().contains("csr") || p.describe().contains("bcsr"));
     }
 }

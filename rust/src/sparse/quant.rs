@@ -1,0 +1,485 @@
+//! i8-quantized BCSR tiles: the first compression axis where the dispatch
+//! layer arbitrates an accuracy/speed trade-off instead of a pure layout
+//! choice.
+//!
+//! Each f32 BCSR tile is quantized **symmetrically at pack time**: one f32
+//! scale per tile (`scale = max|w| / 127`), values stored as `i8`
+//! (`w ≈ scale · q`). The on-disk checkpoint format is untouched —
+//! quantization happens when a layer is packed for serving, and
+//! dequantization recovers f32 values for re-serialization.
+//!
+//! The batched kernel mirrors [`Bcsr::fused_xt`]: Xᵀ panels, a b-wide
+//! contiguous inner axpy (auto-vectorizable — the `i8 → f32` widening and
+//! the multiply-add both run over a contiguous batch lane), and row tiles
+//! parallelized across threads. The per-tile scale is applied **once per
+//! tile** per output row: the raw `Σ q·x` partial accumulates unscaled in a
+//! tile-local buffer and one scaled axpy folds it into the row accumulator,
+//! so the hot loop never touches the scale.
+//!
+//! Accuracy is gated at plan time: [`QBcsr::max_tile_rel_error`] reports the
+//! worst per-tile relative Frobenius quantization error, and
+//! [`crate::sparse::KernelPlan::choose`] falls back to f32 BCSR when it
+//! exceeds the configured bound (outlier-dominated tiles quantize badly —
+//! exactly the regime OATS targets — so the gate matters in practice).
+
+use super::bcsr::Bcsr;
+use super::csr::Csr;
+use super::lowrank::LowRank;
+use crate::tensor::Matrix;
+use crate::util::threadpool::{parallel_for, SendPtr};
+
+/// One quantized tile: a local CSR with i8 values and a single f32 scale.
+#[derive(Clone, Debug, PartialEq)]
+struct QTile {
+    /// len = rows-in-tile + 1, offsets into `cols`/`values`.
+    indptr: Vec<u32>,
+    /// Column offsets relative to the tile's first column.
+    cols: Vec<u16>,
+    /// Symmetrically quantized values in [-127, 127].
+    values: Vec<i8>,
+    /// Dequantization scale: `w ≈ scale · q`. Zero for all-zero tiles.
+    scale: f32,
+}
+
+/// Block-compressed-sparse-row matrix with i8 tile values and per-tile f32
+/// scales, produced by quantizing a packed [`Bcsr`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QBcsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_tile: usize,
+    pub col_tile: usize,
+    /// Tiles in row-tile-major order: `tiles[rt * n_col_tiles + ct]`.
+    tiles: Vec<QTile>,
+    nnz: usize,
+    /// Worst per-tile relative Frobenius quantization error, measured at
+    /// pack time (the plan gate's input).
+    max_tile_rel_error: f64,
+}
+
+impl QBcsr {
+    /// Quantize a packed f32 BCSR matrix, tile by tile, measuring the
+    /// per-tile relative error as it goes.
+    pub fn quantize(b: &Bcsr) -> QBcsr {
+        let mut tiles = Vec::with_capacity(b.tiles().len());
+        let mut max_rel = 0.0f64;
+        for t in b.tiles() {
+            let max_abs = t.values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            let mut values = Vec::with_capacity(t.values.len());
+            let mut err2 = 0.0f64;
+            let mut norm2 = 0.0f64;
+            for &v in &t.values {
+                let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                let dq = q as f32 * scale;
+                err2 += f64::from(v - dq) * f64::from(v - dq);
+                norm2 += f64::from(v) * f64::from(v);
+                values.push(q);
+            }
+            if norm2 > 0.0 {
+                max_rel = max_rel.max((err2 / norm2).sqrt());
+            }
+            tiles.push(QTile { indptr: t.indptr.clone(), cols: t.cols.clone(), values, scale });
+        }
+        QBcsr {
+            rows: b.rows,
+            cols: b.cols,
+            row_tile: b.row_tile,
+            col_tile: b.col_tile,
+            tiles,
+            nnz: b.nnz(),
+            max_tile_rel_error: max_rel,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Fraction of entries that are zero.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Worst per-tile relative Frobenius quantization error
+    /// `‖w − scale·q‖_F / ‖w‖_F`, measured at pack time.
+    pub fn max_tile_rel_error(&self) -> f64 {
+        self.max_tile_rel_error
+    }
+
+    /// In-memory footprint (indptr + u16 column offsets + i8 values + one
+    /// f32 scale per tile) — compare against [`Bcsr::memory_bytes`].
+    pub fn memory_bytes(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| 4 * t.indptr.len() + 2 * t.cols.len() + t.values.len() + 4)
+            .sum()
+    }
+
+    fn n_col_tiles(&self) -> usize {
+        self.cols.div_ceil(self.col_tile).max(1)
+    }
+
+    fn n_row_tiles(&self) -> usize {
+        self.rows.div_ceil(self.row_tile).max(1)
+    }
+
+    /// Dense dequantized reconstruction.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let n_ct = self.n_col_tiles();
+        for rt in 0..self.n_row_tiles() {
+            let r0 = rt * self.row_tile;
+            let r1 = (r0 + self.row_tile).min(self.rows);
+            for ct in 0..n_ct {
+                let c0 = ct * self.col_tile;
+                let tile = &self.tiles[rt * n_ct + ct];
+                for (lr, r) in (r0..r1).enumerate() {
+                    for i in tile.indptr[lr] as usize..tile.indptr[lr + 1] as usize {
+                        let v = tile.values[i] as f32 * tile.scale;
+                        m.data[r * self.cols + c0 + tile.cols[i] as usize] = v;
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Dequantized portable CSR view (re-serialization path — the on-disk
+    /// format never stores i8). Structure matches the source BCSR exactly;
+    /// values carry the quantization round-off.
+    ///
+    /// Note: nonzeros whose i8 value rounded to 0 are kept as explicit 0.0
+    /// entries so the sparsity structure (and `nnz` accounting) is
+    /// preserved through a save/load round-trip.
+    pub fn to_csr(&self) -> Csr {
+        let n_ct = self.n_col_tiles();
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::with_capacity(self.nnz);
+        let mut values = Vec::with_capacity(self.nnz);
+        indptr.push(0u32);
+        for rt in 0..self.n_row_tiles() {
+            let r0 = rt * self.row_tile;
+            let r1 = (r0 + self.row_tile).min(self.rows);
+            for lr in 0..(r1 - r0) {
+                for ct in 0..n_ct {
+                    let c0 = (ct * self.col_tile) as u32;
+                    let tile = &self.tiles[rt * n_ct + ct];
+                    let lo = tile.indptr[lr] as usize;
+                    let hi = tile.indptr[lr + 1] as usize;
+                    for i in lo..hi {
+                        indices.push(c0 + tile.cols[i] as u32);
+                        values.push(tile.values[i] as f32 * tile.scale);
+                    }
+                }
+                indptr.push(indices.len() as u32);
+            }
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// y = A·x — scalar per-row kernel for the single-token decode path.
+    /// The raw `Σ q·x` partial per (row, tile) is scaled once on fold-in.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let n_ct = self.n_col_tiles();
+        for rt in 0..self.n_row_tiles() {
+            let r0 = rt * self.row_tile;
+            let r1 = (r0 + self.row_tile).min(self.rows);
+            y[r0..r1].iter_mut().for_each(|v| *v = 0.0);
+            for ct in 0..n_ct {
+                let c0 = ct * self.col_tile;
+                let tile = &self.tiles[rt * n_ct + ct];
+                if tile.cols.is_empty() {
+                    continue;
+                }
+                let xs = &x[c0..];
+                for (lr, yv) in y[r0..r1].iter_mut().enumerate() {
+                    let lo = tile.indptr[lr] as usize;
+                    let hi = tile.indptr[lr + 1] as usize;
+                    let mut acc = 0.0f32;
+                    for i in lo..hi {
+                        acc += tile.values[i] as f32 * xs[tile.cols[i] as usize];
+                    }
+                    *yv += tile.scale * acc;
+                }
+            }
+        }
+    }
+
+    /// C = X · Aᵀ for activations X [b × cols] — the tiled batched kernel.
+    pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols, "qbcsr matmul_xt dim mismatch");
+        let xt = x.transpose();
+        let mut out = Matrix::zeros(x.rows, self.rows);
+        self.fused_xt(&xt, None, &mut out);
+        out
+    }
+
+    /// Core fused kernel: writes `out[b × rows] = X·Aᵀ (+ (X·Vtᵀ)·Uᵀ)`,
+    /// mirroring [`Bcsr::fused_xt`]. The inner b-wide axpy accumulates the
+    /// raw i8 partials in f32; the per-tile scale is applied once per
+    /// (row, tile) when the partial folds into the row accumulator. The
+    /// low-rank term stays f32 end to end.
+    pub(crate) fn fused_xt(
+        &self,
+        xt: &Matrix,
+        low_rank: Option<(&Matrix, &Matrix)>,
+        out: &mut Matrix,
+    ) {
+        let b = xt.cols;
+        assert_eq!(xt.rows, self.cols, "fused_xt: xt must be [cols × b]");
+        assert_eq!((out.rows, out.cols), (b, self.rows), "fused_xt: out must be [b × rows]");
+        if let Some((u, t)) = low_rank {
+            assert_eq!((u.rows, u.cols), (self.rows, t.rows), "fused_xt: U shape");
+            assert_eq!(t.cols, b, "fused_xt: T shape");
+        }
+        let n_ct = self.n_col_tiles();
+        let n_rt = self.n_row_tiles();
+        let threads = if b * self.nnz >= (1 << 20) {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            1
+        };
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let n_out = self.rows;
+        parallel_for(threads, n_rt, |rt| {
+            let r0 = rt * self.row_tile;
+            let r1 = (r0 + self.row_tile).min(self.rows);
+            let tr = r1 - r0;
+            // Row accumulator [tr × b] plus one b-wide unscaled partial,
+            // both cache-resident across column tiles.
+            let mut acc = vec![0.0f32; tr * b];
+            let mut raw = vec![0.0f32; b];
+            for ct in 0..n_ct {
+                let c0 = ct * self.col_tile;
+                let tile = &self.tiles[rt * n_ct + ct];
+                if tile.cols.is_empty() {
+                    continue;
+                }
+                let scale = tile.scale;
+                for lr in 0..tr {
+                    let lo = tile.indptr[lr] as usize;
+                    let hi = tile.indptr[lr + 1] as usize;
+                    if lo == hi {
+                        continue;
+                    }
+                    raw.iter_mut().for_each(|v| *v = 0.0);
+                    for i in lo..hi {
+                        let v = tile.values[i] as f32;
+                        let xrow = xt.row(c0 + tile.cols[i] as usize);
+                        // b-wide contiguous axpy on the raw i8 partial —
+                        // the vectorizable inner loop.
+                        for (a, &xv) in raw.iter_mut().zip(xrow) {
+                            *a += v * xv;
+                        }
+                    }
+                    // One scaled fold-in per (row, tile).
+                    let arow = &mut acc[lr * b..(lr + 1) * b];
+                    for (a, &rv) in arow.iter_mut().zip(raw.iter()) {
+                        *a += scale * rv;
+                    }
+                }
+            }
+            if let Some((u, t)) = low_rank {
+                // acc[lr, ·] += Σ_j U[r0+lr, j] · T[j, ·] — f32 throughout.
+                for lr in 0..tr {
+                    let urow = u.row(r0 + lr);
+                    let arow = &mut acc[lr * b..(lr + 1) * b];
+                    for (j, &uv) in urow.iter().enumerate() {
+                        let trow = t.row(j);
+                        for (a, &tv) in arow.iter_mut().zip(trow) {
+                            *a += uv * tv;
+                        }
+                    }
+                }
+            }
+            // Scatter the tile back to the [b × rows] output layout.
+            let op = out_ptr;
+            for lr in 0..tr {
+                for (bi, &av) in acc[lr * b..(lr + 1) * b].iter().enumerate() {
+                    // SAFETY: row tiles own disjoint column ranges of `out`,
+                    // so every (bi, r0+lr) address is written by exactly one
+                    // worker.
+                    unsafe { *op.0.add(bi * n_out + r0 + lr) = av };
+                }
+            }
+        });
+    }
+}
+
+/// Fused quantized sparse-plus-low-rank product
+/// `C = X·Sᵀ + X·(U·Vt)ᵀ` over a pre-quantized sparse term — the QBcsr
+/// counterpart of [`super::spl::fused_matmul`]. The rank-space projection
+/// `T = Vt·Xᵀ` is computed once in f32; only the sparse tiles are i8.
+pub fn fused_matmul(sparse: &QBcsr, low_rank: Option<&LowRank>, x: &Matrix) -> Matrix {
+    assert_eq!(x.cols, sparse.cols, "quant fused_matmul dim mismatch");
+    let xt = x.transpose();
+    let mut out = Matrix::zeros(x.rows, sparse.rows);
+    match low_rank {
+        Some(lr) => {
+            let t = crate::tensor::matmul(&lr.vt, &xt);
+            sparse.fused_xt(&xt, Some((&lr.u, &t)), &mut out);
+        }
+        None => sparse.fused_xt(&xt, None, &mut out),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_bt;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, random_sparse};
+
+    #[test]
+    fn quantize_roundtrip_error_is_bounded() {
+        // Symmetric i8 quantization: per-element error ≤ scale/2 =
+        // max|w|/254 within each tile.
+        check("qbcsr dequant error bound", 25, |g| {
+            let rows = g.usize_range(1, 150);
+            let cols = g.usize_range(1, 150);
+            let rt = *g.choose(&[1usize, 8, 64]);
+            let ct = *g.choose(&[8usize, 64, 512]);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let m = random_sparse(rows, cols, 0.6, &mut rng);
+            let q = QBcsr::quantize(&Bcsr::from_dense_tiled(&m, rt, ct));
+            assert_eq!(q.nnz(), m.nnz());
+            let wmax = m.data.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            let dq = q.to_dense();
+            for (a, b) in dq.data.iter().zip(&m.data) {
+                assert!((a - b).abs() <= wmax / 254.0 + 1e-6, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn exactly_representable_values_quantize_losslessly() {
+        // values in {-1, 0, 1} map onto q ∈ {-127, 0, 127} exactly.
+        let mut m = Matrix::zeros(40, 30);
+        let mut rng = Rng::new(7);
+        for v in &mut m.data {
+            *v = [0.0f32, 1.0, -1.0][rng.below(3)];
+        }
+        let q = QBcsr::quantize(&Bcsr::from_dense_tiled(&m, 16, 16));
+        assert_eq!(q.to_dense(), m);
+        assert_eq!(q.max_tile_rel_error(), 0.0);
+    }
+
+    #[test]
+    fn qbcsr_matvec_matches_dequantized_dense() {
+        check("qbcsr matvec == dequant dense", 20, |g| {
+            let rows = g.usize_range(1, 120);
+            let cols = g.usize_range(1, 120);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let m = random_sparse(rows, cols, 0.55, &mut rng);
+            let q = QBcsr::quantize(&Bcsr::from_dense_tiled(&m, 16, 32));
+            let x = g.vec_normal(cols, 1.0);
+            let mut y = vec![0.0; rows];
+            q.matvec(&x, &mut y);
+            let want = crate::tensor::matvec(&q.to_dense(), &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn qbcsr_matmul_xt_matches_dequantized_dense_prop() {
+        check("qbcsr matmul_xt == dequant dense", 20, |g| {
+            let rows = g.usize_range(1, 120);
+            let cols = g.usize_range(1, 120);
+            let b = g.usize_range(1, 10);
+            let rt = *g.choose(&[1usize, 8, 64]);
+            let ct = *g.choose(&[8usize, 64, 512]);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 20) as u64);
+            let m = random_sparse(rows, cols, 0.6, &mut rng);
+            let x = Matrix::randn(b, cols, 1.0, &mut rng);
+            let q = QBcsr::quantize(&Bcsr::from_dense_tiled(&m, rt, ct));
+            let got = q.matmul_xt(&x);
+            let want = matmul_bt(&x, &q.to_dense());
+            assert!(got.fro_dist(&want) < 1e-3, "dist {}", got.fro_dist(&want));
+        });
+    }
+
+    #[test]
+    fn qbcsr_parallel_path_matches_serial() {
+        // Big enough that b·nnz crosses the threading threshold.
+        let mut rng = Rng::new(9);
+        let m = random_sparse(600, 600, 0.5, &mut rng);
+        let x = Matrix::randn(8, 600, 1.0, &mut rng);
+        let q = QBcsr::quantize(&Bcsr::from_dense(&m));
+        let got = q.matmul_xt(&x);
+        let want = matmul_bt(&x, &q.to_dense());
+        assert!(got.fro_dist(&want) < 1e-2, "dist {}", got.fro_dist(&want));
+    }
+
+    #[test]
+    fn fused_quant_matches_unfused_reference() {
+        let mut rng = Rng::new(11);
+        let m = random_sparse(90, 70, 0.6, &mut rng);
+        let lr = LowRank {
+            u: Matrix::randn(90, 4, 0.3, &mut rng),
+            vt: Matrix::randn(4, 70, 0.3, &mut rng),
+        };
+        let x = Matrix::randn(5, 70, 1.0, &mut rng);
+        let q = QBcsr::quantize(&Bcsr::from_dense_tiled(&m, 16, 32));
+        let got = fused_matmul(&q, Some(&lr), &x);
+        let mut want = matmul_bt(&x, &q.to_dense());
+        lr.apply_batch_accumulate(&x, &mut want);
+        assert!(got.fro_dist(&want) < 1e-3, "dist {}", got.fro_dist(&want));
+    }
+
+    #[test]
+    fn all_zero_matrix_quantizes_cleanly() {
+        let z = Matrix::zeros(20, 20);
+        let q = QBcsr::quantize(&Bcsr::from_dense(&z));
+        assert_eq!(q.nnz(), 0);
+        assert_eq!(q.max_tile_rel_error(), 0.0);
+        let x = Matrix::randn(3, 20, 1.0, &mut Rng::new(1));
+        assert_eq!(q.matmul_xt(&x), Matrix::zeros(3, 20));
+        assert_eq!(q.to_dense(), z);
+    }
+
+    #[test]
+    fn to_csr_preserves_structure() {
+        let mut rng = Rng::new(4);
+        let m = random_sparse(70, 45, 0.7, &mut rng);
+        let bcsr = Bcsr::from_dense(&m);
+        let q = QBcsr::quantize(&bcsr);
+        let csr = q.to_csr();
+        assert_eq!(csr.nnz(), m.nnz());
+        assert!(csr.to_dense().fro_dist(&q.to_dense()) < 1e-12);
+    }
+
+    #[test]
+    fn quantized_footprint_is_smaller() {
+        let mut rng = Rng::new(5);
+        let m = random_sparse(256, 256, 0.5, &mut rng);
+        let bcsr = Bcsr::from_dense(&m);
+        let q = QBcsr::quantize(&bcsr);
+        // 6 B/nnz (f32 value + u16 offset) → 3 B/nnz: comfortably below.
+        assert!(
+            (q.memory_bytes() as f64) < (bcsr.memory_bytes() as f64) * 0.75,
+            "qbcsr {} !< bcsr {}",
+            q.memory_bytes(),
+            bcsr.memory_bytes()
+        );
+    }
+
+    #[test]
+    fn outlier_dominated_tile_reports_large_error() {
+        // One huge value forces the i8 step so large the small values all
+        // collapse to zero — the regime the plan gate protects against.
+        let m = crate::util::prop::outlier_dominated(64, 64);
+        let q = QBcsr::quantize(&Bcsr::from_dense(&m));
+        assert!(
+            q.max_tile_rel_error() > 0.1,
+            "outlier tile error {}",
+            q.max_tile_rel_error()
+        );
+    }
+}

@@ -144,7 +144,8 @@ const PAR_GEMM_MIN_FLOPS: usize = 1 << 22;
 
 /// C = A · B, blocked and multithreaded over row stripes of A.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (ar, ac) = (a.rows, a.cols);
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch: {ar}x{ac} · {}x{}", b.rows, b.cols);
     let mut c = Matrix::zeros(a.rows, b.cols);
     let flops = a.rows * a.cols * b.cols;
     let threads = if flops >= PAR_GEMM_MIN_FLOPS {
@@ -407,7 +408,8 @@ mod tests {
                     for p in 0..k {
                         acc += a.at(i, p) * b.at(p, j);
                     }
-                    assert!((c.at(i, j) - acc).abs() < 1e-3, "({i},{j}): {} vs {}", c.at(i, j), acc);
+                    let got = c.at(i, j);
+                    assert!((got - acc).abs() < 1e-3, "({i},{j}): {got} vs {acc}");
                 }
             }
         });

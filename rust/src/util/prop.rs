@@ -31,6 +31,25 @@ pub fn random_sparse(rows: usize, cols: usize, sparsity: f64, rng: &mut Rng) -> 
     m
 }
 
+/// A weight matrix whose first tile is dominated by one huge value in a sea
+/// of small ones (2 of 3 columns at 0.3, plus a single 127.0 at (0, 1)):
+/// the symmetric-i8 step collapses the small values to zero, so the
+/// per-tile relative quantization error is large. This is the fixture the
+/// QBcsr plan-gate tests share; the 2-of-3 column pattern also defeats the
+/// 2:4 / 2:8 probes, keeping the base plan BCSR. Requires `cols ≥ 2`.
+pub fn outlier_dominated(rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c % 3 != 0 {
+                *m.at_mut(r, c) = 0.3;
+            }
+        }
+    }
+    *m.at_mut(0, 1) = 127.0;
+    m
+}
+
 /// Value generator handed to each property case.
 pub struct Gen {
     rng: Rng,

@@ -149,8 +149,9 @@ impl Vit {
             let patches = self.patchify(px);
             let proj = tensor::matmul_bt(&patches, &self.patch_proj); // [P × d]
             // CLS at position 0
+            let cls_emb = self.cls_token.iter().zip(self.pos_emb.row(0));
             let cls_row = h.row_mut(b * t);
-            for (o, (&c, &p)) in cls_row.iter_mut().zip(self.cls_token.iter().zip(self.pos_emb.row(0))) {
+            for (o, (&c, &p)) in cls_row.iter_mut().zip(cls_emb) {
                 *o = c + p;
             }
             for p in 0..patches.rows {

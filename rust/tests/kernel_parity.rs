@@ -3,12 +3,17 @@
 //! dense reference to within 1e-4, across random shapes, sparsities, tile
 //! geometries, batch sizes, and ranks. This is the gate that lets the
 //! dispatch layer pick formats freely without touching model outputs.
+//!
+//! The i8-quantized tiles (QBcsr) carry a two-part contract instead: exact
+//! (1e-4) parity against dense math on their own dequantized weights, plus
+//! analytic quantization-error bounds against the original f32 weights.
 
 use oats::compress::threshold::hard_threshold;
 use oats::config::SparsityPattern;
 use oats::sparse::{
     Bcsr, Csr, KernelChoice, LowRank, NmPacked, NmPattern, PackedLinear, SparsePlusLowRank,
 };
+use oats::sparse::{PackOptions, QBcsr};
 use oats::tensor::{matmul_bt, matvec, Matrix};
 use oats::util::prng::Rng;
 use oats::util::prop::{check, random_sparse};
@@ -94,6 +99,139 @@ fn fused_spl_parity_prop() {
         assert_close("spl fused", &spl.matmul_fused(&x), &want);
         assert_close("spl unfused", &spl.apply_batch(&x), &want);
     });
+}
+
+#[test]
+fn qbcsr_parity_within_quantization_tolerance_prop() {
+    // Two contracts for the i8 kernel. (1) Kernel exactness: it must
+    // reproduce dense math on its OWN dequantized weights to the shared
+    // kernel tolerance — quantization error lives in the weights, never in
+    // the kernel. (2) Quantization tolerance vs the ORIGINAL weights:
+    // symmetric i8 rounds each weight by at most half a step
+    // (max|w| / 254), so per output element the error is bounded by
+    // (max|w| / 254) · ‖x_row‖₁ (max-abs bound), and globally by a small
+    // relative-Frobenius fraction for well-scaled weights.
+    check("qbcsr ≈ dense within quant tolerance", 30, |g| {
+        let rows = g.usize_range(1, 160);
+        let cols = g.usize_range(1, 160);
+        let batch = g.usize_range(1, 10);
+        let sparsity = g.f64_unit();
+        let rt = *g.choose(&[1usize, 8, 64]);
+        let ct = *g.choose(&[8usize, 64, 512]);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 24) as u64);
+        let w = random_sparse(rows, cols, sparsity, &mut rng);
+        let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+        let q = QBcsr::quantize(&Bcsr::from_dense_tiled(&w, rt, ct));
+        let got = q.matmul_xt(&x);
+
+        // (1) exact kernel contract on dequantized weights.
+        assert_close("qbcsr vs dequantized dense", &got, &matmul_bt(&x, &q.to_dense()));
+
+        // (2a) max-abs quantization bound vs the original weights.
+        let want = matmul_bt(&x, &w);
+        let wmax = w.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for bi in 0..batch {
+            let l1: f32 = x.row(bi).iter().map(|v| v.abs()).sum();
+            let bound = wmax / 254.0 * l1 + 1e-3;
+            for (gv, wv) in got.row(bi).iter().zip(want.row(bi)) {
+                assert!(
+                    (gv - wv).abs() <= bound,
+                    "qbcsr row {bi}: {gv} vs {wv} (bound {bound})"
+                );
+            }
+        }
+        // (2b) relative-Frobenius bound at layer-like sizes, where the
+        // output norm concentrates (N(0,1) weights quantize to ~1%
+        // relative error; 5% leaves ample margin). Tiny shapes can have a
+        // near-zero output norm by chance and are already covered by the
+        // rigorous max-abs bound above.
+        if rows * cols >= 1024 {
+            let dist = got.fro_dist(&want);
+            assert!(
+                dist <= 0.05 * want.fro_norm() + 1e-3,
+                "qbcsr rel-frobenius drift: {dist} vs ‖want‖ {}",
+                want.fro_norm()
+            );
+        }
+    });
+}
+
+#[test]
+fn bcsr_family_degenerate_cases() {
+    // All-zero tiles, single-column tiles, and batch = 1, for both the f32
+    // and the i8 tile formats.
+    let mut rng = Rng::new(31);
+
+    // All-zero matrix (every tile empty).
+    let z = Matrix::zeros(100, 90);
+    let x1 = Matrix::randn(1, 90, 1.0, &mut rng);
+    let bz = Bcsr::from_dense_tiled(&z, 16, 8);
+    let qz = QBcsr::quantize(&bz);
+    assert_eq!(bz.matmul_xt(&x1), Matrix::zeros(1, 100));
+    assert_eq!(qz.matmul_xt(&x1), Matrix::zeros(1, 100));
+    assert_eq!(qz.nnz(), 0);
+    assert_eq!(qz.max_tile_rel_error(), 0.0);
+
+    // Mostly-empty tiling: nonzeros confined to the top-left 32×32 corner
+    // of a 128×128 matrix under 64×64 tiles — three of four tiles empty.
+    let mut corner = Matrix::zeros(128, 128);
+    for r in 0..32 {
+        for c in 0..32 {
+            if (r + c) % 3 != 0 {
+                *corner.at_mut(r, c) = rng.normal();
+            }
+        }
+    }
+    let bc = Bcsr::from_dense_tiled(&corner, 64, 64);
+    let qc = QBcsr::quantize(&bc);
+    for batch in [1usize, 5] {
+        let x = Matrix::randn(batch, 128, 1.0, &mut rng);
+        let want = matmul_bt(&x, &corner);
+        assert_close("bcsr corner", &bc.matmul_xt(&x), &want);
+        assert_close("qbcsr corner", &qc.matmul_xt(&x), &matmul_bt(&x, &qc.to_dense()));
+    }
+
+    // Single-column tiles (col_tile = 1) and a single-column matrix.
+    let skinny = random_sparse(40, 1, 0.4, &mut rng);
+    let wide = random_sparse(30, 50, 0.5, &mut rng);
+    for (label, m, ct) in [("1-col matrix", &skinny, 1usize), ("1-col tiles", &wide, 1)] {
+        let b = Bcsr::from_dense_tiled(m, 4, ct);
+        let q = QBcsr::quantize(&b);
+        for batch in [1usize, 3] {
+            let x = Matrix::randn(batch, m.cols, 1.0, &mut rng);
+            assert_close(label, &b.matmul_xt(&x), &matmul_bt(&x, m));
+            assert_close(label, &q.matmul_xt(&x), &matmul_bt(&x, &q.to_dense()));
+        }
+        let xv: Vec<f32> = (0..m.cols).map(|i| (i as f32).cos()).collect();
+        let mut y1 = vec![0.0f32; m.rows];
+        let mut y2 = vec![0.0f32; m.rows];
+        b.matvec(&xv, &mut y1);
+        q.matvec(&xv, &mut y2);
+        let want_b = matvec(m, &xv);
+        let want_q = matvec(&q.to_dense(), &xv);
+        for ((a, wb), (bq, wq)) in y1.iter().zip(&want_b).zip(y2.iter().zip(&want_q)) {
+            assert!((a - wb).abs() <= TOL * wb.abs().max(1.0), "{label} f32: {a} vs {wb}");
+            assert!((bq - wq).abs() <= TOL * wq.abs().max(1.0), "{label} i8: {bq} vs {wq}");
+        }
+    }
+}
+
+#[test]
+fn quantized_packed_linear_respects_error_gate() {
+    // The dispatch layer's accuracy arbitration, end to end: well-behaved
+    // weights upgrade to i8 tiles; an outlier-dominated tile trips the
+    // per-tile gate and the plan falls back to f32 BCSR.
+    let mut rng = Rng::new(77);
+    let w = random_sparse(128, 256, 0.45, &mut rng);
+    let p = PackedLinear::from_csr_with(&Csr::from_dense(&w), &PackOptions::quantized(8));
+    assert_eq!(p.plan.choice, KernelChoice::QBcsr);
+    let x = Matrix::randn(8, 256, 1.0, &mut rng);
+    assert_close("qbcsr packed", &p.forward(&x), &matmul_bt(&x, &p.to_dense()));
+
+    let outlier = oats::util::prop::outlier_dominated(128, 256);
+    let g = PackedLinear::from_csr_with(&Csr::from_dense(&outlier), &PackOptions::quantized(8));
+    assert_eq!(g.plan.choice, KernelChoice::Bcsr, "gate must reject outlier tiles");
+    assert_close("gated f32 fallback", &g.forward(&x), &matmul_bt(&x, &outlier));
 }
 
 #[test]

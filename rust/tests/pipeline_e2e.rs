@@ -113,12 +113,55 @@ fn serving_engine_runs_compressed_model() {
             gen_tokens: 4,
             workers: 2,
             prepack: true,
+            quantize: false,
         },
         (0..12).map(|i| vec![i % 16, 2, 3]).collect(),
     );
     assert_eq!(stats.n_requests, 12);
     assert_eq!(stats.tokens_generated, 48);
     assert!(stats.tokens_per_second() > 0.0);
+}
+
+#[test]
+fn quantized_serving_matches_direct_quantized_decode() {
+    // Opting the server into i8 BCSR tiles must reproduce direct batched
+    // decode through the same quantized kernels exactly (per-sequence
+    // results are independent of how the dynamic batcher groups requests),
+    // and at least one layer must actually carry a QBcsr plan.
+    let (model, _, calib) = setup();
+    let cfg = CompressConfig {
+        method: Method::Oats,
+        rate: 0.4,
+        rank_ratio: 0.25,
+        iters: 4,
+        ..Default::default()
+    };
+    let (cm, _) = compress_clone(&model, &calib, &cfg, 4).unwrap();
+    let opts = oats::sparse::PackOptions::quantized(4);
+    let packed = cm.packed_for_serving_with(&opts);
+    let n_q = packed
+        .kernel_plans()
+        .iter()
+        .filter(|(_, p)| p.choice == oats::sparse::KernelChoice::QBcsr)
+        .count();
+    assert!(n_q > 0, "no layer upgraded to qbcsr: {:?}", packed.kernel_plans());
+
+    let prompts: Vec<Vec<usize>> = (0..6).map(|i| vec![i % 16, 2, 3]).collect();
+    let scfg = oats::coordinator::serve::ServeConfig {
+        max_batch: 4,
+        gen_tokens: 5,
+        quantize: true,
+        ..Default::default()
+    };
+    let server = oats::coordinator::serve::Server::start(Arc::new(cm), scfg);
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| server.submit(i as u64, p.clone()))
+        .collect();
+    let got: Vec<Vec<usize>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+    let want = oats::coordinator::serve::generate_batch(&packed, &prompts, 5, 1);
+    assert_eq!(got, want);
 }
 
 #[test]

@@ -32,7 +32,12 @@ fn tiny_model(seed: u64) -> TransformerLM {
     TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), seed)
 }
 
-fn run_lm_fwd(engine: &mut Engine, artifact: &str, model: &TransformerLM, tokens: &[Vec<usize>]) -> Matrix {
+fn run_lm_fwd(
+    engine: &mut Engine,
+    artifact: &str,
+    model: &TransformerLM,
+    tokens: &[Vec<usize>],
+) -> Matrix {
     let tensors = io::flatten(model);
     let mut args = runtime::literals_from_tensors(&tensors).unwrap();
     args.push(runtime::literal_from_tokens(tokens).unwrap());
