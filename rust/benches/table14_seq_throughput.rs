@@ -1,47 +1,60 @@
 //! Table 14 bench: long-sequence generation throughput — the regime where
 //! compute (not weight bandwidth) dominates and the OATS/unstructured gap
-//! narrows, as in the paper's 256-token appendix experiment.
+//! narrows, as in the paper's 256-token appendix experiment. Emits
+//! `BENCH_table14.json` (`oats-bench-v1`): one result per (ρ, method)
+//! cell with tokens/s throughput plus `*_vs_dense` speedup comparisons.
 //!
-//! Run: `cargo bench --bench table14_seq_throughput`
+//! Run: `cargo bench --bench table14_seq_throughput [-- --quick]`
 
+use oats::bench::{quick_mode, Bench};
 use oats::calib::CalibSet;
 use oats::config::{CompressConfig, Method, ModelConfig};
 use oats::coordinator::pipeline::compress_clone;
 use oats::data::{CorpusConfig, SyntheticCorpus};
-use oats::experiments::speed::sequence_throughput;
+use oats::experiments::speed::sequence_walltime;
 use oats::model::TransformerLM;
 use oats::report::{speedup, Table};
 
 fn main() {
-    let cfg = ModelConfig::preset("small").unwrap();
+    let quick = quick_mode();
+    let preset = if quick { "tiny" } else { "small" };
+    let cfg = ModelConfig::preset(preset).unwrap();
     let model = TransformerLM::init(&cfg, 7);
     let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 1));
     let calib = CalibSet::sample(&corpus, 8, 32, 8);
-    let seq = cfg.seq_len - 4;
+    let seq = if quick { cfg.seq_len / 2 } else { cfg.seq_len - 4 };
 
+    let mut b = Bench::from_env();
     let mut t = Table::new(
-        "Table 14 (bench) — long-sequence throughput, 'small' preset",
+        &format!("Table 14 (bench) — long-sequence throughput, '{preset}' preset"),
         &["Compression", "Method", "tokens/s", "Speedup"],
     );
-    let dense_tp = sequence_throughput(&model, seq);
+    let (dense_s, dense_n) = sequence_walltime(&model, seq);
+    b.record_sample("t14/dense", dense_s, Some(dense_n as f64));
+    let dense_tp = dense_n as f64 / dense_s;
     t.row(vec!["0%".into(), "Dense".into(), format!("{dense_tp:.1}"), speedup(1.0)]);
 
     for rate in [0.3, 0.4, 0.5] {
-        for (method, kappa, label) in [
-            (Method::Wanda, 0.0, "Unstructured"),
-            (Method::Oats, 0.25, "OATS"),
+        for (method, kappa, label, tag) in [
+            (Method::Wanda, 0.0, "Unstructured", "unstructured"),
+            (Method::Oats, 0.25, "OATS", "oats"),
         ] {
             let cc = CompressConfig {
                 method,
                 rate,
                 rank_ratio: kappa,
-                iters: 8,
+                iters: if quick { 4 } else { 8 },
                 ..Default::default()
             };
             let (cm, _) = compress_clone(&model, &calib, &cc, 6).unwrap();
-            let tp = sequence_throughput(&cm, seq);
+            let (secs, n) = sequence_walltime(&cm, seq);
+            let pct = (rate * 100.0) as u64;
+            let name = format!("t14/{tag}@{pct}pct");
+            b.record_sample(&name, secs, Some(n as f64));
+            b.compare(&format!("t14_{tag}_{pct}pct_vs_dense"), "t14/dense", &name);
+            let tp = n as f64 / secs;
             t.row(vec![
-                format!("{}%", (rate * 100.0) as u64),
+                format!("{pct}%"),
                 label.into(),
                 format!("{tp:.1}"),
                 speedup(tp / dense_tp),
@@ -49,4 +62,5 @@ fn main() {
         }
     }
     t.print();
+    b.write_json("table14").expect("bench json");
 }

@@ -1,49 +1,65 @@
 //! Table 7 bench: single-token CPU serving throughput — dense vs
-//! unstructured pruning vs OATS, at ρ ∈ {0.3, 0.4, 0.5}.
+//! unstructured pruning vs OATS, at ρ ∈ {0.3, 0.4, 0.5} — through the
+//! continuous-batching serve engine.
 //!
 //! Weight *values* don't affect kernel speed, so this bench compresses a
-//! randomly-initialized `small` model (no training required) and measures
-//! the KV-cached decode loop through the serving engine.
+//! randomly-initialized model (no training required) and measures the
+//! KV-cached decode loop through the serving engine. Results are emitted
+//! as `BENCH_table7.json` (`oats-bench-v1`): one result per (ρ, method)
+//! cell with tokens/s throughput, plus `*_vs_dense` speedup comparisons,
+//! so serve-perf history accumulates alongside the micro-bench JSON.
 //!
-//! Run: `cargo bench --bench table7_throughput`
+//! Run: `cargo bench --bench table7_throughput [-- --quick]`
 
+use oats::bench::{quick_mode, Bench};
 use oats::calib::CalibSet;
 use oats::config::{CompressConfig, Method, ModelConfig};
 use oats::coordinator::pipeline::compress_clone;
 use oats::data::{CorpusConfig, SyntheticCorpus};
-use oats::experiments::speed::decode_throughput;
+use oats::experiments::speed::decode_stats;
 use oats::model::TransformerLM;
 use oats::report::{speedup, Table};
 
 fn main() {
-    let cfg = ModelConfig::preset("small").unwrap();
+    let quick = quick_mode();
+    let preset = if quick { "tiny" } else { "small" };
+    let (n_req, gen) = if quick { (16, 4) } else { (48, 4) };
+    let cfg = ModelConfig::preset(preset).unwrap();
     let model = TransformerLM::init(&cfg, 7);
     let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 1));
     let calib = CalibSet::sample(&corpus, 8, 32, 8);
 
+    let mut b = Bench::from_env();
     let mut t = Table::new(
-        "Table 7 (bench) — single-token throughput, 'small' preset",
+        &format!("Table 7 (bench) — single-token throughput, '{preset}' preset"),
         &["Compression", "Method", "tokens/s", "Speedup"],
     );
-    let dense_tp = decode_throughput(&model, 48, 4);
+    let dense = decode_stats(&model, n_req, gen);
+    b.record_sample("t7/dense", dense.wall_seconds, Some(dense.tokens_generated as f64));
+    let dense_tp = dense.tokens_per_second();
     t.row(vec!["0%".into(), "Dense".into(), format!("{dense_tp:.1}"), speedup(1.0)]);
 
     for rate in [0.3, 0.4, 0.5] {
-        for (method, kappa, label) in [
-            (Method::Wanda, 0.0, "Unstructured"),
-            (Method::Oats, 0.25, "OATS"),
+        for (method, kappa, label, tag) in [
+            (Method::Wanda, 0.0, "Unstructured", "unstructured"),
+            (Method::Oats, 0.25, "OATS", "oats"),
         ] {
             let cc = CompressConfig {
                 method,
                 rate,
                 rank_ratio: kappa,
-                iters: 8,
+                iters: if quick { 4 } else { 8 },
                 ..Default::default()
             };
             let (cm, _) = compress_clone(&model, &calib, &cc, 6).unwrap();
-            let tp = decode_throughput(&cm, 48, 4);
+            let stats = decode_stats(&cm, n_req, gen);
+            let pct = (rate * 100.0) as u64;
+            let name = format!("t7/{tag}@{pct}pct");
+            b.record_sample(&name, stats.wall_seconds, Some(stats.tokens_generated as f64));
+            b.compare(&format!("t7_{tag}_{pct}pct_vs_dense"), "t7/dense", &name);
+            let tp = stats.tokens_per_second();
             t.row(vec![
-                format!("{}%", (rate * 100.0) as u64),
+                format!("{pct}%"),
                 label.into(),
                 format!("{tp:.1}"),
                 speedup(tp / dense_tp),
@@ -51,4 +67,5 @@ fn main() {
         }
     }
     t.print();
+    b.write_json("table7").expect("bench json");
 }

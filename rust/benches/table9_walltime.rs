@@ -1,13 +1,28 @@
 //! Table 9 bench: wall-clock seconds per OATS alternating-thresholding
 //! iteration per transformer block, across the model presets (the paper's
 //! A40 numbers scale with d_out·d_in·r; ours must show the same scaling).
+//! Emits `BENCH_table9.json` (`oats-bench-v1`): one result per
+//! (preset, serial|parallel) cell plus `t9_<preset>_parallel_vs_serial`
+//! speedup comparisons.
 //!
-//! Run: `cargo bench --bench table9_walltime`
+//! Run: `cargo bench --bench table9_walltime [-- --quick]`
 
-use oats::experiments::speed::walltime_table;
+use oats::bench::{quick_mode, Bench};
+use oats::experiments::speed::{walltime_rows, walltime_table_from_rows};
 
 fn main() {
-    let t = walltime_table(false).unwrap();
-    t.print();
+    let quick = quick_mode();
+    let mut b = Bench::from_env();
+    // One measurement pass feeds both the paper-style table and the JSON.
+    let rows = walltime_rows(quick).unwrap();
+    for row in &rows {
+        let serial = format!("t9/{}/serial", row.preset);
+        let parallel = format!("t9/{}/parallel4", row.preset);
+        b.record_sample(&serial, row.serial_s_per_iter, None);
+        b.record_sample(&parallel, row.parallel_s_per_iter, None);
+        b.compare(&format!("t9_{}_parallel_vs_serial", row.preset), &serial, &parallel);
+    }
+    walltime_table_from_rows(&rows).print();
     println!("\nScaling check: s/iter should grow ~with d²·(d/16) across presets");
+    b.write_json("table9").expect("bench json");
 }

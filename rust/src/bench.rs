@@ -31,6 +31,7 @@ impl BenchResult {
             .set("mean_s", json::num(self.summary.mean))
             .set("p50_s", json::num(self.summary.p50))
             .set("p95_s", json::num(self.summary.p95))
+            .set("p99_s", json::num(self.summary.p99))
             .set("min_s", json::num(self.summary.min))
             .set("max_s", json::num(self.summary.max))
             .set("samples", json::num(self.summary.n as f64));
@@ -106,15 +107,9 @@ impl Bench {
         Bench { warmup_iters: 1, samples: 5, max_seconds: 10.0, ..Default::default() }
     }
 
-    /// `quick()` when `--quick` was passed (CI bench-smoke mode:
-    /// `cargo bench --bench micro -- --quick`) or `$OATS_BENCH_QUICK` is
-    /// truthy (anything but empty/`0`/`false`); full sampling otherwise.
+    /// `quick()` when [`quick_mode`] says so; full sampling otherwise.
     pub fn from_env() -> Self {
-        let env_quick = matches!(
-            std::env::var("OATS_BENCH_QUICK").ok().as_deref(),
-            Some(v) if !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
-        );
-        if env_quick || std::env::args().any(|a| a == "--quick") {
+        if quick_mode() {
             Self::quick()
         } else {
             Self::default()
@@ -151,6 +146,27 @@ impl Bench {
         let res = BenchResult {
             name: name.to_string(),
             summary: Summary::of(&times),
+            units_per_iter,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Record one externally-timed measurement as a result (the serve-load
+    /// and table-bench path: the harness inside `run_load` already timed
+    /// the work, so re-running it under [`Bench::run`] would double the
+    /// cost). Comparisons via [`Bench::compare`] work on these like on any
+    /// sampled result.
+    pub fn record_sample(
+        &mut self,
+        name: &str,
+        seconds: f64,
+        units_per_iter: Option<f64>,
+    ) -> &BenchResult {
+        let res = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&[seconds]),
             units_per_iter,
         };
         println!("{}", res.report_line());
@@ -231,6 +247,18 @@ impl Bench {
     }
 }
 
+/// True when `--quick` was passed (CI smoke mode: `cargo bench --bench
+/// micro -- --quick`) or `$OATS_BENCH_QUICK` is truthy (anything but
+/// empty/`0`/`false`) — bench targets also use this to shrink their
+/// model/workload sizing, not just the sample budget.
+pub fn quick_mode() -> bool {
+    let env_quick = matches!(
+        std::env::var("OATS_BENCH_QUICK").ok().as_deref(),
+        Some(v) if !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+    );
+    env_quick || std::env::args().any(|a| a == "--quick")
+}
+
 /// Prevent the optimizer from eliding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -291,6 +319,20 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(crate::json::parse(&text).is_ok());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn record_sample_supports_comparisons() {
+        let mut b = Bench::quick();
+        b.record_sample("ext/base", 0.2, Some(100.0));
+        b.record_sample("ext/fast", 0.1, Some(100.0));
+        assert_eq!(b.results.len(), 2);
+        assert!((b.results[0].throughput().unwrap() - 500.0).abs() < 1e-9);
+        let s = b.compare("ext", "ext/base", "ext/fast").unwrap();
+        assert!((s - 2.0).abs() < 1e-9);
+        let j = b.to_json("ext");
+        let results = j.get("results").and_then(crate::json::Json::as_arr).unwrap();
+        assert!(results[0].req_f64("p99_s").is_ok(), "tail percentile emitted");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! The KV-slot arena: a fixed pool of preallocated [`KvCache`] buffers.
+//!
+//! Every slot is allocated once at engine startup, so sequence join/leave
+//! never allocates or frees KV buffers on the hot path, and KV memory is
+//! bounded by configuration (`slots × n_layers × 2 × seq_len × d_model ×
+//! 4 B`) rather than by offered load. Slots hand out plain `usize` indices; the pool
+//! tracks which are in use and panics on double-release or on touching a
+//! slot that was never acquired — the engine's slot bookkeeping is an
+//! invariant, not a recoverable condition.
+
+use crate::config::ModelConfig;
+use crate::model::KvCache;
+
+/// Fixed-size arena of reusable KV caches.
+pub struct KvPool {
+    caches: Vec<KvCache>,
+    in_use: Vec<bool>,
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    /// Preallocate `slots` caches sized for `cfg`. All allocation happens
+    /// here; [`KvPool::acquire`]/[`KvPool::release`] only move indices.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> KvPool {
+        assert!(slots > 0, "KV pool needs at least one slot");
+        KvPool {
+            caches: (0..slots).map(|_| KvCache::new(cfg)).collect(),
+            in_use: vec![false; slots],
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Total slot count (the configured bound).
+    pub fn slots(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Slots currently free.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Slots currently held by sequences.
+    pub fn occupied(&self) -> usize {
+        self.caches.len() - self.free.len()
+    }
+
+    /// Resident KV memory of the whole arena in bytes (constant for the
+    /// pool's lifetime — this is the "bounded by config" number).
+    pub fn memory_bytes(&self) -> usize {
+        self.caches.iter().map(KvCache::memory_bytes).sum()
+    }
+
+    /// Take a free slot, or `None` when the arena is fully occupied. The
+    /// returned cache is empty (`len == 0`) and ready for prefill.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let idx = self.free.pop()?;
+        debug_assert!(!self.in_use[idx], "free list handed out an in-use slot");
+        debug_assert_eq!(self.caches[idx].len, 0, "released slot was not reset");
+        self.in_use[idx] = true;
+        Some(idx)
+    }
+
+    /// Return a slot to the arena, resetting its cache for the next
+    /// sequence. Panics on double release.
+    pub fn release(&mut self, idx: usize) {
+        assert!(self.in_use[idx], "double release of KV slot {idx}");
+        self.caches[idx].reset_for_reuse();
+        self.in_use[idx] = false;
+        self.free.push(idx);
+    }
+
+    /// Borrow one acquired slot's cache.
+    pub fn cache(&self, idx: usize) -> &KvCache {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        &self.caches[idx]
+    }
+
+    /// Distinct mutable borrows of several acquired slots at once, in the
+    /// order requested — the shape [`TransformerLM::decode_step_batch`]
+    /// needs, where `caches[i]` pairs with `tokens[i]`. Panics if any index
+    /// is repeated or not acquired. Only two small index vectors are built
+    /// here (negligible next to a decode step); the KV buffers themselves
+    /// are never copied, moved, or reallocated.
+    ///
+    /// [`TransformerLM::decode_step_batch`]: crate::model::TransformerLM::decode_step_batch
+    pub fn caches_mut(&mut self, idxs: &[usize]) -> Vec<&mut KvCache> {
+        let in_use = &self.in_use;
+        let mut by_pos: Vec<Option<&mut KvCache>> = self
+            .caches
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| in_use[i].then_some(c))
+            .collect();
+        idxs.iter()
+            .map(|&i| {
+                by_pos
+                    .get_mut(i)
+                    .and_then(Option::take)
+                    .unwrap_or_else(|| panic!("KV slot {i} not acquired or repeated"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::preset("tiny").unwrap()
+    }
+
+    #[test]
+    fn pool_is_bounded_and_reusable() {
+        let mut p = KvPool::new(&cfg(), 3);
+        assert_eq!(p.slots(), 3);
+        assert_eq!(p.available(), 3);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        let c = p.acquire().unwrap();
+        assert_eq!(p.available(), 0);
+        assert!(p.acquire().is_none(), "exhausted pool must refuse");
+        p.cache_len_bump(a, 5);
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        let a2 = p.acquire().unwrap();
+        assert_eq!(p.cache(a2).len, 0, "reused slot starts empty");
+        assert_ne!(b, c);
+        assert_eq!(p.occupied(), 3);
+    }
+
+    impl KvPool {
+        /// Test helper: simulate a used cache.
+        fn cache_len_bump(&mut self, idx: usize, len: usize) {
+            assert!(self.in_use[idx]);
+            self.caches[idx].len = len;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut p = KvPool::new(&cfg(), 2);
+        let a = p.acquire().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "not acquired")]
+    fn caches_mut_rejects_unacquired() {
+        let mut p = KvPool::new(&cfg(), 2);
+        let _ = p.caches_mut(&[0]);
+    }
+
+    #[test]
+    fn caches_mut_preserves_request_order() {
+        let mut p = KvPool::new(&cfg(), 4);
+        let s: Vec<usize> = (0..4).map(|_| p.acquire().unwrap()).collect();
+        p.cache_len_bump(s[2], 7);
+        // Request in a non-monotone order; returned borrows must match it.
+        let got = p.caches_mut(&[s[2], s[0], s[3]]);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].len, 7, "first borrow must be the slot asked for first");
+        assert_eq!(got[1].len, 0);
+    }
+
+    #[test]
+    fn memory_is_constant_across_churn() {
+        let mut p = KvPool::new(&cfg(), 2);
+        let bytes = p.memory_bytes();
+        assert!(bytes > 0);
+        for _ in 0..10 {
+            let a = p.acquire().unwrap();
+            p.release(a);
+        }
+        assert_eq!(p.memory_bytes(), bytes, "churn must not allocate");
+    }
+
+    #[test]
+    fn acquire_release_never_loses_slots_prop() {
+        check("kv pool conserves slots", 50, |g| {
+            let slots = g.usize_range(1, 6);
+            let mut p = KvPool::new(&cfg(), slots);
+            let mut held: Vec<usize> = Vec::new();
+            for _ in 0..30 {
+                if g.bool() {
+                    if let Some(idx) = p.acquire() {
+                        assert!(!held.contains(&idx), "slot handed out twice");
+                        held.push(idx);
+                    } else {
+                        assert_eq!(held.len(), slots, "refused while slots were free");
+                    }
+                } else if !held.is_empty() {
+                    let i = g.usize_range(0, held.len());
+                    p.release(held.swap_remove(i));
+                }
+                assert_eq!(p.occupied(), held.len());
+                assert_eq!(p.available() + p.occupied(), slots);
+            }
+        });
+    }
+}

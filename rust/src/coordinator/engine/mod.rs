@@ -1,0 +1,513 @@
+//! The continuous-batching decode engine.
+//!
+//! Unlike the old batch-at-a-time worker loop (form a batch, run it to
+//! completion, only then look at the queue again), this engine re-forms its
+//! working set **every step**:
+//!
+//! 1. **Admit** — queued requests are pulled into free KV slots
+//!    ([`KvPool`], a fixed arena preallocated at startup) under the
+//!    configured [`AdmissionPolicy`]. Requests that can never generate
+//!    (empty prompts, zero budgets, prompts already filling the KV
+//!    capacity) are answered immediately without a slot — even while the
+//!    arena is full — and prompts longer than the model's `seq_len` are
+//!    rejected with [`ResponseStatus::Truncated`] instead of being
+//!    silently cut.
+//! 2. **Chunked prefill** — joining sequences consume up to
+//!    `prefill_chunk` prompt tokens, batched across all joiners through
+//!    [`TransformerLM::decode_step_batch`] (the same lockstep kernel path
+//!    decode uses, so prefill work also runs the packed [b × d] kernels).
+//! 3. **Lockstep decode** — every resident sequence with a completed
+//!    prefill emits one token and advances its KV cache one position.
+//! 4. **Retire** — finished sequences release their slot and a second
+//!    admission pass refills freed slots *in the same step*, so the decode
+//!    batch never runs below occupancy while work is queued.
+//!
+//! Every step's arithmetic is [`decode_step_batch`], whose per-row
+//! results are independent of batch composition — so per-sequence outputs
+//! never depend on which requests happened to share a step. For dense
+//! models that makes them bit-identical to scalar [`generate`]
+//! (property-tested under randomized arrivals in
+//! `rust/tests/serve_engine.rs`); for packed/compressed models the
+//! batched kernels can differ from the scalar `decode_step` path in the
+//! last ulps, and the batch-of-1 reference is
+//! [`generate_lockstep`].
+//!
+//! [`TransformerLM::decode_step_batch`]: crate::model::TransformerLM::decode_step_batch
+//! [`decode_step_batch`]: crate::model::TransformerLM::decode_step_batch
+//! [`generate`]: crate::coordinator::serve::generate
+//! [`generate_lockstep`]: crate::coordinator::serve::generate_lockstep
+
+pub mod kv_pool;
+pub mod sched;
+
+pub use kv_pool::KvPool;
+pub use sched::{AdmissionPolicy, Batcher, Request, ResponseStatus, Sequence};
+
+use crate::model::TransformerLM;
+use crate::tensor::argmax;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Engine knobs (the serving-layer [`ServeConfig`] derives one of these).
+///
+/// [`ServeConfig`]: crate::coordinator::serve::ServeConfig
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// KV-slot arena size — the hard bound on resident sequences and on
+    /// the decode batch width (and therefore the kernel `batch_hint`).
+    pub slots: usize,
+    /// Max prompt tokens a joining sequence consumes per engine step.
+    pub prefill_chunk: usize,
+    /// Tokens to generate per request.
+    pub gen_tokens: usize,
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            slots: 8,
+            prefill_chunk: 8,
+            gen_tokens: 16,
+            admission: AdmissionPolicy::Fcfs,
+        }
+    }
+}
+
+/// What happened to sequences during one engine step.
+#[derive(Debug)]
+pub enum SeqEvent {
+    /// A token was generated (streamed to the caller before the sequence
+    /// finishes). `first` marks the sequence's first generated token.
+    Token { id: u64, token: usize, first: bool },
+    Finished(FinishedSeq),
+}
+
+/// A retired sequence, ready to become a response.
+#[derive(Debug)]
+pub struct FinishedSeq {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    pub status: ResponseStatus,
+    pub enqueued: Instant,
+    pub first_token_latency: Option<Duration>,
+}
+
+/// Cap on the per-step sample vectors below: once a vector reaches twice
+/// this, the oldest half is dropped (amortized O(1)), so a long-running
+/// server's telemetry memory stays bounded while summaries always cover
+/// at least the most recent `TELEMETRY_WINDOW` steps. The scalar counters
+/// (`steps`/`joins`/`leaves`/`truncated`) remain lifetime totals.
+pub const TELEMETRY_WINDOW: usize = 16_384;
+
+/// Per-step engine telemetry. Counters are lifetime totals; the per-step
+/// sample vectors cover the most recent [`TELEMETRY_WINDOW`]..2× steps.
+#[derive(Clone, Debug, Default)]
+pub struct EngineTelemetry {
+    /// Arena size (denominator for `occupancy`).
+    pub slots: usize,
+    /// Steps that did any work (idle polls are not counted).
+    pub steps: usize,
+    /// Sequences admitted into a KV slot.
+    pub joins: usize,
+    /// Sequences retired from a KV slot.
+    pub leaves: usize,
+    /// Requests rejected for oversized prompts.
+    pub truncated: usize,
+    /// Decode-batch width per step.
+    pub decode_batch: Vec<f64>,
+    /// Occupied-slot fraction per step (sampled after same-step backfill).
+    pub occupancy: Vec<f64>,
+    /// Admission-queue depth per step (sampled after admission).
+    pub queue_depth: Vec<f64>,
+    /// Constant KV-arena footprint in bytes (set at engine startup).
+    pub kv_bytes: usize,
+}
+
+impl EngineTelemetry {
+    /// Enforce the [`TELEMETRY_WINDOW`] bound on the sample vectors.
+    fn trim(&mut self) {
+        for v in [&mut self.decode_batch, &mut self.occupancy, &mut self.queue_depth] {
+            if v.len() >= 2 * TELEMETRY_WINDOW {
+                let excess = v.len() - TELEMETRY_WINDOW;
+                v.drain(..excess);
+            }
+        }
+    }
+}
+
+/// The engine: model + KV arena + resident sequences. Single-threaded by
+/// design — the serving layer owns it on one thread and the kernels below
+/// provide the parallelism — which also makes it directly drivable from
+/// tests without any channel plumbing.
+pub struct Engine {
+    model: Arc<TransformerLM>,
+    cfg: EngineConfig,
+    pool: KvPool,
+    seqs: Vec<Sequence>,
+    telemetry: Arc<Mutex<EngineTelemetry>>,
+}
+
+impl Engine {
+    pub fn new(model: Arc<TransformerLM>, cfg: EngineConfig) -> Engine {
+        let pool = KvPool::new(&model.cfg, cfg.slots);
+        let telemetry = Arc::new(Mutex::new(EngineTelemetry {
+            slots: cfg.slots,
+            kv_bytes: pool.memory_bytes(),
+            ..Default::default()
+        }));
+        Engine { model, cfg, pool, seqs: Vec::new(), telemetry }
+    }
+
+    /// Shared handle to the telemetry (updated once per step).
+    pub fn telemetry(&self) -> Arc<Mutex<EngineTelemetry>> {
+        Arc::clone(&self.telemetry)
+    }
+
+    /// No resident sequences.
+    pub fn is_idle(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Slots currently held by sequences.
+    pub fn occupied_slots(&self) -> usize {
+        self.pool.occupied()
+    }
+
+    /// Pull queued requests into free slots. Requests that can never
+    /// generate — empty prompts, zero budget, or prompts that already fill
+    /// (or exceed) the whole KV capacity — are answered immediately with
+    /// no slot and no prefill compute, even while the arena is full, so a
+    /// rejection never waits behind resident decodes.
+    ///
+    /// Returns `(joins, truncations)` for the caller to fold into the
+    /// telemetry under one end-of-step lock (no per-request locking).
+    fn admit(&mut self, queue: &mut Batcher, events: &mut Vec<SeqEvent>) -> (usize, usize) {
+        let cap = self.model.cfg.seq_len;
+        let gen = self.cfg.gen_tokens;
+        let mut joins = 0usize;
+        let mut truncations = 0usize;
+        let slot_free =
+            queue.take_where(|r| r.prompt.len() >= cap || r.prompt.is_empty() || gen == 0);
+        for req in slot_free {
+            // prompt > cap is the rejection (`Truncated`); the rest match
+            // scalar `generate`: no logits to decode from, nothing asked
+            // for, or no KV room left — an empty completion, not an error.
+            let status = if req.prompt.len() > cap {
+                truncations += 1;
+                ResponseStatus::Truncated
+            } else {
+                ResponseStatus::Complete
+            };
+            events.push(SeqEvent::Finished(FinishedSeq {
+                id: req.id,
+                tokens: Vec::new(),
+                status,
+                enqueued: req.enqueued,
+                first_token_latency: None,
+            }));
+        }
+        while self.pool.available() > 0 {
+            let Some(req) = queue.pop(self.cfg.admission) else {
+                break;
+            };
+            let slot = self.pool.acquire().expect("available slot");
+            joins += 1;
+            self.seqs.push(Sequence::new(req, slot, self.model.cfg.vocab));
+        }
+        (joins, truncations)
+    }
+
+    /// One lockstep model call over the given resident sequences (indices
+    /// into `self.seqs`), feeding `tokens[i]` to sequence `idxs[i]` and
+    /// storing each sequence's fresh logits row.
+    fn batch_decode(&mut self, idxs: &[usize], tokens: &[usize]) {
+        let slots: Vec<usize> = idxs.iter().map(|&i| self.seqs[i].slot).collect();
+        let mut caches = self.pool.caches_mut(&slots);
+        let logits = self.model.decode_step_batch(tokens, &mut caches);
+        for (r, &i) in idxs.iter().enumerate() {
+            let s = &mut self.seqs[i];
+            s.logits.clear();
+            s.logits.extend_from_slice(logits.row(r));
+        }
+    }
+
+    /// One engine step: admit → chunked prefill → lockstep decode →
+    /// retire → same-step backfill. Returns the step's events (streamed
+    /// tokens and finished sequences). A step with nothing resident and
+    /// nothing admissible returns immediately and records no telemetry.
+    pub fn step(&mut self, queue: &mut Batcher) -> Vec<SeqEvent> {
+        let mut events = Vec::new();
+        let (mut joins, mut truncations) = self.admit(queue, &mut events);
+        if self.seqs.is_empty() {
+            // Nothing resident: only slot-free answers may have happened.
+            if joins + truncations > 0 {
+                let mut t = self.telemetry.lock().unwrap();
+                t.joins += joins;
+                t.truncated += truncations;
+            }
+            return events;
+        }
+
+        // ── chunked prefill (batched across joiners) ──
+        for _ in 0..self.cfg.prefill_chunk.max(1) {
+            let pidx: Vec<usize> =
+                (0..self.seqs.len()).filter(|&i| self.seqs[i].prefilling()).collect();
+            if pidx.is_empty() {
+                break;
+            }
+            let tokens: Vec<usize> = pidx
+                .iter()
+                .map(|&i| {
+                    let s = &self.seqs[i];
+                    s.prompt[s.next_prefill]
+                })
+                .collect();
+            self.batch_decode(&pidx, &tokens);
+            for &i in &pidx {
+                self.seqs[i].next_prefill += 1;
+            }
+        }
+
+        // ── lockstep decode over prefilled sequences with room to emit ──
+        let didx: Vec<usize> = (0..self.seqs.len())
+            .filter(|&i| {
+                let s = &self.seqs[i];
+                !s.prefilling()
+                    && s.out.len() < self.cfg.gen_tokens
+                    && self.pool.cache(s.slot).remaining() > 0
+            })
+            .collect();
+        if !didx.is_empty() {
+            let now = Instant::now();
+            let mut cont = Vec::with_capacity(didx.len());
+            let mut cont_tokens = Vec::with_capacity(didx.len());
+            for &i in &didx {
+                let s = &mut self.seqs[i];
+                let t = argmax(&s.logits);
+                s.out.push(t);
+                let first = s.out.len() == 1;
+                if first {
+                    s.first_token_at = Some(now);
+                }
+                events.push(SeqEvent::Token { id: s.id, token: t, first });
+                if s.out.len() < self.cfg.gen_tokens {
+                    cont.push(i);
+                    cont_tokens.push(t);
+                }
+            }
+            // Decode the emitted token only for sequences that still need
+            // the next logits. A sequence that just spent its budget
+            // retires below and its cache is recycled, so the extra
+            // forward pass scalar `generate` performs there would be
+            // discarded — skipping it cannot change any emitted token.
+            if !cont.is_empty() {
+                self.batch_decode(&cont, &cont_tokens);
+            }
+        }
+
+        // ── retire finished sequences, releasing their slots ──
+        let gen = self.cfg.gen_tokens;
+        let mut leaves = 0usize;
+        let seqs = std::mem::take(&mut self.seqs);
+        for s in seqs {
+            let done = !s.prefilling()
+                && (s.out.len() >= gen || self.pool.cache(s.slot).remaining() == 0);
+            if done {
+                self.pool.release(s.slot);
+                leaves += 1;
+                events.push(SeqEvent::Finished(FinishedSeq {
+                    id: s.id,
+                    tokens: s.out,
+                    status: ResponseStatus::Complete,
+                    enqueued: s.enqueued,
+                    first_token_latency: s.first_token_at.map(|t| t - s.enqueued),
+                }));
+            } else {
+                self.seqs.push(s);
+            }
+        }
+
+        // ── same-step backfill: freed slots go straight to the queue ──
+        let (j2, t2) = self.admit(queue, &mut events);
+        joins += j2;
+        truncations += t2;
+
+        let mut t = self.telemetry.lock().unwrap();
+        t.steps += 1;
+        t.joins += joins;
+        t.truncated += truncations;
+        t.leaves += leaves;
+        t.decode_batch.push(didx.len() as f64);
+        t.occupancy.push(self.pool.occupied() as f64 / self.pool.slots() as f64);
+        t.queue_depth.push(queue.len() as f64);
+        t.trim();
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny() -> Arc<TransformerLM> {
+        Arc::new(TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 5))
+    }
+
+    fn req(id: u64, prompt: Vec<usize>) -> Request {
+        Request { id, prompt, enqueued: Instant::now() }
+    }
+
+    /// Drive the engine until `n` sequences finish; panics if it stalls.
+    fn drain(engine: &mut Engine, queue: &mut Batcher, n: usize) -> Vec<FinishedSeq> {
+        let mut done = Vec::new();
+        for _ in 0..10_000 {
+            for ev in engine.step(queue) {
+                if let SeqEvent::Finished(f) = ev {
+                    done.push(f);
+                }
+            }
+            if done.len() >= n {
+                return done;
+            }
+        }
+        panic!("engine stalled: {} of {n} finished", done.len());
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_not_truncated() {
+        let m = tiny();
+        let cap = m.cfg.seq_len;
+        let mut e = Engine::new(Arc::clone(&m), EngineConfig { slots: 2, ..Default::default() });
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1; cap + 3]));
+        q.push(req(1, vec![1, 2]));
+        let done = drain(&mut e, &mut q, 2);
+        let over = done.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(over.status, ResponseStatus::Truncated);
+        assert!(over.tokens.is_empty(), "rejected request must not generate");
+        let ok = done.iter().find(|f| f.id == 1).unwrap();
+        assert_eq!(ok.status, ResponseStatus::Complete);
+        assert_eq!(ok.tokens.len(), 16);
+        assert_eq!(e.telemetry().lock().unwrap().truncated, 1);
+    }
+
+    #[test]
+    fn prompt_at_exact_capacity_completes_empty() {
+        let m = tiny();
+        let cap = m.cfg.seq_len;
+        let mut e = Engine::new(Arc::clone(&m), EngineConfig::default());
+        let mut q = Batcher::default();
+        q.push(req(0, (0..cap).map(|i| i % 16).collect()));
+        let done = drain(&mut e, &mut q, 1);
+        assert_eq!(done[0].status, ResponseStatus::Complete);
+        assert!(done[0].tokens.is_empty(), "no KV room left to generate");
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.joins, 0, "a prompt that fills the cache must not burn a slot or prefill");
+    }
+
+    #[test]
+    fn rejection_bypasses_a_full_arena() {
+        // One slot held by a long-running sequence: an oversized prompt
+        // must still be rejected immediately, not after the resident
+        // sequence drains.
+        let m = tiny();
+        let cap = m.cfg.seq_len;
+        let cfg = EngineConfig { slots: 1, gen_tokens: 40, ..Default::default() };
+        let mut e = Engine::new(m, cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2]));
+        let _ = e.step(&mut q); // resident sequence occupies the only slot
+        assert_eq!(e.occupied_slots(), 1);
+        q.push(req(1, vec![1; cap + 2]));
+        let events = e.step(&mut q);
+        let rejected = events.iter().any(|ev| {
+            matches!(ev, SeqEvent::Finished(f)
+                if f.id == 1 && f.status == ResponseStatus::Truncated)
+        });
+        assert!(rejected, "rejection must not wait behind the full arena");
+    }
+
+    #[test]
+    fn telemetry_sample_vectors_stay_bounded() {
+        let mut t = EngineTelemetry::default();
+        for i in 0..(2 * TELEMETRY_WINDOW + 5) {
+            t.decode_batch.push(i as f64);
+            t.occupancy.push(0.5);
+            t.queue_depth.push(0.0);
+            t.trim();
+        }
+        assert!(t.decode_batch.len() < 2 * TELEMETRY_WINDOW);
+        assert!(t.decode_batch.len() >= TELEMETRY_WINDOW, "keeps at least a full window");
+        // The newest samples survive trimming.
+        assert_eq!(*t.decode_batch.last().unwrap(), (2 * TELEMETRY_WINDOW + 4) as f64);
+    }
+
+    #[test]
+    fn empty_prompt_and_zero_budget_complete_without_slots() {
+        let m = tiny();
+        let mut e = Engine::new(Arc::clone(&m), EngineConfig { slots: 1, ..Default::default() });
+        let mut q = Batcher::default();
+        q.push(req(0, vec![]));
+        let done = drain(&mut e, &mut q, 1);
+        assert!(done[0].tokens.is_empty());
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.joins, 0, "empty prompt must not consume a slot");
+
+        let mut e0 = Engine::new(m, EngineConfig { gen_tokens: 0, slots: 1, ..Default::default() });
+        let mut q0 = Batcher::default();
+        q0.push(req(1, vec![1, 2, 3]));
+        let done = drain(&mut e0, &mut q0, 1);
+        assert!(done[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn retired_slot_backfills_same_step() {
+        // One slot, two requests: the moment the first retires, the second
+        // must be admitted in that same step (visible as occupancy == 1.0
+        // on the retiring step's sample).
+        let m = tiny();
+        let cfg = EngineConfig { slots: 1, gen_tokens: 2, ..Default::default() };
+        let mut e = Engine::new(m, cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2]));
+        q.push(req(1, vec![3, 4]));
+        let done = drain(&mut e, &mut q, 2);
+        assert_eq!(done.len(), 2);
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.joins, 2);
+        assert_eq!(t.leaves, 2);
+        // Every recorded step except the last must show a fully occupied
+        // arena: the backfill happened inside the retiring step.
+        let occ = &t.occupancy;
+        assert!(occ[..occ.len() - 1].iter().all(|&o| o == 1.0), "{occ:?}");
+    }
+
+    #[test]
+    fn decode_batch_never_exceeds_slots() {
+        let m = tiny();
+        let cfg = EngineConfig { slots: 3, gen_tokens: 4, ..Default::default() };
+        let mut e = Engine::new(m, cfg);
+        let mut q = Batcher::default();
+        for i in 0..8 {
+            q.push(req(i, vec![1 + i as usize % 5]));
+        }
+        let _ = drain(&mut e, &mut q, 8);
+        let t = e.telemetry().lock().unwrap().clone();
+        assert!(t.decode_batch.iter().all(|&b| b <= 3.0), "{:?}", t.decode_batch);
+        assert_eq!(t.joins, 8);
+        assert_eq!(t.leaves, 8);
+    }
+
+    #[test]
+    fn first_token_latency_is_recorded_and_ordered() {
+        let m = tiny();
+        let mut e = Engine::new(m, EngineConfig { gen_tokens: 3, ..Default::default() });
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2, 3]));
+        let done = drain(&mut e, &mut q, 1);
+        let ftl = done[0].first_token_latency.expect("generated ≥1 token");
+        assert!(ftl <= done[0].enqueued.elapsed());
+    }
+}

@@ -1,0 +1,223 @@
+//! Scheduling types for the continuous-batching engine: the admission
+//! queue ([`Batcher`] — the surviving piece of the old static batcher), the
+//! admission policy, and the per-sequence in-flight state.
+//!
+//! Everything here is pure bookkeeping (no model, no threads), so the
+//! admission behavior is unit-testable in isolation; the model-touching
+//! step loop lives in [`super::Engine`].
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// An inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub enqueued: Instant,
+}
+
+/// How a request left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseStatus {
+    /// Served to its generation budget (or to KV capacity).
+    Complete,
+    /// The prompt exceeded the model's `seq_len`; the request was rejected
+    /// without prefill instead of being silently truncated.
+    Truncated,
+}
+
+/// Per-step admission order for queued requests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// First come, first served.
+    #[default]
+    Fcfs,
+    /// Shortest prompt first (FIFO among equals) — favors fast first
+    /// tokens for cheap requests under a backlog, at the cost of strict
+    /// fairness.
+    ShortestPrompt,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<AdmissionPolicy> {
+        match s {
+            "fcfs" => Ok(AdmissionPolicy::Fcfs),
+            "shortest" => Ok(AdmissionPolicy::ShortestPrompt),
+            other => anyhow::bail!("unknown admission policy '{other}' (fcfs|shortest)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fcfs => "fcfs",
+            AdmissionPolicy::ShortestPrompt => "shortest",
+        }
+    }
+}
+
+/// The admission queue: requests wait here until the engine has a free KV
+/// slot. (This is what remains of the old dynamic batcher — batch *shape*
+/// is no longer decided here; the engine re-forms its decode batch every
+/// step from whatever sequences are resident.)
+#[derive(Default)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Remove every queued request matching `pred`, preserving FIFO order
+    /// among the kept ones — the engine's slot-free fast path: requests
+    /// that can be answered without a KV slot (rejections, trivially
+    /// empty completions) must not wait behind a full arena. The common
+    /// no-match case is a single allocation-free scan, so calling this
+    /// every engine step is cheap under a backlog; `pred` must be pure
+    /// (it runs twice on matching queues).
+    pub fn take_where(&mut self, mut pred: impl FnMut(&Request) -> bool) -> Vec<Request> {
+        if !self.queue.iter().any(&mut pred) {
+            return Vec::new();
+        }
+        let mut taken = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if pred(&r) {
+                taken.push(r);
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.queue = kept;
+        taken
+    }
+
+    /// Remove the next request under `policy`, if any.
+    pub fn pop(&mut self, policy: AdmissionPolicy) -> Option<Request> {
+        match policy {
+            AdmissionPolicy::Fcfs => self.queue.pop_front(),
+            AdmissionPolicy::ShortestPrompt => {
+                let idx = self
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, r)| (r.prompt.len(), *i))?
+                    .0;
+                self.queue.remove(idx)
+            }
+        }
+    }
+}
+
+/// One in-flight sequence: its KV slot, prefill cursor, last logits, and
+/// generated tokens.
+pub struct Sequence {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    /// Index into the engine's [`super::KvPool`].
+    pub slot: usize,
+    /// Next prompt position to prefill; `== prompt.len()` once decoding.
+    pub next_prefill: usize,
+    /// Logits from this sequence's latest decode step.
+    pub logits: Vec<f32>,
+    pub out: Vec<usize>,
+    pub enqueued: Instant,
+    pub first_token_at: Option<Instant>,
+}
+
+impl Sequence {
+    pub fn new(req: Request, slot: usize, vocab: usize) -> Sequence {
+        Sequence {
+            id: req.id,
+            prompt: req.prompt,
+            slot,
+            next_prefill: 0,
+            logits: vec![0.0; vocab],
+            out: Vec::new(),
+            enqueued: req.enqueued,
+            first_token_at: None,
+        }
+    }
+
+    /// Still consuming prompt tokens?
+    pub fn prefilling(&self) -> bool {
+        self.next_prefill < self.prompt.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request { id, prompt: vec![1; len], enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn fcfs_pops_in_arrival_order() {
+        let mut b = Batcher::default();
+        for i in 0..5 {
+            b.push(req(i, (5 - i) as usize));
+        }
+        let ids: Vec<u64> = (0..5).map(|_| b.pop(AdmissionPolicy::Fcfs).unwrap().id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(b.pop(AdmissionPolicy::Fcfs).is_none());
+    }
+
+    #[test]
+    fn shortest_prompt_pops_cheapest_first_fifo_on_ties() {
+        let mut b = Batcher::default();
+        b.push(req(0, 4));
+        b.push(req(1, 2));
+        b.push(req(2, 2));
+        b.push(req(3, 1));
+        let ids: Vec<u64> =
+            (0..4).map(|_| b.pop(AdmissionPolicy::ShortestPrompt).unwrap().id).collect();
+        assert_eq!(ids, vec![3, 1, 2, 0], "shortest first, FIFO among equal lengths");
+    }
+
+    #[test]
+    fn pop_conserves_requests() {
+        let mut b = Batcher::default();
+        for i in 0..7 {
+            b.push(req(i, i as usize % 3));
+        }
+        let mut seen = std::collections::HashSet::new();
+        while let Some(r) = b.pop(AdmissionPolicy::ShortestPrompt) {
+            assert!(seen.insert(r.id), "request popped twice");
+        }
+        assert_eq!(seen.len(), 7);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn take_where_extracts_and_preserves_order() {
+        let mut b = Batcher::default();
+        for i in 0..6 {
+            b.push(req(i, i as usize));
+        }
+        let taken = b.take_where(|r| r.prompt.len() % 2 == 0);
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(b.len(), 3);
+        let rest: Vec<u64> = (0..3).map(|_| b.pop(AdmissionPolicy::Fcfs).unwrap().id).collect();
+        assert_eq!(rest, vec![1, 3, 5], "kept requests stay FIFO");
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [AdmissionPolicy::Fcfs, AdmissionPolicy::ShortestPrompt] {
+            assert_eq!(AdmissionPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(AdmissionPolicy::parse("lifo").is_err());
+    }
+}

@@ -4,11 +4,16 @@
 //!   propagation (Algorithm 2), fans the six linears of each block out to a
 //!   worker pool, applies OWL per-layer rates, and commits results back into
 //!   the model.
-//! * [`serve`] — the compressed-inference serving engine: request queue,
-//!   dynamic batcher, KV-cached decode loop, per-request latency metrics.
+//! * [`engine`] — the continuous-batching decode engine: a pooled KV-slot
+//!   arena, per-step admission with chunked prefill, lockstep decode over
+//!   resident sequences, and same-step slot backfill.
+//! * [`serve`] — the serving layer on top of it: request channel,
+//!   admission queue, per-token streaming, latency/occupancy telemetry.
 
+pub mod engine;
 pub mod pipeline;
 pub mod serve;
 
+pub use engine::{AdmissionPolicy, Engine, EngineConfig, EngineTelemetry};
 pub use pipeline::{compress_model, CompressionReport, LayerReport};
 pub use serve::{ServeConfig, ServeStats, Server};

@@ -1,32 +1,42 @@
-//! The compressed-inference serving engine (the DeepSparse stand-in for
+//! The compressed-inference serving layer (the DeepSparse stand-in for
 //! Table 7 / Table 14).
 //!
-//! Architecture: a request queue feeds a *dynamic batcher* (pure, testable
-//! [`Batcher`]) which releases batches when either the batch-size cap or the
-//! wait deadline is hit; each batch prefills per-sequence across a worker
-//! fan-out, then generates in lockstep through the batched planned kernels
-//! ([`generate_batch`]); per-request latency and aggregate token throughput
-//! are recorded in [`ServeStats`].
+//! Architecture: a request channel feeds the admission queue ([`Batcher`]);
+//! the **continuous-batching engine** ([`crate::coordinator::engine`])
+//! owns a fixed KV-slot arena and, every step, admits queued requests into
+//! free slots, runs chunked prefill for joiners, decodes all resident
+//! sequences in lockstep through the batched planned kernels, and retires
+//! finished sequences — backfilling their slots from the queue in the same
+//! step. Requests join and leave mid-flight; nothing waits for a batch to
+//! drain. Per-token streaming, per-request latency (completion and first
+//! token), and per-step engine telemetry are reported via [`ServeStats`].
 
+use crate::coordinator::engine::{Engine, EngineConfig, EngineTelemetry, SeqEvent};
+use crate::json::{self, Json};
 use crate::model::{KvCache, TransformerLM};
 use crate::sparse::PackOptions;
 use crate::tensor::argmax;
 use crate::util::stats::Summary;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+pub use crate::coordinator::engine::{AdmissionPolicy, Batcher, Request, ResponseStatus};
+
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Dynamic batch cap.
-    pub max_batch: usize,
-    /// Max time the first queued request waits before dispatch.
-    pub max_wait: Duration,
+    /// KV-slot arena size: the bound on resident sequences, decode batch
+    /// width, and KV memory (`slots` preallocated caches).
+    pub slots: usize,
     /// Tokens to generate per request.
     pub gen_tokens: usize,
-    /// Prefill worker threads (generation itself runs lockstep-batched;
-    /// its parallelism comes from the kernels).
-    pub workers: usize,
+    /// Max prompt tokens a joining sequence prefills per engine step
+    /// (higher = faster first token for joiners, chunkier interleaving
+    /// with resident decodes).
+    pub prefill_chunk: usize,
+    /// Order in which queued requests claim freed slots.
+    pub admission: AdmissionPolicy,
     /// Pre-pack compressed layers into their planned kernel formats
     /// (BCSR/N:M/CSR per `sparse::KernelPlan`) at server startup.
     pub prepack: bool,
@@ -40,10 +50,10 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
+            slots: 8,
             gen_tokens: 16,
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            prefill_chunk: 8,
+            admission: AdmissionPolicy::Fcfs,
             prepack: true,
             quantize: false,
         }
@@ -51,18 +61,21 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
-    /// The packing policy this serving configuration implies.
+    /// The packing policy this serving configuration implies: decode
+    /// batches are at most `slots` wide, so layers pack for that shape.
     pub fn pack_options(&self) -> PackOptions {
-        PackOptions { batch_hint: self.max_batch, quantize: self.quantize, ..Default::default() }
+        PackOptions { batch_hint: self.slots, quantize: self.quantize, ..Default::default() }
     }
-}
 
-/// An inference request.
-#[derive(Debug)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: Vec<usize>,
-    pub enqueued: Instant,
+    /// The engine knobs this configuration implies.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            slots: self.slots.max(1),
+            prefill_chunk: self.prefill_chunk.max(1),
+            gen_tokens: self.gen_tokens,
+            admission: self.admission,
+        }
+    }
 }
 
 /// A completed generation.
@@ -70,67 +83,61 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<usize>,
+    /// Enqueue → completion.
     pub latency: Duration,
+    /// Enqueue → first generated token (`None` if nothing was generated).
+    pub first_token_latency: Option<Duration>,
+    /// [`ResponseStatus::Truncated`] marks a prompt that exceeded the
+    /// model's `seq_len` and was rejected rather than silently cut.
+    pub status: ResponseStatus,
 }
 
-/// Pure dynamic-batching policy: FIFO, size- and deadline-triggered.
-#[derive(Default)]
-pub struct Batcher {
-    queue: std::collections::VecDeque<Request>,
+/// One event on a streaming response channel.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// A generated token, sent as soon as the engine emits it.
+    Token { token: usize, first: bool },
+    /// Terminal event: the full response (tokens repeated in order).
+    Done(Response),
 }
 
-impl Batcher {
-    pub fn push(&mut self, req: Request) {
-        self.queue.push_back(req);
-    }
-
-    pub fn len(&self) -> usize {
-        self.queue.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
-    }
-
-    /// Release a batch if the policy triggers: the queue has `max_batch`
-    /// requests, or the oldest request has waited past `max_wait`.
-    pub fn ready(
-        &mut self,
-        now: Instant,
-        max_batch: usize,
-        max_wait: Duration,
-    ) -> Option<Vec<Request>> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let deadline_hit = now.duration_since(self.queue.front().unwrap().enqueued) >= max_wait;
-        if self.queue.len() >= max_batch || deadline_hit {
-            let n = self.queue.len().min(max_batch);
-            Some(self.queue.drain(..n).collect())
-        } else {
-            None
-        }
-    }
-
-    /// Drain everything (shutdown path).
-    pub fn drain_all(&mut self, max_batch: usize) -> Vec<Vec<Request>> {
-        let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let n = self.queue.len().min(max_batch);
-            out.push(self.queue.drain(..n).collect());
-        }
-        out
-    }
+/// How a submission wants its results delivered.
+enum ResponseSink {
+    Unary(mpsc::Sender<Response>),
+    Stream(mpsc::Sender<StreamEvent>),
 }
 
-/// Aggregate serving statistics.
+/// One queued submission: the request plus its response channel.
+type Submission = (Request, ResponseSink);
+
+/// Aggregate serving statistics: request-level latencies plus the engine's
+/// per-step telemetry.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
     pub n_requests: usize,
     pub tokens_generated: usize,
     pub wall_seconds: f64,
+    /// Enqueue → completion, per request (seconds).
     pub latency: Summary,
+    /// Enqueue → first generated token, over requests that generated.
+    pub first_token_latency: Summary,
+    /// Decode-batch width per engine step.
     pub batch_sizes: Summary,
+    /// Occupied-slot fraction per engine step (1.0 = arena full).
+    pub slot_occupancy: Summary,
+    /// Admission-queue depth per engine step.
+    pub queue_depth: Summary,
+    /// Sequences admitted into / retired from KV slots.
+    pub joins: usize,
+    pub leaves: usize,
+    /// Requests rejected for oversized prompts.
+    pub truncated: usize,
+    /// Engine steps that did work.
+    pub steps: usize,
+    /// Configured KV-slot arena size.
+    pub slots: usize,
+    /// Constant KV-arena footprint in bytes.
+    pub kv_bytes: usize,
 }
 
 impl ServeStats {
@@ -138,12 +145,75 @@ impl ServeStats {
     pub fn tokens_per_second(&self) -> f64 {
         self.tokens_generated as f64 / self.wall_seconds.max(1e-12)
     }
+
+    fn from_run(
+        n_requests: usize,
+        tokens_generated: usize,
+        wall_seconds: f64,
+        latencies: &[f64],
+        first_token_latencies: &[f64],
+        t: &EngineTelemetry,
+    ) -> ServeStats {
+        ServeStats {
+            n_requests,
+            tokens_generated,
+            wall_seconds,
+            latency: Summary::of(latencies),
+            first_token_latency: Summary::of(first_token_latencies),
+            batch_sizes: Summary::of(&t.decode_batch),
+            slot_occupancy: Summary::of(&t.occupancy),
+            queue_depth: Summary::of(&t.queue_depth),
+            joins: t.joins,
+            leaves: t.leaves,
+            truncated: t.truncated,
+            steps: t.steps,
+            slots: t.slots,
+            kv_bytes: t.kv_bytes,
+        }
+    }
+
+    /// Machine-readable record (`oats-serve-v1`) — the serve analogue of
+    /// the bench harness's `oats-bench-v1` document.
+    pub fn to_json(&self, suite: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("suite", json::s(suite))
+            .set("schema", json::s("oats-serve-v1"))
+            .set("requests", json::num(self.n_requests as f64))
+            .set("tokens_generated", json::num(self.tokens_generated as f64))
+            .set("wall_seconds", json::num(self.wall_seconds))
+            .set("tokens_per_second", json::num(self.tokens_per_second()))
+            .set("joins", json::num(self.joins as f64))
+            .set("leaves", json::num(self.leaves as f64))
+            .set("truncated", json::num(self.truncated as f64))
+            .set("steps", json::num(self.steps as f64))
+            .set("slots", json::num(self.slots as f64))
+            .set("kv_arena_bytes", json::num(self.kv_bytes as f64))
+            .set("latency_s", self.latency.to_json())
+            .set("first_token_latency_s", self.first_token_latency.to_json())
+            .set("decode_batch", self.batch_sizes.to_json())
+            .set("slot_occupancy", self.slot_occupancy.to_json())
+            .set("queue_depth", self.queue_depth.to_json());
+        o
+    }
+
+    /// Write `SERVE_<suite>.json` into `$OATS_BENCH_DIR` (default: cwd),
+    /// alongside the `BENCH_*.json` family, so serve-perf history
+    /// accumulates per CI run.
+    pub fn write_json(&self, suite: &str) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("OATS_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir).join(format!("SERVE_{suite}.json"));
+        std::fs::write(&path, self.to_json(suite).to_pretty())?;
+        println!("serve json -> {}", path.display());
+        Ok(path)
+    }
 }
 
 /// Greedy-generate `n` tokens from `prompt` (single-stream decode). An
 /// empty prompt yields an empty completion: there are no logits to decode
 /// from (the buffer would stay all-zero and argmax would emit token 0
-/// forever).
+/// forever). This is the scalar reference the engine is property-tested
+/// against; prompts beyond `seq_len` are truncated here (the serving path
+/// rejects them with [`ResponseStatus::Truncated`] instead).
 pub fn generate(model: &TransformerLM, prompt: &[usize], n: usize) -> Vec<usize> {
     if prompt.is_empty() {
         return Vec::new();
@@ -166,14 +236,54 @@ pub fn generate(model: &TransformerLM, prompt: &[usize], n: usize) -> Vec<usize>
     out
 }
 
+/// Single-sequence reference that routes EVERY step — prefill included —
+/// through [`TransformerLM::decode_step_batch`] at batch 1: the engine's
+/// exact compute path. Per-row results of the batched kernels are
+/// independent of batch width, so this equals the continuous-batching
+/// engine's output for any interleaving. For dense models it also equals
+/// [`generate`] bit-for-bit; for packed/compressed models the batched
+/// kernels' accumulation order can differ from the scalar `decode_step`
+/// path in the last ulps (enough to flip an argmax near-tie), so
+/// engine-parity tests on packed models must compare against this, not
+/// against the scalar-prefill paths.
+pub fn generate_lockstep(model: &TransformerLM, prompt: &[usize], n: usize) -> Vec<usize> {
+    if prompt.is_empty() {
+        return Vec::new();
+    }
+    let budget = model.cfg.seq_len;
+    let mut cache = KvCache::new(&model.cfg);
+    let mut logits: Vec<f32> = vec![0.0; model.cfg.vocab];
+    let step = |tok: usize, cache: &mut KvCache, logits: &mut Vec<f32>| {
+        let m = model.decode_step_batch(&[tok], &mut [cache]);
+        logits.clear();
+        logits.extend_from_slice(m.row(0));
+    };
+    for &t in prompt.iter().take(budget) {
+        step(t, &mut cache, &mut logits);
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if cache.len >= budget {
+            break;
+        }
+        let next = argmax(&logits);
+        out.push(next);
+        step(next, &mut cache, &mut logits);
+    }
+    out
+}
+
 /// Greedy-generate `n` tokens for a whole batch: per-sequence prefill
 /// (ragged prompt lengths, fanned across `workers` threads), then lockstep
 /// batched decode — each step runs the six linears and the head as
 /// [b × d] products, which is the shape the planned BCSR/fused kernels are
 /// packed for. Per-sequence results are independent of how requests are
-/// batched (every output element accumulates in a fixed order), so
-/// `generate_batch(m, &[p], n, 1)[0]` is the canonical reference for any
-/// batching of `p`.
+/// grouped into batches here (every output element accumulates in a fixed
+/// order), so `generate_batch(m, &[p], n, 1)[0]` is the reference for any
+/// `generate_batch` grouping of `p`. It is NOT the engine reference: the
+/// engine prefills through the batched kernels (use
+/// [`generate_lockstep`]) and rejects oversized prompts instead of
+/// truncating them.
 pub fn generate_batch(
     model: &TransformerLM,
     prompts: &[Vec<usize>],
@@ -237,34 +347,29 @@ pub fn generate_batch(
     out
 }
 
-/// One queued submission: the request plus its response channel.
-type Submission = (Request, mpsc::Sender<Response>);
-
-/// Pull requests into the batcher: block up to `poll` for the first one,
-/// then drain everything already queued with `try_recv`, so a burst enters
-/// the batcher in ONE pump. (Pulling a single request per poll cycle made a
-/// burst of N requests take N cycles to assemble, splintering
-/// deadline-triggered dispatch into undersized batches.) Returns true once
-/// the request channel has disconnected.
+/// Pull requests into the admission queue: block up to `poll` for the
+/// first one, then drain everything already queued with `try_recv`, so a
+/// burst enters the queue in ONE pump. Returns true once the request
+/// channel has disconnected.
 fn pump_requests(
     rx: &mpsc::Receiver<Submission>,
     poll: Duration,
-    batcher: &mut Batcher,
-    resp_txs: &mut HashMap<u64, mpsc::Sender<Response>>,
+    queue: &mut Batcher,
+    sinks: &mut HashMap<u64, ResponseSink>,
 ) -> bool {
     match rx.recv_timeout(poll) {
-        Ok((req, tx)) => {
-            resp_txs.insert(req.id, tx);
-            batcher.push(req);
+        Ok((req, sink)) => {
+            sinks.insert(req.id, sink);
+            queue.push(req);
         }
         Err(mpsc::RecvTimeoutError::Timeout) => return false,
         Err(mpsc::RecvTimeoutError::Disconnected) => return true,
     }
     loop {
         match rx.try_recv() {
-            Ok((req, tx)) => {
-                resp_txs.insert(req.id, tx);
-                batcher.push(req);
+            Ok((req, sink)) => {
+                sinks.insert(req.id, sink);
+                queue.push(req);
             }
             Err(mpsc::TryRecvError::Empty) => return false,
             Err(mpsc::TryRecvError::Disconnected) => return true,
@@ -272,16 +377,46 @@ fn pump_requests(
     }
 }
 
-/// The server: owns the batcher thread and the batched-decode executor.
+/// Route one engine event to its response channel.
+fn dispatch(ev: SeqEvent, sinks: &mut HashMap<u64, ResponseSink>) {
+    match ev {
+        SeqEvent::Token { id, token, first } => {
+            if let Some(ResponseSink::Stream(tx)) = sinks.get(&id) {
+                let _ = tx.send(StreamEvent::Token { token, first });
+            }
+        }
+        SeqEvent::Finished(f) => {
+            let resp = Response {
+                id: f.id,
+                tokens: f.tokens,
+                latency: f.enqueued.elapsed(),
+                first_token_latency: f.first_token_latency,
+                status: f.status,
+            };
+            match sinks.remove(&resp.id) {
+                Some(ResponseSink::Unary(tx)) => {
+                    let _ = tx.send(resp);
+                }
+                Some(ResponseSink::Stream(tx)) => {
+                    let _ = tx.send(StreamEvent::Done(resp));
+                }
+                None => {}
+            }
+        }
+    }
+}
+
+/// The server: owns the engine thread (admission queue + continuous-
+/// batching decode loop) and the request channel into it.
 pub struct Server {
     req_tx: Option<mpsc::Sender<Submission>>,
-    batcher_handle: Option<std::thread::JoinHandle<()>>,
-    pub observed_batches: Arc<Mutex<Vec<usize>>>,
+    engine_handle: Option<std::thread::JoinHandle<()>>,
+    telemetry: Arc<Mutex<EngineTelemetry>>,
 }
 
 impl Server {
     pub fn start(model: Arc<TransformerLM>, cfg: ServeConfig) -> Server {
-        // Kernel-dispatch step: decode batches are `max_batch`-sized at most,
+        // Kernel-dispatch step: decode batches are at most `slots` wide,
         // so pre-pack each compressed layer for that batch shape once, up
         // front, instead of running scalar CSR per request.
         let model = if cfg.prepack && model.needs_packing() {
@@ -290,74 +425,71 @@ impl Server {
             model
         };
         let (req_tx, req_rx) = mpsc::channel::<Submission>();
-        let observed_batches = Arc::new(Mutex::new(Vec::new()));
-        let observed = Arc::clone(&observed_batches);
+        let mut engine = Engine::new(model, cfg.engine_config());
+        let telemetry = engine.telemetry();
 
         let handle = std::thread::spawn(move || {
-            let mut batcher = Batcher::default();
-            let mut resp_txs: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
+            let mut queue = Batcher::default();
+            let mut sinks: HashMap<u64, ResponseSink> = HashMap::new();
             let mut closed = false;
             loop {
-                // Pull requests (with a short poll so deadlines fire),
-                // draining any queued burst in one pump.
-                let poll = Duration::from_micros(200);
-                if pump_requests(&req_rx, poll, &mut batcher, &mut resp_txs) {
+                // While sequences are resident, only drain what's already
+                // queued (zero-poll) so decode never stalls on arrivals;
+                // when idle, block briefly so the loop doesn't spin.
+                let poll = if engine.is_idle() {
+                    Duration::from_micros(200)
+                } else {
+                    Duration::ZERO
+                };
+                if pump_requests(&req_rx, poll, &mut queue, &mut sinks) {
                     closed = true;
                 }
-                let now = Instant::now();
-                let batches: Vec<Vec<Request>> = if closed {
-                    batcher.drain_all(cfg.max_batch)
-                } else {
-                    batcher.ready(now, cfg.max_batch, cfg.max_wait).into_iter().collect()
-                };
-                for batch in batches {
-                    observed.lock().unwrap().push(batch.len());
-                    // Batched decode: prefill fans across workers, then the
-                    // whole batch generates in lockstep so the linears run
-                    // as [b × d] products through the planned kernels (this
-                    // is the shape prepack chose formats for).
-                    let txs: Vec<(Request, mpsc::Sender<Response>)> = batch
-                        .into_iter()
-                        .map(|r| {
-                            let tx = resp_txs.remove(&r.id).expect("response channel");
-                            (r, tx)
-                        })
-                        .collect();
-                    let prompts: Vec<Vec<usize>> =
-                        txs.iter().map(|(r, _)| r.prompt.clone()).collect();
-                    let outs = generate_batch(&model, &prompts, cfg.gen_tokens, cfg.workers);
-                    for ((req, tx), tokens) in txs.into_iter().zip(outs) {
-                        let _ = tx.send(Response {
-                            id: req.id,
-                            tokens,
-                            latency: req.enqueued.elapsed(),
-                        });
-                    }
+                for ev in engine.step(&mut queue) {
+                    dispatch(ev, &mut sinks);
                 }
-                if closed && batcher.is_empty() {
+                if closed && engine.is_idle() && queue.is_empty() {
                     break;
                 }
             }
         });
 
-        Server { req_tx: Some(req_tx), batcher_handle: Some(handle), observed_batches }
+        Server { req_tx: Some(req_tx), engine_handle: Some(handle), telemetry }
     }
 
-    /// Submit a request; returns the response receiver.
+    /// Submit a request; returns the response receiver (one terminal
+    /// [`Response`]).
     pub fn submit(&self, id: u64, prompt: Vec<usize>) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
+        self.send(id, prompt, ResponseSink::Unary(tx));
+        rx
+    }
+
+    /// Submit a request for per-token streaming: the receiver yields a
+    /// [`StreamEvent::Token`] per generated token as the engine emits it,
+    /// then [`StreamEvent::Done`] with the full response.
+    pub fn submit_streaming(&self, id: u64, prompt: Vec<usize>) -> mpsc::Receiver<StreamEvent> {
+        let (tx, rx) = mpsc::channel();
+        self.send(id, prompt, ResponseSink::Stream(tx));
+        rx
+    }
+
+    fn send(&self, id: u64, prompt: Vec<usize>, sink: ResponseSink) {
         self.req_tx
             .as_ref()
             .expect("server stopped")
-            .send((Request { id, prompt, enqueued: Instant::now() }, tx))
-            .expect("batcher alive");
-        rx
+            .send((Request { id, prompt, enqueued: Instant::now() }, sink))
+            .expect("engine alive");
+    }
+
+    /// Snapshot of the engine's per-step telemetry so far.
+    pub fn telemetry(&self) -> EngineTelemetry {
+        self.telemetry.lock().unwrap().clone()
     }
 
     /// Stop accepting requests and wait for in-flight work.
     pub fn shutdown(mut self) {
         drop(self.req_tx.take());
-        if let Some(h) = self.batcher_handle.take() {
+        if let Some(h) = self.engine_handle.take() {
             let _ = h.join();
         }
     }
@@ -366,14 +498,15 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         drop(self.req_tx.take());
-        if let Some(h) = self.batcher_handle.take() {
+        if let Some(h) = self.engine_handle.take() {
             let _ = h.join();
         }
     }
 }
 
 /// Closed-loop load test: submit `n_requests` prompts, wait for all, and
-/// report stats. This is the Table 7 / Table 14 measurement harness.
+/// report stats. This is the Table 7 / Table 14 measurement harness and
+/// the `serve-load` smoke driver.
 pub fn run_load(
     model: Arc<TransformerLM>,
     cfg: ServeConfig,
@@ -388,36 +521,28 @@ pub fn run_load(
         model
     };
     let t0 = Instant::now();
-    let server = Server::start(model, cfg.clone());
+    let server = Server::start(model, cfg);
     let rxs: Vec<mpsc::Receiver<Response>> = prompts
         .into_iter()
         .enumerate()
         .map(|(i, p)| server.submit(i as u64, p))
         .collect();
     let mut latencies = Vec::new();
+    let mut first_token_latencies = Vec::new();
     let mut tokens = 0usize;
     let n = rxs.len();
     for rx in rxs {
         let resp = rx.recv().expect("response");
         latencies.push(resp.latency.as_secs_f64());
+        if let Some(ftl) = resp.first_token_latency {
+            first_token_latencies.push(ftl.as_secs_f64());
+        }
         tokens += resp.tokens.len();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let batch_sizes: Vec<f64> = server
-        .observed_batches
-        .lock()
-        .unwrap()
-        .iter()
-        .map(|&b| b as f64)
-        .collect();
+    let telemetry = server.telemetry();
     server.shutdown();
-    ServeStats {
-        n_requests: n,
-        tokens_generated: tokens,
-        wall_seconds: wall,
-        latency: Summary::of(&latencies),
-        batch_sizes: Summary::of(&batch_sizes),
-    }
+    ServeStats::from_run(n, tokens, wall, &latencies, &first_token_latencies, &telemetry)
 }
 
 #[cfg(test)]
@@ -425,77 +550,34 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::model::TransformerLM;
-    use crate::util::prop::check;
 
     fn tiny() -> Arc<TransformerLM> {
         Arc::new(TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 5))
     }
 
     #[test]
-    fn batcher_never_exceeds_cap_prop() {
-        check("batcher cap", 50, |g| {
-            let mut b = Batcher::default();
-            let cap = g.usize_range(1, 8);
-            let n = g.usize_range(0, 40);
-            let t0 = Instant::now();
-            let mut released = 0;
-            for i in 0..n {
-                b.push(Request { id: i as u64, prompt: vec![], enqueued: t0 });
-                if let Some(batch) = b.ready(t0, cap, Duration::from_secs(999)) {
-                    assert!(batch.len() <= cap);
-                    assert_eq!(batch.len(), cap); // only size-triggered here
-                    released += batch.len();
-                }
-            }
-            for batch in b.drain_all(cap) {
-                assert!(batch.len() <= cap);
-                released += batch.len();
-            }
-            assert_eq!(released, n, "no request lost");
-        });
-    }
-
-    #[test]
-    fn batcher_deadline_triggers() {
-        let mut b = Batcher::default();
-        let old = Instant::now() - Duration::from_millis(50);
-        b.push(Request { id: 0, prompt: vec![], enqueued: old });
-        let batch = b.ready(Instant::now(), 100, Duration::from_millis(10));
-        assert!(batch.is_some());
-        assert_eq!(batch.unwrap().len(), 1);
-    }
-
-    #[test]
-    fn batcher_fifo_order() {
-        let mut b = Batcher::default();
-        let t0 = Instant::now();
-        for i in 0..5 {
-            b.push(Request { id: i, prompt: vec![], enqueued: t0 });
-        }
-        let batch = b.ready(t0, 3, Duration::from_secs(999)).unwrap();
-        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
-        assert_eq!(ids, vec![0, 1, 2]);
-    }
-
-    #[test]
     fn pump_drains_queued_burst_in_one_call() {
-        // The serve loop must not need one poll cycle per request: a burst
-        // already sitting in the channel enters the batcher in one pump.
+        // The engine loop must not need one poll cycle per request: a burst
+        // already sitting in the channel enters the queue in one pump.
         let (tx, rx) = mpsc::channel();
         let t0 = Instant::now();
         for i in 0..5u64 {
             let (rtx, _rrx) = mpsc::channel();
-            tx.send((Request { id: i, prompt: vec![1], enqueued: t0 }, rtx)).unwrap();
+            tx.send((
+                Request { id: i, prompt: vec![1], enqueued: t0 },
+                ResponseSink::Unary(rtx),
+            ))
+            .unwrap();
         }
         let mut b = Batcher::default();
-        let mut txs = HashMap::new();
-        let closed = pump_requests(&rx, Duration::from_millis(10), &mut b, &mut txs);
+        let mut sinks = HashMap::new();
+        let closed = pump_requests(&rx, Duration::from_millis(10), &mut b, &mut sinks);
         assert!(!closed);
-        assert_eq!(b.len(), 5, "burst must enter the batcher in one pump");
-        assert_eq!(txs.len(), 5);
+        assert_eq!(b.len(), 5, "burst must enter the queue in one pump");
+        assert_eq!(sinks.len(), 5);
         // Disconnect is reported once the senders are gone.
         drop(tx);
-        assert!(pump_requests(&rx, Duration::from_millis(1), &mut b, &mut txs));
+        assert!(pump_requests(&rx, Duration::from_millis(1), &mut b, &mut sinks));
     }
 
     #[test]
@@ -545,25 +627,88 @@ mod tests {
     #[test]
     fn server_round_trip() {
         let m = tiny();
-        let cfg = ServeConfig {
-            max_batch: 4,
-            max_wait: Duration::from_millis(1),
-            gen_tokens: 4,
-            workers: 2,
-            prepack: true,
-            quantize: false,
-        };
+        let cfg = ServeConfig { slots: 4, gen_tokens: 4, ..Default::default() };
         let stats = run_load(m, cfg, (0..10).map(|i| vec![i % 16, 1, 2]).collect());
         assert_eq!(stats.n_requests, 10);
         assert_eq!(stats.tokens_generated, 40);
         assert!(stats.tokens_per_second() > 0.0);
         assert!(stats.latency.max >= stats.latency.min);
+        assert_eq!(stats.joins, 10);
+        assert_eq!(stats.leaves, 10);
+        assert_eq!(stats.truncated, 0);
+        assert!(stats.steps > 0);
+        assert!(stats.slot_occupancy.mean > 0.0);
+        assert!(stats.kv_bytes > 0);
+        assert_eq!(stats.first_token_latency.n, 10);
+    }
+
+    #[test]
+    fn server_matches_scalar_generate_per_request() {
+        // Continuous batching must not change any request's tokens.
+        let m = tiny();
+        let prompts: Vec<Vec<usize>> =
+            (0..9).map(|i| (0..(1 + i % 4)).map(|j| (i * 5 + j) % 16).collect()).collect();
+        let cfg = ServeConfig { slots: 3, gen_tokens: 5, ..Default::default() };
+        let server = Server::start(Arc::clone(&m), cfg);
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| server.submit(i as u64, p.clone()))
+            .collect();
+        for (rx, p) in rxs.into_iter().zip(&prompts) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens, generate(&m, p, 5), "prompt {p:?}");
+            assert_eq!(resp.status, ResponseStatus::Complete);
+        }
+    }
+
+    #[test]
+    fn streaming_submission_yields_tokens_then_done() {
+        let m = tiny();
+        let cfg = ServeConfig { slots: 2, gen_tokens: 6, ..Default::default() };
+        let server = Server::start(Arc::clone(&m), cfg);
+        let rx = server.submit_streaming(7, vec![1, 2, 3]);
+        let mut streamed = Vec::new();
+        let mut done: Option<Response> = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Token { token, first } => {
+                    assert_eq!(first, streamed.is_empty(), "first flag on first token only");
+                    streamed.push(token);
+                }
+                StreamEvent::Done(resp) => {
+                    done = Some(resp);
+                    break;
+                }
+            }
+        }
+        let resp = done.expect("terminal Done event");
+        assert_eq!(resp.tokens, streamed, "stream must equal the final response");
+        assert_eq!(resp.tokens, generate(&m, &[1, 2, 3], 6));
+        let ftl = resp.first_token_latency.expect("first token seen");
+        assert!(ftl <= resp.latency, "first token cannot be later than completion");
+    }
+
+    #[test]
+    fn generate_lockstep_matches_generate_on_dense() {
+        // Dense layers run identical arithmetic through decode_step and
+        // decode_step_batch, so the two references coincide exactly.
+        let m = tiny();
+        for p in [vec![1usize, 2, 3], vec![], vec![9usize]] {
+            assert_eq!(generate_lockstep(&m, &p, 7), generate(&m, &p, 7), "prompt {p:?}");
+        }
     }
 
     #[test]
     fn prepacked_server_matches_unpacked_outputs() {
         // Compress a model, then serve it with and without kernel pre-packing:
-        // generated tokens must be identical.
+        // generated tokens must be identical to batch-of-1 lockstep decode
+        // through the same kernels (`generate_lockstep` — the engine prefills
+        // through the batched kernels, so scalar-prefill references could
+        // differ in the last ulps on packed layers). Packed vs unpacked
+        // numerics only agree to ~1e-4, so cross-mode token equality would be
+        // tie-dependent; per-sequence results are independent of how the
+        // engine batches, so continuous batching's groupings don't matter.
         let base = TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 21);
         let corpus = crate::data::SyntheticCorpus::new(crate::data::CorpusConfig::for_vocab(
             base.cfg.vocab,
@@ -581,7 +726,7 @@ mod tests {
         assert!(cm.needs_packing());
         let prompts: Vec<Vec<usize>> = (0..6).map(|i| vec![i % 16, 3, 5]).collect();
         let run = |prepack: bool| -> Vec<Vec<usize>> {
-            let cfg = ServeConfig { max_batch: 4, gen_tokens: 6, prepack, ..Default::default() };
+            let cfg = ServeConfig { slots: 4, gen_tokens: 6, prepack, ..Default::default() };
             let server = Server::start(Arc::new(cm.clone()), cfg);
             let rxs: Vec<_> = prompts
                 .iter()
@@ -590,59 +735,96 @@ mod tests {
                 .collect();
             rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect()
         };
-        // Each server mode must reproduce direct batched decode through the
-        // same kernels bit-for-bit. (Packed vs unpacked numerics only agree
-        // to ~1e-4, so cross-mode token equality would be tie-dependent;
-        // per-sequence results are independent of batch grouping, so the
-        // dynamic batcher's splits don't matter.)
-        let want_packed = generate_batch(&cm.packed_for_serving(4), &prompts, 6, 1);
+        let packed = cm.packed_for_serving(4);
+        let want_packed: Vec<Vec<usize>> =
+            prompts.iter().map(|p| generate_lockstep(&packed, p, 6)).collect();
         assert_eq!(run(true), want_packed);
-        let want_unpacked = generate_batch(&cm, &prompts, 6, 1);
+        let want_unpacked: Vec<Vec<usize>> =
+            prompts.iter().map(|p| generate_lockstep(&cm, p, 6)).collect();
         assert_eq!(run(false), want_unpacked);
     }
 
     #[test]
-    fn server_batches_under_cap() {
+    fn oversized_prompt_surfaces_truncated_status() {
         let m = tiny();
-        let cfg = ServeConfig {
-            max_batch: 3,
-            max_wait: Duration::from_millis(1),
-            gen_tokens: 2,
-            workers: 2,
-            prepack: true,
-            quantize: false,
-        };
+        let cap = m.cfg.seq_len;
+        let cfg = ServeConfig { slots: 2, gen_tokens: 4, ..Default::default() };
+        let server = Server::start(Arc::clone(&m), cfg);
+        let ok_rx = server.submit(0, vec![1, 2, 3]);
+        let over_rx = server.submit(1, vec![1; cap + 5]);
+        let over = over_rx.recv().unwrap();
+        assert_eq!(over.status, ResponseStatus::Truncated);
+        assert!(over.tokens.is_empty());
+        assert!(over.first_token_latency.is_none());
+        let ok = ok_rx.recv().unwrap();
+        assert_eq!(ok.status, ResponseStatus::Complete);
+        assert_eq!(ok.tokens.len(), 4);
+        drop(server);
+    }
+
+    #[test]
+    fn decode_batches_never_exceed_slots() {
+        let m = tiny();
+        let cfg = ServeConfig { slots: 3, gen_tokens: 2, ..Default::default() };
         let server = Server::start(m, cfg);
         let rxs: Vec<_> = (0..7).map(|i| server.submit(i, vec![1, 2])).collect();
         for rx in rxs {
             rx.recv().unwrap();
         }
-        let batches = server.observed_batches.lock().unwrap().clone();
-        assert!(batches.iter().all(|&b| b <= 3), "{batches:?}");
-        assert_eq!(batches.iter().sum::<usize>(), 7);
+        let t = server.telemetry();
+        assert!(t.decode_batch.iter().all(|&b| b <= 3.0), "{:?}", t.decode_batch);
+        assert_eq!(t.joins, 7);
+        assert_eq!(t.leaves, 7);
         drop(server);
     }
 
     #[test]
-    fn server_dispatches_prequeued_burst_as_one_batch() {
-        // A burst of exactly max_batch requests must assemble into ONE
-        // size-triggered batch: the pump drains the queued burst and the
-        // generous deadline never fires first.
+    fn prequeued_burst_fills_the_arena() {
+        // A queued burst of exactly `slots` requests must be admitted
+        // together and decode at full width. Driven synchronously at the
+        // engine level: through the threaded server the engine admits
+        // whatever has *arrived*, so full-width there would race the
+        // submitting thread.
         let m = tiny();
-        let cfg = ServeConfig {
-            max_batch: 6,
-            max_wait: Duration::from_secs(30),
-            gen_tokens: 2,
-            workers: 2,
-            prepack: true,
-            quantize: false,
-        };
-        let server = Server::start(m, cfg);
-        let rxs: Vec<_> = (0..6).map(|i| server.submit(i, vec![1, 2])).collect();
-        for rx in rxs {
-            rx.recv().unwrap();
+        let cfg = EngineConfig { slots: 6, gen_tokens: 2, ..Default::default() };
+        let mut engine = Engine::new(m, cfg);
+        let mut queue = Batcher::default();
+        for i in 0..6u64 {
+            queue.push(Request { id: i, prompt: vec![1, 2], enqueued: Instant::now() });
         }
-        let batches = server.observed_batches.lock().unwrap().clone();
-        assert_eq!(batches, vec![6], "burst must dispatch as a single full batch");
+        let mut finished = 0;
+        for _ in 0..100 {
+            for ev in engine.step(&mut queue) {
+                if matches!(ev, SeqEvent::Finished(_)) {
+                    finished += 1;
+                }
+            }
+            if finished == 6 {
+                break;
+            }
+        }
+        assert_eq!(finished, 6);
+        let t = engine.telemetry().lock().unwrap().clone();
+        let peak = t.occupancy.iter().cloned().fold(0.0f64, f64::max);
+        assert_eq!(peak, 1.0, "burst must fill all slots: {:?}", t.occupancy);
+        let widest = t.decode_batch.iter().cloned().fold(0.0f64, f64::max);
+        assert_eq!(widest, 6.0, "full-width decode batch expected: {:?}", t.decode_batch);
+    }
+
+    #[test]
+    fn serve_stats_json_round_trips() {
+        let m = tiny();
+        let cfg = ServeConfig { slots: 2, gen_tokens: 3, ..Default::default() };
+        let stats = run_load(m, cfg, vec![vec![1, 2], vec![3], vec![4, 5, 6]]);
+        let j = stats.to_json("unittest");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("oats-serve-v1"));
+        assert!(j.req_f64("tokens_per_second").unwrap() > 0.0);
+        assert_eq!(j.req_f64("joins").unwrap(), 3.0);
+        let lat = j.get("latency_s").expect("latency summary");
+        assert!(lat.req_f64("p95").unwrap() >= lat.req_f64("p50").unwrap());
+        assert!(lat.req_f64("p99").unwrap() >= lat.req_f64("p95").unwrap());
+        // Round-trips through the parser (what the CI smoke gate does).
+        let parsed = crate::json::parse(&j.to_pretty()).unwrap();
+        assert!(parsed.get("slot_occupancy").is_some());
     }
 }

@@ -9,36 +9,34 @@
 use super::tables::paper_kappa;
 use super::Ctx;
 use crate::config::{CompressConfig, Method, SparsityPattern};
-use crate::coordinator::pipeline::compress_clone;
-use crate::coordinator::serve::{generate, run_load, ServeConfig};
+use crate::coordinator::serve::{generate, run_load, ServeConfig, ServeStats};
 use crate::json::{self, Json};
 use crate::model::TransformerLM;
 use crate::report::{speedup, Table};
 use anyhow::Result;
 use std::sync::Arc;
-use std::time::Duration;
+
+/// Run the Table 7 measurement — short prompts through the continuous-
+/// batching engine — and return the full serving stats (the bench harness
+/// records wall time and telemetry, not just the throughput scalar).
+pub fn decode_stats(model: &TransformerLM, n_requests: usize, gen_tokens: usize) -> ServeStats {
+    let cfg = ServeConfig { slots: 8, gen_tokens, ..Default::default() };
+    let prompts: Vec<Vec<usize>> = (0..n_requests)
+        .map(|i| vec![(i * 7) % model.cfg.vocab, (i * 13) % model.cfg.vocab, 1])
+        .collect();
+    run_load(Arc::new(model.clone()), cfg, prompts)
+}
 
 /// Single-token decode throughput (tokens/s) of a model: the Table 7
 /// measurement — one token generated per request from short prompts.
 pub fn decode_throughput(model: &TransformerLM, n_requests: usize, gen_tokens: usize) -> f64 {
-    let cfg = ServeConfig {
-        max_batch: 8,
-        max_wait: Duration::from_micros(500),
-        gen_tokens,
-        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-        prepack: true,
-        quantize: false,
-    };
-    let prompts: Vec<Vec<usize>> = (0..n_requests)
-        .map(|i| vec![(i * 7) % model.cfg.vocab, (i * 13) % model.cfg.vocab, 1])
-        .collect();
-    let stats = run_load(Arc::new(model.clone()), cfg, prompts);
-    stats.tokens_per_second()
+    decode_stats(model, n_requests, gen_tokens).tokens_per_second()
 }
 
-/// Sequential-generation throughput: one long request (Table 14's regime,
+/// Sequential-generation wall time: one long request (Table 14's regime,
 /// where prefill/compute dominates and sparse-format gains shrink).
-pub fn sequence_throughput(model: &TransformerLM, tokens: usize) -> f64 {
+/// Returns `(seconds, tokens_generated)`.
+pub fn sequence_walltime(model: &TransformerLM, tokens: usize) -> (f64, usize) {
     // Single-stream decode: pack for batch 1. At batch 1 the planner keeps
     // CSR for unstructured layers (BCSR needs batch ≥ 2 to pay off), so this
     // only swaps in N:M- or Dense-planned formats where they apply — the
@@ -52,7 +50,13 @@ pub fn sequence_throughput(model: &TransformerLM, tokens: usize) -> f64 {
     };
     let t0 = std::time::Instant::now();
     let out = generate(m, &[1, 2, 3], tokens);
-    out.len() as f64 / t0.elapsed().as_secs_f64()
+    (t0.elapsed().as_secs_f64(), out.len())
+}
+
+/// Sequential-generation throughput (tokens/s).
+pub fn sequence_throughput(model: &TransformerLM, tokens: usize) -> f64 {
+    let (secs, n) = sequence_walltime(model, tokens);
+    n as f64 / secs
 }
 
 /// Tables 7/14 runner.
@@ -93,7 +97,7 @@ pub fn throughput_table(ctx: &mut Ctx, preset: &str, seq_mode: bool) -> Result<T
                 pattern: SparsityPattern::RowWise,
                 ..Default::default()
             };
-            let (cm, _) = compress_clone(&model, &calib, &cfg, 6)?;
+            let (cm, _) = crate::coordinator::pipeline::compress_clone(&model, &calib, &cfg, 6)?;
             let tp = measure(&cm);
             let mut rec = Json::obj();
             rec.set("exp", json::s(if seq_mode { "t14_seq" } else { "t7_decode" }))
@@ -114,20 +118,25 @@ pub fn throughput_table(ctx: &mut Ctx, preset: &str, seq_mode: bool) -> Result<T
     Ok(t)
 }
 
-/// Table 9: wall-clock per OATS alternating-thresholding iteration, per
-/// preset (the paper reports seconds per transformer block per iteration),
-/// plus the 4-worker parallel variant from §A.2.
-pub fn walltime_table(quick: bool) -> Result<Table> {
+/// One Table 9 measurement row.
+pub struct WalltimeRow {
+    pub preset: &'static str,
+    pub serial_s_per_iter: f64,
+    pub parallel_s_per_iter: f64,
+}
+
+/// Table 9 measurements: wall-clock per OATS alternating-thresholding
+/// iteration for one transformer block's six linears, serial and with the
+/// §A.2-style 4-worker fan-out. Shared by the table printer and the bench
+/// JSON emitter.
+pub fn walltime_rows(quick: bool) -> Result<Vec<WalltimeRow>> {
     use crate::compress::oats::alternating_thresholding;
     use crate::compress::params;
     use crate::tensor::Matrix;
     use crate::util::prng::Rng;
 
     let presets = if quick { vec!["tiny"] } else { vec!["tiny", "small", "base", "large"] };
-    let mut t = Table::new(
-        "Table 9 — seconds per OATS iteration per transformer block",
-        &["Preset", "s/iter (serial)", "s/iter (4 workers)"],
-    );
+    let mut rows = Vec::new();
     for preset in presets {
         let cfg = crate::config::ModelConfig::preset(preset)?;
         let mut rng = Rng::new(1);
@@ -173,7 +182,32 @@ pub fn walltime_table(quick: bool) -> Result<Table> {
             }
         });
         let par = t0.elapsed().as_secs_f64() / iters as f64;
-        t.row(vec![preset.into(), format!("{serial:.3}"), format!("{par:.3}")]);
+        rows.push(WalltimeRow { preset, serial_s_per_iter: serial, parallel_s_per_iter: par });
     }
-    Ok(t)
+    Ok(rows)
+}
+
+/// Render measured [`WalltimeRow`]s as the paper-style Table 9 — the one
+/// presentation shared by the `bench-table t9` path and the
+/// `table9_walltime` bench target.
+pub fn walltime_table_from_rows(rows: &[WalltimeRow]) -> Table {
+    let mut t = Table::new(
+        "Table 9 — seconds per OATS iteration per transformer block",
+        &["Preset", "s/iter (serial)", "s/iter (4 workers)"],
+    );
+    for row in rows {
+        t.row(vec![
+            row.preset.into(),
+            format!("{:.3}", row.serial_s_per_iter),
+            format!("{:.3}", row.parallel_s_per_iter),
+        ]);
+    }
+    t
+}
+
+/// Table 9: wall-clock per OATS alternating-thresholding iteration, per
+/// preset (the paper reports seconds per transformer block per iteration),
+/// plus the 4-worker parallel variant from §A.2.
+pub fn walltime_table(quick: bool) -> Result<Table> {
+    Ok(walltime_table_from_rows(&walltime_rows(quick)?))
 }

@@ -7,6 +7,10 @@
 //!                   [--iters N] [--pattern row|layer|N:M] [--owl] [--out dir]
 //! oats eval         --model models/small-oats-50
 //! oats serve-bench  --preset small [--seq]          # Tables 7 / 14
+//! oats serve-load   [--preset tiny] [--requests N] [--gen N] [--slots N]
+//!                   [--prefill-chunk N] [--admission fcfs|shortest]
+//!                   [--compress] [--quantize] [--quick] [--tag NAME]
+//!                                                   # SERVE_<tag>.json
 //! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
 //! oats sweep        rank-ratio|iters|nm|grid        # Figures 1–2, Table 15
 //! oats rollout      [--out results/rollout]         # Figures 3–4
@@ -42,6 +46,7 @@ fn run(args: &Args) -> Result<()> {
         "compress" => cmd_compress(args),
         "eval" => cmd_eval(args),
         "serve-bench" => cmd_serve_bench(args),
+        "serve-load" => cmd_serve_load(args),
         "bench-table" => cmd_bench_table(args),
         "sweep" => cmd_sweep(args),
         "rollout" => cmd_rollout(args),
@@ -172,6 +177,82 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let table = speed::throughput_table(&mut ctx, preset, args.bool_flag("seq"))?;
     table.print();
     ctx.record(&table.to_json());
+    Ok(())
+}
+
+/// Closed-loop load run through the continuous-batching serve engine with
+/// a mixed-length prompt population, emitting `SERVE_<tag>.json`
+/// (`oats-serve-v1`) into `$OATS_BENCH_DIR`. Kernel speed is independent
+/// of weight *values*, so the model is randomly initialized (no training
+/// artifacts needed — this is what CI's serve-smoke job runs);
+/// `--compress` first runs a quick OATS pass so the packed sparse kernels
+/// carry the decode.
+fn cmd_serve_load(args: &Args) -> Result<()> {
+    use oats::coordinator::serve::{run_load, AdmissionPolicy, ServeConfig};
+    let preset = args.flag_or("preset", "tiny");
+    let quick = args.bool_flag("quick");
+    let n_req = args.usize_flag("requests", if quick { 24 } else { 96 });
+    let gen_tokens = args.usize_flag("gen", if quick { 8 } else { 24 });
+    let cfg = ServeConfig {
+        slots: args.usize_flag("slots", 4),
+        gen_tokens,
+        prefill_chunk: args.usize_flag("prefill-chunk", 8),
+        admission: AdmissionPolicy::parse(args.flag_or("admission", "fcfs"))?,
+        prepack: true,
+        quantize: args.bool_flag("quantize"),
+    };
+    let mcfg = ModelConfig::preset(preset)?;
+    let mut model = oats::model::TransformerLM::init(&mcfg, 0x5E17E);
+    if args.bool_flag("compress") {
+        let corpus = oats::data::SyntheticCorpus::new(oats::data::CorpusConfig::for_vocab(
+            mcfg.vocab,
+            1,
+        ));
+        let calib = oats::calib::CalibSet::sample(&corpus, 8, 32, 8);
+        let cc = CompressConfig { rate: 0.5, rank_ratio: 0.25, iters: 3, ..Default::default() };
+        let (cm, _) = oats::coordinator::pipeline::compress_clone(&model, &calib, &cc, 6)?;
+        model = cm;
+    }
+    // Mixed-length prompts (1 … seq_len/2), plus one deliberately oversized
+    // prompt to exercise the truncation-rejection path end to end.
+    let mut prompts: Vec<Vec<usize>> = (0..n_req)
+        .map(|i| {
+            let len = 1 + (i * 7) % (mcfg.seq_len / 2).max(1);
+            (0..len).map(|j| (i * 11 + j) % mcfg.vocab).collect()
+        })
+        .collect();
+    if let Some(p) = prompts.last_mut() {
+        *p = vec![1; mcfg.seq_len + 1];
+    }
+    println!(
+        "serve-load: {} requests (gen {}), {} slots, chunk {}, admission {}…",
+        prompts.len(),
+        cfg.gen_tokens,
+        cfg.slots,
+        cfg.prefill_chunk,
+        cfg.admission.name()
+    );
+    let stats = run_load(std::sync::Arc::new(model), cfg, prompts);
+    println!(
+        "served {} requests | {} tokens | {:.1} tok/s | p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
+        stats.n_requests,
+        stats.tokens_generated,
+        stats.tokens_per_second(),
+        stats.latency.p50 * 1e3,
+        stats.latency.p95 * 1e3,
+        stats.latency.p99 * 1e3,
+    );
+    println!(
+        "occupancy mean {:.2} | joins {} leaves {} truncated {} | {} steps | kv arena {:.2} MiB",
+        stats.slot_occupancy.mean,
+        stats.joins,
+        stats.leaves,
+        stats.truncated,
+        stats.steps,
+        stats.kv_bytes as f64 / (1 << 20) as f64,
+    );
+    let tag = args.flag_or("tag", preset);
+    stats.write_json(tag)?;
     Ok(())
 }
 

@@ -197,8 +197,31 @@ impl KvCache {
         }
     }
 
-    pub fn reset(&mut self) {
+    /// Max positions this cache can hold (the `seq_len` it was sized for).
+    pub fn capacity(&self) -> usize {
+        self.k.first().map(|m| m.rows).unwrap_or(0)
+    }
+
+    /// Positions still available for decoding.
+    pub fn remaining(&self) -> usize {
+        self.capacity() - self.len
+    }
+
+    /// Recycle this cache for a new sequence (the KV-pool path). Resetting
+    /// the length is sufficient: attention only ever reads rows `< len`,
+    /// and every row is written (at its decode step) before it is read, so
+    /// stale K/V values from the previous occupant are unreachable.
+    pub fn reset_for_reuse(&mut self) {
         self.len = 0;
+    }
+
+    /// Resident size in bytes (both K and V buffers, all blocks).
+    pub fn memory_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|m| m.data.len() * std::mem::size_of::<f32>())
+            .sum()
     }
 }
 
@@ -697,6 +720,31 @@ mod tests {
         for (a, b) in last.iter().zip(want) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn kv_cache_reuse_matches_fresh_cache() {
+        // The pooled-serving path recycles caches via `reset_for_reuse`;
+        // a recycled cache must be indistinguishable from a fresh one.
+        let m = tiny();
+        let mut cache = KvCache::new(&m.cfg);
+        assert_eq!(cache.capacity(), m.cfg.seq_len);
+        assert!(cache.memory_bytes() > 0);
+        for &t in &[3usize, 9, 1] {
+            m.decode_step(t, &mut cache);
+        }
+        cache.reset_for_reuse();
+        assert_eq!(cache.remaining(), m.cfg.seq_len);
+        let mut got = Vec::new();
+        for &t in &[7usize, 2] {
+            got = m.decode_step(t, &mut cache);
+        }
+        let mut clean = KvCache::new(&m.cfg);
+        let mut want = Vec::new();
+        for &t in &[7usize, 2] {
+            want = m.decode_step(t, &mut clean);
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

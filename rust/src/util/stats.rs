@@ -11,13 +11,23 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Summary {
     /// Compute a summary; `xs` need not be sorted. Empty input yields zeros.
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            };
         }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
@@ -32,7 +42,24 @@ impl Summary {
             max: sorted[n - 1],
             p50: percentile_sorted(&sorted, 0.50),
             p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
         }
+    }
+
+    /// Machine-readable form — the shape shared by `SERVE_*.json` summary
+    /// blocks (mean + the p50/p95/p99 tail, not just mean/max).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::{num, Json};
+        let mut o = Json::obj();
+        o.set("n", num(self.n as f64))
+            .set("mean", num(self.mean))
+            .set("std", num(self.std))
+            .set("min", num(self.min))
+            .set("max", num(self.max))
+            .set("p50", num(self.p50))
+            .set("p95", num(self.p95))
+            .set("p99", num(self.p99));
+        o
     }
 }
 
@@ -90,6 +117,27 @@ mod tests {
         assert!((s.max - 5.0).abs() < 1e-12);
         assert!((s.p50 - 3.0).abs() < 1e-12);
         assert!((s.std - 2.0f64.sqrt()).abs() < 1e-12);
+        assert!(s.p99 >= s.p95 && s.p95 >= s.p50, "percentiles must be ordered");
+        assert!(s.p99 <= s.max);
+    }
+
+    #[test]
+    fn p99_tracks_the_tail() {
+        // 99 fast observations and one slow outlier: p50 stays low, p99
+        // lands near the outlier (tail latency visible, mean diluted).
+        let mut xs = vec![1.0; 99];
+        xs.push(100.0);
+        let s = Summary::of(&xs);
+        assert_eq!(s.p50, 1.0);
+        assert!(s.p99 > 10.0, "p99 {} must expose the outlier", s.p99);
+        assert!(s.mean < 3.0);
+    }
+
+    #[test]
+    fn summary_json_has_percentiles() {
+        let j = Summary::of(&[1.0, 2.0, 3.0]).to_json();
+        assert_eq!(j.req_f64("n").unwrap(), 3.0);
+        assert!(j.req_f64("p99").unwrap() >= j.req_f64("p50").unwrap());
     }
 
     #[test]

@@ -107,19 +107,18 @@ fn serving_engine_runs_compressed_model() {
     let (cm, _) = compress_clone(&model, &calib, &cfg, 4).unwrap();
     let stats = oats::coordinator::serve::run_load(
         Arc::new(cm),
-        oats::coordinator::serve::ServeConfig {
-            max_batch: 4,
-            max_wait: std::time::Duration::from_millis(1),
-            gen_tokens: 4,
-            workers: 2,
-            prepack: true,
-            quantize: false,
-        },
+        oats::coordinator::serve::ServeConfig { slots: 4, gen_tokens: 4, ..Default::default() },
         (0..12).map(|i| vec![i % 16, 2, 3]).collect(),
     );
     assert_eq!(stats.n_requests, 12);
     assert_eq!(stats.tokens_generated, 48);
     assert!(stats.tokens_per_second() > 0.0);
+    // Continuous-batching telemetry: every request joined a KV slot and
+    // left it, and the decode batch stayed within the arena bound.
+    assert_eq!(stats.joins, 12);
+    assert_eq!(stats.leaves, 12);
+    assert!(stats.batch_sizes.max <= 4.0);
+    assert!(stats.slot_occupancy.mean > 0.0);
 }
 
 #[test]
@@ -148,7 +147,7 @@ fn quantized_serving_matches_direct_quantized_decode() {
 
     let prompts: Vec<Vec<usize>> = (0..6).map(|i| vec![i % 16, 2, 3]).collect();
     let scfg = oats::coordinator::serve::ServeConfig {
-        max_batch: 4,
+        slots: 4,
         gen_tokens: 5,
         quantize: true,
         ..Default::default()
@@ -160,7 +159,14 @@ fn quantized_serving_matches_direct_quantized_decode() {
         .map(|(i, p)| server.submit(i as u64, p.clone()))
         .collect();
     let got: Vec<Vec<usize>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
-    let want = oats::coordinator::serve::generate_batch(&packed, &prompts, 5, 1);
+    // Reference is batch-of-1 lockstep decode: the engine routes prefill
+    // through the batched kernels too, whose per-row results are
+    // batch-width independent (scalar-prefill references could differ in
+    // the last ulps on packed layers).
+    let want: Vec<Vec<usize>> = prompts
+        .iter()
+        .map(|p| oats::coordinator::serve::generate_lockstep(&packed, p, 5))
+        .collect();
     assert_eq!(got, want);
 }
 
