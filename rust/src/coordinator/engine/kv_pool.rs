@@ -1,36 +1,79 @@
-//! The KV-slot arena: a fixed pool of preallocated [`KvCache`] buffers.
+//! The paged KV arena: a fixed pool of preallocated [`KvPage`]s plus
+//! per-slot [`KvCache`] shells (page tables).
 //!
-//! Every slot is allocated once at engine startup, so sequence join/leave
-//! never allocates or frees KV buffers on the hot path, and KV memory is
-//! bounded by configuration (`slots × n_layers × 2 × seq_len × d_model ×
-//! 4 B`) rather than by offered load. Slots hand out plain `usize` indices; the pool
-//! tracks which are in use and panics on double-release or on touching a
-//! slot that was never acquired — the engine's slot bookkeeping is an
-//! invariant, not a recoverable condition.
+//! Every page and every shell is allocated once at engine startup, so
+//! sequence join/leave and mid-flight growth never allocate or free KV
+//! buffers on the hot path, and KV memory is bounded by configuration
+//! (`pages × n_layers × 2 × page_size × d_model × 4 B`) rather than by
+//! offered load. A joining sequence takes a slot plus a **worst-case page
+//! reservation** (`ceil(min(len + gen − 1, seq_len) / page_size)` — the
+//! final sampled token is never written back, so `len + gen − 1` is the
+//! most KV positions a sequence can touch); pages are attached on demand
+//! as the sequence grows and all returned to the free list at retirement.
+//!
+//! The reservation is what makes mid-flight growth deadlock-free:
+//! admission only succeeds while `Σ reservations ≤ total pages`, and a
+//! resident sequence never holds more pages than it reserved, so
+//! `free pages = total − Σ held ≥ Σ reserved − Σ held ≥ reserved_i −
+//! held_i ≥ 1` whenever sequence *i* needs its next page — an acquired
+//! slot can always run to retirement without waiting on another sequence.
+//!
+//! Slots hand out plain `usize` indices; the pool tracks which are in use
+//! and panics on double-release, on touching a slot that was never
+//! acquired, or on a sequence outgrowing its reservation — the engine's
+//! bookkeeping is an invariant, not a recoverable condition.
+//!
+//! The whole-cache arena of PR 3 is the degenerate configuration
+//! `page_size == seq_len, pages == slots` ([`KvPool::new`]): every
+//! reservation is exactly one page, so admission reduces to slot
+//! availability and each resident cache is one contiguous buffer.
 
 use crate::config::ModelConfig;
-use crate::model::KvCache;
+use crate::model::{KvCache, KvPage};
 
-/// Fixed-size arena of reusable KV caches.
+/// Fixed-size paged arena of reusable KV storage.
 pub struct KvPool {
     caches: Vec<KvCache>,
     in_use: Vec<bool>,
     free: Vec<usize>,
+    free_pages: Vec<KvPage>,
+    total_pages: usize,
+    page_size: usize,
+    reserved: Vec<usize>,
+    reserved_total: usize,
 }
 
 impl KvPool {
-    /// Preallocate `slots` caches sized for `cfg`. All allocation happens
-    /// here; [`KvPool::acquire`]/[`KvPool::release`] only move indices.
+    /// Whole-cache degenerate arena: `slots` slots, one `seq_len`-sized
+    /// page per slot. Byte-for-byte the PR 3 behavior.
     pub fn new(cfg: &ModelConfig, slots: usize) -> KvPool {
+        KvPool::with_pages(cfg, slots, cfg.seq_len, slots)
+    }
+
+    /// Paged arena: `slots` sequence shells over a shared free list of
+    /// `pages` pages of `page_size` positions each. All allocation happens
+    /// here; acquire/release only move indices and page buffers.
+    pub fn with_pages(cfg: &ModelConfig, slots: usize, page_size: usize, pages: usize) -> KvPool {
         assert!(slots > 0, "KV pool needs at least one slot");
+        let page_size = page_size.clamp(1, cfg.seq_len);
+        let per_seq = cfg.seq_len.div_ceil(page_size);
+        assert!(
+            pages >= per_seq,
+            "KV pool needs at least {per_seq} pages of {page_size} (one full sequence)"
+        );
         KvPool {
-            caches: (0..slots).map(|_| KvCache::new(cfg)).collect(),
+            caches: (0..slots).map(|_| KvCache::paged(cfg, page_size)).collect(),
             in_use: vec![false; slots],
             free: (0..slots).rev().collect(),
+            free_pages: (0..pages).map(|_| KvPage::new(cfg, page_size)).collect(),
+            total_pages: pages,
+            page_size,
+            reserved: vec![0; slots],
+            reserved_total: 0,
         }
     }
 
-    /// Total slot count (the configured bound).
+    /// Total slot count (the configured bound on resident sequences).
     pub fn slots(&self) -> usize {
         self.caches.len()
     }
@@ -45,27 +88,105 @@ impl KvPool {
         self.caches.len() - self.free.len()
     }
 
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Total pages in the arena (the configured bound on KV positions).
+    pub fn pages_total(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages on the free list.
+    pub fn pages_free(&self) -> usize {
+        self.free_pages.len()
+    }
+
+    /// Pages attached to resident sequences.
+    pub fn pages_held(&self) -> usize {
+        self.total_pages - self.free_pages.len()
+    }
+
+    /// Pages promised to resident sequences (held + not yet attached).
+    pub fn pages_reserved(&self) -> usize {
+        self.reserved_total
+    }
+
+    /// Pages a sequence spanning `positions` KV positions needs.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.max(1).div_ceil(self.page_size)
+    }
+
+    /// Whether a joiner reserving `need` pages can be admitted now: a free
+    /// slot plus unreserved page headroom.
+    pub fn can_admit(&self, need: usize) -> bool {
+        !self.free.is_empty() && self.total_pages - self.reserved_total >= need
+    }
+
     /// Resident KV memory of the whole arena in bytes (constant for the
     /// pool's lifetime — this is the "bounded by config" number).
     pub fn memory_bytes(&self) -> usize {
-        self.caches.iter().map(KvCache::memory_bytes).sum()
+        self.caches.iter().map(KvCache::memory_bytes).sum::<usize>()
+            + self.free_pages.iter().map(KvPage::memory_bytes).sum::<usize>()
     }
 
-    /// Take a free slot, or `None` when the arena is fully occupied. The
-    /// returned cache is empty (`len == 0`) and ready for prefill.
-    pub fn acquire(&mut self) -> Option<usize> {
+    /// Take a free slot and reserve `reserve_pages` pages for its whole
+    /// lifetime, or `None` when no slot is free or the unreserved page
+    /// headroom is too small. The returned shell is empty (`len == 0`, no
+    /// pages) and ready for [`KvPool::acquire_page`] + prefill.
+    pub fn acquire(&mut self, reserve_pages: usize) -> Option<usize> {
+        assert!(
+            (1..=self.total_pages).contains(&reserve_pages),
+            "reservation of {reserve_pages} pages outside 1..={}",
+            self.total_pages
+        );
+        if self.total_pages - self.reserved_total < reserve_pages {
+            return None;
+        }
         let idx = self.free.pop()?;
         debug_assert!(!self.in_use[idx], "free list handed out an in-use slot");
         debug_assert_eq!(self.caches[idx].len, 0, "released slot was not reset");
+        debug_assert_eq!(self.caches[idx].pages_held(), 0, "released slot kept pages");
         self.in_use[idx] = true;
+        self.reserved[idx] = reserve_pages;
+        self.reserved_total += reserve_pages;
         Some(idx)
     }
 
-    /// Return a slot to the arena, resetting its cache for the next
-    /// sequence. Panics on double release.
+    /// Attach the next page to an acquired slot, from the free list.
+    /// Panics if the slot would exceed its reservation (an engine
+    /// admission bug) — the free list can never be empty below that bound
+    /// (see the module docs for the invariant).
+    pub fn acquire_page(&mut self, idx: usize) {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        assert!(
+            self.caches[idx].pages_held() < self.reserved[idx],
+            "KV slot {idx} exceeding its reservation of {} pages",
+            self.reserved[idx]
+        );
+        let page = self.free_pages.pop().expect("free pages despite reservation headroom");
+        self.caches[idx].push_page(page);
+    }
+
+    /// Attach a page to `idx` iff its next written position has no backing
+    /// page yet — the engine's acquire-on-demand step before each
+    /// prefill/decode batch.
+    pub fn ensure_page(&mut self, idx: usize) {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        if self.caches[idx].needs_page() {
+            self.acquire_page(idx);
+        }
+    }
+
+    /// Return a slot to the arena: every attached page goes back to the
+    /// free list, the reservation is dropped, and the shell resets for the
+    /// next sequence. Panics on double release.
     pub fn release(&mut self, idx: usize) {
         assert!(self.in_use[idx], "double release of KV slot {idx}");
-        self.caches[idx].reset_for_reuse();
+        self.free_pages.extend(self.caches[idx].take_pages());
+        self.reserved_total -= self.reserved[idx];
+        self.reserved[idx] = 0;
         self.in_use[idx] = false;
         self.free.push(idx);
     }
@@ -117,16 +238,20 @@ mod tests {
         let mut p = KvPool::new(&cfg(), 3);
         assert_eq!(p.slots(), 3);
         assert_eq!(p.available(), 3);
-        let a = p.acquire().unwrap();
-        let b = p.acquire().unwrap();
-        let c = p.acquire().unwrap();
+        assert_eq!(p.pages_total(), 3, "degenerate arena: one page per slot");
+        let a = p.acquire(1).unwrap();
+        let b = p.acquire(1).unwrap();
+        let c = p.acquire(1).unwrap();
         assert_eq!(p.available(), 0);
-        assert!(p.acquire().is_none(), "exhausted pool must refuse");
+        assert!(p.acquire(1).is_none(), "exhausted pool must refuse");
+        p.acquire_page(a);
         p.cache_len_bump(a, 5);
         p.release(a);
         assert_eq!(p.available(), 1);
-        let a2 = p.acquire().unwrap();
+        assert_eq!(p.pages_free(), 1, "released pages return to the free list");
+        let a2 = p.acquire(1).unwrap();
         assert_eq!(p.cache(a2).len, 0, "reused slot starts empty");
+        assert_eq!(p.cache(a2).pages_held(), 0, "reused slot starts pageless");
         assert_ne!(b, c);
         assert_eq!(p.occupied(), 3);
     }
@@ -143,9 +268,35 @@ mod tests {
     #[should_panic(expected = "double release")]
     fn double_release_panics() {
         let mut p = KvPool::new(&cfg(), 2);
-        let a = p.acquire().unwrap();
+        let a = p.acquire(1).unwrap();
         p.release(a);
         p.release(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeding its reservation")]
+    fn page_acquire_beyond_reservation_panics() {
+        // seq_len 64, page_size 16 → 4 pages per full sequence.
+        let mut p = KvPool::with_pages(&cfg(), 2, 16, 8);
+        let a = p.acquire(2).unwrap();
+        p.acquire_page(a);
+        p.acquire_page(a);
+        p.acquire_page(a); // third page on a 2-page reservation
+    }
+
+    #[test]
+    fn reservations_gate_admission_before_slots_do() {
+        // 4 slots but only 4 pages: one full-sequence reservation (4 pages
+        // at page_size 16, seq_len 64) starves admission even though three
+        // slots stay free.
+        let mut p = KvPool::with_pages(&cfg(), 4, 16, 4);
+        let a = p.acquire(4).unwrap();
+        assert_eq!(p.available(), 3);
+        assert!(!p.can_admit(1));
+        assert!(p.acquire(1).is_none(), "no unreserved pages left");
+        p.release(a);
+        assert!(p.can_admit(4));
+        assert!(p.acquire(1).is_some());
     }
 
     #[test]
@@ -158,7 +309,7 @@ mod tests {
     #[test]
     fn caches_mut_preserves_request_order() {
         let mut p = KvPool::new(&cfg(), 4);
-        let s: Vec<usize> = (0..4).map(|_| p.acquire().unwrap()).collect();
+        let s: Vec<usize> = (0..4).map(|_| p.acquire(1).unwrap()).collect();
         p.cache_len_bump(s[2], 7);
         // Request in a non-monotone order; returned borrows must match it.
         let got = p.caches_mut(&[s[2], s[0], s[3]]);
@@ -169,37 +320,85 @@ mod tests {
 
     #[test]
     fn memory_is_constant_across_churn() {
-        let mut p = KvPool::new(&cfg(), 2);
+        let mut p = KvPool::with_pages(&cfg(), 2, 8, 16);
         let bytes = p.memory_bytes();
         assert!(bytes > 0);
         for _ in 0..10 {
-            let a = p.acquire().unwrap();
+            let a = p.acquire(3).unwrap();
+            p.acquire_page(a);
+            p.acquire_page(a);
+            assert_eq!(p.memory_bytes(), bytes, "pages move, bytes don't");
             p.release(a);
         }
         assert_eq!(p.memory_bytes(), bytes, "churn must not allocate");
+        assert_eq!(p.pages_free(), 16, "all pages back after churn");
     }
 
     #[test]
-    fn acquire_release_never_loses_slots_prop() {
-        check("kv pool conserves slots", 50, |g| {
+    fn ensure_page_attaches_only_when_needed() {
+        let mut p = KvPool::with_pages(&cfg(), 1, 8, 8);
+        let a = p.acquire(2).unwrap();
+        p.ensure_page(a);
+        assert_eq!(p.cache(a).pages_held(), 1);
+        p.ensure_page(a); // len 0 < allocated 8: no-op
+        assert_eq!(p.cache(a).pages_held(), 1);
+        p.cache_len_bump(a, 8);
+        p.ensure_page(a);
+        assert_eq!(p.cache(a).pages_held(), 2, "full first page demands the second");
+    }
+
+    #[test]
+    fn acquire_release_conserves_slots_and_pages_prop() {
+        check("kv pool conserves slots and pages", 50, |g| {
+            let c = cfg();
             let slots = g.usize_range(1, 6);
-            let mut p = KvPool::new(&cfg(), slots);
+            let page_size = [1, 4, 16, c.seq_len][g.usize_range(0, 4)];
+            let per_seq = c.seq_len.div_ceil(page_size);
+            let total = per_seq + g.usize_range(0, 2 * per_seq * slots);
+            let mut p = KvPool::with_pages(&c, slots, page_size, total);
             let mut held: Vec<usize> = Vec::new();
-            for _ in 0..30 {
-                if g.bool() {
-                    if let Some(idx) = p.acquire() {
-                        assert!(!held.contains(&idx), "slot handed out twice");
-                        held.push(idx);
-                    } else {
-                        assert_eq!(held.len(), slots, "refused while slots were free");
+            for _ in 0..40 {
+                match g.usize_range(0, 3) {
+                    0 => {
+                        let want = g.usize_range(1, per_seq + 1);
+                        let admissible = p.can_admit(want);
+                        if let Some(idx) = p.acquire(want) {
+                            assert!(admissible, "acquire succeeded past can_admit");
+                            assert!(!held.contains(&idx), "slot handed out twice");
+                            held.push(idx);
+                        } else {
+                            assert!(
+                                held.len() == slots || !admissible,
+                                "refused while slots and pages were free"
+                            );
+                        }
                     }
-                } else if !held.is_empty() {
-                    let i = g.usize_range(0, held.len());
-                    p.release(held.swap_remove(i));
+                    1 => {
+                        if !held.is_empty() {
+                            let idx = held[g.usize_range(0, held.len())];
+                            if p.cache(idx).pages_held() < p.reserved[idx] {
+                                p.acquire_page(idx);
+                            }
+                        }
+                    }
+                    _ => {
+                        if !held.is_empty() {
+                            let i = g.usize_range(0, held.len());
+                            p.release(held.swap_remove(i));
+                        }
+                    }
                 }
                 assert_eq!(p.occupied(), held.len());
                 assert_eq!(p.available() + p.occupied(), slots);
+                assert_eq!(p.pages_free() + p.pages_held(), total, "pages leaked");
+                assert!(p.pages_held() <= p.pages_reserved(), "held past reservation");
+                assert!(p.pages_reserved() <= total, "over-reserved");
             }
+            for idx in held {
+                p.release(idx);
+            }
+            assert_eq!(p.pages_free(), total, "pages leaked after full drain");
+            assert_eq!(p.pages_reserved(), 0);
         });
     }
 }

@@ -5,13 +5,19 @@
 //! working set **every step**:
 //!
 //! 1. **Admit** — queued requests are pulled into free KV slots
-//!    ([`KvPool`], a fixed arena preallocated at startup) under the
-//!    configured [`AdmissionPolicy`]. Requests that can never generate
-//!    (empty prompts, zero budgets, prompts already filling the KV
-//!    capacity) are answered immediately without a slot — even while the
-//!    arena is full — and prompts longer than the model's `seq_len` are
-//!    rejected with [`ResponseStatus::Truncated`] instead of being
-//!    silently cut.
+//!    ([`KvPool`], a fixed **paged** arena preallocated at startup) under
+//!    the configured [`AdmissionPolicy`]. Admission is page-aware: a
+//!    joiner needs a free slot *and* a worst-case page reservation
+//!    (`ceil(min(prompt + gen_tokens − 1, seq_len) / page_size)` — its
+//!    prompt pages plus decode headroom), so a resident sequence can
+//!    always grow to retirement and admission can never deadlock
+//!    mid-generation.
+//!    Requests that can never generate (empty prompts, zero budgets) are
+//!    answered immediately without a slot — even while the arena is
+//!    full — prompts longer than the model's `seq_len` are rejected with
+//!    [`ResponseStatus::Truncated`] instead of being silently cut, and
+//!    prompts that exactly fill the KV capacity come back empty as
+//!    [`ResponseStatus::CapacityStopped`].
 //! 2. **Chunked prefill** — joining sequences consume up to
 //!    `prefill_chunk` prompt tokens, batched across all joiners through
 //!    [`TransformerLM::decode_step_batch`] (the same lockstep kernel path
@@ -61,6 +67,14 @@ pub struct EngineConfig {
     /// Tokens to generate per request.
     pub gen_tokens: usize,
     pub admission: AdmissionPolicy,
+    /// KV positions per page. `0` ⇒ whole-sequence pages (`seq_len`): the
+    /// contiguous degenerate layout, exactly the pre-paging behavior.
+    pub page_size: usize,
+    /// Total pages in the arena. `0` ⇒ `slots × ceil(seq_len/page_size)`
+    /// (every slot can hold a full sequence — byte-equivalent to the
+    /// whole-cache arena). Values below one full sequence are raised to
+    /// that minimum so any admissible request can always be served.
+    pub kv_pages: usize,
 }
 
 impl Default for EngineConfig {
@@ -70,6 +84,8 @@ impl Default for EngineConfig {
             prefill_chunk: 8,
             gen_tokens: 16,
             admission: AdmissionPolicy::Fcfs,
+            page_size: 0,
+            kv_pages: 0,
         }
     }
 }
@@ -106,7 +122,12 @@ pub const TELEMETRY_WINDOW: usize = 16_384;
 pub struct EngineTelemetry {
     /// Arena size (denominator for `occupancy`).
     pub slots: usize,
-    /// Steps that did any work (idle polls are not counted).
+    /// KV positions per page.
+    pub page_size: usize,
+    /// Total pages in the arena (denominator for `page_occupancy`).
+    pub total_pages: usize,
+    /// Steps that did any work — decode, prefill, or slot-free answers
+    /// (idle polls are not counted).
     pub steps: usize,
     /// Sequences admitted into a KV slot.
     pub joins: usize,
@@ -114,12 +135,22 @@ pub struct EngineTelemetry {
     pub leaves: usize,
     /// Requests rejected for oversized prompts.
     pub truncated: usize,
+    /// Requests whose generation was stopped by KV capacity rather than
+    /// by reaching the budget ([`ResponseStatus::CapacityStopped`]).
+    pub capacity_stopped: usize,
     /// Decode-batch width per step.
     pub decode_batch: Vec<f64>,
     /// Occupied-slot fraction per step (sampled after same-step backfill).
     pub occupancy: Vec<f64>,
     /// Admission-queue depth per step (sampled after admission).
     pub queue_depth: Vec<f64>,
+    /// Pages attached to resident sequences, per step.
+    pub pages_in_use: Vec<f64>,
+    /// Held-page fraction per step (`pages_in_use / total_pages`).
+    pub page_occupancy: Vec<f64>,
+    /// Pages held as of the most recent step — `0` once the engine has
+    /// drained, which is the leak check the serve JSON exposes.
+    pub pages_in_use_now: usize,
     /// Constant KV-arena footprint in bytes (set at engine startup).
     pub kv_bytes: usize,
 }
@@ -127,12 +158,37 @@ pub struct EngineTelemetry {
 impl EngineTelemetry {
     /// Enforce the [`TELEMETRY_WINDOW`] bound on the sample vectors.
     fn trim(&mut self) {
-        for v in [&mut self.decode_batch, &mut self.occupancy, &mut self.queue_depth] {
+        for v in [
+            &mut self.decode_batch,
+            &mut self.occupancy,
+            &mut self.queue_depth,
+            &mut self.pages_in_use,
+            &mut self.page_occupancy,
+        ] {
             if v.len() >= 2 * TELEMETRY_WINDOW {
                 let excess = v.len() - TELEMETRY_WINDOW;
                 v.drain(..excess);
             }
         }
+    }
+}
+
+/// What one engine step did, folded into the telemetry under a single
+/// end-of-step lock.
+#[derive(Clone, Copy, Default)]
+struct StepCounts {
+    joins: usize,
+    truncated: usize,
+    capacity_stopped: usize,
+    leaves: usize,
+}
+
+impl StepCounts {
+    fn absorb(&mut self, other: StepCounts) {
+        self.joins += other.joins;
+        self.truncated += other.truncated;
+        self.capacity_stopped += other.capacity_stopped;
+        self.leaves += other.leaves;
     }
 }
 
@@ -150,9 +206,19 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model: Arc<TransformerLM>, cfg: EngineConfig) -> Engine {
-        let pool = KvPool::new(&model.cfg, cfg.slots);
+        let cap = model.cfg.seq_len;
+        let page_size = if cfg.page_size == 0 { cap } else { cfg.page_size.min(cap) };
+        let per_seq = cap.div_ceil(page_size);
+        // The arena must hold at least one full sequence: with less, a
+        // long-but-admissible request could never be admitted and the
+        // queue would wedge behind it forever.
+        let kv_pages =
+            if cfg.kv_pages == 0 { cfg.slots * per_seq } else { cfg.kv_pages.max(per_seq) };
+        let pool = KvPool::with_pages(&model.cfg, cfg.slots, page_size, kv_pages);
         let telemetry = Arc::new(Mutex::new(EngineTelemetry {
             slots: cfg.slots,
+            page_size,
+            total_pages: kv_pages,
             kv_bytes: pool.memory_bytes(),
             ..Default::default()
         }));
@@ -178,26 +244,35 @@ impl Engine {
     /// generate — empty prompts, zero budget, or prompts that already fill
     /// (or exceed) the whole KV capacity — are answered immediately with
     /// no slot and no prefill compute, even while the arena is full, so a
-    /// rejection never waits behind resident decodes.
+    /// rejection never waits behind resident decodes. A joiner is admitted
+    /// only when, besides a free slot, its worst-case page need
+    /// (`ceil(min(prompt + gen − 1, seq_len) / page_size)` — prompt pages
+    /// plus decode headroom) fits in the arena's unreserved pages; the
+    /// reservation guarantees every resident can grow to retirement, so
+    /// admission can never deadlock mid-generation.
     ///
-    /// Returns `(joins, truncations)` for the caller to fold into the
+    /// Returns the admission counts for the caller to fold into the
     /// telemetry under one end-of-step lock (no per-request locking).
-    fn admit(&mut self, queue: &mut Batcher, events: &mut Vec<SeqEvent>) -> (usize, usize) {
+    fn admit(&mut self, queue: &mut Batcher, events: &mut Vec<SeqEvent>) -> StepCounts {
         let cap = self.model.cfg.seq_len;
         let gen = self.cfg.gen_tokens;
-        let mut joins = 0usize;
-        let mut truncations = 0usize;
+        let mut counts = StepCounts::default();
         let slot_free =
             queue.take_where(|r| r.prompt.len() >= cap || r.prompt.is_empty() || gen == 0);
         for req in slot_free {
-            // prompt > cap is the rejection (`Truncated`); the rest match
-            // scalar `generate`: no logits to decode from, nothing asked
-            // for, or no KV room left — an empty completion, not an error.
+            // prompt > cap is the rejection (`Truncated`); an empty prompt
+            // or zero budget matches scalar `generate` (no logits to
+            // decode from / nothing asked for — an empty completion); a
+            // prompt that exactly fills the capacity had generation
+            // stopped by memory, not by its budget.
             let status = if req.prompt.len() > cap {
-                truncations += 1;
+                counts.truncated += 1;
                 ResponseStatus::Truncated
-            } else {
+            } else if req.prompt.is_empty() || gen == 0 {
                 ResponseStatus::Complete
+            } else {
+                counts.capacity_stopped += 1;
+                ResponseStatus::CapacityStopped
             };
             events.push(SeqEvent::Finished(FinishedSeq {
                 id: req.id,
@@ -207,22 +282,39 @@ impl Engine {
                 first_token_latency: None,
             }));
         }
+        // Worst-case KV positions a joiner can ever write: its prompt plus
+        // gen-1 decoded tokens (the final sampled token is returned but
+        // never fed back), clamped to capacity. Reserving exactly this
+        // keeps admission deadlock-free with zero stranded pages. (The
+        // `gen.max(1)` only guards the arithmetic: zero-budget requests
+        // were all answered slot-free above, so this is never reached
+        // with gen == 0.)
+        let worst_case = |r: &Request| (r.prompt.len() + gen.max(1) - 1).min(cap);
         while self.pool.available() > 0 {
-            let Some(req) = queue.pop(self.cfg.admission) else {
+            let pool = &self.pool;
+            let fits = |r: &Request| pool.can_admit(pool.pages_for(worst_case(r)));
+            let Some(req) = queue.pop_where(self.cfg.admission, fits) else {
                 break;
             };
-            let slot = self.pool.acquire().expect("available slot");
-            joins += 1;
+            let need = self.pool.pages_for(worst_case(&req));
+            let slot = self.pool.acquire(need).expect("admission checked slot and pages");
+            counts.joins += 1;
             self.seqs.push(Sequence::new(req, slot, self.model.cfg.vocab));
         }
-        (joins, truncations)
+        counts
     }
 
     /// One lockstep model call over the given resident sequences (indices
     /// into `self.seqs`), feeding `tokens[i]` to sequence `idxs[i]` and
-    /// storing each sequence's fresh logits row.
+    /// storing each sequence's fresh logits row. Each participating slot
+    /// gets its next KV page attached first if the position being written
+    /// has no backing page yet (acquire-on-demand; covered by the
+    /// admission-time reservation, so the free list cannot run dry).
     fn batch_decode(&mut self, idxs: &[usize], tokens: &[usize]) {
         let slots: Vec<usize> = idxs.iter().map(|&i| self.seqs[i].slot).collect();
+        for &slot in &slots {
+            self.pool.ensure_page(slot);
+        }
         let mut caches = self.pool.caches_mut(&slots);
         let logits = self.model.decode_step_batch(tokens, &mut caches);
         for (r, &i) in idxs.iter().enumerate() {
@@ -232,19 +324,39 @@ impl Engine {
         }
     }
 
+    /// Fold one worked step into the telemetry (single lock).
+    fn record_step(&self, queue: &Batcher, decode_width: usize, counts: StepCounts) {
+        let held = self.pool.pages_held();
+        let mut t = self.telemetry.lock().unwrap();
+        t.steps += 1;
+        t.joins += counts.joins;
+        t.truncated += counts.truncated;
+        t.capacity_stopped += counts.capacity_stopped;
+        t.leaves += counts.leaves;
+        t.decode_batch.push(decode_width as f64);
+        t.occupancy.push(self.pool.occupied() as f64 / self.pool.slots() as f64);
+        t.queue_depth.push(queue.len() as f64);
+        t.pages_in_use.push(held as f64);
+        t.page_occupancy.push(held as f64 / self.pool.pages_total() as f64);
+        t.pages_in_use_now = held;
+        t.trim();
+    }
+
     /// One engine step: admit → chunked prefill → lockstep decode →
     /// retire → same-step backfill. Returns the step's events (streamed
     /// tokens and finished sequences). A step with nothing resident and
-    /// nothing admissible returns immediately and records no telemetry.
+    /// nothing answerable returns immediately and records no telemetry
+    /// (an idle poll); slot-free answers alone — rejections included —
+    /// count as a worked step and sample telemetry, so rejection-only
+    /// traffic still produces meaningful `SERVE_*.json` summaries.
     pub fn step(&mut self, queue: &mut Batcher) -> Vec<SeqEvent> {
         let mut events = Vec::new();
-        let (mut joins, mut truncations) = self.admit(queue, &mut events);
+        let mut counts = self.admit(queue, &mut events);
         if self.seqs.is_empty() {
-            // Nothing resident: only slot-free answers may have happened.
-            if joins + truncations > 0 {
-                let mut t = self.telemetry.lock().unwrap();
-                t.joins += joins;
-                t.truncated += truncations;
+            // Nothing resident: only slot-free answers may have happened
+            // (a join would have left a resident sequence).
+            if !events.is_empty() {
+                self.record_step(queue, 0, counts);
             }
             return events;
         }
@@ -306,20 +418,28 @@ impl Engine {
             }
         }
 
-        // ── retire finished sequences, releasing their slots ──
+        // ── retire finished sequences, releasing their slots (and every
+        // page they held, back to the free list) ──
         let gen = self.cfg.gen_tokens;
-        let mut leaves = 0usize;
         let seqs = std::mem::take(&mut self.seqs);
         for s in seqs {
-            let done = !s.prefilling()
-                && (s.out.len() >= gen || self.pool.cache(s.slot).remaining() == 0);
-            if done {
+            let budget_met = s.out.len() >= gen;
+            let capacity_hit = self.pool.cache(s.slot).remaining() == 0;
+            if !s.prefilling() && (budget_met || capacity_hit) {
                 self.pool.release(s.slot);
-                leaves += 1;
+                counts.leaves += 1;
+                // A sequence that filled its KV capacity before reaching
+                // the budget was truncated by memory, not completed.
+                let status = if budget_met {
+                    ResponseStatus::Complete
+                } else {
+                    counts.capacity_stopped += 1;
+                    ResponseStatus::CapacityStopped
+                };
                 events.push(SeqEvent::Finished(FinishedSeq {
                     id: s.id,
                     tokens: s.out,
-                    status: ResponseStatus::Complete,
+                    status,
                     enqueued: s.enqueued,
                     first_token_latency: s.first_token_at.map(|t| t - s.enqueued),
                 }));
@@ -329,19 +449,9 @@ impl Engine {
         }
 
         // ── same-step backfill: freed slots go straight to the queue ──
-        let (j2, t2) = self.admit(queue, &mut events);
-        joins += j2;
-        truncations += t2;
+        counts.absorb(self.admit(queue, &mut events));
 
-        let mut t = self.telemetry.lock().unwrap();
-        t.steps += 1;
-        t.joins += joins;
-        t.truncated += truncations;
-        t.leaves += leaves;
-        t.decode_batch.push(didx.len() as f64);
-        t.occupancy.push(self.pool.occupied() as f64 / self.pool.slots() as f64);
-        t.queue_depth.push(queue.len() as f64);
-        t.trim();
+        self.record_step(queue, didx.len(), counts);
         events
     }
 }
@@ -394,17 +504,128 @@ mod tests {
     }
 
     #[test]
-    fn prompt_at_exact_capacity_completes_empty() {
+    fn prompt_at_exact_capacity_is_capacity_stopped() {
         let m = tiny();
         let cap = m.cfg.seq_len;
         let mut e = Engine::new(Arc::clone(&m), EngineConfig::default());
         let mut q = Batcher::default();
         q.push(req(0, (0..cap).map(|i| i % 16).collect()));
         let done = drain(&mut e, &mut q, 1);
-        assert_eq!(done[0].status, ResponseStatus::Complete);
+        // No KV room left to generate: stopped by memory, not by budget —
+        // and distinguishable as such.
+        assert_eq!(done[0].status, ResponseStatus::CapacityStopped);
         assert!(done[0].tokens.is_empty(), "no KV room left to generate");
         let t = e.telemetry().lock().unwrap().clone();
         assert_eq!(t.joins, 0, "a prompt that fills the cache must not burn a slot or prefill");
+        assert_eq!(t.capacity_stopped, 1);
+    }
+
+    #[test]
+    fn rejection_only_traffic_still_counts_steps_and_samples() {
+        // Regression: slot-free answers used to return before the
+        // telemetry block, so a run of nothing but rejections emitted a
+        // SERVE json with steps == 0 and empty summaries.
+        let m = tiny();
+        let cap = m.cfg.seq_len;
+        let mut e = Engine::new(m, EngineConfig::default());
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1; cap + 1]));
+        q.push(req(1, vec![1; cap + 9]));
+        let done = drain(&mut e, &mut q, 2);
+        assert!(done.iter().all(|f| f.status == ResponseStatus::Truncated));
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.truncated, 2);
+        assert!(t.steps > 0, "rejections are worked steps");
+        assert_eq!(t.steps, t.occupancy.len(), "every worked step samples telemetry");
+        assert_eq!(t.steps, t.queue_depth.len());
+        assert_eq!(t.steps, t.page_occupancy.len());
+        // An idle poll afterwards still records nothing.
+        let none = e.step(&mut q);
+        assert!(none.is_empty());
+        assert_eq!(e.telemetry().lock().unwrap().steps, t.steps);
+    }
+
+    #[test]
+    fn capacity_stop_mid_generation_is_flagged() {
+        // Budget larger than the KV room: generation must stop at
+        // capacity and say so. generate() under the same budget stops at
+        // the same place, so tokens still match the scalar reference.
+        let m = tiny();
+        let cap = m.cfg.seq_len;
+        let prompt: Vec<usize> = (0..cap - 3).map(|i| i % 16).collect();
+        let cfg = EngineConfig { slots: 1, gen_tokens: 10, ..Default::default() };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, prompt.clone()));
+        let done = drain(&mut e, &mut q, 1);
+        assert_eq!(done[0].status, ResponseStatus::CapacityStopped);
+        assert_eq!(done[0].tokens.len(), 3, "exactly the remaining KV room");
+        assert_eq!(done[0].tokens, crate::coordinator::serve::generate(&m, &prompt, 10));
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.capacity_stopped, 1);
+        assert_eq!(t.leaves, 1);
+    }
+
+    #[test]
+    fn paged_engine_conserves_pages_and_matches_outputs() {
+        let m = tiny();
+        let cfg = EngineConfig {
+            slots: 3,
+            gen_tokens: 4,
+            page_size: 8,
+            kv_pages: 12,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        let prompts: Vec<Vec<usize>> =
+            (0..7).map(|i| (0..(2 + i * 3) % 21).map(|j| (i * 5 + j) % 16).collect()).collect();
+        for (i, p) in prompts.iter().enumerate() {
+            q.push(req(i as u64, p.clone()));
+        }
+        let done = drain(&mut e, &mut q, prompts.len());
+        for f in &done {
+            let want = crate::coordinator::serve::generate(&m, &prompts[f.id as usize], 4);
+            assert_eq!(f.tokens, want, "paged engine diverged on request {}", f.id);
+        }
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.page_size, 8);
+        assert_eq!(t.total_pages, 12);
+        assert_eq!(t.pages_in_use_now, 0, "pages leaked after drain");
+        assert!(t.pages_in_use.iter().all(|&p| p <= 12.0));
+        assert!(t.page_occupancy.iter().all(|&o| (0.0..=1.0).contains(&o)));
+        assert!(t.page_occupancy.iter().any(|&o| o > 0.0), "pages were used");
+    }
+
+    #[test]
+    fn admission_waits_for_page_headroom_not_just_slots() {
+        // Arena of exactly one full sequence's pages: the second request
+        // must wait for the first to retire even though a slot is free,
+        // and both must still finish (no deadlock, no starvation).
+        let m = tiny();
+        let cap = m.cfg.seq_len; // 64 → per-seq worst case 4 pages of 16
+        let cfg = EngineConfig {
+            slots: 2,
+            gen_tokens: 4,
+            page_size: 16,
+            kv_pages: 4,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, (0..cap - 8).map(|i| i % 16).collect())); // reserves all 4 pages
+        q.push(req(1, vec![1, 2, 3]));
+        let done = drain(&mut e, &mut q, 2);
+        assert_eq!(done.len(), 2);
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.joins, 2);
+        assert_eq!(t.leaves, 2);
+        assert!(
+            t.occupancy.iter().all(|&o| o <= 0.5),
+            "page headroom must keep residency to one sequence: {:?}",
+            t.occupancy
+        );
+        assert_eq!(t.pages_in_use_now, 0);
     }
 
     #[test]

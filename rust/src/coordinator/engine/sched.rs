@@ -20,11 +20,16 @@ pub struct Request {
 /// How a request left the engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ResponseStatus {
-    /// Served to its generation budget (or to KV capacity).
+    /// Served to its full generation budget.
     Complete,
     /// The prompt exceeded the model's `seq_len`; the request was rejected
     /// without prefill instead of being silently truncated.
     Truncated,
+    /// Generation stopped because the KV cache filled (`seq_len` reached)
+    /// before the generation budget did — truncated-by-memory, not done.
+    /// Clients see fewer tokens than they asked for and can tell this
+    /// apart from a budget-complete response.
+    CapacityStopped,
 }
 
 /// Per-step admission order for queued requests.
@@ -102,19 +107,42 @@ impl Batcher {
         taken
     }
 
+    /// Index of the next request `policy` would admit, if any.
+    fn next_index(&self, policy: AdmissionPolicy) -> Option<usize> {
+        match policy {
+            AdmissionPolicy::Fcfs => (!self.queue.is_empty()).then_some(0),
+            AdmissionPolicy::ShortestPrompt => self
+                .queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, r)| (r.prompt.len(), *i))
+                .map(|(i, _)| i),
+        }
+    }
+
     /// Remove the next request under `policy`, if any.
     pub fn pop(&mut self, policy: AdmissionPolicy) -> Option<Request> {
-        match policy {
-            AdmissionPolicy::Fcfs => self.queue.pop_front(),
-            AdmissionPolicy::ShortestPrompt => {
-                let idx = self
-                    .queue
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(i, r)| (r.prompt.len(), *i))?
-                    .0;
-                self.queue.remove(idx)
-            }
+        let idx = self.next_index(policy)?;
+        self.queue.remove(idx)
+    }
+
+    /// Remove the next request under `policy` only if `admit` accepts it.
+    /// A rejected head blocks this admission pass rather than being
+    /// skipped: later (smaller) requests never jump an earlier one that is
+    /// waiting for KV pages, so a big request cannot be starved by a
+    /// stream of small ones — and because the head's worst-case page need
+    /// is bounded by one full sequence (which the pool is required to
+    /// hold), it always fits once enough residents retire.
+    pub fn pop_where(
+        &mut self,
+        policy: AdmissionPolicy,
+        admit: impl FnOnce(&Request) -> bool,
+    ) -> Option<Request> {
+        let idx = self.next_index(policy)?;
+        if admit(&self.queue[idx]) {
+            self.queue.remove(idx)
+        } else {
+            None
         }
     }
 }
@@ -211,6 +239,24 @@ mod tests {
         assert_eq!(b.len(), 3);
         let rest: Vec<u64> = (0..3).map(|_| b.pop(AdmissionPolicy::Fcfs).unwrap().id).collect();
         assert_eq!(rest, vec![1, 3, 5], "kept requests stay FIFO");
+    }
+
+    #[test]
+    fn pop_where_blocks_on_rejected_head() {
+        let mut b = Batcher::default();
+        b.push(req(0, 9)); // big head
+        b.push(req(1, 1)); // small follower
+        // FCFS: the big head is rejected and the small one must NOT jump it.
+        assert!(b.pop_where(AdmissionPolicy::Fcfs, |r| r.prompt.len() <= 4).is_none());
+        assert_eq!(b.len(), 2, "rejected head stays queued");
+        let got = b.pop_where(AdmissionPolicy::Fcfs, |r| r.prompt.len() <= 9).unwrap();
+        assert_eq!(got.id, 0);
+        // ShortestPrompt: the policy's own pick is the one gated.
+        b.push(req(2, 5));
+        let got = b.pop_where(AdmissionPolicy::ShortestPrompt, |_| true).unwrap();
+        assert_eq!(got.id, 1, "shortest prompt admitted first");
+        assert!(b.pop_where(AdmissionPolicy::ShortestPrompt, |_| false).is_none());
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

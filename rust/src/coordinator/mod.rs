@@ -4,9 +4,11 @@
 //!   propagation (Algorithm 2), fans the six linears of each block out to a
 //!   worker pool, applies OWL per-layer rates, and commits results back into
 //!   the model.
-//! * [`engine`] — the continuous-batching decode engine: a pooled KV-slot
-//!   arena, per-step admission with chunked prefill, lockstep decode over
-//!   resident sequences, and same-step slot backfill.
+//! * [`engine`] — the continuous-batching decode engine: a paged KV arena
+//!   (fixed pages behind a free list, per-sequence page tables,
+//!   reservation-gated admission), per-step admission with chunked
+//!   prefill, lockstep decode over resident sequences, and same-step slot
+//!   backfill.
 //! * [`serve`] — the serving layer on top of it: request channel,
 //!   admission queue, per-token streaming, latency/occupancy telemetry.
 

@@ -3,11 +3,15 @@
 //!
 //! Architecture: a request channel feeds the admission queue ([`Batcher`]);
 //! the **continuous-batching engine** ([`crate::coordinator::engine`])
-//! owns a fixed KV-slot arena and, every step, admits queued requests into
-//! free slots, runs chunked prefill for joiners, decodes all resident
-//! sequences in lockstep through the batched planned kernels, and retires
-//! finished sequences — backfilling their slots from the queue in the same
-//! step. Requests join and leave mid-flight; nothing waits for a batch to
+//! owns a fixed **paged** KV arena and, every step, admits queued requests
+//! into free slots (gated on each joiner's worst-case page reservation),
+//! runs chunked prefill for joiners, decodes all resident sequences in
+//! lockstep through the batched planned kernels, and retires finished
+//! sequences — returning their pages to the free list and backfilling
+//! their slots from the queue in the same step. With `page_size <
+//! seq_len`, short sequences hold only the pages their length needs, so
+//! mixed-length traffic fits more concurrent sequences into the same KV
+//! bytes. Requests join and leave mid-flight; nothing waits for a batch to
 //! drain. Per-token streaming, per-request latency (completion and first
 //! token), and per-step engine telemetry are reported via [`ServeStats`].
 
@@ -45,6 +49,13 @@ pub struct ServeConfig {
     /// plan gate (`sparse::QBCSR_MAX_REL_ERROR`); checkpoints on disk stay
     /// f32.
     pub quantize: bool,
+    /// KV positions per page. `0` ⇒ whole-sequence pages (`seq_len`): the
+    /// contiguous pre-paging layout. Smaller pages let short sequences
+    /// hold only the KV bytes they use, so more of them fit per byte.
+    pub page_size: usize,
+    /// Total KV pages in the arena. `0` ⇒ `slots` full sequences' worth
+    /// (byte-equivalent to the whole-cache arena).
+    pub kv_pages: usize,
 }
 
 impl Default for ServeConfig {
@@ -56,6 +67,8 @@ impl Default for ServeConfig {
             admission: AdmissionPolicy::Fcfs,
             prepack: true,
             quantize: false,
+            page_size: 0,
+            kv_pages: 0,
         }
     }
 }
@@ -74,6 +87,8 @@ impl ServeConfig {
             prefill_chunk: self.prefill_chunk.max(1),
             gen_tokens: self.gen_tokens,
             admission: self.admission,
+            page_size: self.page_size,
+            kv_pages: self.kv_pages,
         }
     }
 }
@@ -88,7 +103,9 @@ pub struct Response {
     /// Enqueue → first generated token (`None` if nothing was generated).
     pub first_token_latency: Option<Duration>,
     /// [`ResponseStatus::Truncated`] marks a prompt that exceeded the
-    /// model's `seq_len` and was rejected rather than silently cut.
+    /// model's `seq_len` and was rejected rather than silently cut;
+    /// [`ResponseStatus::CapacityStopped`] marks generation cut short by
+    /// KV capacity (fewer tokens than the budget, by memory not choice).
     pub status: ResponseStatus,
 }
 
@@ -127,15 +144,26 @@ pub struct ServeStats {
     pub slot_occupancy: Summary,
     /// Admission-queue depth per engine step.
     pub queue_depth: Summary,
+    /// Held-page fraction per engine step (1.0 = every KV page attached).
+    pub page_occupancy: Summary,
+    /// Pages attached to resident sequences, per engine step.
+    pub pages_in_use: Summary,
     /// Sequences admitted into / retired from KV slots.
     pub joins: usize,
     pub leaves: usize,
     /// Requests rejected for oversized prompts.
     pub truncated: usize,
+    /// Requests stopped by KV capacity before their generation budget.
+    pub capacity_stopped: usize,
     /// Engine steps that did work.
     pub steps: usize,
     /// Configured KV-slot arena size.
     pub slots: usize,
+    /// KV positions per page / total pages in the arena.
+    pub page_size: usize,
+    pub kv_pages: usize,
+    /// Pages still attached when the run drained (0 = nothing leaked).
+    pub pages_in_use_at_drain: usize,
     /// Constant KV-arena footprint in bytes.
     pub kv_bytes: usize,
 }
@@ -163,11 +191,17 @@ impl ServeStats {
             batch_sizes: Summary::of(&t.decode_batch),
             slot_occupancy: Summary::of(&t.occupancy),
             queue_depth: Summary::of(&t.queue_depth),
+            page_occupancy: Summary::of(&t.page_occupancy),
+            pages_in_use: Summary::of(&t.pages_in_use),
             joins: t.joins,
             leaves: t.leaves,
             truncated: t.truncated,
+            capacity_stopped: t.capacity_stopped,
             steps: t.steps,
             slots: t.slots,
+            page_size: t.page_size,
+            kv_pages: t.total_pages,
+            pages_in_use_at_drain: t.pages_in_use_now,
             kv_bytes: t.kv_bytes,
         }
     }
@@ -185,14 +219,20 @@ impl ServeStats {
             .set("joins", json::num(self.joins as f64))
             .set("leaves", json::num(self.leaves as f64))
             .set("truncated", json::num(self.truncated as f64))
+            .set("capacity_stopped", json::num(self.capacity_stopped as f64))
             .set("steps", json::num(self.steps as f64))
             .set("slots", json::num(self.slots as f64))
+            .set("page_size", json::num(self.page_size as f64))
+            .set("kv_pages", json::num(self.kv_pages as f64))
+            .set("pages_in_use_at_drain", json::num(self.pages_in_use_at_drain as f64))
             .set("kv_arena_bytes", json::num(self.kv_bytes as f64))
             .set("latency_s", self.latency.to_json())
             .set("first_token_latency_s", self.first_token_latency.to_json())
             .set("decode_batch", self.batch_sizes.to_json())
             .set("slot_occupancy", self.slot_occupancy.to_json())
-            .set("queue_depth", self.queue_depth.to_json());
+            .set("queue_depth", self.queue_depth.to_json())
+            .set("page_occupancy", self.page_occupancy.to_json())
+            .set("pages_in_use", self.pages_in_use.to_json());
         o
     }
 
@@ -636,10 +676,63 @@ mod tests {
         assert_eq!(stats.joins, 10);
         assert_eq!(stats.leaves, 10);
         assert_eq!(stats.truncated, 0);
+        assert_eq!(stats.capacity_stopped, 0);
         assert!(stats.steps > 0);
         assert!(stats.slot_occupancy.mean > 0.0);
         assert!(stats.kv_bytes > 0);
         assert_eq!(stats.first_token_latency.n, 10);
+        // Default config is the whole-cache degenerate arena.
+        assert_eq!(stats.kv_pages, stats.slots);
+        assert!(stats.page_occupancy.mean > 0.0);
+        assert_eq!(stats.pages_in_use_at_drain, 0, "pages leaked");
+    }
+
+    #[test]
+    fn paged_server_matches_scalar_outputs_and_conserves_pages() {
+        let m = tiny();
+        let cfg = ServeConfig {
+            slots: 6,
+            gen_tokens: 5,
+            page_size: 8,
+            kv_pages: 18,
+            ..Default::default()
+        };
+        let prompts: Vec<Vec<usize>> =
+            (0..12).map(|i| (0..(1 + i % 5)).map(|j| (i * 7 + j) % 16).collect()).collect();
+        let server = Server::start(Arc::clone(&m), cfg);
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| server.submit(i as u64, p.clone()))
+            .collect();
+        for (rx, p) in rxs.into_iter().zip(&prompts) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens, generate(&m, p, 5), "prompt {p:?}");
+            assert_eq!(resp.status, ResponseStatus::Complete);
+        }
+        let t = server.telemetry();
+        assert_eq!(t.page_size, 8);
+        assert_eq!(t.total_pages, 18);
+        assert_eq!(t.pages_in_use_now, 0, "pages leaked after drain");
+        assert!(t.pages_in_use.iter().all(|&p| p <= 18.0));
+        drop(server);
+    }
+
+    #[test]
+    fn rejection_only_load_still_reports_steps_and_summaries() {
+        // Regression: a run that produces nothing but slot-free rejections
+        // used to emit SERVE json with steps == 0 and empty summaries,
+        // which the CI smoke gates would read as a dead engine.
+        let m = tiny();
+        let cap = m.cfg.seq_len;
+        let cfg = ServeConfig { slots: 2, gen_tokens: 4, ..Default::default() };
+        let stats = run_load(m, cfg, vec![vec![1; cap + 1], vec![2; cap + 7]]);
+        assert_eq!(stats.n_requests, 2);
+        assert_eq!(stats.tokens_generated, 0);
+        assert_eq!(stats.truncated, 2);
+        assert!(stats.steps > 0, "rejections are worked steps");
+        assert!(stats.queue_depth.n > 0, "telemetry sampled");
+        assert_eq!(stats.latency.n, 2, "rejected requests still report latency");
     }
 
     #[test]
@@ -823,8 +916,17 @@ mod tests {
         let lat = j.get("latency_s").expect("latency summary");
         assert!(lat.req_f64("p95").unwrap() >= lat.req_f64("p50").unwrap());
         assert!(lat.req_f64("p99").unwrap() >= lat.req_f64("p95").unwrap());
+        // Paged-arena telemetry rides along (the CI gates read these).
+        assert_eq!(j.req_f64("capacity_stopped").unwrap(), 0.0);
+        assert_eq!(j.req_f64("pages_in_use_at_drain").unwrap(), 0.0);
+        assert!(j.req_f64("page_size").unwrap() > 0.0);
+        assert!(j.req_f64("kv_pages").unwrap() > 0.0);
+        let occ = j.get("page_occupancy").expect("page occupancy summary");
+        let occ_mean = occ.req_f64("mean").unwrap();
+        assert!(occ_mean > 0.0 && occ_mean <= 1.0, "page occupancy {occ_mean}");
         // Round-trips through the parser (what the CI smoke gate does).
         let parsed = crate::json::parse(&j.to_pretty()).unwrap();
         assert!(parsed.get("slot_occupancy").is_some());
+        assert!(parsed.get("pages_in_use").is_some());
     }
 }

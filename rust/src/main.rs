@@ -9,6 +9,7 @@
 //! oats serve-bench  --preset small [--seq]          # Tables 7 / 14
 //! oats serve-load   [--preset tiny] [--requests N] [--gen N] [--slots N]
 //!                   [--prefill-chunk N] [--admission fcfs|shortest]
+//!                   [--page-size N] [--kv-pages N]
 //!                   [--compress] [--quantize] [--quick] [--tag NAME]
 //!                                                   # SERVE_<tag>.json
 //! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
@@ -200,6 +201,9 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         admission: AdmissionPolicy::parse(args.flag_or("admission", "fcfs"))?,
         prepack: true,
         quantize: args.bool_flag("quantize"),
+        // 0 = whole-sequence pages (the contiguous degenerate layout).
+        page_size: args.usize_flag("page-size", 0),
+        kv_pages: args.usize_flag("kv-pages", 0),
     };
     let mcfg = ModelConfig::preset(preset)?;
     let mut model = oats::model::TransformerLM::init(&mcfg, 0x5E17E);
@@ -214,7 +218,9 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         model = cm;
     }
     // Mixed-length prompts (1 … seq_len/2), plus one deliberately oversized
-    // prompt to exercise the truncation-rejection path end to end.
+    // prompt (truncation-rejection path) and one exactly-at-capacity prompt
+    // (capacity-stopped path) to exercise both non-Complete statuses end to
+    // end — the CI gates check their counters.
     let mut prompts: Vec<Vec<usize>> = (0..n_req)
         .map(|i| {
             let len = 1 + (i * 7) % (mcfg.seq_len / 2).max(1);
@@ -223,6 +229,9 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         .collect();
     if let Some(p) = prompts.last_mut() {
         *p = vec![1; mcfg.seq_len + 1];
+    }
+    if n_req >= 2 {
+        prompts[n_req - 2] = (0..mcfg.seq_len).map(|j| (j * 3) % mcfg.vocab).collect();
     }
     println!(
         "serve-load: {} requests (gen {}), {} slots, chunk {}, admission {}…",
@@ -243,13 +252,21 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         stats.latency.p99 * 1e3,
     );
     println!(
-        "occupancy mean {:.2} | joins {} leaves {} truncated {} | {} steps | kv arena {:.2} MiB",
+        "occupancy mean {:.2} | joins {} leaves {} truncated {} capacity-stopped {} | {} steps",
         stats.slot_occupancy.mean,
         stats.joins,
         stats.leaves,
         stats.truncated,
+        stats.capacity_stopped,
         stats.steps,
+    );
+    println!(
+        "kv arena {:.2} MiB | {} pages × {} positions | page occupancy mean {:.2} | leaked {}",
         stats.kv_bytes as f64 / (1 << 20) as f64,
+        stats.kv_pages,
+        stats.page_size,
+        stats.page_occupancy.mean,
+        stats.pages_in_use_at_drain,
     );
     let tag = args.flag_or("tag", preset);
     stats.write_json(tag)?;

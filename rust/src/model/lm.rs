@@ -181,38 +181,30 @@ pub struct ForwardCapture {
 
 const LN_EPS: f32 = 1e-5;
 
-/// KV cache for incremental decoding: one K and V buffer per block.
-pub struct KvCache {
-    pub k: Vec<Matrix>, // per block: [t × d_model]
+/// One fixed-size page of KV storage: `rows` consecutive positions of K
+/// and V for every block. Pages are interchangeable: the serving arena
+/// ([`KvPool`]) preallocates a pool-wide free list and recycles pages
+/// across sequences, so a short sequence holds only the pages its length
+/// needs instead of a whole `seq_len`-sized cache.
+///
+/// [`KvPool`]: crate::coordinator::engine::KvPool
+pub struct KvPage {
+    /// Per block: [rows × d_model].
+    pub k: Vec<Matrix>,
     pub v: Vec<Matrix>,
-    pub len: usize,
 }
 
-impl KvCache {
-    pub fn new(cfg: &ModelConfig) -> KvCache {
-        KvCache {
-            k: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.seq_len, cfg.d_model)).collect(),
-            v: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.seq_len, cfg.d_model)).collect(),
-            len: 0,
+impl KvPage {
+    pub fn new(cfg: &ModelConfig, rows: usize) -> KvPage {
+        KvPage {
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(rows, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(rows, cfg.d_model)).collect(),
         }
     }
 
-    /// Max positions this cache can hold (the `seq_len` it was sized for).
-    pub fn capacity(&self) -> usize {
+    /// Positions this page stores.
+    pub fn rows(&self) -> usize {
         self.k.first().map(|m| m.rows).unwrap_or(0)
-    }
-
-    /// Positions still available for decoding.
-    pub fn remaining(&self) -> usize {
-        self.capacity() - self.len
-    }
-
-    /// Recycle this cache for a new sequence (the KV-pool path). Resetting
-    /// the length is sufficient: attention only ever reads rows `< len`,
-    /// and every row is written (at its decode step) before it is read, so
-    /// stale K/V values from the previous occupant are unreachable.
-    pub fn reset_for_reuse(&mut self) {
-        self.len = 0;
     }
 
     /// Resident size in bytes (both K and V buffers, all blocks).
@@ -222,6 +214,139 @@ impl KvCache {
             .chain(self.v.iter())
             .map(|m| m.data.len() * std::mem::size_of::<f32>())
             .sum()
+    }
+}
+
+/// KV cache for incremental decoding: an ordered page table over
+/// [`KvPage`]s, where position `p` lives at row `p % page_size` of page
+/// `p / page_size`. [`KvCache::new`] attaches one whole-sequence page up
+/// front (`page_size == seq_len`), so the scalar decode paths see exactly
+/// the old contiguous layout; [`KvCache::paged`] creates an empty shell
+/// whose pages the serving arena attaches on demand as the sequence grows.
+pub struct KvCache {
+    pages: Vec<KvPage>,
+    page_size: usize,
+    capacity: usize,
+    pub len: usize,
+}
+
+impl KvCache {
+    /// Contiguous cache: one page sized for the full `seq_len` (the
+    /// degenerate `page_size == seq_len` case — scalar `generate` and all
+    /// references use this and never touch the page machinery).
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            pages: vec![KvPage::new(cfg, cfg.seq_len)],
+            page_size: cfg.seq_len,
+            capacity: cfg.seq_len,
+            len: 0,
+        }
+    }
+
+    /// Empty paged shell: no storage until [`KvCache::push_page`] attaches
+    /// pages (the pool's acquire-on-demand path).
+    pub fn paged(cfg: &ModelConfig, page_size: usize) -> KvCache {
+        KvCache {
+            pages: Vec::new(),
+            page_size: page_size.clamp(1, cfg.seq_len),
+            capacity: cfg.seq_len,
+            len: 0,
+        }
+    }
+
+    /// Max positions this cache can hold (the `seq_len` it was sized for).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions still available for decoding (against the logical
+    /// capacity, not the currently attached pages).
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages currently attached.
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Positions the attached pages can store.
+    pub fn allocated_rows(&self) -> usize {
+        self.pages.len() * self.page_size
+    }
+
+    /// True when the next written position has no backing page yet: the
+    /// engine must attach one (from the pool's free list) before the next
+    /// prefill/decode step touches this cache.
+    pub fn needs_page(&self) -> bool {
+        self.len < self.capacity && self.len >= self.allocated_rows()
+    }
+
+    /// Append a page to the page table.
+    pub fn push_page(&mut self, page: KvPage) {
+        assert_eq!(page.rows(), self.page_size, "page geometry mismatch");
+        self.pages.push(page);
+    }
+
+    /// Retirement: detach every page (for return to the pool's free list)
+    /// and reset the cache to empty.
+    pub fn take_pages(&mut self) -> Vec<KvPage> {
+        self.len = 0;
+        std::mem::take(&mut self.pages)
+    }
+
+    /// Recycle this cache for a new sequence while keeping its pages (the
+    /// contiguous whole-cache path). Resetting the length is sufficient:
+    /// attention only ever reads rows `< len`, and every row is written
+    /// (at its decode step) before it is read, so stale K/V values from
+    /// the previous occupant are unreachable.
+    pub fn reset_for_reuse(&mut self) {
+        self.len = 0;
+    }
+
+    /// Resident size in bytes (all attached pages).
+    pub fn memory_bytes(&self) -> usize {
+        self.pages.iter().map(KvPage::memory_bytes).sum()
+    }
+
+    /// The first `n` K rows of `block`, gathered across the page table in
+    /// position order — the attention walk. Yields fewer than `n` rows
+    /// only if the page table is too short (guarded by the decode-entry
+    /// asserts).
+    pub fn k_rows(&self, block: usize, n: usize) -> impl Iterator<Item = &[f32]> + '_ {
+        self.pages
+            .iter()
+            .flat_map(move |p| {
+                let m = &p.k[block];
+                (0..m.rows).map(move |r| m.row(r))
+            })
+            .take(n)
+    }
+
+    /// The first `n` V rows of `block`, gathered across the page table.
+    pub fn v_rows(&self, block: usize, n: usize) -> impl Iterator<Item = &[f32]> + '_ {
+        self.pages
+            .iter()
+            .flat_map(move |p| {
+                let m = &p.v[block];
+                (0..m.rows).map(move |r| m.row(r))
+            })
+            .take(n)
+    }
+
+    #[inline]
+    pub fn k_row_mut(&mut self, block: usize, pos: usize) -> &mut [f32] {
+        self.pages[pos / self.page_size].k[block].row_mut(pos % self.page_size)
+    }
+
+    #[inline]
+    pub fn v_row_mut(&mut self, block: usize, pos: usize) -> &mut [f32] {
+        self.pages[pos / self.page_size].v[block].row_mut(pos % self.page_size)
     }
 }
 
@@ -424,6 +549,7 @@ impl TransformerLM {
         let scale = 1.0 / (hd as f32).sqrt();
         let t = cache.len;
         assert!(t < self.cfg.seq_len, "cache full");
+        assert!(t < cache.allocated_rows(), "no KV page attached for position {t}");
 
         let mut h: Vec<f32> = self.tok_emb.row(token).to_vec();
         for (x, &p) in h.iter_mut().zip(self.pos_emb.row(t)) {
@@ -440,22 +566,22 @@ impl TransformerLM {
             blk.q.forward_vec(&x, &mut qbuf);
             blk.k.forward_vec(&x, &mut kbuf);
             blk.v.forward_vec(&x, &mut vbuf);
-            cache.k[bi].row_mut(t).copy_from_slice(&kbuf);
-            cache.v[bi].row_mut(t).copy_from_slice(&vbuf);
+            cache.k_row_mut(bi, t).copy_from_slice(&kbuf);
+            cache.v_row_mut(bi, t).copy_from_slice(&vbuf);
             ctx.iter_mut().for_each(|c| *c = 0.0);
             for head in 0..nh {
                 let off = head * hd;
                 let qh = &qbuf[off..off + hd];
                 let mut scores = vec![0.0f32; t + 1];
-                for (u, sc) in scores.iter_mut().enumerate() {
-                    let krow = &cache.k[bi].row(u)[off..off + hd];
-                    *sc = tensor::dot(qh, krow) * scale;
+                // Gather K/V across the sequence's pages ([`KvCache::k_rows`]
+                // walks the page table in position order).
+                for (sc, krow) in scores.iter_mut().zip(cache.k_rows(bi, t + 1)) {
+                    *sc = tensor::dot(qh, &krow[off..off + hd]) * scale;
                 }
                 tensor::softmax_inplace(&mut scores);
                 let ch = &mut ctx[off..off + hd];
-                for (u, &p) in scores.iter().enumerate() {
-                    let vrow = &cache.v[bi].row(u)[off..off + hd];
-                    for (cv, &vv) in ch.iter_mut().zip(vrow) {
+                for (&p, vrow) in scores.iter().zip(cache.v_rows(bi, t + 1)) {
+                    for (cv, &vv) in ch.iter_mut().zip(&vrow[off..off + hd]) {
                         *cv += p * vv;
                     }
                 }
@@ -504,6 +630,7 @@ impl TransformerLM {
         for (i, &tok) in tokens.iter().enumerate() {
             let t = caches[i].len;
             assert!(t < self.cfg.seq_len, "cache full (seq {i})");
+            assert!(t < caches[i].allocated_rows(), "no KV page attached for seq {i} pos {t}");
             let row = h.row_mut(i);
             let emb = self.tok_emb.row(tok).iter().zip(self.pos_emb.row(t));
             for (x, (&e, &p)) in row.iter_mut().zip(emb) {
@@ -520,21 +647,21 @@ impl TransformerLM {
             let mut ctx = Matrix::zeros(b, d);
             for i in 0..b {
                 let t = caches[i].len;
-                caches[i].k[bi].row_mut(t).copy_from_slice(k.row(i));
-                caches[i].v[bi].row_mut(t).copy_from_slice(v.row(i));
+                caches[i].k_row_mut(bi, t).copy_from_slice(k.row(i));
+                caches[i].v_row_mut(bi, t).copy_from_slice(v.row(i));
                 for head in 0..nh {
                     let off = head * hd;
                     let qh = &q.row(i)[off..off + hd];
                     let mut scores = vec![0.0f32; t + 1];
-                    for (u, sc) in scores.iter_mut().enumerate() {
-                        let krow = &caches[i].k[bi].row(u)[off..off + hd];
-                        *sc = tensor::dot(qh, krow) * scale;
+                    // Same paged K/V walk as `decode_step`, over this
+                    // sequence's own (possibly ragged) page table.
+                    for (sc, krow) in scores.iter_mut().zip(caches[i].k_rows(bi, t + 1)) {
+                        *sc = tensor::dot(qh, &krow[off..off + hd]) * scale;
                     }
                     tensor::softmax_inplace(&mut scores);
                     let ch = &mut ctx.row_mut(i)[off..off + hd];
-                    for (u, &p) in scores.iter().enumerate() {
-                        let vrow = &caches[i].v[bi].row(u)[off..off + hd];
-                        for (cv, &vv) in ch.iter_mut().zip(vrow) {
+                    for (&p, vrow) in scores.iter().zip(caches[i].v_rows(bi, t + 1)) {
+                        for (cv, &vv) in ch.iter_mut().zip(&vrow[off..off + hd]) {
                             *cv += p * vv;
                         }
                     }
@@ -720,6 +847,86 @@ mod tests {
         for (a, b) in last.iter().zip(want) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_cache() {
+        // A cache split into small pages must be arithmetically identical
+        // to the one-page contiguous layout: the page walk only changes
+        // where rows live, never the order they are read in.
+        let m = tiny();
+        let seq = [7usize, 3, 11, 2, 19, 4, 8];
+        for page_size in [1usize, 2, 3, 5, 64] {
+            let mut paged = KvCache::paged(&m.cfg, page_size);
+            let mut contiguous = KvCache::new(&m.cfg);
+            let mut got = Vec::new();
+            let mut want = Vec::new();
+            for &t in &seq {
+                if paged.needs_page() {
+                    paged.push_page(KvPage::new(&m.cfg, paged.page_size()));
+                }
+                got = m.decode_step(t, &mut paged);
+                want = m.decode_step(t, &mut contiguous);
+            }
+            assert_eq!(got, want, "page_size {page_size} diverged");
+            assert_eq!(paged.pages_held(), seq.len().div_ceil(paged.page_size()));
+            assert_eq!(paged.len, contiguous.len);
+        }
+    }
+
+    #[test]
+    fn paged_batch_decode_matches_contiguous() {
+        let m = tiny();
+        let seqs = [vec![7usize, 3, 11, 2], vec![5usize, 1, 9, 14]];
+        let mut paged = KvCache::paged(&m.cfg, 3);
+        let mut contiguous = KvCache::new(&m.cfg);
+        let mut got = Matrix::zeros(0, 0);
+        for step in 0..seqs[0].len() {
+            if paged.needs_page() {
+                paged.push_page(KvPage::new(&m.cfg, 3));
+            }
+            let tokens = [seqs[0][step], seqs[1][step]];
+            let mut caches = [&mut paged, &mut contiguous];
+            got = m.decode_step_batch(&tokens, &mut caches);
+        }
+        // Row 0 decoded seq 0 through a 3-position paged table; compare
+        // against the same sequence through a fresh contiguous cache.
+        let mut clean = KvCache::new(&m.cfg);
+        let mut want = Vec::new();
+        for &t in &seqs[0] {
+            want = m.decode_step(t, &mut clean);
+        }
+        for (a, b) in got.row(0).iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn paged_cache_page_accounting() {
+        let m = tiny();
+        let mut c = KvCache::paged(&m.cfg, 4);
+        assert_eq!(c.capacity(), m.cfg.seq_len);
+        assert_eq!(c.remaining(), m.cfg.seq_len);
+        assert!(c.needs_page(), "empty shell needs its first page");
+        assert_eq!(c.memory_bytes(), 0);
+        c.push_page(KvPage::new(&m.cfg, 4));
+        assert!(!c.needs_page());
+        assert_eq!(c.allocated_rows(), 4);
+        assert!(c.memory_bytes() > 0);
+        c.len = 4;
+        assert!(c.needs_page(), "full pages demand the next one");
+        let pages = c.take_pages();
+        assert_eq!(pages.len(), 1);
+        assert_eq!(c.len, 0, "take_pages resets the cache");
+        assert_eq!(c.pages_held(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no KV page attached")]
+    fn decode_without_page_panics() {
+        let m = tiny();
+        let mut c = KvCache::paged(&m.cfg, 4);
+        let _ = m.decode_step(1, &mut c);
     }
 
     #[test]

@@ -8,4 +8,6 @@ pub mod compressed_io;
 pub mod io;
 pub mod lm;
 
-pub use lm::{Block, ForwardCapture, KvCache, LinearId, LinearOp, TransformerLM, LINEAR_NAMES};
+pub use lm::{
+    Block, ForwardCapture, KvCache, KvPage, LinearId, LinearOp, TransformerLM, LINEAR_NAMES,
+};

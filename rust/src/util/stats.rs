@@ -15,9 +15,19 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary; `xs` need not be sorted. Empty input yields zeros.
+    /// Compute a summary; `xs` need not be sorted. Empty input yields
+    /// zeros.
+    ///
+    /// NaN placement is explicit: NaN observations are **dropped** (`n`
+    /// counts the kept samples), so one degenerate measurement — e.g. a
+    /// NaN latency sample — cannot poison every statistic or make the
+    /// JSON emitters produce unparseable output. (The previous
+    /// `partial_cmp(..).unwrap()` sort panicked mid-run instead.) An
+    /// all-NaN sample yields the same zero summary as an empty one;
+    /// infinities are legitimate ordered values and are kept.
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+        if sorted.is_empty() {
             return Summary {
                 n: 0,
                 mean: 0.0,
@@ -29,11 +39,10 @@ impl Summary {
                 p99: 0.0,
             };
         }
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         Summary {
             n,
             mean,
@@ -138,6 +147,28 @@ mod tests {
         let j = Summary::of(&[1.0, 2.0, 3.0]).to_json();
         assert_eq!(j.req_f64("n").unwrap(), 3.0);
         assert!(j.req_f64("p99").unwrap() >= j.req_f64("p50").unwrap());
+    }
+
+    #[test]
+    fn nan_observations_are_dropped_not_fatal() {
+        // Regression: a single NaN used to panic the partial_cmp sort in
+        // the middle of the stats/JSON emit path.
+        let s = Summary::of(&[3.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 2, "NaN is dropped from the sample");
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!(s.p99.is_finite());
+        let j = s.to_json();
+        assert!(j.req_f64("p50").unwrap().is_finite());
+        // All-NaN degenerates to the zero summary, like empty input.
+        let all = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(all.n, 0);
+        assert_eq!(all.max, 0.0);
+        // Infinities are ordered values and survive.
+        let inf = Summary::of(&[1.0, f64::INFINITY]);
+        assert_eq!(inf.n, 2);
+        assert_eq!(inf.max, f64::INFINITY);
     }
 
     #[test]

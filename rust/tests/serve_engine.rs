@@ -1,19 +1,23 @@
 //! Continuous-batching engine contracts:
 //!
 //! 1. **Parity** — per-sequence outputs are identical to scalar
-//!    [`generate`] under randomized arrival times, prompt lengths, slot
-//!    counts, prefill-chunk sizes, generation budgets, and admission
-//!    policies (the batched-vs-scalar parity test is the template).
+//!    [`generate`] / [`generate_lockstep`] under randomized arrival times,
+//!    prompt lengths, slot counts, prefill-chunk sizes, generation
+//!    budgets, admission policies, **and KV page geometries** (the
+//!    batched-vs-scalar parity test is the template).
 //! 2. **Continuity** — under a mixed-length load the engine backfills
 //!    retired slots immediately, so mean slot occupancy beats what the old
-//!    static batch-at-a-time loop could achieve on the same workload.
+//!    static batch-at-a-time loop could achieve on the same workload; and
+//!    at equal total KV bytes, small pages admit more concurrent
+//!    sequences than whole-cache slots.
+//! 3. **Conservation** — the paged arena leaks no pages across churn.
 
 use oats::config::ModelConfig;
 use oats::coordinator::engine::{
     AdmissionPolicy, Batcher, Engine, EngineConfig, FinishedSeq, Request, ResponseStatus,
     SeqEvent,
 };
-use oats::coordinator::serve::generate;
+use oats::coordinator::serve::{generate, generate_lockstep};
 use oats::model::TransformerLM;
 use oats::util::prop::check;
 use std::collections::HashMap;
@@ -22,6 +26,20 @@ use std::time::Instant;
 
 fn tiny() -> Arc<TransformerLM> {
     Arc::new(TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 0x5E4E))
+}
+
+/// The status the engine must report for a prompt of `len` under a
+/// generation budget `gen` and KV capacity `cap`: oversized prompts are
+/// rejected, trivially empty work completes, and a sequence whose KV
+/// room runs out before its budget is capacity-stopped.
+fn expected_status(len: usize, gen: usize, cap: usize) -> ResponseStatus {
+    if len > cap {
+        ResponseStatus::Truncated
+    } else if len == 0 || gen == 0 || len + gen <= cap {
+        ResponseStatus::Complete
+    } else {
+        ResponseStatus::CapacityStopped
+    }
 }
 
 /// Drive an engine synchronously: `arrivals[i] = (step, prompt)` enters the
@@ -68,6 +86,7 @@ fn engine_matches_scalar_generate_under_randomized_arrivals() {
             } else {
                 AdmissionPolicy::ShortestPrompt
             },
+            ..Default::default()
         };
         let n_req = g.usize_range(1, 8);
         let arrivals: Vec<(usize, Vec<usize>)> = (0..n_req)
@@ -89,11 +108,15 @@ fn engine_matches_scalar_generate_under_randomized_arrivals() {
         assert_eq!(done.len(), n_req);
         for (id, (_, prompt)) in arrivals.iter().enumerate() {
             let f = &done[&(id as u64)];
+            assert_eq!(
+                f.status,
+                expected_status(prompt.len(), cfg.gen_tokens, cap),
+                "prompt len {} under {cfg:?}",
+                prompt.len()
+            );
             if prompt.len() > cap {
-                assert_eq!(f.status, ResponseStatus::Truncated, "oversized prompt");
-                assert!(f.tokens.is_empty());
+                assert!(f.tokens.is_empty(), "rejected request must not generate");
             } else {
-                assert_eq!(f.status, ResponseStatus::Complete);
                 assert_eq!(
                     f.tokens,
                     generate(&m, prompt, cfg.gen_tokens),
@@ -103,6 +126,128 @@ fn engine_matches_scalar_generate_under_randomized_arrivals() {
             }
         }
     });
+}
+
+#[test]
+fn paged_engine_matches_lockstep_under_randomized_page_geometry() {
+    // The paging tentpole's parity contract: for ANY page geometry —
+    // single-position pages, ragged last pages, whole-sequence pages —
+    // and any arrival pattern, per-sequence outputs equal the batch-of-1
+    // lockstep reference through the same kernels, and the arena
+    // conserves its pages across all the churn.
+    let m = tiny();
+    let cap = m.cfg.seq_len;
+    check("paged engine == generate_lockstep", 10, |g| {
+        let slots = g.usize_range(1, 5);
+        let page_size = g.usize_range(1, cap + 5); // may exceed cap: clamped
+        let per_seq = cap.div_ceil(page_size.min(cap));
+        // From barely-one-sequence up to everything-fits.
+        let kv_pages = g.usize_range(per_seq, slots * per_seq + 1);
+        let cfg = EngineConfig {
+            slots,
+            prefill_chunk: g.usize_range(1, 7),
+            gen_tokens: g.usize_range(1, 9),
+            admission: if g.bool() {
+                AdmissionPolicy::Fcfs
+            } else {
+                AdmissionPolicy::ShortestPrompt
+            },
+            page_size,
+            kv_pages,
+        };
+        let n_req = g.usize_range(1, 8);
+        let arrivals: Vec<(usize, Vec<usize>)> = (0..n_req)
+            .map(|_| {
+                let len = match g.usize_range(0, 8) {
+                    0 => cap,
+                    1 => cap - g.usize_range(1, 5),
+                    _ => g.usize_range(1, 25),
+                };
+                let prompt = (0..len).map(|_| g.usize_range(0, m.cfg.vocab)).collect();
+                (g.usize_range(0, 6), prompt)
+            })
+            .collect();
+        let (done, engine) = drive(&m, cfg, &arrivals);
+        assert_eq!(done.len(), n_req);
+        for (id, (_, prompt)) in arrivals.iter().enumerate() {
+            let f = &done[&(id as u64)];
+            assert_eq!(f.status, expected_status(prompt.len(), cfg.gen_tokens, cap));
+            assert_eq!(
+                f.tokens,
+                generate_lockstep(&m, prompt, cfg.gen_tokens),
+                "prompt len {} under {cfg:?}",
+                prompt.len()
+            );
+        }
+        let t = engine.telemetry().lock().unwrap().clone();
+        assert_eq!(t.pages_in_use_now, 0, "pages leaked after drain under {cfg:?}");
+        assert!(
+            t.pages_in_use.iter().all(|&p| p <= t.total_pages as f64),
+            "pages over-committed under {cfg:?}: {:?}",
+            t.pages_in_use
+        );
+        assert!(t.page_occupancy.iter().all(|&o| (0.0..=1.0).contains(&o)));
+    });
+}
+
+#[test]
+fn equal_kv_bytes_paged_arena_admits_more_concurrency() {
+    // The acceptance criterion for the paging tentpole. Same model, same
+    // mixed-length workload, same total KV bytes:
+    //   whole-cache: 2 slots × one 64-position cache  = 128 positions
+    //   paged:       8 slots over 16 pages × 8 positions = 128 positions
+    // Short sequences (≈12–16 positions end to end) strand most of a
+    // whole cache but hold only 2 pages, so the paged arena runs several
+    // of them concurrently where the whole-cache arena fits two.
+    let m = tiny();
+    let cap = m.cfg.seq_len;
+    assert_eq!(cap, 64, "workload sizing below assumes the tiny preset");
+    let gen = 4usize;
+    let arrivals: Vec<(usize, Vec<usize>)> = (0..10)
+        .map(|i| (0usize, (0..(8 + (i * 3) % 5)).map(|j| (i * 7 + j) % 16).collect()))
+        .collect();
+
+    let whole = EngineConfig {
+        slots: 2,
+        prefill_chunk: 4,
+        gen_tokens: gen,
+        admission: AdmissionPolicy::Fcfs,
+        page_size: 0,
+        kv_pages: 0,
+    };
+    let paged = EngineConfig { slots: 8, page_size: 8, kv_pages: 16, ..whole };
+
+    let (done_w, engine_w) = drive(&m, whole, &arrivals);
+    let (done_p, engine_p) = drive(&m, paged, &arrivals);
+    // Outputs identical to the lockstep reference in both arenas.
+    for (id, (_, prompt)) in arrivals.iter().enumerate() {
+        let want = generate_lockstep(&m, prompt, gen);
+        assert_eq!(done_w[&(id as u64)].tokens, want);
+        assert_eq!(done_p[&(id as u64)].tokens, want);
+    }
+    let tw = engine_w.telemetry().lock().unwrap().clone();
+    let tp = engine_p.telemetry().lock().unwrap().clone();
+    assert_eq!(tw.kv_bytes, tp.kv_bytes, "comparison must hold KV bytes equal");
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    // Resident sequences per step (occupancy × slots) and decode width
+    // must both rise when the same bytes are sliced into pages.
+    let resident_w = mean(&tw.occupancy) * tw.slots as f64;
+    let resident_p = mean(&tp.occupancy) * tp.slots as f64;
+    assert!(
+        resident_p > resident_w,
+        "paged arena must admit more concurrent sequences: {resident_p:.2} vs {resident_w:.2}"
+    );
+    assert!(
+        mean(&tp.decode_batch) > mean(&tw.decode_batch),
+        "paged arena must decode wider: {:.2} vs {:.2}",
+        mean(&tp.decode_batch),
+        mean(&tw.decode_batch)
+    );
+    let peak = |xs: &[f64]| xs.iter().cloned().fold(0.0f64, f64::max);
+    assert!(peak(&tp.decode_batch) > peak(&tw.decode_batch));
+    // And the paged run still finishes the workload in fewer steps.
+    assert!(tp.steps < tw.steps, "paged {} steps vs whole-cache {}", tp.steps, tw.steps);
+    assert_eq!(tp.pages_in_use_now, 0);
 }
 
 #[test]
@@ -133,6 +278,7 @@ fn mixed_length_load_beats_static_batching_occupancy() {
         prefill_chunk: 1,
         gen_tokens: gen,
         admission: AdmissionPolicy::Fcfs,
+        ..Default::default()
     };
     let arrivals: Vec<(usize, Vec<usize>)> = budgets
         .iter()
@@ -167,6 +313,7 @@ fn late_arrivals_join_mid_flight() {
         prefill_chunk: 4,
         gen_tokens: 20,
         admission: AdmissionPolicy::Fcfs,
+        ..Default::default()
     };
     let mut engine = Engine::new(Arc::clone(&m), cfg);
     let mut queue = Batcher::default();
