@@ -5,13 +5,16 @@
 //! Run: `cargo bench --bench micro` (add `-- --quick` for the CI smoke
 //! sizing). Emits `BENCH_micro.json` (see `$OATS_BENCH_DIR`), including
 //! named csr→bcsr and bcsr→qbcsr speedup comparisons at 50–70 % sparsity
-//! on a realistic layer shape (2048×2048, batch 8), plus
-//! `metrics` entries recording the bcsr vs qbcsr byte footprints. CI's
-//! perf gate reads the csr→bcsr and bcsr→qbcsr `comparisons[].speedup`
-//! values against conservative floors.
+//! on a realistic layer shape (2048×2048, batch 8), SIMD-dispatch vs
+//! generic-build comparisons for the register-blocked microkernels, and
+//! `metrics` entries recording the bcsr vs qbcsr byte footprints plus the
+//! microkernel's `simd_dispatch`/`lanes` telemetry. CI's perf gate reads
+//! the csr→bcsr, bcsr→qbcsr, and *_simd_vs_generic
+//! `comparisons[].speedup` values against conservative floors.
 
 use oats::bench::{black_box, Bench};
 use oats::linalg::randomized_svd;
+use oats::sparse::microkernel::{self, with_isa, Isa, LANE_WIDTHS};
 use oats::sparse::{Bcsr, Csr, LowRank, PackOptions, PackedLinear, QBcsr, SparsePlusLowRank};
 use oats::tensor::{matmul, matmul_bt, Matrix};
 use oats::util::prng::Rng;
@@ -92,10 +95,62 @@ fn kernel_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
     let _ = b.compare(&format!("qfused_vs_fused_{d}_b{batch}"), &fused_name, &qfused_name);
 }
 
+/// The SIMD-dispatch comparison: the same kernels with the lane fold
+/// pinned to the generic (autovectorized) build vs the runtime-dispatched
+/// build (`avx2,fma` clones where detected). On hosts without AVX2 both
+/// sides run identical code and the speedup sits at ~1.0×; CI floors these
+/// labels conservatively so a catastrophic dispatch regression fails.
+fn simd_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
+    let isa = microkernel::detected_isa().name();
+    println!("-- simd dispatch ({isa}) {d}x{d}, batch {batch} --");
+    let s = random_sparse(d, d, 0.5, rng);
+    let x = Matrix::randn(batch, d, 1.0, rng);
+    let bcsr = Bcsr::from_dense(&s);
+    let gen_name = format!("bcsr(50%) generic-isa {d}x{d} b{batch}");
+    let simd_name = format!("bcsr(50%) simd-isa {d}x{d} b{batch}");
+    b.run(&gen_name, || {
+        with_isa(Isa::Generic, || {
+            black_box(bcsr.matmul_xt(&x));
+        });
+    });
+    b.run(&simd_name, || {
+        black_box(bcsr.matmul_xt(&x));
+    });
+    let _ = b.compare(&format!("bcsr_simd_vs_generic_{d}_b{batch}"), &gen_name, &simd_name);
+
+    let r = d / 16;
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&random_sparse(d, d, 0.625, rng)),
+        low_rank: Some(LowRank {
+            u: Matrix::randn(d, r, 1.0, rng),
+            vt: Matrix::randn(r, d, 1.0, rng),
+        }),
+    };
+    let packed = PackedLinear::from_spl(&spl, batch);
+    let gen_fused = format!("spl fused generic-isa {d}x{d} b{batch}");
+    let simd_fused = format!("spl fused simd-isa {d}x{d} b{batch}");
+    b.run(&gen_fused, || {
+        with_isa(Isa::Generic, || {
+            black_box(packed.forward(&x));
+        });
+    });
+    b.run(&simd_fused, || {
+        black_box(packed.forward(&x));
+    });
+    let _ = b.compare(&format!("fused_simd_vs_generic_{d}_b{batch}"), &gen_fused, &simd_fused);
+}
+
 fn main() {
     let mut rng = Rng::new(1);
     let mut b = Bench::from_env();
     println!("== micro benches (d=512 layer scale) ==");
+    // Record the microkernel's dispatch decision in the JSON: which ISA
+    // the lane kernels run through (1.0 = avx2+fma clones) and the lane
+    // ladder the register-blocked fold uses.
+    println!("microkernel dispatch: {}", microkernel::detected_isa().name());
+    let simd = if microkernel::detected_isa() == Isa::Avx2Fma { 1.0 } else { 0.0 };
+    b.metric("simd_dispatch", simd);
+    b.metric("lanes", LANE_WIDTHS[0] as f64);
 
     let d = 512;
     let a = Matrix::randn(d, d, 1.0, &mut rng);
@@ -151,6 +206,9 @@ fn main() {
     // a serving-sized layer (2048², batch 8) plus the d=512 scale.
     kernel_comparison(&mut b, 512, 8, &mut rng);
     kernel_comparison(&mut b, 2048, 8, &mut rng);
+
+    // Register-blocked SIMD dispatch vs the generic build, serving-sized.
+    simd_comparison(&mut b, 2048, 8, &mut rng);
 
     // randomized SVD — the OATS compression hot spot
     let w = Matrix::randn(d, d, 1.0, &mut rng);

@@ -8,10 +8,12 @@
 //!    ([`KvPool`], a fixed **paged** arena preallocated at startup) under
 //!    the configured [`AdmissionPolicy`]. Admission is page-aware: a
 //!    joiner needs a free slot *and* a worst-case page reservation
-//!    (`ceil(min(prompt + gen_tokens − 1, seq_len) / page_size)` — its
-//!    prompt pages plus decode headroom), so a resident sequence can
-//!    always grow to retirement and admission can never deadlock
-//!    mid-generation.
+//!    (`ceil(min(prompt + gen − 1, seq_len) / page_size)` — its prompt
+//!    pages plus decode headroom, where `gen` is the request's own
+//!    [`Request::gen_tokens`] budget or the server default), so a
+//!    resident sequence can always grow to retirement and admission can
+//!    never deadlock mid-generation; short-budget requests reserve fewer
+//!    pages and admit alongside bigger ones.
 //!    Requests that can never generate (empty prompts, zero budgets) are
 //!    answered immediately without a slot — even while the arena is
 //!    full — prompts longer than the model's `seq_len` are rejected with
@@ -50,6 +52,7 @@ pub use kv_pool::KvPool;
 pub use sched::{AdmissionPolicy, Batcher, Request, ResponseStatus, Sequence};
 
 use crate::model::TransformerLM;
+use crate::sparse::Workspace;
 use crate::tensor::argmax;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -64,7 +67,8 @@ pub struct EngineConfig {
     pub slots: usize,
     /// Max prompt tokens a joining sequence consumes per engine step.
     pub prefill_chunk: usize,
-    /// Tokens to generate per request.
+    /// Default tokens to generate per request; a request carrying its own
+    /// [`Request::gen_tokens`] budget overrides this for that request.
     pub gen_tokens: usize,
     pub admission: AdmissionPolicy,
     /// KV positions per page. `0` ⇒ whole-sequence pages (`seq_len`): the
@@ -153,6 +157,10 @@ pub struct EngineTelemetry {
     pub pages_in_use_now: usize,
     /// Constant KV-arena footprint in bytes (set at engine startup).
     pub kv_bytes: usize,
+    /// Fresh heap buffers the decode workspace has ever allocated
+    /// (lifetime total). Flat across steps once shapes have been seen —
+    /// the "decode no longer allocates xt/out per call" regression check.
+    pub ws_buffer_allocs: usize,
 }
 
 impl EngineTelemetry {
@@ -201,6 +209,9 @@ pub struct Engine {
     cfg: EngineConfig,
     pool: KvPool,
     seqs: Vec<Sequence>,
+    /// Recycled kernel/decode buffers, kept across steps so the decode
+    /// loop stops paying per-call `transpose()`/`zeros` allocations.
+    ws: Workspace,
     telemetry: Arc<Mutex<EngineTelemetry>>,
 }
 
@@ -222,7 +233,7 @@ impl Engine {
             kv_bytes: pool.memory_bytes(),
             ..Default::default()
         }));
-        Engine { model, cfg, pool, seqs: Vec::new(), telemetry }
+        Engine { model, cfg, pool, seqs: Vec::new(), ws: Workspace::new(), telemetry }
     }
 
     /// Shared handle to the telemetry (updated once per step).
@@ -247,9 +258,10 @@ impl Engine {
     /// rejection never waits behind resident decodes. A joiner is admitted
     /// only when, besides a free slot, its worst-case page need
     /// (`ceil(min(prompt + gen − 1, seq_len) / page_size)` — prompt pages
-    /// plus decode headroom) fits in the arena's unreserved pages; the
-    /// reservation guarantees every resident can grow to retirement, so
-    /// admission can never deadlock mid-generation.
+    /// plus decode headroom, with `gen` its own budget or the server
+    /// default) fits in the arena's unreserved pages; the reservation
+    /// guarantees every resident can grow to retirement, so admission can
+    /// never deadlock mid-generation.
     ///
     /// Returns the admission counts for the caller to fold into the
     /// telemetry under one end-of-step lock (no per-request locking).
@@ -257,8 +269,8 @@ impl Engine {
         let cap = self.model.cfg.seq_len;
         let gen = self.cfg.gen_tokens;
         let mut counts = StepCounts::default();
-        let slot_free =
-            queue.take_where(|r| r.prompt.len() >= cap || r.prompt.is_empty() || gen == 0);
+        let slot_free = queue
+            .take_where(|r| r.prompt.len() >= cap || r.prompt.is_empty() || r.budget(gen) == 0);
         for req in slot_free {
             // prompt > cap is the rejection (`Truncated`); an empty prompt
             // or zero budget matches scalar `generate` (no logits to
@@ -268,7 +280,7 @@ impl Engine {
             let status = if req.prompt.len() > cap {
                 counts.truncated += 1;
                 ResponseStatus::Truncated
-            } else if req.prompt.is_empty() || gen == 0 {
+            } else if req.prompt.is_empty() || req.budget(gen) == 0 {
                 ResponseStatus::Complete
             } else {
                 counts.capacity_stopped += 1;
@@ -283,13 +295,14 @@ impl Engine {
             }));
         }
         // Worst-case KV positions a joiner can ever write: its prompt plus
-        // gen-1 decoded tokens (the final sampled token is returned but
-        // never fed back), clamped to capacity. Reserving exactly this
-        // keeps admission deadlock-free with zero stranded pages. (The
-        // `gen.max(1)` only guards the arithmetic: zero-budget requests
-        // were all answered slot-free above, so this is never reached
-        // with gen == 0.)
-        let worst_case = |r: &Request| (r.prompt.len() + gen.max(1) - 1).min(cap);
+        // budget-1 decoded tokens (the final sampled token is returned but
+        // never fed back), clamped to capacity — per-request budgets shrink
+        // the reservation, so short-budget requests admit alongside bigger
+        // ones. Reserving exactly this keeps admission deadlock-free with
+        // zero stranded pages. (The `.max(1)` only guards the arithmetic:
+        // zero-budget requests were all answered slot-free above, so this
+        // is never reached with a resolved budget of 0.)
+        let worst_case = |r: &Request| (r.prompt.len() + r.budget(gen).max(1) - 1).min(cap);
         while self.pool.available() > 0 {
             let pool = &self.pool;
             let fits = |r: &Request| pool.can_admit(pool.pages_for(worst_case(r)));
@@ -299,7 +312,7 @@ impl Engine {
             let need = self.pool.pages_for(worst_case(&req));
             let slot = self.pool.acquire(need).expect("admission checked slot and pages");
             counts.joins += 1;
-            self.seqs.push(Sequence::new(req, slot, self.model.cfg.vocab));
+            self.seqs.push(Sequence::new(req, slot, self.model.cfg.vocab, gen));
         }
         counts
     }
@@ -316,12 +329,16 @@ impl Engine {
             self.pool.ensure_page(slot);
         }
         let mut caches = self.pool.caches_mut(&slots);
-        let logits = self.model.decode_step_batch(tokens, &mut caches);
+        // The engine-owned workspace persists across steps, so the batched
+        // kernels' Xᵀ panels and outputs recycle instead of reallocating.
+        let logits = self.model.decode_step_batch_ws(tokens, &mut caches, &mut self.ws);
+        drop(caches);
         for (r, &i) in idxs.iter().enumerate() {
             let s = &mut self.seqs[i];
             s.logits.clear();
             s.logits.extend_from_slice(logits.row(r));
         }
+        self.ws.recycle(logits);
     }
 
     /// Fold one worked step into the telemetry (single lock).
@@ -339,6 +356,7 @@ impl Engine {
         t.pages_in_use.push(held as f64);
         t.page_occupancy.push(held as f64 / self.pool.pages_total() as f64);
         t.pages_in_use_now = held;
+        t.ws_buffer_allocs = self.ws.alloc_count();
         t.trim();
     }
 
@@ -385,9 +403,7 @@ impl Engine {
         let didx: Vec<usize> = (0..self.seqs.len())
             .filter(|&i| {
                 let s = &self.seqs[i];
-                !s.prefilling()
-                    && s.out.len() < self.cfg.gen_tokens
-                    && self.pool.cache(s.slot).remaining() > 0
+                !s.prefilling() && s.out.len() < s.budget && self.pool.cache(s.slot).remaining() > 0
             })
             .collect();
         if !didx.is_empty() {
@@ -403,7 +419,7 @@ impl Engine {
                     s.first_token_at = Some(now);
                 }
                 events.push(SeqEvent::Token { id: s.id, token: t, first });
-                if s.out.len() < self.cfg.gen_tokens {
+                if s.out.len() < s.budget {
                     cont.push(i);
                     cont_tokens.push(t);
                 }
@@ -420,10 +436,9 @@ impl Engine {
 
         // ── retire finished sequences, releasing their slots (and every
         // page they held, back to the free list) ──
-        let gen = self.cfg.gen_tokens;
         let seqs = std::mem::take(&mut self.seqs);
         for s in seqs {
-            let budget_met = s.out.len() >= gen;
+            let budget_met = s.out.len() >= s.budget;
             let capacity_hit = self.pool.cache(s.slot).remaining() == 0;
             if !s.prefilling() && (budget_met || capacity_hit) {
                 self.pool.release(s.slot);
@@ -466,7 +481,7 @@ mod tests {
     }
 
     fn req(id: u64, prompt: Vec<usize>) -> Request {
-        Request { id, prompt, enqueued: Instant::now() }
+        Request::new(id, prompt)
     }
 
     /// Drive the engine until `n` sequences finish; panics if it stalls.
@@ -681,6 +696,93 @@ mod tests {
         q0.push(req(1, vec![1, 2, 3]));
         let done = drain(&mut e0, &mut q0, 1);
         assert!(done[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn per_request_budget_overrides_server_default() {
+        let m = tiny();
+        let cfg = EngineConfig { slots: 3, gen_tokens: 8, ..Default::default() };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2, 3])); // server default: 8 tokens
+        q.push(req(1, vec![1, 2, 3]).with_budget(2));
+        q.push(req(2, vec![4, 5]).with_budget(0)); // answered slot-free
+        let done = drain(&mut e, &mut q, 3);
+        let by_id = |id: u64| done.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(by_id(0).tokens, crate::coordinator::serve::generate(&m, &[1, 2, 3], 8));
+        assert_eq!(by_id(1).tokens, crate::coordinator::serve::generate(&m, &[1, 2, 3], 2));
+        assert_eq!(by_id(1).tokens.len(), 2, "per-request budget must cap generation");
+        assert!(by_id(2).tokens.is_empty());
+        assert_eq!(by_id(2).status, ResponseStatus::Complete);
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.joins, 2, "a zero-budget request must not take a slot");
+    }
+
+    #[test]
+    fn short_budget_requests_reserve_fewer_pages() {
+        // The PR-4 follow-up this enables: at page_size 16 over a 64-token
+        // capacity, a default-budget joiner (len 40, gen 16 → worst case 55
+        // positions) reserves 4 pages. A 5-page arena then has one page of
+        // headroom — enough for a short-budget request (len 3, gen 2 →
+        // worst case 4 positions → 1 page) to run CONCURRENTLY, where the
+        // same request under the server-wide default (worst case 18 → 2
+        // pages) would have to wait for the big one to retire.
+        let m = tiny();
+        assert_eq!(m.cfg.seq_len, 64, "sizing below assumes the tiny preset");
+        let cfg = EngineConfig {
+            slots: 2,
+            gen_tokens: 16,
+            page_size: 16,
+            kv_pages: 5,
+            ..Default::default()
+        };
+        let big: Vec<usize> = (0..40).map(|i| i % 16).collect();
+        let run = |budget: Option<usize>| {
+            let mut e = Engine::new(Arc::clone(&m), cfg);
+            let mut q = Batcher::default();
+            q.push(req(0, big.clone()));
+            let mut small = req(1, vec![1, 2, 3]);
+            small.gen_tokens = budget;
+            q.push(small);
+            let done = drain(&mut e, &mut q, 2);
+            let t = e.telemetry().lock().unwrap().clone();
+            (done, t)
+        };
+        let (done, t) = run(Some(2));
+        assert_eq!(done.iter().find(|f| f.id == 1).unwrap().tokens.len(), 2);
+        let peak = t.occupancy.iter().cloned().fold(0.0f64, f64::max);
+        assert_eq!(peak, 1.0, "short-budget request must fit alongside the big one: {t:?}");
+        assert_eq!(t.pages_in_use_now, 0, "pages leaked");
+        let (_, t_default) = run(None);
+        let peak_default = t_default.occupancy.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            peak_default <= 0.5,
+            "default-budget reservation must serialize the pair: {:?}",
+            t_default.occupancy
+        );
+    }
+
+    #[test]
+    fn decode_workspace_stops_allocating_across_steps() {
+        // The workspace-reuse contract at the engine level: once the
+        // per-step shapes have been seen, further steps take every buffer
+        // from the pool (ws_buffer_allocs goes flat).
+        let m = tiny();
+        let cfg = EngineConfig { slots: 2, gen_tokens: 24, ..Default::default() };
+        let mut e = Engine::new(m, cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2, 3]));
+        q.push(req(1, vec![4, 5, 6]));
+        for _ in 0..6 {
+            e.step(&mut q);
+        }
+        let warm = e.telemetry().lock().unwrap().ws_buffer_allocs;
+        assert!(warm > 0, "first steps must populate the workspace");
+        for _ in 0..10 {
+            e.step(&mut q);
+        }
+        let later = e.telemetry().lock().unwrap().ws_buffer_allocs;
+        assert_eq!(warm, later, "steady-state decode steps must not allocate");
     }
 
     #[test]

@@ -15,6 +15,31 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<usize>,
     pub enqueued: Instant,
+    /// Per-request generation budget; `None` ⇒ the server-wide
+    /// `gen_tokens` default. The engine consumes it in the retire check
+    /// and in the paged-arena reservation formula
+    /// `ceil(min(len + gen − 1, seq_len) / page_size)`, so a short-budget
+    /// request reserves fewer KV pages and admits alongside bigger ones.
+    pub gen_tokens: Option<usize>,
+}
+
+impl Request {
+    /// A request with the server-default generation budget, enqueued now.
+    pub fn new(id: u64, prompt: Vec<usize>) -> Request {
+        Request { id, prompt, enqueued: Instant::now(), gen_tokens: None }
+    }
+
+    /// Attach a per-request generation budget.
+    pub fn with_budget(mut self, gen_tokens: usize) -> Request {
+        self.gen_tokens = Some(gen_tokens);
+        self
+    }
+
+    /// The generation budget this request runs under, given the
+    /// server-wide default.
+    pub fn budget(&self, default_gen: usize) -> usize {
+        self.gen_tokens.unwrap_or(default_gen)
+    }
 }
 
 /// How a request left the engine.
@@ -147,8 +172,8 @@ impl Batcher {
     }
 }
 
-/// One in-flight sequence: its KV slot, prefill cursor, last logits, and
-/// generated tokens.
+/// One in-flight sequence: its KV slot, prefill cursor, last logits,
+/// generated tokens, and resolved generation budget.
 pub struct Sequence {
     pub id: u64,
     pub prompt: Vec<usize>,
@@ -159,12 +184,16 @@ pub struct Sequence {
     /// Logits from this sequence's latest decode step.
     pub logits: Vec<f32>,
     pub out: Vec<usize>,
+    /// Tokens to generate — the per-request budget, or the server default
+    /// resolved at admission (the engine's retire check reads this).
+    pub budget: usize,
     pub enqueued: Instant,
     pub first_token_at: Option<Instant>,
 }
 
 impl Sequence {
-    pub fn new(req: Request, slot: usize, vocab: usize) -> Sequence {
+    pub fn new(req: Request, slot: usize, vocab: usize, default_gen: usize) -> Sequence {
+        let budget = req.budget(default_gen);
         Sequence {
             id: req.id,
             prompt: req.prompt,
@@ -172,6 +201,7 @@ impl Sequence {
             next_prefill: 0,
             logits: vec![0.0; vocab],
             out: Vec::new(),
+            budget,
             enqueued: req.enqueued,
             first_token_at: None,
         }
@@ -188,7 +218,17 @@ mod tests {
     use super::*;
 
     fn req(id: u64, len: usize) -> Request {
-        Request { id, prompt: vec![1; len], enqueued: Instant::now() }
+        Request::new(id, vec![1; len])
+    }
+
+    #[test]
+    fn budget_resolves_against_default() {
+        let r = req(0, 2);
+        assert_eq!(r.budget(16), 16, "no per-request budget ⇒ server default");
+        let r = req(1, 2).with_budget(3);
+        assert_eq!(r.budget(16), 3);
+        let r = req(2, 2).with_budget(0);
+        assert_eq!(r.budget(16), 0, "explicit zero budget is honored");
     }
 
     #[test]

@@ -166,6 +166,9 @@ pub struct ServeStats {
     pub pages_in_use_at_drain: usize,
     /// Constant KV-arena footprint in bytes.
     pub kv_bytes: usize,
+    /// Fresh heap buffers the decode workspace ever allocated — flat once
+    /// decode reaches steady state (the xt/out-reuse regression check).
+    pub ws_buffer_allocs: usize,
 }
 
 impl ServeStats {
@@ -203,6 +206,7 @@ impl ServeStats {
             kv_pages: t.total_pages,
             pages_in_use_at_drain: t.pages_in_use_now,
             kv_bytes: t.kv_bytes,
+            ws_buffer_allocs: t.ws_buffer_allocs,
         }
     }
 
@@ -226,6 +230,7 @@ impl ServeStats {
             .set("kv_pages", json::num(self.kv_pages as f64))
             .set("pages_in_use_at_drain", json::num(self.pages_in_use_at_drain as f64))
             .set("kv_arena_bytes", json::num(self.kv_bytes as f64))
+            .set("ws_buffer_allocs", json::num(self.ws_buffer_allocs as f64))
             .set("latency_s", self.latency.to_json())
             .set("first_token_latency_s", self.first_token_latency.to_json())
             .set("decode_batch", self.batch_sizes.to_json())
@@ -499,8 +504,21 @@ impl Server {
     /// Submit a request; returns the response receiver (one terminal
     /// [`Response`]).
     pub fn submit(&self, id: u64, prompt: Vec<usize>) -> mpsc::Receiver<Response> {
+        self.submit_budgeted(id, prompt, None)
+    }
+
+    /// [`Server::submit`] with a per-request generation budget
+    /// (`None` ⇒ the server-wide `gen_tokens` default). Short budgets also
+    /// shrink the request's worst-case KV page reservation, so they admit
+    /// alongside bigger requests on a tight paged arena.
+    pub fn submit_budgeted(
+        &self,
+        id: u64,
+        prompt: Vec<usize>,
+        gen_tokens: Option<usize>,
+    ) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        self.send(id, prompt, ResponseSink::Unary(tx));
+        self.send(id, prompt, gen_tokens, ResponseSink::Unary(tx));
         rx
     }
 
@@ -509,15 +527,15 @@ impl Server {
     /// then [`StreamEvent::Done`] with the full response.
     pub fn submit_streaming(&self, id: u64, prompt: Vec<usize>) -> mpsc::Receiver<StreamEvent> {
         let (tx, rx) = mpsc::channel();
-        self.send(id, prompt, ResponseSink::Stream(tx));
+        self.send(id, prompt, None, ResponseSink::Stream(tx));
         rx
     }
 
-    fn send(&self, id: u64, prompt: Vec<usize>, sink: ResponseSink) {
+    fn send(&self, id: u64, prompt: Vec<usize>, gen_tokens: Option<usize>, sink: ResponseSink) {
         self.req_tx
             .as_ref()
             .expect("server stopped")
-            .send((Request { id, prompt, enqueued: Instant::now() }, sink))
+            .send((Request { id, prompt, enqueued: Instant::now(), gen_tokens }, sink))
             .expect("engine alive");
     }
 
@@ -552,6 +570,17 @@ pub fn run_load(
     cfg: ServeConfig,
     prompts: Vec<Vec<usize>>,
 ) -> ServeStats {
+    run_load_mixed(model, cfg, prompts.into_iter().map(|p| (p, None)).collect())
+}
+
+/// [`run_load`] with per-request generation budgets: each entry is
+/// `(prompt, gen_tokens)` where `None` takes the server-wide default —
+/// the `oats serve-load --gen-tokens-mix` driver.
+pub fn run_load_mixed(
+    model: Arc<TransformerLM>,
+    cfg: ServeConfig,
+    requests: Vec<(Vec<usize>, Option<usize>)>,
+) -> ServeStats {
     // Pack before starting the clock: packing is one-time startup cost and
     // must not bias the measured throughput of compressed models (the dense
     // baseline pays no equivalent cost).
@@ -562,10 +591,10 @@ pub fn run_load(
     };
     let t0 = Instant::now();
     let server = Server::start(model, cfg);
-    let rxs: Vec<mpsc::Receiver<Response>> = prompts
+    let rxs: Vec<mpsc::Receiver<Response>> = requests
         .into_iter()
         .enumerate()
-        .map(|(i, p)| server.submit(i as u64, p))
+        .map(|(i, (p, gen))| server.submit_budgeted(i as u64, p, gen))
         .collect();
     let mut latencies = Vec::new();
     let mut first_token_latencies = Vec::new();
@@ -604,7 +633,7 @@ mod tests {
         for i in 0..5u64 {
             let (rtx, _rrx) = mpsc::channel();
             tx.send((
-                Request { id: i, prompt: vec![1], enqueued: t0 },
+                Request { id: i, prompt: vec![1], enqueued: t0, gen_tokens: None },
                 ResponseSink::Unary(rtx),
             ))
             .unwrap();
@@ -716,6 +745,38 @@ mod tests {
         assert_eq!(t.pages_in_use_now, 0, "pages leaked after drain");
         assert!(t.pages_in_use.iter().all(|&p| p <= 18.0));
         drop(server);
+    }
+
+    #[test]
+    fn budgeted_submissions_cap_generation_per_request() {
+        let m = tiny();
+        let cfg = ServeConfig { slots: 4, gen_tokens: 8, ..Default::default() };
+        let server = Server::start(Arc::clone(&m), cfg);
+        let default_rx = server.submit(0, vec![1, 2, 3]);
+        let short_rx = server.submit_budgeted(1, vec![1, 2, 3], Some(2));
+        let zero_rx = server.submit_budgeted(2, vec![4, 5], Some(0));
+        let default = default_rx.recv().unwrap();
+        assert_eq!(default.tokens, generate(&m, &[1, 2, 3], 8));
+        let short = short_rx.recv().unwrap();
+        assert_eq!(short.tokens, generate(&m, &[1, 2, 3], 2));
+        assert_eq!(short.status, ResponseStatus::Complete);
+        let zero = zero_rx.recv().unwrap();
+        assert!(zero.tokens.is_empty(), "zero budget must complete empty");
+        assert_eq!(zero.status, ResponseStatus::Complete);
+        drop(server);
+    }
+
+    #[test]
+    fn run_load_mixed_applies_budgets() {
+        let m = tiny();
+        let cfg = ServeConfig { slots: 2, gen_tokens: 6, ..Default::default() };
+        let reqs =
+            vec![(vec![1usize, 2], None), (vec![3usize, 4], Some(3)), (vec![5usize], Some(1))];
+        let stats = run_load_mixed(m, cfg, reqs);
+        assert_eq!(stats.n_requests, 3);
+        assert_eq!(stats.tokens_generated, 6 + 3 + 1);
+        assert_eq!(stats.joins, 3);
+        assert_eq!(stats.leaves, 3);
     }
 
     #[test]
@@ -883,7 +944,7 @@ mod tests {
         let mut engine = Engine::new(m, cfg);
         let mut queue = Batcher::default();
         for i in 0..6u64 {
-            queue.push(Request { id: i, prompt: vec![1, 2], enqueued: Instant::now() });
+            queue.push(Request::new(i, vec![1, 2]));
         }
         let mut finished = 0;
         for _ in 0..100 {
@@ -919,6 +980,9 @@ mod tests {
         // Paged-arena telemetry rides along (the CI gates read these).
         assert_eq!(j.req_f64("capacity_stopped").unwrap(), 0.0);
         assert_eq!(j.req_f64("pages_in_use_at_drain").unwrap(), 0.0);
+        // Workspace telemetry: the decode loop allocated something during
+        // warmup, and far fewer buffers than decode calls (reuse works).
+        assert!(j.req_f64("ws_buffer_allocs").unwrap() > 0.0);
         assert!(j.req_f64("page_size").unwrap() > 0.0);
         assert!(j.req_f64("kv_pages").unwrap() > 0.0);
         let occ = j.get("page_occupancy").expect("page occupancy summary");

@@ -10,6 +10,8 @@
 //! oats serve-load   [--preset tiny] [--requests N] [--gen N] [--slots N]
 //!                   [--prefill-chunk N] [--admission fcfs|shortest]
 //!                   [--page-size N] [--kv-pages N]
+//!                   [--gen-tokens-mix N,N,...]  # per-request budgets,
+//!                                               # assigned round-robin
 //!                   [--compress] [--quantize] [--quick] [--tag NAME]
 //!                                                   # SERVE_<tag>.json
 //! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
@@ -187,9 +189,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// of weight *values*, so the model is randomly initialized (no training
 /// artifacts needed — this is what CI's serve-smoke job runs);
 /// `--compress` first runs a quick OATS pass so the packed sparse kernels
-/// carry the decode.
+/// carry the decode. `--gen-tokens-mix 4,8,16` assigns per-request
+/// generation budgets round-robin (shrinking short requests' KV page
+/// reservations); note a mix containing `0` turns the at-capacity probe
+/// prompt into a trivially-complete request, which the CI serve gate's
+/// `capacity_stopped ≥ 1` check would reject.
 fn cmd_serve_load(args: &Args) -> Result<()> {
-    use oats::coordinator::serve::{run_load, AdmissionPolicy, ServeConfig};
+    use oats::coordinator::serve::{run_load_mixed, AdmissionPolicy, ServeConfig};
     let preset = args.flag_or("preset", "tiny");
     let quick = args.bool_flag("quick");
     let n_req = args.usize_flag("requests", if quick { 24 } else { 96 });
@@ -233,15 +239,42 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
     if n_req >= 2 {
         prompts[n_req - 2] = (0..mcfg.seq_len).map(|j| (j * 3) % mcfg.vocab).collect();
     }
+    // Per-request budgets, assigned round-robin from `--gen-tokens-mix`
+    // (None ⇒ the server-wide `--gen` default for every request). Parsed
+    // strictly: a malformed entry aborts instead of silently changing the
+    // requested mix.
+    let mix: Option<Vec<usize>> = match args.flag("gen-tokens-mix") {
+        Some(s) => {
+            let parsed: Result<Vec<usize>, _> =
+                s.split(',').map(|t| t.trim().parse::<usize>()).collect();
+            let v = parsed.map_err(|_| {
+                anyhow::anyhow!("--gen-tokens-mix expects comma-separated integers, got '{s}'")
+            })?;
+            if v.is_empty() {
+                anyhow::bail!("--gen-tokens-mix needs at least one budget");
+            }
+            Some(v)
+        }
+        None => None,
+    };
+    let requests: Vec<(Vec<usize>, Option<usize>)> = prompts
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let budget = mix.as_ref().map(|m| m[i % m.len()]);
+            (p, budget)
+        })
+        .collect();
     println!(
-        "serve-load: {} requests (gen {}), {} slots, chunk {}, admission {}…",
-        prompts.len(),
+        "serve-load: {} requests (gen {}, mix {:?}), {} slots, chunk {}, admission {}…",
+        requests.len(),
         cfg.gen_tokens,
+        mix,
         cfg.slots,
         cfg.prefill_chunk,
         cfg.admission.name()
     );
-    let stats = run_load(std::sync::Arc::new(model), cfg, prompts);
+    let stats = run_load_mixed(std::sync::Arc::new(model), cfg, requests);
     println!(
         "served {} requests | {} tokens | {:.1} tok/s | p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
         stats.n_requests,

@@ -5,7 +5,7 @@
 
 use crate::compress::CompressedLayer;
 use crate::config::ModelConfig;
-use crate::sparse::{KernelPlan, PackOptions, PackedLinear};
+use crate::sparse::{KernelPlan, PackOptions, PackedLinear, Workspace};
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
 use std::collections::HashMap;
@@ -63,6 +63,26 @@ impl LinearOp {
             LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matmul_xt(x),
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply_batch(x),
             LinearOp::Packed(p) => p.forward(x),
+        }
+    }
+
+    /// [`LinearOp::forward`] against a caller-owned [`Workspace`]: packed
+    /// and dense layers take their scratch (Xᵀ panel, rank projection) and
+    /// output from the pool — arithmetic is identical to [`forward`]
+    /// (same kernels, same operation order), only the storage is recycled.
+    /// Unpacked compressed layers keep their reference kernels.
+    ///
+    /// [`forward`]: LinearOp::forward
+    pub fn forward_ws(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        match self {
+            LinearOp::Packed(p) => p.forward_ws(x, ws),
+            LinearOp::Dense(w) | LinearOp::Compressed(CompressedLayer::Dense(w)) => {
+                // Uninit is safe: matmul_bt_into overwrites every element.
+                let mut out = ws.matrix_uninit(x.rows, w.rows);
+                tensor::matmul_bt_into(x, w, &mut out);
+                out
+            }
+            other => other.forward(x),
         }
     }
 
@@ -617,8 +637,30 @@ impl TransformerLM {
     /// ragged). Mirrors [`TransformerLM::decode_step`] exactly — for dense
     /// layers the arithmetic is identical operation-for-operation.
     ///
+    /// This convenience spins up a throwaway [`Workspace`] per call; the
+    /// serve engine keeps one alive across steps via
+    /// [`TransformerLM::decode_step_batch_ws`] so decode stops allocating.
+    ///
     /// Returns the logits [b × vocab] for each sequence's new position.
     pub fn decode_step_batch(&self, tokens: &[usize], caches: &mut [&mut KvCache]) -> Matrix {
+        self.decode_step_batch_ws(tokens, caches, &mut Workspace::new())
+    }
+
+    /// [`TransformerLM::decode_step_batch`] against a caller-owned
+    /// [`Workspace`]: every per-step temporary — the hidden state, the
+    /// layernormed inputs, the six linear outputs, the attention context,
+    /// and the returned logits — is backed by pooled storage, and the
+    /// batched kernels' Xᵀ panels and outputs come from the same pool, so
+    /// a caller that keeps `ws` across steps allocates nothing once shapes
+    /// have been seen. The returned logits matrix is pool-backed too:
+    /// recycle it via [`Workspace::recycle`] after reading. Arithmetic is
+    /// identical to the per-call-workspace path (it is the same code).
+    pub fn decode_step_batch_ws(
+        &self,
+        tokens: &[usize],
+        caches: &mut [&mut KvCache],
+        ws: &mut Workspace,
+    ) -> Matrix {
         let b = tokens.len();
         assert_eq!(b, caches.len(), "one cache per sequence");
         let d = self.cfg.d_model;
@@ -626,7 +668,11 @@ impl TransformerLM {
         let hd = d / nh;
         let scale = 1.0 / (hd as f32).sqrt();
 
-        let mut h = Matrix::zeros(b, d);
+        // Uninit checkouts are safe throughout: `h`, `x`, `x2` are fully
+        // written (embed fill / copy_from_slice) and `logits` is fully
+        // written by matmul_bt_into; only `ctx` accumulates and stays on
+        // the zeroed variant.
+        let mut h = ws.matrix_uninit(b, d);
         for (i, &tok) in tokens.iter().enumerate() {
             let t = caches[i].len;
             assert!(t < self.cfg.seq_len, "cache full (seq {i})");
@@ -639,12 +685,14 @@ impl TransformerLM {
         }
 
         for (bi, blk) in self.blocks.iter().enumerate() {
-            let mut x = h.clone();
+            let mut x = ws.matrix_uninit(b, d);
+            x.data.copy_from_slice(&h.data);
             tensor::layernorm_rows(&mut x, &blk.ln1_g, &blk.ln1_b, LN_EPS);
-            let q = blk.q.forward(&x);
-            let k = blk.k.forward(&x);
-            let v = blk.v.forward(&x);
-            let mut ctx = Matrix::zeros(b, d);
+            let q = blk.q.forward_ws(&x, ws);
+            let k = blk.k.forward_ws(&x, ws);
+            let v = blk.v.forward_ws(&x, ws);
+            ws.recycle(x);
+            let mut ctx = ws.matrix(b, d);
             for i in 0..b {
                 let t = caches[i].len;
                 caches[i].k_row_mut(bi, t).copy_from_slice(k.row(i));
@@ -667,20 +715,32 @@ impl TransformerLM {
                     }
                 }
             }
-            let attn = blk.o.forward(&ctx);
+            ws.recycle(q);
+            ws.recycle(k);
+            ws.recycle(v);
+            let attn = blk.o.forward_ws(&ctx, ws);
+            ws.recycle(ctx);
             h.axpy(1.0, &attn);
-            let mut x2 = h.clone();
+            ws.recycle(attn);
+            let mut x2 = ws.matrix_uninit(b, d);
+            x2.data.copy_from_slice(&h.data);
             tensor::layernorm_rows(&mut x2, &blk.ln2_g, &blk.ln2_b, LN_EPS);
-            let mut u = blk.up.forward(&x2);
+            let mut u = blk.up.forward_ws(&x2, ws);
+            ws.recycle(x2);
             tensor::gelu_inplace(&mut u.data);
-            let mlp = blk.down.forward(&u);
+            let mlp = blk.down.forward_ws(&u, ws);
+            ws.recycle(u);
             h.axpy(1.0, &mlp);
+            ws.recycle(mlp);
         }
         for c in caches.iter_mut() {
             c.len += 1;
         }
         tensor::layernorm_rows(&mut h, &self.lnf_g, &self.lnf_b, LN_EPS);
-        tensor::matmul_bt(&h, &self.head)
+        let mut logits = ws.matrix_uninit(b, self.cfg.vocab);
+        tensor::matmul_bt_into(&h, &self.head, &mut logits);
+        ws.recycle(h);
+        logits
     }
 
     /// All prunable linear ids in pipeline order.
@@ -1066,6 +1126,41 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "seq {i}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn decode_step_batch_ws_is_bit_identical_and_stops_allocating() {
+        // The serve engine's persistent-workspace path must be the same
+        // arithmetic as the throwaway-workspace convenience, and must stop
+        // taking fresh heap buffers once the per-step shapes have been
+        // seen (the decode loop's xt/out reuse contract).
+        let m = tiny();
+        let seqs = [vec![7usize, 3, 11, 2, 8, 1], vec![5usize, 1, 9, 14, 2, 6]];
+        let mut ws = Workspace::new();
+        let mut c0 = KvCache::new(&m.cfg);
+        let mut c1 = KvCache::new(&m.cfg);
+        let mut r0 = KvCache::new(&m.cfg);
+        let mut r1 = KvCache::new(&m.cfg);
+        let mut warm = 0usize;
+        for step in 0..seqs[0].len() {
+            let tokens = [seqs[0][step], seqs[1][step]];
+            let got = {
+                let mut caches = [&mut c0, &mut c1];
+                m.decode_step_batch_ws(&tokens, &mut caches, &mut ws)
+            };
+            let want = {
+                let mut caches = [&mut r0, &mut r1];
+                m.decode_step_batch(&tokens, &mut caches)
+            };
+            assert_eq!(got, want, "step {step}: workspace path diverged");
+            ws.recycle(got);
+            if step == 0 {
+                warm = ws.alloc_count();
+                assert!(warm > 0, "first step must populate the pool");
+            }
+        }
+        assert_eq!(ws.alloc_count(), warm, "steady-state steps must not allocate");
+        assert!(ws.reuse_count() > 0);
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //!
 //! * the activation block is transposed once to Xᵀ [in × b], so for every
 //!   nonzero `a[r,c]` the b-wide row `Xᵀ[c, ·]` is contiguous — the inner
-//!   loop is a b-wide SIMD-friendly axpy instead of the scalar
-//!   gather-multiply of `Csr::matmul_xt`;
+//!   loop is the register-blocked SIMD lane fold of
+//!   [`super::microkernel`] instead of a scalar gather-multiply;
 //! * weight values/indices stream through cache **once per batch**, not once
 //!   per activation row (the scalar kernel re-reads all of A for every row
 //!   of X — at 2048² / 50% that is b× more memory traffic);
@@ -20,8 +20,8 @@
 //! Row tiles are independent, so the kernel parallelizes over them.
 
 use super::csr::Csr;
+use super::microkernel::{self, F32TileRun, Isa, TileWalk};
 use crate::tensor::Matrix;
-use crate::util::threadpool::{parallel_for, SendPtr};
 
 /// Default row-tile height: 64 output rows × batch 8 × 4 B = 2 KiB of
 /// accumulator per tile.
@@ -238,6 +238,9 @@ impl Bcsr {
             for ct in 0..n_ct {
                 let c0 = ct * self.col_tile;
                 let tile = &self.tiles[rt * n_ct + ct];
+                if tile.cols.is_empty() {
+                    continue;
+                }
                 let xs = &x[c0..];
                 for (lr, yv) in y[r0..r1].iter_mut().enumerate() {
                     let lo = tile.indptr[lr] as usize;
@@ -252,95 +255,57 @@ impl Bcsr {
         }
     }
 
-    /// C = X · Aᵀ for activations X [b × cols] — the tiled batched kernel.
+    /// C = X · Aᵀ for activations X [b × cols] — the tiled batched kernel,
+    /// routed through the shared [`microkernel`] tile-walk engine.
     pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols, "bcsr matmul_xt dim mismatch");
-        let xt = x.transpose();
-        let mut out = Matrix::zeros(x.rows, self.rows);
-        self.fused_xt(&xt, None, &mut out);
-        out
+        microkernel::fused_forward(self, None, x)
+    }
+}
+
+/// The BCSR side of the shared tile-walk engine: per row tile, walk the
+/// stripe's column tiles and fold each local-CSR row through the f32 lane
+/// kernels (scale 1.0 — the identity fold). Parallelism, the fused
+/// low-rank pass, and the output scatter live in
+/// [`microkernel::fused_tile_walk`].
+impl TileWalk for Bcsr {
+    fn out_rows(&self) -> usize {
+        self.rows
     }
 
-    /// Core fused kernel: writes `out[b × rows] = X·Aᵀ (+ (X·Vtᵀ)·Uᵀ)`.
-    ///
-    /// `xt` is the pre-transposed activation block [cols × b]. When
-    /// `low_rank = Some((u, t))`, `u` is the out×r factor and `t = Vt·Xᵀ`
-    /// [r × b]; its contribution is added inside the same row-tile pass, so
-    /// every output element is produced — sparse term plus low-rank term —
-    /// in one write (the "fused sparse-plus-low-rank" path).
-    pub(crate) fn fused_xt(
-        &self,
-        xt: &Matrix,
-        low_rank: Option<(&Matrix, &Matrix)>,
-        out: &mut Matrix,
-    ) {
+    fn in_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn walk_row_tile(&self) -> usize {
+        self.row_tile
+    }
+
+    fn nnz_count(&self) -> usize {
+        self.nnz
+    }
+
+    fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa) {
         let b = xt.cols;
-        assert_eq!(xt.rows, self.cols, "fused_xt: xt must be [cols × b]");
-        assert_eq!((out.rows, out.cols), (b, self.rows), "fused_xt: out must be [b × rows]");
-        if let Some((u, t)) = low_rank {
-            assert_eq!((u.rows, u.cols), (self.rows, t.rows), "fused_xt: U shape");
-            assert_eq!(t.cols, b, "fused_xt: T shape");
-        }
         let n_ct = self.n_col_tiles();
-        let n_rt = self.n_row_tiles();
-        let threads = if b * self.nnz >= (1 << 20) {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            1
-        };
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        let n_out = self.rows;
-        parallel_for(threads, n_rt, |rt| {
-            let r0 = rt * self.row_tile;
-            let r1 = (r0 + self.row_tile).min(self.rows);
-            let tr = r1 - r0;
-            // Local accumulator [tr × b]: stays cache-resident across column
-            // tiles and the low-rank pass.
-            let mut acc = vec![0.0f32; tr * b];
-            for ct in 0..n_ct {
-                let c0 = ct * self.col_tile;
-                let tile = &self.tiles[rt * n_ct + ct];
-                for lr in 0..tr {
-                    let lo = tile.indptr[lr] as usize;
-                    let hi = tile.indptr[lr + 1] as usize;
-                    if lo == hi {
-                        continue;
-                    }
-                    let arow = &mut acc[lr * b..(lr + 1) * b];
-                    for i in lo..hi {
-                        let v = tile.values[i];
-                        let xrow = xt.row(c0 + tile.cols[i] as usize);
-                        // b-wide contiguous axpy — the vectorizable inner loop.
-                        for (a, &xv) in arow.iter_mut().zip(xrow) {
-                            *a += v * xv;
-                        }
-                    }
-                }
+        let rt = r0 / self.row_tile;
+        for ct in 0..n_ct {
+            let tile = &self.tiles[rt * n_ct + ct];
+            if tile.cols.is_empty() {
+                continue;
             }
-            if let Some((u, t)) = low_rank {
-                // acc[lr, ·] += Σ_j U[r0+lr, j] · T[j, ·]
-                for lr in 0..tr {
-                    let urow = u.row(r0 + lr);
-                    let arow = &mut acc[lr * b..(lr + 1) * b];
-                    for (j, &uv) in urow.iter().enumerate() {
-                        let trow = t.row(j);
-                        for (a, &tv) in arow.iter_mut().zip(trow) {
-                            *a += uv * tv;
-                        }
-                    }
+            let c0 = ct * self.col_tile;
+            for lr in 0..(r1 - r0) {
+                let lo = tile.indptr[lr] as usize;
+                let hi = tile.indptr[lr + 1] as usize;
+                if lo == hi {
+                    continue;
                 }
+                let values = &tile.values[lo..hi];
+                let cols = &tile.cols[lo..hi];
+                let run = F32TileRun { values, cols, base: c0 };
+                microkernel::fold_f32_tile(isa, run, xt, &mut acc[lr * b..(lr + 1) * b], 1.0);
             }
-            // Scatter the tile back to the [b × rows] output layout.
-            let op = out_ptr;
-            for lr in 0..tr {
-                for (bi, &av) in acc[lr * b..(lr + 1) * b].iter().enumerate() {
-                    // SAFETY: row tiles own disjoint column ranges of `out`,
-                    // so every (bi, r0+lr) address is written by exactly one
-                    // worker.
-                    unsafe { *op.0.add(bi * n_out + r0 + lr) = av };
-                }
-            }
-        });
+        }
     }
 }
 

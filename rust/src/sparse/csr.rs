@@ -3,8 +3,11 @@
 //! batched hot path; CSR remains the portable on-disk format
 //! (`model/compressed_io.rs`) and the dispatch choice for small layers.
 
+use super::microkernel::{self, GlobalCsrRun, Isa, TileWalk};
 use crate::tensor::Matrix;
-use crate::util::threadpool::{parallel_for, SendPtr};
+
+/// Output rows per parallel stripe of the batched CSR kernel.
+const CSR_ROW_TILE: usize = 64;
 
 /// Compressed sparse row matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -69,38 +72,47 @@ impl Csr {
         }
     }
 
-    /// C = X · Aᵀ for activations X [b × cols]: each output row c_i gets the
-    /// sparse dot of A's rows against x_i. This is the layout linear layers
-    /// use (W stored out×in, activations row-major), so A-row values stream
-    /// sequentially while X rows stay cache-resident.
+    /// C = X · Aᵀ for activations X [b × cols], routed through the shared
+    /// [`microkernel`] tile-walk engine: the activation block is transposed
+    /// once and each A row's nonzeros fold through the register-blocked
+    /// lane kernels — the same Xᵀ-panel layout as the tiled formats, with
+    /// global u32 column indices instead of tile-local u16 offsets.
     pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols, "csr matmul_xt dim mismatch");
-        let mut out = Matrix::zeros(x.rows, self.rows);
-        let threads = if x.rows * self.nnz() >= (1 << 20) {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            1
-        };
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        let n_out = self.rows;
-        parallel_for(threads, x.rows, |b| {
-            let xrow = x.row(b);
-            let op = out_ptr;
-            // SAFETY: each b writes a disjoint output row.
-            let orow = unsafe { std::slice::from_raw_parts_mut(op.0.add(b * n_out), n_out) };
-            for r in 0..n_out {
-                let lo = self.indptr[r] as usize;
-                let hi = self.indptr[r + 1] as usize;
-                let mut acc = 0.0f32;
-                let idx = &self.indices[lo..hi];
-                let val = &self.values[lo..hi];
-                for (&c, &v) in idx.iter().zip(val) {
-                    acc += v * xrow[c as usize];
-                }
-                orow[r] = acc;
+        microkernel::fused_forward(self, None, x)
+    }
+}
+
+/// The CSR side of the shared tile-walk engine: one global-index run per
+/// output row. Parallelism, the fused low-rank pass, and the output
+/// scatter live in [`microkernel::fused_tile_walk`].
+impl TileWalk for Csr {
+    fn out_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn in_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn walk_row_tile(&self) -> usize {
+        CSR_ROW_TILE
+    }
+
+    fn nnz_count(&self) -> usize {
+        self.values.len()
+    }
+
+    fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa) {
+        let b = xt.cols;
+        for (lr, r) in (r0..r1).enumerate() {
+            let lo = self.indptr[r] as usize;
+            let hi = self.indptr[r + 1] as usize;
+            if lo == hi {
+                continue;
             }
-        });
-        out
+            let run = GlobalCsrRun { values: &self.values[lo..hi], cols: &self.indices[lo..hi] };
+            microkernel::fold_global_csr(isa, run, xt, &mut acc[lr * b..(lr + 1) * b], 1.0);
+        }
     }
 }
 

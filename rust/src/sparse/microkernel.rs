@@ -1,0 +1,679 @@
+//! The shared tile-walk engine and the register-blocked SIMD microkernels
+//! behind every batched sparse format.
+//!
+//! Before this module, csr/bcsr/nm/quant each carried their own copy of the
+//! same SAFETY-critical scaffolding: a row-tile parallel loop, a local
+//! accumulator, an optional fused low-rank pass, a raw-pointer scatter into
+//! the `[b × rows]` output, and the `b·nnz ≥ 2²⁰` thread gate. All four now
+//! route through [`fused_tile_walk`], parameterized over a value accessor
+//! ([`TileWalk::fold_tile`] + the [`NnzRun`] family: f32 values for `Bcsr`,
+//! i8 × per-tile-scale for `QBcsr`, packed groups for `NmPacked`, global
+//! u32 columns for `Csr`), so the **one** `unsafe` scatter in the sparse
+//! kernels lives here and is audited once.
+//!
+//! ## Register-blocked lane kernels
+//!
+//! The hot inner loop — the b-wide axpy over a row's nonzeros — runs as
+//! monomorphized `[f32; L]` accumulator kernels for L ∈ {16, 8, 4} with a
+//! scalar (L = 1) tail: a lane of L batch columns is held in registers
+//! while the row's nonzeros stream past once, then folded into the row
+//! accumulator with one (optionally scaled) store per element. On x86_64
+//! the whole fold is cloned behind `#[target_feature(enable = "avx2,fma")]`
+//! and selected at runtime via `is_x86_feature_detected!` ([`Isa`]); other
+//! architectures keep the autovectorized generic build. No `std::arch`
+//! intrinsics and no new dependencies — the clones only let LLVM pick
+//! 256-bit vectors for the fixed-size lane arrays.
+//!
+//! ## Numerics contract
+//!
+//! Laning is across **batch columns**; each output element still folds its
+//! nonzeros in index order, with one rounding per multiply-add and one
+//! per scale fold, exactly like the scalar tail. Consequently results are
+//! bit-identical across batch widths and lane/tail splits for a fixed
+//! input column, and bit-identical between the SIMD and generic builds
+//! (the `target_feature` clones change vector width, never the operation
+//! sequence — Rust performs no implicit FMA contraction, and the kernels
+//! use none explicitly, uniformly across lanes and tail). The serve
+//! engine's `engine == generate_lockstep` bit-identity properties rest on
+//! this invariance.
+//!
+//! ## Workspace
+//!
+//! [`Workspace`] is a recycled-buffer pool threaded through
+//! [`PackedLinear::forward_ws`] and `TransformerLM::decode_step_batch_ws`
+//! so the serve decode loop stops paying a fresh `x.transpose()` +
+//! `Matrix::zeros` heap allocation on every step: buffers cycle through
+//! the pool and the per-step allocation count drops to zero once shapes
+//! have been seen (tracked by [`Workspace::alloc_count`], exported in the
+//! serve telemetry as `ws_buffer_allocs`).
+//!
+//! [`PackedLinear::forward_ws`]: super::plan::PackedLinear::forward_ws
+
+use super::lowrank::LowRank;
+use crate::tensor::Matrix;
+use crate::util::threadpool::{available_threads, parallel_for, SendPtr};
+use std::cell::Cell;
+
+/// Lane widths the dispatcher tries, widest first; columns past the last
+/// full lane fold through the scalar (L = 1) tail.
+pub const LANE_WIDTHS: [usize; 3] = [16, 8, 4];
+
+/// `b·nnz` at which the row-tile loop fans out across threads.
+const PARALLEL_MIN_WORK: usize = 1 << 20;
+
+/// Which instruction-set build the lane kernels run through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// The portable build (autovectorized at the crate's base target).
+    Generic,
+    /// x86_64 clones compiled with `avx2,fma` enabled (runtime-detected).
+    Avx2Fma,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Generic => "generic",
+            Isa::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+/// Runtime ISA detection, decided once per process.
+pub fn detected_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static DETECTED: OnceLock<Isa> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                Isa::Avx2Fma
+            } else {
+                Isa::Generic
+            }
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Isa::Generic
+    }
+}
+
+thread_local! {
+    /// Test/bench override consulted by [`active_isa`]. Never upgrades past
+    /// what detection found (forcing AVX2 on a non-AVX2 host would be UB).
+    static ISA_OVERRIDE: Cell<Option<Isa>> = const { Cell::new(None) };
+}
+
+/// The ISA the next kernel call on this thread will dispatch to. The
+/// engine reads it once per kernel call, on the caller's thread, before
+/// fanning out — so [`with_isa`] works even though the row tiles run on
+/// scoped worker threads.
+pub fn active_isa() -> Isa {
+    let detected = detected_isa();
+    match ISA_OVERRIDE.with(Cell::get) {
+        Some(Isa::Generic) => Isa::Generic,
+        _ => detected,
+    }
+}
+
+/// Run `f` with the lane kernels pinned to `isa` (downgrade only) on this
+/// thread — the bench/test hook for SIMD-vs-generic comparisons.
+pub fn with_isa<T>(isa: Isa, f: impl FnOnce() -> T) -> T {
+    ISA_OVERRIDE.with(|o| {
+        let prev = o.replace(Some(isa));
+        let out = f();
+        o.set(prev);
+        out
+    })
+}
+
+/// One row's nonzeros in fold order, abstracted over the storage format.
+/// `for_each` is monomorphized + inlined into the lane kernels, so each
+/// format pays only its own decode cost (u16+base, i8 widen, packed-group,
+/// u32) in the inner loop.
+pub(crate) trait NnzRun: Copy {
+    /// Visit `(value, xt_row_index)` for every nonzero, in index order.
+    fn for_each(self, f: impl FnMut(f32, usize));
+}
+
+/// f32 values with tile-local u16 column offsets (`Bcsr` tiles).
+#[derive(Clone, Copy)]
+pub(crate) struct F32TileRun<'a> {
+    pub values: &'a [f32],
+    pub cols: &'a [u16],
+    pub base: usize,
+}
+
+impl NnzRun for F32TileRun<'_> {
+    #[inline(always)]
+    fn for_each(self, mut f: impl FnMut(f32, usize)) {
+        for (&v, &c) in self.values.iter().zip(self.cols) {
+            f(v, self.base + c as usize);
+        }
+    }
+}
+
+/// i8 values with tile-local u16 column offsets (`QBcsr` tiles); the
+/// per-tile scale is applied by the fold's `scale` argument, not here, so
+/// the raw `Σ q·x` partial accumulates unscaled exactly as before.
+#[derive(Clone, Copy)]
+pub(crate) struct I8TileRun<'a> {
+    pub values: &'a [i8],
+    pub cols: &'a [u16],
+    pub base: usize,
+}
+
+impl NnzRun for I8TileRun<'_> {
+    #[inline(always)]
+    fn for_each(self, mut f: impl FnMut(f32, usize)) {
+        for (&v, &c) in self.values.iter().zip(self.cols) {
+            f(v as f32, self.base + c as usize);
+        }
+    }
+}
+
+/// f32 values with global u32 column indices (`Csr` rows).
+#[derive(Clone, Copy)]
+pub(crate) struct GlobalCsrRun<'a> {
+    pub values: &'a [f32],
+    pub cols: &'a [u32],
+}
+
+impl NnzRun for GlobalCsrRun<'_> {
+    #[inline(always)]
+    fn for_each(self, mut f: impl FnMut(f32, usize)) {
+        for (&v, &c) in self.values.iter().zip(self.cols) {
+            f(v, c as usize);
+        }
+    }
+}
+
+/// One `NmPacked` row: `n` value slots per group of `m` columns, padding
+/// slots skipped (their stored value is exactly 0.0).
+#[derive(Clone, Copy)]
+pub(crate) struct NmRowRun<'a> {
+    pub values: &'a [f32],
+    pub offsets: &'a [u8],
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NnzRun for NmRowRun<'_> {
+    #[inline(always)]
+    fn for_each(self, mut f: impl FnMut(f32, usize)) {
+        let groups = self.values.len() / self.n;
+        for g in 0..groups {
+            let base = g * self.m;
+            let slot0 = g * self.n;
+            for k in 0..self.n {
+                let v = self.values[slot0 + k];
+                if v == 0.0 {
+                    continue;
+                }
+                f(v, base + self.offsets[slot0 + k] as usize);
+            }
+        }
+    }
+}
+
+/// A dense coefficient row against consecutive xt rows — the fused
+/// low-rank pass (`values = U[r, ·]`, xt = `T = Vt·Xᵀ`).
+#[derive(Clone, Copy)]
+pub(crate) struct DenseRun<'a> {
+    pub values: &'a [f32],
+}
+
+impl NnzRun for DenseRun<'_> {
+    #[inline(always)]
+    fn for_each(self, mut f: impl FnMut(f32, usize)) {
+        for (j, &v) in self.values.iter().enumerate() {
+            f(v, j);
+        }
+    }
+}
+
+/// One lane of `L` batch columns starting at `col`: the `[f32; L]`
+/// register accumulator streams the run once (`reg[l] += v · x[l]`, one
+/// rounding per multiply-add, nonzeros in index order), then folds into
+/// the row accumulator with one scaled store per element. `scale = 1.0`
+/// is the f32 formats' identity fold; QBcsr passes its per-tile scale so
+/// the raw i8 partial is scaled once per (row, tile), never in the loop.
+#[inline(always)]
+fn fold_lane<R: NnzRun, const L: usize>(
+    run: R,
+    xt: &Matrix,
+    acc: &mut [f32],
+    scale: f32,
+    col: usize,
+) {
+    let mut reg = [0.0f32; L];
+    run.for_each(|v, c| {
+        let x = &xt.row(c)[col..col + L];
+        for (r, &xv) in reg.iter_mut().zip(x) {
+            *r += v * xv;
+        }
+    });
+    for (a, &r) in acc[col..col + L].iter_mut().zip(reg.iter()) {
+        *a += scale * r;
+    }
+}
+
+/// Fold one row's nonzeros into its b-wide accumulator, lane-blocked:
+/// widest lanes first, scalar (L = 1) tail. Every batch column sees the
+/// identical operation sequence regardless of which lane covers it, so
+/// the lane/tail split never changes results.
+#[inline(always)]
+fn fold_row_lanes<R: NnzRun>(run: R, xt: &Matrix, acc: &mut [f32], scale: f32) {
+    let b = acc.len();
+    let mut col = 0usize;
+    while col + 16 <= b {
+        fold_lane::<R, 16>(run, xt, acc, scale, col);
+        col += 16;
+    }
+    while col + 8 <= b {
+        fold_lane::<R, 8>(run, xt, acc, scale, col);
+        col += 8;
+    }
+    while col + 4 <= b {
+        fold_lane::<R, 4>(run, xt, acc, scale, col);
+        col += 4;
+    }
+    while col < b {
+        fold_lane::<R, 1>(run, xt, acc, scale, col);
+        col += 1;
+    }
+}
+
+/// Generates the per-format ISA dispatch: a portable entry plus (on
+/// x86_64) a monomorphic `#[target_feature(enable = "avx2,fma")]` clone of
+/// the same `#[inline(always)]` fold body. The clone's arithmetic is
+/// operation-for-operation the generic path's — only the vectors widen.
+macro_rules! isa_dispatch {
+    ($(#[$doc:meta])* $name:ident, $avx2:ident, $run:ty) => {
+        #[cfg(target_arch = "x86_64")]
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $avx2(run: $run, xt: &Matrix, acc: &mut [f32], scale: f32) {
+            fold_row_lanes(run, xt, acc, scale);
+        }
+
+        $(#[$doc])*
+        #[cfg(target_arch = "x86_64")]
+        #[inline]
+        pub(crate) fn $name(isa: Isa, run: $run, xt: &Matrix, acc: &mut [f32], scale: f32) {
+            match isa {
+                // SAFETY: `Isa::Avx2Fma` is only ever produced by
+                // `detected_isa` after `is_x86_feature_detected!` confirmed
+                // both features on this CPU (`active_isa` never upgrades an
+                // override past detection).
+                Isa::Avx2Fma => unsafe { $avx2(run, xt, acc, scale) },
+                Isa::Generic => fold_row_lanes(run, xt, acc, scale),
+            }
+        }
+
+        $(#[$doc])*
+        #[cfg(not(target_arch = "x86_64"))]
+        #[inline]
+        pub(crate) fn $name(_isa: Isa, run: $run, xt: &Matrix, acc: &mut [f32], scale: f32) {
+            fold_row_lanes(run, xt, acc, scale);
+        }
+    };
+}
+
+isa_dispatch!(
+    /// Lane-blocked fold of an f32 tile-local run (`Bcsr`).
+    fold_f32_tile, fold_f32_tile_avx2, F32TileRun<'_>
+);
+isa_dispatch!(
+    /// Lane-blocked fold of an i8 tile-local run (`QBcsr`; pass the tile scale).
+    fold_i8_tile, fold_i8_tile_avx2, I8TileRun<'_>
+);
+isa_dispatch!(
+    /// Lane-blocked fold of a global-index CSR row.
+    fold_global_csr, fold_global_csr_avx2, GlobalCsrRun<'_>
+);
+isa_dispatch!(
+    /// Lane-blocked fold of a packed N:M row (padding slots skipped).
+    fold_nm_row, fold_nm_row_avx2, NmRowRun<'_>
+);
+isa_dispatch!(
+    /// Lane-blocked fold of a dense coefficient row (the low-rank pass).
+    fold_dense, fold_dense_avx2, DenseRun<'_>
+);
+
+/// A batched sparse format the tile-walk engine can drive. Implementors
+/// only describe their geometry and how to fold one row tile's sparse term
+/// into a local accumulator; the engine owns parallelism, the fused
+/// low-rank pass, and the output scatter.
+pub(crate) trait TileWalk: Sync {
+    /// Output rows of the operator (`A` is out × in).
+    fn out_rows(&self) -> usize;
+    /// Input columns (`xt` must be `[in_cols × b]`).
+    fn in_cols(&self) -> usize;
+    /// Rows per tile of the parallel row-tile loop.
+    fn walk_row_tile(&self) -> usize;
+    /// Stored nonzeros — the thread gate's work estimate.
+    fn nnz_count(&self) -> usize;
+    /// Fold the sparse term for output rows `r0..r1` into `acc`
+    /// `[(r1-r0) × b]` (zero-initialized), dispatching the b-wide axpys
+    /// through the `isa` lane kernels. `r0` is always a multiple of
+    /// [`TileWalk::walk_row_tile`].
+    fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa);
+}
+
+/// The one tile-walk engine: writes `out[b × rows] = X·Aᵀ (+ (X·Vtᵀ)·Uᵀ)`
+/// for any [`TileWalk`] source.
+///
+/// `xt` is the pre-transposed activation block `[cols × b]`; when
+/// `low_rank = Some((u, t))`, `u` is the out×r factor and `t = Vt·Xᵀ`
+/// `[r × b]` — its contribution is added inside the same row-tile pass, so
+/// every output element is produced (sparse plus low-rank) in one write.
+/// Row tiles are independent and fan out across threads once
+/// `b·nnz ≥ 2²⁰` (thread count cached process-wide, no per-call syscall).
+pub(crate) fn fused_tile_walk<S: TileWalk>(
+    src: &S,
+    xt: &Matrix,
+    low_rank: Option<(&Matrix, &Matrix)>,
+    out: &mut Matrix,
+) {
+    let b = xt.cols;
+    let n_out = src.out_rows();
+    assert_eq!(xt.rows, src.in_cols(), "tile walk: xt must be [cols × b]");
+    assert_eq!((out.rows, out.cols), (b, n_out), "tile walk: out must be [b × rows]");
+    if let Some((u, t)) = low_rank {
+        assert_eq!((u.rows, u.cols), (n_out, t.rows), "tile walk: U shape");
+        assert_eq!(t.cols, b, "tile walk: T shape");
+    }
+    let row_tile = src.walk_row_tile();
+    let n_rt = n_out.div_ceil(row_tile).max(1);
+    let threads = if b * src.nnz_count() >= PARALLEL_MIN_WORK { available_threads() } else { 1 };
+    // Dispatch is decided here, on the caller's thread, so the bench/test
+    // override applies even though tiles run on scoped workers.
+    let isa = active_isa();
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    parallel_for(threads, n_rt, |rt| {
+        let r0 = rt * row_tile;
+        let r1 = (r0 + row_tile).min(n_out);
+        let tr = r1 - r0;
+        // Local accumulator [tr × b]: stays cache-resident across the
+        // sparse fold and the low-rank pass.
+        let mut acc = vec![0.0f32; tr * b];
+        src.fold_tile(r0, r1, xt, &mut acc, isa);
+        if let Some((u, t)) = low_rank {
+            // acc[lr, ·] += Σ_j U[r0+lr, j] · T[j, ·] — the same lane
+            // kernels carry the rank-space term.
+            for lr in 0..tr {
+                let run = DenseRun { values: u.row(r0 + lr) };
+                fold_dense(isa, run, t, &mut acc[lr * b..(lr + 1) * b], 1.0);
+            }
+        }
+        // Scatter the tile to the [b × rows] output layout — the single
+        // unsafe write shared by every sparse format.
+        let op = out_ptr;
+        for lr in 0..tr {
+            for (bi, &av) in acc[lr * b..(lr + 1) * b].iter().enumerate() {
+                // SAFETY: row tiles own disjoint column ranges of `out`
+                // (r0..r1 never overlaps between `parallel_for` items), so
+                // every (bi, r0+lr) address is written by exactly one
+                // worker, and `out` outlives the scoped threads.
+                unsafe { *op.0.add(bi * n_out + r0 + lr) = av };
+            }
+        }
+    });
+}
+
+/// Fused batched forward `C = X·Aᵀ (+ X·(U·Vt)ᵀ)` with scratch and output
+/// taken from a fresh throwaway [`Workspace`] — the convenience entry for
+/// callers without a persistent workspace.
+pub(crate) fn fused_forward<S: TileWalk>(
+    src: &S,
+    low_rank: Option<&LowRank>,
+    x: &Matrix,
+) -> Matrix {
+    fused_forward_ws(src, low_rank, x, &mut Workspace::new())
+}
+
+/// [`fused_forward`] against a caller-owned [`Workspace`]: the Xᵀ panel,
+/// the rank-space projection `T = Vt·Xᵀ`, and the output all come from the
+/// pool, so a serving loop that keeps `ws` across steps allocates nothing
+/// once shapes have been seen.
+pub(crate) fn fused_forward_ws<S: TileWalk>(
+    src: &S,
+    low_rank: Option<&LowRank>,
+    x: &Matrix,
+    ws: &mut Workspace,
+) -> Matrix {
+    assert_eq!(x.cols, src.in_cols(), "fused kernel dim mismatch");
+    let xt = ws.transposed(x);
+    // Uninit is safe here: the tile-walk scatter writes every (bi, row)
+    // element exactly once, and `matmul_into` zero-fills `t` itself.
+    let mut out = ws.matrix_uninit(x.rows, src.out_rows());
+    match low_rank {
+        Some(lr) => {
+            let mut t = ws.matrix_uninit(lr.vt.rows, xt.cols);
+            crate::tensor::matmul_into(&lr.vt, &xt, &mut t);
+            fused_tile_walk(src, &xt, Some((&lr.u, &t)), &mut out);
+            ws.recycle(t);
+        }
+        None => fused_tile_walk(src, &xt, None, &mut out),
+    }
+    ws.recycle(xt);
+    out
+}
+
+/// A pool of recycled f32 buffers for the batched kernels and the serve
+/// decode loop. `take` hands back the smallest pooled buffer whose
+/// capacity fits (zero-filled to the requested length); `recycle` returns
+/// a matrix's storage to the pool. Fresh heap allocations happen only when
+/// nothing pooled fits, so a loop with stable shapes allocates only on its
+/// first pass — [`Workspace::alloc_count`] is the regression telemetry.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    allocs: usize,
+    reuses: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Fresh heap allocations so far (buffers created because nothing
+    /// pooled had the capacity). Flat across iterations ⇒ steady state.
+    pub fn alloc_count(&self) -> usize {
+        self.allocs
+    }
+
+    /// Pool hits so far.
+    pub fn reuse_count(&self) -> usize {
+        self.reuses
+    }
+
+    /// A buffer of exactly `len` elements, best-fit from the pool. With
+    /// `zero`, contents are zero-filled; without, a recycled checkout
+    /// keeps whatever stale values it held (only freshly grown elements
+    /// are written), so the steady-state cost is zero — reserved for
+    /// consumers that overwrite every element before reading.
+    fn take(&mut self, len: usize, zero: bool) -> Vec<f32> {
+        let best = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= len)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i);
+        match best {
+            Some(i) => {
+                let mut v = self.free.swap_remove(i);
+                if zero {
+                    v.clear();
+                } else {
+                    v.truncate(len);
+                }
+                v.resize(len, 0.0);
+                self.reuses += 1;
+                v
+            }
+            None => {
+                self.allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// A zero-filled `rows × cols` matrix backed by pooled storage — for
+    /// buffers that are accumulated into (e.g. attention context).
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols, true))
+    }
+
+    /// A `rows × cols` matrix backed by pooled storage with **arbitrary
+    /// (stale) contents** — the hot-path variant for consumers that write
+    /// every element before reading any (full scatters, `copy_from_slice`
+    /// fills, the `*_into` GEMMs): it skips the per-checkout zero-fill
+    /// [`Workspace::matrix`] pays.
+    pub fn matrix_uninit(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols, false))
+    }
+
+    /// `xᵀ` backed by pooled storage (the shared tiled transpose writes
+    /// every element, so the uninit checkout is safe).
+    pub fn transposed(&mut self, x: &Matrix) -> Matrix {
+        let mut t = self.matrix_uninit(x.cols, x.rows);
+        x.transpose_into(&mut t);
+        t
+    }
+
+    /// Return a matrix's storage to the pool.
+    pub fn recycle(&mut self, m: Matrix) {
+        self.free.push(m.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn workspace_recycles_instead_of_allocating() {
+        let mut ws = Workspace::new();
+        let a = ws.matrix(8, 16);
+        assert_eq!(ws.alloc_count(), 1);
+        ws.recycle(a);
+        let b = ws.matrix(4, 8); // smaller: must reuse the pooled buffer
+        assert_eq!(ws.alloc_count(), 1);
+        assert_eq!(ws.reuse_count(), 1);
+        assert!(b.data.iter().all(|&v| v == 0.0), "recycled buffer must be zeroed");
+        ws.recycle(b);
+        let c = ws.matrix(32, 32); // larger than anything pooled: fresh alloc
+        assert_eq!(ws.alloc_count(), 2);
+        ws.recycle(c);
+    }
+
+    #[test]
+    fn workspace_best_fit_prefers_smallest_sufficient_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.matrix(64, 64);
+        let small = ws.matrix(4, 4);
+        ws.recycle(big);
+        ws.recycle(small);
+        let got = ws.matrix(2, 2);
+        assert!(got.data.capacity() <= 16, "best fit must pick the small buffer");
+        // The big buffer is still pooled for the next big request.
+        let big2 = ws.matrix(64, 64);
+        assert_eq!(ws.alloc_count(), 2, "64×64 must come from the pool");
+        ws.recycle(got);
+        ws.recycle(big2);
+    }
+
+    #[test]
+    fn matrix_uninit_skips_the_zero_fill_but_matrix_still_zeroes() {
+        let mut ws = Workspace::new();
+        let mut a = ws.matrix(2, 2);
+        a.data.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        ws.recycle(a);
+        // The uninit checkout hands back the recycled storage as-is —
+        // stale contents are the documented contract (callers overwrite).
+        let b = ws.matrix_uninit(2, 2);
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0, 4.0]);
+        ws.recycle(b);
+        let c = ws.matrix(2, 2);
+        assert!(c.data.iter().all(|&v| v == 0.0), "zeroed variant must still zero");
+        ws.recycle(c);
+        // A larger pooled buffer shrinks to the requested length with its
+        // stale prefix intact — no fill beyond what resize must write.
+        let mut e = ws.matrix(2, 4);
+        e.data.copy_from_slice(&[9.0; 8]);
+        ws.recycle(e);
+        let d = ws.matrix_uninit(3, 2);
+        assert_eq!(d.data, vec![9.0; 6]);
+        ws.recycle(d);
+    }
+
+    #[test]
+    fn workspace_transpose_matches_matrix_transpose() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(37, 23, 1.0, &mut rng);
+        let mut ws = Workspace::new();
+        let t = ws.transposed(&x);
+        assert_eq!(t, x.transpose());
+    }
+
+    #[test]
+    fn isa_override_downgrades_and_restores() {
+        let before = active_isa();
+        let inside = with_isa(Isa::Generic, active_isa);
+        assert_eq!(inside, Isa::Generic);
+        assert_eq!(active_isa(), before, "override must restore");
+        // An override can never upgrade past detection.
+        let forced = with_isa(Isa::Avx2Fma, active_isa);
+        assert_eq!(forced, detected_isa());
+    }
+
+    /// Naive reference: acc[col] += scale · Σ_i v_i · xt[c_i][col].
+    fn naive_fold(vals: &[f32], cols: &[u16], base: usize, xt: &Matrix, scale: f32) -> Vec<f32> {
+        let b = xt.cols;
+        let mut acc = vec![0.0f32; b];
+        for (a, colv) in acc.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for (&v, &c) in vals.iter().zip(cols) {
+                s += v * xt.row(base + c as usize)[a];
+            }
+            *colv += scale * s;
+        }
+        acc
+    }
+
+    #[test]
+    fn lane_fold_matches_naive_across_widths() {
+        let mut rng = Rng::new(9);
+        for b in 1..=19 {
+            let xt = Matrix::randn(12, b, 1.0, &mut rng);
+            let vals: Vec<f32> = (0..7).map(|i| (i as f32 * 0.7).sin()).collect();
+            let cols: Vec<u16> = vec![0, 2, 3, 5, 7, 9, 11];
+            let run = F32TileRun { values: &vals, cols: &cols, base: 0 };
+            let mut acc = vec![0.0f32; b];
+            fold_f32_tile(active_isa(), run, &xt, &mut acc, 1.0);
+            let want = naive_fold(&vals, &cols, 0, &xt, 1.0);
+            for (g, w) in acc.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "b={b}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_and_generic_folds_are_bit_identical() {
+        let mut rng = Rng::new(11);
+        let xt = Matrix::randn(30, 17, 1.0, &mut rng);
+        let vals: Vec<f32> = (0..30).map(|i| (i as f32).cos()).collect();
+        let cols: Vec<u16> = (0..30).collect();
+        let run = F32TileRun { values: &vals, cols: &cols, base: 0 };
+        let mut fast = vec![0.0f32; 17];
+        fold_f32_tile(active_isa(), run, &xt, &mut fast, 0.5);
+        let mut slow = vec![0.0f32; 17];
+        fold_f32_tile(Isa::Generic, run, &xt, &mut slow, 0.5);
+        assert_eq!(fast, slow, "SIMD clone must be bit-identical to the generic path");
+    }
+}

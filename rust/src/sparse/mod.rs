@@ -16,6 +16,11 @@
 //! * [`quant`] — [`QBcsr`]: i8-quantized BCSR tiles with per-tile f32
 //!   scales, the opt-in compression axis the planner gates on measured
 //!   quantization error.
+//! * [`microkernel`] — the shared tile-walk engine (row-tile parallel
+//!   loop, fused low-rank pass, the single unsafe output scatter, and the
+//!   `b·nnz` thread gate) plus the register-blocked SIMD lane kernels
+//!   every batched format above folds through, and the recycled-buffer
+//!   [`Workspace`] the serve decode loop reuses across steps.
 //! * [`plan`] — [`KernelPlan`]: picks dense/CSR/BCSR/QBcsr/N:M per layer
 //!   from measured nnz density, shape, and (for the i8 upgrade) per-tile
 //!   quantization error, and [`PackedLinear`], the pre-packed executable
@@ -24,6 +29,7 @@
 pub mod bcsr;
 pub mod csr;
 pub mod lowrank;
+pub mod microkernel;
 pub mod nm;
 pub mod plan;
 pub mod quant;
@@ -32,6 +38,7 @@ pub mod spl;
 pub use bcsr::Bcsr;
 pub use csr::Csr;
 pub use lowrank::LowRank;
+pub use microkernel::{Isa, Workspace};
 pub use nm::{NmPacked, NmPattern};
 pub use plan::{KernelChoice, KernelPlan, PackedLinear, PackedSparse};
 pub use plan::{PackOptions, QuantGate, QBCSR_MAX_REL_ERROR};

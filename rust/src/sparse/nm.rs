@@ -3,8 +3,11 @@
 //! slots + in-group offsets per group of `m` consecutive columns, giving the
 //! kernel a fixed, branch-free iteration structure.
 
+use super::microkernel::{self, Isa, NmRowRun, TileWalk};
 use crate::tensor::Matrix;
-use crate::util::threadpool::{parallel_for, SendPtr};
+
+/// Output rows per parallel stripe of the packed N:M batched kernel.
+const NM_ROW_TILE: usize = 64;
 
 /// N:M sparsity pattern descriptor: at most `n` nonzeros per group of `m`
 /// consecutive entries along each row (NVIDIA sparse-tensor-core layout;
@@ -194,53 +197,49 @@ impl NmPacked {
         }
     }
 
-    /// C = X · Aᵀ via the transposed-panel trick (see `bcsr`): the inner loop
-    /// is a b-wide axpy per slot.
+    /// C = X · Aᵀ via the transposed-panel trick (see `bcsr`), routed
+    /// through the shared [`microkernel`] tile-walk engine: the inner loop
+    /// is the register-blocked lane fold over each row's value slots.
     pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols, "nm matmul_xt dim mismatch");
-        let b = x.rows;
-        let xt = x.transpose();
-        let mut out = Matrix::zeros(b, self.rows);
+        microkernel::fused_forward(self, None, x)
+    }
+}
+
+/// The N:M side of the shared tile-walk engine: one packed-group run per
+/// output row (padding slots skipped inside the run), folded through the
+/// f32 lane kernels. Parallelism, the fused low-rank pass, and the output
+/// scatter live in [`microkernel::fused_tile_walk`].
+impl TileWalk for NmPacked {
+    fn out_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn in_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn walk_row_tile(&self) -> usize {
+        NM_ROW_TILE
+    }
+
+    fn nnz_count(&self) -> usize {
+        self.nnz
+    }
+
+    fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa) {
+        let b = xt.cols;
         let n = self.pattern.n;
-        let threads = if b * self.nnz >= (1 << 20) {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            1
-        };
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        let n_out = self.rows;
-        let stripe = 64usize;
-        let stripes = self.rows.div_ceil(stripe);
-        parallel_for(threads, stripes, |s| {
-            let r0 = s * stripe;
-            let r1 = (r0 + stripe).min(self.rows);
-            let mut acc = vec![0.0f32; (r1 - r0) * b];
-            for (lr, r) in (r0..r1).enumerate() {
-                let arow = &mut acc[lr * b..(lr + 1) * b];
-                for g in 0..self.groups_per_row {
-                    let base = g * self.pattern.m;
-                    let slot0 = (r * self.groups_per_row + g) * n;
-                    for k in 0..n {
-                        let v = self.values[slot0 + k];
-                        if v == 0.0 {
-                            continue;
-                        }
-                        let xrow = xt.row(base + self.offsets[slot0 + k] as usize);
-                        for (a, &xv) in arow.iter_mut().zip(xrow) {
-                            *a += v * xv;
-                        }
-                    }
-                }
-            }
-            let op = out_ptr;
-            for (lr, r) in (r0..r1).enumerate() {
-                for (bi, &av) in acc[lr * b..(lr + 1) * b].iter().enumerate() {
-                    // SAFETY: stripes own disjoint output columns.
-                    unsafe { *op.0.add(bi * n_out + r) = av };
-                }
-            }
-        });
-        out
+        let slots_per_row = self.groups_per_row * n;
+        for (lr, r) in (r0..r1).enumerate() {
+            let slot0 = r * slots_per_row;
+            let run = NmRowRun {
+                values: &self.values[slot0..slot0 + slots_per_row],
+                offsets: &self.offsets[slot0..slot0 + slots_per_row],
+                n,
+                m: self.pattern.m,
+            };
+            microkernel::fold_nm_row(isa, run, xt, &mut acc[lr * b..(lr + 1) * b], 1.0);
+        }
     }
 }
 

@@ -27,9 +27,10 @@
 use super::bcsr::Bcsr;
 use super::csr::Csr;
 use super::lowrank::LowRank;
+use super::microkernel::{self, Workspace};
 use super::nm::{NmPacked, NmPattern};
-use super::quant::{self, QBcsr};
-use super::spl::{fused_matmul, SparsePlusLowRank};
+use super::quant::QBcsr;
+use super::spl::SparsePlusLowRank;
 use crate::tensor::Matrix;
 
 /// Above this density the dense GEMM path wins over index-based formats.
@@ -375,26 +376,27 @@ impl PackedLinear {
 
     /// Batched apply `C = X·Wᵀ` through the planned kernel.
     pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.forward_ws(x, &mut Workspace::new())
+    }
+
+    /// [`PackedLinear::forward`] against a caller-owned [`Workspace`] —
+    /// the serve decode path. The Xᵀ panel, the rank-space projection, and
+    /// the output all come from the pool, so steady-state decode steps pay
+    /// no fresh `transpose()`/`Matrix::zeros` heap allocations. Every
+    /// sparse plan (CSR included) runs the fused tile-walk engine, so the
+    /// low-rank term is folded in the same accumulator pass.
+    pub fn forward_ws(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let lr = self.low_rank.as_ref();
         match &self.sparse {
-            PackedSparse::Bcsr(b) => fused_matmul(b, self.low_rank.as_ref(), x),
-            PackedSparse::QBcsr(q) => quant::fused_matmul(q, self.low_rank.as_ref(), x),
+            PackedSparse::Bcsr(b) => microkernel::fused_forward_ws(b, lr, x, ws),
+            PackedSparse::QBcsr(q) => microkernel::fused_forward_ws(q, lr, x, ws),
+            PackedSparse::Csr(c) => microkernel::fused_forward_ws(c, lr, x, ws),
+            PackedSparse::Nm(nm) => microkernel::fused_forward_ws(nm, lr, x, ws),
             PackedSparse::Dense(w) => {
-                let mut out = crate::tensor::matmul_bt(x, w);
-                if let Some(lr) = &self.low_rank {
-                    lr.apply_batch_accumulate(x, &mut out);
-                }
-                out
-            }
-            PackedSparse::Csr(c) => {
-                let mut out = c.matmul_xt(x);
-                if let Some(lr) = &self.low_rank {
-                    lr.apply_batch_accumulate(x, &mut out);
-                }
-                out
-            }
-            PackedSparse::Nm(nm) => {
-                let mut out = nm.matmul_xt(x);
-                if let Some(lr) = &self.low_rank {
+                // Uninit is safe: matmul_bt_into overwrites every element.
+                let mut out = ws.matrix_uninit(x.rows, w.rows);
+                crate::tensor::matmul_bt_into(x, w, &mut out);
+                if let Some(lr) = lr {
                     lr.apply_batch_accumulate(x, &mut out);
                 }
                 out

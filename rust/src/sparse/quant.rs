@@ -8,13 +8,14 @@
 //! quantization happens when a layer is packed for serving, and
 //! dequantization recovers f32 values for re-serialization.
 //!
-//! The batched kernel mirrors [`Bcsr::fused_xt`]: Xᵀ panels, a b-wide
-//! contiguous inner axpy (auto-vectorizable — the `i8 → f32` widening and
-//! the multiply-add both run over a contiguous batch lane), and row tiles
-//! parallelized across threads. The per-tile scale is applied **once per
-//! tile** per output row: the raw `Σ q·x` partial accumulates unscaled in a
-//! tile-local buffer and one scaled axpy folds it into the row accumulator,
-//! so the hot loop never touches the scale.
+//! The batched kernel shares the [`super::microkernel`] tile-walk engine
+//! with the f32 tiles: Xᵀ panels, the register-blocked lane fold (the
+//! `i8 → f32` widening and the multiply-add both run over a contiguous
+//! batch lane), and row tiles parallelized across threads. The per-tile
+//! scale is applied **once per tile** per output row: the raw `Σ q·x`
+//! partial accumulates unscaled in the lane registers and one scaled fold
+//! moves it into the row accumulator, so the hot loop never touches the
+//! scale.
 //!
 //! Accuracy is gated at plan time: [`QBcsr::max_tile_rel_error`] reports the
 //! worst per-tile relative Frobenius quantization error, and
@@ -25,8 +26,8 @@
 use super::bcsr::Bcsr;
 use super::csr::Csr;
 use super::lowrank::LowRank;
+use super::microkernel::{self, I8TileRun, Isa, TileWalk};
 use crate::tensor::Matrix;
-use crate::util::threadpool::{parallel_for, SendPtr};
 
 /// One quantized tile: a local CSR with i8 values and a single f32 scale.
 #[derive(Clone, Debug, PartialEq)]
@@ -209,104 +210,59 @@ impl QBcsr {
         }
     }
 
-    /// C = X · Aᵀ for activations X [b × cols] — the tiled batched kernel.
+    /// C = X · Aᵀ for activations X [b × cols] — the tiled batched kernel,
+    /// routed through the shared [`microkernel`] tile-walk engine.
     pub fn matmul_xt(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols, "qbcsr matmul_xt dim mismatch");
-        let xt = x.transpose();
-        let mut out = Matrix::zeros(x.rows, self.rows);
-        self.fused_xt(&xt, None, &mut out);
-        out
+        microkernel::fused_forward(self, None, x)
+    }
+}
+
+/// The QBcsr side of the shared tile-walk engine: each local-CSR row
+/// accumulates its raw `Σ q·x` partial in the lane registers and the
+/// per-tile scale is applied **once per (row, tile)** on the fold into the
+/// row accumulator — the hot loop never touches the scale. Parallelism,
+/// the (f32) low-rank pass, and the output scatter live in
+/// [`microkernel::fused_tile_walk`].
+impl TileWalk for QBcsr {
+    fn out_rows(&self) -> usize {
+        self.rows
     }
 
-    /// Core fused kernel: writes `out[b × rows] = X·Aᵀ (+ (X·Vtᵀ)·Uᵀ)`,
-    /// mirroring [`Bcsr::fused_xt`]. The inner b-wide axpy accumulates the
-    /// raw i8 partials in f32; the per-tile scale is applied once per
-    /// (row, tile) when the partial folds into the row accumulator. The
-    /// low-rank term stays f32 end to end.
-    pub(crate) fn fused_xt(
-        &self,
-        xt: &Matrix,
-        low_rank: Option<(&Matrix, &Matrix)>,
-        out: &mut Matrix,
-    ) {
+    fn in_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn walk_row_tile(&self) -> usize {
+        self.row_tile
+    }
+
+    fn nnz_count(&self) -> usize {
+        self.nnz
+    }
+
+    fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa) {
         let b = xt.cols;
-        assert_eq!(xt.rows, self.cols, "fused_xt: xt must be [cols × b]");
-        assert_eq!((out.rows, out.cols), (b, self.rows), "fused_xt: out must be [b × rows]");
-        if let Some((u, t)) = low_rank {
-            assert_eq!((u.rows, u.cols), (self.rows, t.rows), "fused_xt: U shape");
-            assert_eq!(t.cols, b, "fused_xt: T shape");
-        }
         let n_ct = self.n_col_tiles();
-        let n_rt = self.n_row_tiles();
-        let threads = if b * self.nnz >= (1 << 20) {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            1
-        };
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        let n_out = self.rows;
-        parallel_for(threads, n_rt, |rt| {
-            let r0 = rt * self.row_tile;
-            let r1 = (r0 + self.row_tile).min(self.rows);
-            let tr = r1 - r0;
-            // Row accumulator [tr × b] plus one b-wide unscaled partial,
-            // both cache-resident across column tiles.
-            let mut acc = vec![0.0f32; tr * b];
-            let mut raw = vec![0.0f32; b];
-            for ct in 0..n_ct {
-                let c0 = ct * self.col_tile;
-                let tile = &self.tiles[rt * n_ct + ct];
-                if tile.cols.is_empty() {
+        let rt = r0 / self.row_tile;
+        for ct in 0..n_ct {
+            let tile = &self.tiles[rt * n_ct + ct];
+            if tile.cols.is_empty() {
+                continue;
+            }
+            let c0 = ct * self.col_tile;
+            for lr in 0..(r1 - r0) {
+                let lo = tile.indptr[lr] as usize;
+                let hi = tile.indptr[lr + 1] as usize;
+                if lo == hi {
                     continue;
                 }
-                let scale = tile.scale;
-                for lr in 0..tr {
-                    let lo = tile.indptr[lr] as usize;
-                    let hi = tile.indptr[lr + 1] as usize;
-                    if lo == hi {
-                        continue;
-                    }
-                    raw.iter_mut().for_each(|v| *v = 0.0);
-                    for i in lo..hi {
-                        let v = tile.values[i] as f32;
-                        let xrow = xt.row(c0 + tile.cols[i] as usize);
-                        // b-wide contiguous axpy on the raw i8 partial —
-                        // the vectorizable inner loop.
-                        for (a, &xv) in raw.iter_mut().zip(xrow) {
-                            *a += v * xv;
-                        }
-                    }
-                    // One scaled fold-in per (row, tile).
-                    let arow = &mut acc[lr * b..(lr + 1) * b];
-                    for (a, &rv) in arow.iter_mut().zip(raw.iter()) {
-                        *a += scale * rv;
-                    }
-                }
+                let values = &tile.values[lo..hi];
+                let cols = &tile.cols[lo..hi];
+                let run = I8TileRun { values, cols, base: c0 };
+                let arow = &mut acc[lr * b..(lr + 1) * b];
+                microkernel::fold_i8_tile(isa, run, xt, arow, tile.scale);
             }
-            if let Some((u, t)) = low_rank {
-                // acc[lr, ·] += Σ_j U[r0+lr, j] · T[j, ·] — f32 throughout.
-                for lr in 0..tr {
-                    let urow = u.row(r0 + lr);
-                    let arow = &mut acc[lr * b..(lr + 1) * b];
-                    for (j, &uv) in urow.iter().enumerate() {
-                        let trow = t.row(j);
-                        for (a, &tv) in arow.iter_mut().zip(trow) {
-                            *a += uv * tv;
-                        }
-                    }
-                }
-            }
-            // Scatter the tile back to the [b × rows] output layout.
-            let op = out_ptr;
-            for lr in 0..tr {
-                for (bi, &av) in acc[lr * b..(lr + 1) * b].iter().enumerate() {
-                    // SAFETY: row tiles own disjoint column ranges of `out`,
-                    // so every (bi, r0+lr) address is written by exactly one
-                    // worker.
-                    unsafe { *op.0.add(bi * n_out + r0 + lr) = av };
-                }
-            }
-        });
+        }
     }
 }
 
@@ -315,17 +271,7 @@ impl QBcsr {
 /// counterpart of [`super::spl::fused_matmul`]. The rank-space projection
 /// `T = Vt·Xᵀ` is computed once in f32; only the sparse tiles are i8.
 pub fn fused_matmul(sparse: &QBcsr, low_rank: Option<&LowRank>, x: &Matrix) -> Matrix {
-    assert_eq!(x.cols, sparse.cols, "quant fused_matmul dim mismatch");
-    let xt = x.transpose();
-    let mut out = Matrix::zeros(x.rows, sparse.rows);
-    match low_rank {
-        Some(lr) => {
-            let t = crate::tensor::matmul(&lr.vt, &xt);
-            sparse.fused_xt(&xt, Some((&lr.u, &t)), &mut out);
-        }
-        None => sparse.fused_xt(&xt, None, &mut out),
-    }
-    out
+    microkernel::fused_forward(sparse, low_rank, x)
 }
 
 #[cfg(test)]

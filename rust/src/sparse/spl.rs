@@ -5,6 +5,7 @@
 use super::bcsr::Bcsr;
 use super::csr::Csr;
 use super::lowrank::LowRank;
+use super::microkernel;
 use crate::tensor::Matrix;
 
 /// The OATS compressed layer: W ≈ S + L with S sparse (CSR) and L low-rank.
@@ -70,20 +71,10 @@ impl SparsePlusLowRank {
 /// The activation block is transposed once (Xᵀ [in × b]); the rank-space
 /// projection `T = Vt·Xᵀ` [r × b] is computed once; then a single pass over
 /// the row tiles of S accumulates `S·Xᵀ` and `U·T` together — each
-/// activation row streams through both terms exactly once.
+/// activation row streams through both terms exactly once. The pass itself
+/// is the shared [`super::microkernel`] tile-walk engine.
 pub fn fused_matmul(sparse: &Bcsr, low_rank: Option<&LowRank>, x: &Matrix) -> Matrix {
-    assert_eq!(x.cols, sparse.cols, "fused_matmul dim mismatch");
-    let xt = x.transpose();
-    let mut out = Matrix::zeros(x.rows, sparse.rows);
-    match low_rank {
-        Some(lr) => {
-            // T = Vt · Xᵀ : [r × b] — the Σ·Vᵀx rank-space projection.
-            let t = crate::tensor::matmul(&lr.vt, &xt);
-            sparse.fused_xt(&xt, Some((&lr.u, &t)), &mut out);
-        }
-        None => sparse.fused_xt(&xt, None, &mut out),
-    }
-    out
+    microkernel::fused_forward(sparse, low_rank, x)
 }
 
 #[cfg(test)]

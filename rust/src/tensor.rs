@@ -7,7 +7,7 @@
 //! (batch, seq, dim) is handled by the callers as `rows = batch*seq`.
 
 use crate::util::prng::Rng;
-use crate::util::threadpool::{parallel_for, SendPtr};
+use crate::util::threadpool::{available_threads, parallel_for, SendPtr};
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +68,15 @@ impl Matrix {
 
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// [`Matrix::transpose`] into a caller-provided output (the
+    /// workspace-reuse path): every element of `out` is overwritten,
+    /// shape must be `[cols × rows]`.
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        assert_eq!((out.rows, out.cols), (self.cols, self.rows), "transpose_into output shape");
         // Tiled transpose for cache friendliness on large matrices.
         const T: usize = 32;
         for rb in (0..self.rows).step_by(T) {
@@ -79,7 +88,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// Frobenius norm.
@@ -144,15 +152,20 @@ const PAR_GEMM_MIN_FLOPS: usize = 1 << 22;
 
 /// C = A · B, blocked and multithreaded over row stripes of A.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// [`matmul`] into a caller-provided output (the workspace-reuse path):
+/// `c` is overwritten, shape must be `[a.rows × b.cols]`.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (ar, ac) = (a.rows, a.cols);
     assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch: {ar}x{ac} · {}x{}", b.rows, b.cols);
-    let mut c = Matrix::zeros(a.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_into output shape");
+    c.data.fill(0.0);
     let flops = a.rows * a.cols * b.cols;
-    let threads = if flops >= PAR_GEMM_MIN_FLOPS {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        1
-    };
+    let threads = if flops >= PAR_GEMM_MIN_FLOPS { available_threads() } else { 1 };
     let n = a.rows;
     let bc = b.cols;
     let kk = a.cols;
@@ -168,7 +181,6 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
         let c_rows = unsafe { std::slice::from_raw_parts_mut(cp.0.add(r0 * bc), (r1 - r0) * bc) };
         gemm_stripe(&a.data[r0 * kk..r1 * kk], &b.data, c_rows, r1 - r0, kk, bc);
     });
-    c
 }
 
 /// Inner kernel: C[m×n] += A[m×k] · B[k×n] with k-panel blocking and an
@@ -225,14 +237,18 @@ pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
 
 /// C = A · Bᵀ (common for x·Wᵀ linear layers with W stored out×in).
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.cols, "matmul_bt inner-dim mismatch");
     let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_bt_into(a, b, &mut c);
+    c
+}
+
+/// [`matmul_bt`] into a caller-provided output (the workspace-reuse path):
+/// every element of `c` is overwritten, shape must be `[a.rows × b.rows]`.
+pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_bt inner-dim mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_bt_into output shape");
     let flops = a.rows * a.cols * b.rows;
-    let threads = if flops >= PAR_GEMM_MIN_FLOPS {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        1
-    };
+    let threads = if flops >= PAR_GEMM_MIN_FLOPS { available_threads() } else { 1 };
     let (m, n, k) = (a.rows, b.rows, a.cols);
     let c_ptr = SendPtr(c.data.as_mut_ptr());
     let stripe = m.div_ceil(threads.max(1)).max(1);
@@ -251,7 +267,6 @@ pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     });
-    c
 }
 
 /// Dot product with 4-wide manual unroll.
@@ -430,6 +445,21 @@ mod tests {
             }
             assert!((c.at(i, j) - acc).abs() < 1e-2);
         }
+    }
+
+    #[test]
+    fn matmul_into_variants_match_allocating_and_overwrite() {
+        let mut rng = Rng::new(17);
+        let a = Matrix::randn(9, 14, 1.0, &mut rng);
+        let b = Matrix::randn(14, 6, 1.0, &mut rng);
+        let bt = Matrix::randn(6, 14, 1.0, &mut rng);
+        // Stale contents in the destination must not leak through.
+        let mut c = Matrix::filled(9, 6, 7.5);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c, matmul(&a, &b));
+        let mut d = Matrix::filled(9, 6, -3.25);
+        matmul_bt_into(&a, &bt, &mut d);
+        assert_eq!(d, matmul_bt(&a, &bt));
     }
 
     #[test]

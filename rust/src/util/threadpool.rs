@@ -6,8 +6,25 @@
 //! `tensor::matmul`.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
+
+/// Cached `available_parallelism()` probe — one syscall per process.
+/// `None` when the platform cannot report it; callers pick their own
+/// fallback (the kernels go serial, the pool keeps its historical 4).
+fn detected_parallelism() -> Option<usize> {
+    static THREADS: OnceLock<Option<usize>> = OnceLock::new();
+    *THREADS.get_or_init(|| thread::available_parallelism().ok().map(|n| n.get()))
+}
+
+/// Cached thread count for the kernel thread gates (the sparse tile walk
+/// and the blocked GEMMs); 1 — serial — when detection fails, matching
+/// the kernels' historical per-call fallback. Re-querying per call showed
+/// up in the serve decode profile: each engine step runs dozens of
+/// batched products, each of which used to pay the syscall.
+pub fn available_threads() -> usize {
+    detected_parallelism().unwrap_or(1)
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -38,10 +55,10 @@ impl ThreadPool {
         ThreadPool { workers, tx: Some(tx) }
     }
 
-    /// Pool sized to available parallelism.
+    /// Pool sized to available parallelism (4 when detection fails —
+    /// this pool's historical fallback).
     pub fn with_default_size() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n)
+        Self::new(detected_parallelism().unwrap_or(4))
     }
 
     /// Submit a job.

@@ -10,6 +10,7 @@
 
 use oats::compress::threshold::hard_threshold;
 use oats::config::SparsityPattern;
+use oats::sparse::microkernel::{self, with_isa, Isa};
 use oats::sparse::{
     Bcsr, Csr, KernelChoice, LowRank, NmPacked, NmPattern, PackedLinear, SparsePlusLowRank,
 };
@@ -232,6 +233,152 @@ fn quantized_packed_linear_respects_error_gate() {
     let g = PackedLinear::from_csr_with(&Csr::from_dense(&outlier), &PackOptions::quantized(8));
     assert_eq!(g.plan.choice, KernelChoice::Bcsr, "gate must reject outlier tiles");
     assert_close("gated f32 fallback", &g.forward(&x), &matmul_bt(&x, &outlier));
+}
+
+/// The fixtures the microkernel-specific tests below share: one weight in
+/// all four packed formats plus an exactly-2:4-pruned sibling.
+fn microkernel_fixtures(rng: &mut Rng) -> (Matrix, Bcsr, QBcsr, Csr, Matrix, NmPacked) {
+    let w = random_sparse(96, 88, 0.55, rng);
+    let bcsr = Bcsr::from_dense_tiled(&w, 16, 32);
+    let qbcsr = QBcsr::quantize(&bcsr);
+    let csr = Csr::from_dense(&w);
+    let nm_dense = Matrix::randn(96, 88, 1.0, rng);
+    let nm_pruned = hard_threshold(&nm_dense, &nm_dense, 0, SparsityPattern::Nm { n: 2, m: 4 });
+    let nm = NmPacked::pack(&nm_pruned, NmPattern::TWO_FOUR).expect("2:4-pruned validates");
+    (w, bcsr, qbcsr, csr, nm_pruned, nm)
+}
+
+#[test]
+fn microkernel_every_lane_tail_split_matches_dense() {
+    // Batch widths 1..=17 cover every register-lane decomposition of the
+    // b-wide fold: pure scalar (1..=3), one 4-lane (4), 8-lane (8),
+    // 16-lane (16), and every mixed lane+tail split in between (e.g.
+    // 15 = 8+4+1+1+1, 17 = 16+1) — for all four formats.
+    let mut rng = Rng::new(2024);
+    let (w, bcsr, qbcsr, csr, nm_pruned, nm) = microkernel_fixtures(&mut rng);
+    for b in 1..=17 {
+        let x = Matrix::randn(b, w.cols, 1.0, &mut rng);
+        let want = matmul_bt(&x, &w);
+        assert_close(&format!("bcsr b={b}"), &bcsr.matmul_xt(&x), &want);
+        assert_close(&format!("csr b={b}"), &csr.matmul_xt(&x), &want);
+        let qwant = matmul_bt(&x, &qbcsr.to_dense());
+        assert_close(&format!("qbcsr b={b}"), &qbcsr.matmul_xt(&x), &qwant);
+        assert_close(&format!("nm b={b}"), &nm.matmul_xt(&x), &matmul_bt(&x, &nm_pruned));
+    }
+}
+
+#[test]
+fn simd_dispatch_is_bit_identical_to_generic_path() {
+    // The target_feature clones only widen vectors — the operation
+    // sequence per output element is identical, so the dispatched result
+    // must equal the forced-generic result BIT FOR BIT, for every format
+    // and the fused sparse-plus-low-rank path. (On hosts without AVX2 both
+    // sides run the generic build and the assertion is trivially true.)
+    println!("dispatch under test: {}", microkernel::detected_isa().name());
+    let mut rng = Rng::new(77);
+    let (w, bcsr, qbcsr, csr, _nm_pruned, nm) = microkernel_fixtures(&mut rng);
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&w),
+        low_rank: Some(LowRank {
+            u: Matrix::randn(96, 6, 0.3, &mut rng),
+            vt: Matrix::randn(6, 88, 0.3, &mut rng),
+        }),
+    };
+    let packed = PackedLinear::from_spl(&spl, 9);
+    let labels = ["bcsr", "csr", "qbcsr", "nm", "fused"];
+    for b in [1usize, 5, 8, 13, 16, 17] {
+        let x = Matrix::randn(b, w.cols, 1.0, &mut rng);
+        let all = || {
+            [
+                bcsr.matmul_xt(&x),
+                csr.matmul_xt(&x),
+                qbcsr.matmul_xt(&x),
+                nm.matmul_xt(&x),
+                packed.forward(&x),
+            ]
+        };
+        let fast = all();
+        let slow = with_isa(Isa::Generic, all);
+        for ((f, s), label) in fast.iter().zip(&slow).zip(labels) {
+            assert_eq!(f, s, "{label} b={b}: SIMD dispatch must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn batch_width_never_changes_a_columns_result() {
+    // The numerics-invariance contract the serve engine's lockstep
+    // bit-identity properties rest on: laning is across batch columns and
+    // each output element folds its nonzeros in index order, so a given
+    // input column's output is BIT-identical no matter how many other
+    // columns share the batch (and therefore which lane width covers it).
+    let mut rng = Rng::new(4242);
+    let (w, bcsr, qbcsr, csr, _nm_pruned, nm) = microkernel_fixtures(&mut rng);
+    let lr = LowRank {
+        u: Matrix::randn(96, 5, 0.3, &mut rng),
+        vt: Matrix::randn(5, 88, 0.3, &mut rng),
+    };
+    let spl = SparsePlusLowRank { sparse: Csr::from_dense(&w), low_rank: Some(lr) };
+    let packed = PackedLinear::from_spl(&spl, 9);
+    let x0: Vec<f32> = (0..w.cols).map(|i| (i as f32 * 0.37).sin()).collect();
+    let x1 = Matrix::from_vec(1, w.cols, x0.clone());
+    let base = [
+        bcsr.matmul_xt(&x1),
+        qbcsr.matmul_xt(&x1),
+        csr.matmul_xt(&x1),
+        nm.matmul_xt(&x1),
+        packed.forward(&x1),
+    ];
+    for b in 2..=17 {
+        let mut x = Matrix::randn(b, w.cols, 1.0, &mut rng);
+        x.row_mut(0).copy_from_slice(&x0);
+        let got = [
+            bcsr.matmul_xt(&x),
+            qbcsr.matmul_xt(&x),
+            csr.matmul_xt(&x),
+            nm.matmul_xt(&x),
+            packed.forward(&x),
+        ];
+        let labels = ["bcsr", "qbcsr", "csr", "nm", "fused"];
+        for ((g, want), label) in got.iter().zip(&base).zip(labels) {
+            assert_eq!(g.row(0), want.row(0), "{label}: batch width {b} changed column 0");
+        }
+    }
+}
+
+#[test]
+fn empty_tiles_and_rows_fuse_cleanly_with_low_rank() {
+    // An all-zero sparse term walked through the engine must still produce
+    // exactly the low-rank contribution (empty tiles/rows are skipped, the
+    // fused pass writes every output element once), across lane splits.
+    let mut rng = Rng::new(55);
+    let z = Matrix::zeros(128, 96);
+    let lr = LowRank {
+        u: Matrix::randn(128, 4, 0.5, &mut rng),
+        vt: Matrix::randn(4, 96, 0.5, &mut rng),
+    };
+    let spl = SparsePlusLowRank { sparse: Csr::from_dense(&z), low_rank: Some(lr.clone()) };
+    for b in [1usize, 7, 16] {
+        let x = Matrix::randn(b, 96, 1.0, &mut rng);
+        let mut want = Matrix::zeros(b, 128);
+        lr.apply_batch_accumulate(&x, &mut want);
+        assert_close(&format!("zero sparse + lr b={b}"), &spl.matmul_fused(&x), &want);
+    }
+    // And a partially-empty tiling: nonzeros confined to rows 0..8 of a
+    // 128-row matrix under 64-row tiles leaves whole row tiles empty.
+    let mut m = Matrix::zeros(128, 96);
+    for r in 0..8 {
+        for c in 0..96 {
+            if (r * 7 + c) % 3 == 0 {
+                *m.at_mut(r, c) = rng.normal();
+            }
+        }
+    }
+    let bc = Bcsr::from_dense_tiled(&m, 64, 64);
+    for b in [1usize, 9] {
+        let x = Matrix::randn(b, 96, 1.0, &mut rng);
+        assert_close(&format!("empty row tiles b={b}"), &bc.matmul_xt(&x), &matmul_bt(&x, &m));
+    }
 }
 
 #[test]

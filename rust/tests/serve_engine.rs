@@ -22,7 +22,6 @@ use oats::model::TransformerLM;
 use oats::util::prop::check;
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Instant;
 
 fn tiny() -> Arc<TransformerLM> {
     Arc::new(TransformerLM::init(&ModelConfig::preset("tiny").unwrap(), 0x5E4E))
@@ -59,7 +58,7 @@ fn drive(
         for (id, (at, prompt)) in arrivals.iter().enumerate() {
             if *at == step {
                 let prompt = prompt.clone();
-                queue.push(Request { id: id as u64, prompt, enqueued: Instant::now() });
+                queue.push(Request::new(id as u64, prompt));
             }
         }
         for ev in engine.step(&mut queue) {
@@ -303,6 +302,70 @@ fn mixed_length_load_beats_static_batching_occupancy() {
 }
 
 #[test]
+fn per_request_budgets_match_scalar_generate_under_arrivals() {
+    // Mixed per-request budgets through the continuous-batching engine:
+    // every request's output must equal scalar `generate` under its OWN
+    // resolved budget, and its status must follow that budget (a
+    // zero-budget request completes empty without a slot; a near-capacity
+    // prompt with a big budget is capacity-stopped).
+    let m = tiny();
+    let cap = m.cfg.seq_len;
+    check("per-request budgets == scalar generate", 10, |g| {
+        let default_gen = g.usize_range(1, 6);
+        let cfg = EngineConfig {
+            slots: g.usize_range(1, 4),
+            prefill_chunk: g.usize_range(1, 7),
+            gen_tokens: default_gen,
+            admission: if g.bool() {
+                AdmissionPolicy::Fcfs
+            } else {
+                AdmissionPolicy::ShortestPrompt
+            },
+            ..Default::default()
+        };
+        let n_req = g.usize_range(1, 7);
+        let arrivals: Vec<(usize, Vec<usize>, Option<usize>)> = (0..n_req)
+            .map(|_| {
+                let len = match g.usize_range(0, 8) {
+                    0 => 0,
+                    1 => cap - g.usize_range(0, 3),
+                    _ => g.usize_range(1, 15),
+                };
+                let prompt = (0..len).map(|_| g.usize_range(0, m.cfg.vocab)).collect();
+                let budget = if g.bool() { Some(g.usize_range(0, 9)) } else { None };
+                (g.usize_range(0, 5), prompt, budget)
+            })
+            .collect();
+        let mut engine = Engine::new(Arc::clone(&m), cfg);
+        let mut queue = Batcher::default();
+        let mut done: HashMap<u64, FinishedSeq> = HashMap::new();
+        let mut step = 0usize;
+        while done.len() < arrivals.len() {
+            assert!(step < 10_000, "engine stalled");
+            for (id, (at, prompt, budget)) in arrivals.iter().enumerate() {
+                if *at == step {
+                    let mut r = Request::new(id as u64, prompt.clone());
+                    r.gen_tokens = *budget;
+                    queue.push(r);
+                }
+            }
+            for ev in engine.step(&mut queue) {
+                if let SeqEvent::Finished(f) = ev {
+                    assert!(done.insert(f.id, f).is_none());
+                }
+            }
+            step += 1;
+        }
+        for (id, (_, prompt, budget)) in arrivals.iter().enumerate() {
+            let gen = budget.unwrap_or(default_gen);
+            let f = &done[&(id as u64)];
+            assert_eq!(f.status, expected_status(prompt.len(), gen, cap), "budget {budget:?}");
+            assert_eq!(f.tokens, generate(&m, prompt, gen), "budget {budget:?}");
+        }
+    });
+}
+
+#[test]
 fn late_arrivals_join_mid_flight() {
     // A request arriving while a long sequence decodes must be served
     // before that sequence finishes (the defining continuous-batching
@@ -317,12 +380,12 @@ fn late_arrivals_join_mid_flight() {
     };
     let mut engine = Engine::new(Arc::clone(&m), cfg);
     let mut queue = Batcher::default();
-    queue.push(Request { id: 0, prompt: vec![1, 2, 3], enqueued: Instant::now() });
+    queue.push(Request::new(0, vec![1, 2, 3]));
     // Step a few times so the long sequence is mid-decode, then inject.
     let mut finished_order = Vec::new();
     for step in 0..10_000 {
         if step == 3 {
-            queue.push(Request { id: 1, prompt: vec![4, 5], enqueued: Instant::now() });
+            queue.push(Request::new(1, vec![4, 5]));
         }
         for ev in engine.step(&mut queue) {
             if let SeqEvent::Finished(f) = ev {
