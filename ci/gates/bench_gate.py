@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Bench perf gate: fixed floors plus a rolling-median trend ratchet.
+
+Reads the ``BENCH_*.json`` files emitted by ``cargo bench --bench micro``
+(via ``OATS_BENCH_DIR``) and gates the csr->bcsr, bcsr->qbcsr, and
+SIMD-dispatch-vs-generic speedup comparisons.
+
+Two kinds of floors apply to every comparison:
+
+* **Fixed floors** (``FLOORS``): conservative "not catastrophically
+  regressed" bounds. Quick-mode timings on shared CI runners are noisy, so
+  these sit well below locally-measured speedups; the simd-vs-generic
+  floors sit below 1.0x because a host without AVX2 runs identical code on
+  both sides.
+* **Trend ratchet**: when ``ci/bench_history.jsonl`` carries history for a
+  comparison, the effective floor is raised to ``RATCHET_FRACTION`` x the
+  rolling median of the last ``HISTORY_WINDOW`` recorded ratios. A change
+  that halves a speedup the suite historically sustained fails even if it
+  still clears the fixed floor.
+
+Updating the history (maintainers, on a quiet machine)::
+
+    OATS_BENCH_DIR=bench-out cargo bench --bench micro
+    python3 ci/gates/bench_gate.py --bench-dir bench-out --append --note "$(hostname)"
+    git add ci/bench_history.jsonl   # commit alongside the perf change
+
+CI never appends — the committed history is the reference, so a PR that
+regresses performance cannot also lower its own bar.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from statistics import median
+
+# Fixed floors, keyed by comparison-label prefix.
+FLOORS = {
+    "bcsr_vs_csr": 0.7,
+    "qbcsr_vs_bcsr": 0.5,
+    "bcsr_simd_vs_generic": 0.7,
+    "fused_simd_vs_generic": 0.7,
+}
+
+# The ratchet trips at this fraction of the rolling median: loose enough to
+# absorb runner noise, tight enough to catch a halved speedup.
+RATCHET_FRACTION = 0.5
+HISTORY_WINDOW = 20
+
+DEFAULT_HISTORY = os.path.join(os.path.dirname(__file__), "..", "bench_history.jsonl")
+
+
+def load_comparisons(bench_dir):
+    """All (label, speedup) comparison rows across ``BENCH_*.json`` files."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            doc = json.load(f)
+        for c in doc.get("comparisons", []):
+            rows.append((c["label"], float(c["speedup"])))
+    return rows
+
+
+def read_history(path):
+    """History entries (one JSON object per line), oldest first."""
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                entries.append(json.loads(line))
+    return entries
+
+
+def history_ratios(entries, prefix):
+    """Recorded ratios for one comparison prefix, oldest first."""
+    return [e["ratios"][prefix] for e in entries if prefix in e.get("ratios", {})]
+
+
+def effective_floor(prefix, entries):
+    """Fixed floor raised by the rolling-median ratchet when history exists."""
+    floor = FLOORS[prefix]
+    ratios = history_ratios(entries, prefix)[-HISTORY_WINDOW:]
+    if ratios:
+        floor = max(floor, RATCHET_FRACTION * median(ratios))
+    return floor
+
+
+def gate(comparisons, entries):
+    """Apply the floors; returns (ok_lines, fail_lines, ratios_by_prefix)."""
+    ok, failed, ratios = [], [], {}
+    for label, speedup in comparisons:
+        for prefix in FLOORS:
+            if label.startswith(prefix):
+                ratios.setdefault(prefix, speedup)
+                floor = effective_floor(prefix, entries)
+                line = f"{label}: {speedup:.2f}x (floor {floor:.2f}x)"
+                (failed if speedup < floor else ok).append(line)
+    return ok, failed, ratios
+
+
+def append_history(path, ratios, note):
+    entry = {"ratios": ratios}
+    if note:
+        entry["note"] = note
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default="bench-out")
+    ap.add_argument("--history", default=os.path.normpath(DEFAULT_HISTORY))
+    ap.add_argument(
+        "--append",
+        action="store_true",
+        help="record this run's ratios into the history (local use only)",
+    )
+    ap.add_argument("--note", default="", help="free-form provenance for --append")
+    args = ap.parse_args(argv)
+
+    comparisons = load_comparisons(args.bench_dir)
+    entries = read_history(args.history)
+    ok, failed, ratios = gate(comparisons, entries)
+    if not ratios:
+        print(f"perf gate: no gated comparisons found in {args.bench_dir}", file=sys.stderr)
+        return 1
+    for line in ok:
+        print(f"ok  {line}")
+    print(f"perf gate: {len(ok) + len(failed)} comparisons checked against {len(entries)} history entries")
+    if failed:
+        print("perf gate failed:\n" + "\n".join(failed), file=sys.stderr)
+        return 1
+    if args.append:
+        append_history(args.history, ratios, args.note)
+        print(f"appended ratios for {sorted(ratios)} to {args.history}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Serve smoke gate: telemetry, paged-arena accounting, and prefix reuse.
+
+Reads the ``SERVE_*.json`` (schema ``oats-serve-v1``) files that
+``oats serve-load`` emits into ``$OATS_BENCH_DIR`` and applies three layers
+of checks:
+
+* **Per-run**: the engine actually served (tokens/s > 0), the
+  continuous-batching telemetry is present and consistent (joins == leaves
+  > 0, occupancies in (0, 1], ordered latency percentiles, the decode
+  workspace warmed), the non-Complete statuses were exercised (serve-load
+  always submits one oversized and one exactly-at-capacity prompt), and
+  the paged arena leaked zero pages at drain.
+* **Whole-vs-paged pair**: at equal ``kv_arena_bytes``, the paged arena
+  must decode wider than the whole-cache arena (peak decode batch).
+* **Shared-vs-unshared pair**: the ``--shared-prefix`` run must have
+  actually reused KV (``prefill_tokens_saved > 0``, ``shared_pages > 0``)
+  at equal ``kv_arena_bytes``, and its ``completions_digest`` must equal
+  the ``--no-share-prefix`` run's byte for byte — prefix sharing is an
+  optimization, never a behaviour.
+
+Runs are matched to roles by the tag embedded in the filename
+(``SERVE_<tag>.json``); the whole-cache run is the one carrying none of the
+special tags.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def check_run(name, doc):
+    """Per-run errors for one SERVE_*.json document."""
+    errs = []
+
+    def bad(msg):
+        errs.append(f"{name}: {msg}")
+
+    if doc.get("schema") != "oats-serve-v1":
+        bad(f"unexpected schema {doc.get('schema')!r}")
+        return errs
+    if doc["tokens_per_second"] <= 0:
+        bad(f"tokens_per_second {doc['tokens_per_second']} <= 0")
+    joins, leaves = doc["joins"], doc["leaves"]
+    if joins <= 0 or joins != leaves:
+        bad(f"bad join/leave telemetry {joins}/{leaves}")
+    if not 0 < doc["slot_occupancy"]["mean"] <= 1:
+        bad(f"slot occupancy {doc['slot_occupancy']['mean']} out of range")
+    if not 0 < doc["page_occupancy"]["mean"] <= 1:
+        bad(f"page occupancy {doc['page_occupancy']['mean']} out of range")
+    if doc["pages_in_use_at_drain"] != 0:
+        bad(f"{doc['pages_in_use_at_drain']} pages leaked at drain")
+    if doc["ws_buffer_allocs"] <= 0:
+        bad("decode workspace never warmed (ws_buffer_allocs == 0)")
+    capstop, trunc, requests = doc["capacity_stopped"], doc["truncated"], doc["requests"]
+    if capstop < 1 or trunc < 1:
+        bad(f"expected >=1 capacity-stopped and truncated, got {capstop}/{trunc}")
+    if capstop + trunc + joins < requests or capstop + trunc > requests:
+        bad(
+            f"inconsistent outcome counters capstop {capstop} + trunc {trunc} "
+            f"vs joins {joins}, requests {requests}"
+        )
+    lat = doc["latency_s"]
+    missing = [q for q in ("p50", "p95", "p99") if q not in lat]
+    if missing:
+        bad(f"latency missing {missing}")
+    elif not lat["p50"] <= lat["p95"] <= lat["p99"]:
+        bad(f"unordered percentiles {lat}")
+    return errs
+
+
+def check_paged_pair(whole, paged):
+    """Whole-cache vs paged arena: equal bytes, wider decode."""
+    errs = []
+    if whole["kv_arena_bytes"] != paged["kv_arena_bytes"]:
+        errs.append(
+            f"arena bytes differ ({whole['kv_arena_bytes']} vs {paged['kv_arena_bytes']}) "
+            f"— the concurrency comparison must hold KV bytes equal"
+        )
+        return errs
+    w_peak, p_peak = whole["decode_batch"]["max"], paged["decode_batch"]["max"]
+    if p_peak <= w_peak:
+        errs.append(
+            f"paged arena must decode wider at equal bytes "
+            f"(peak {p_peak} vs whole-cache {w_peak})"
+        )
+    return errs
+
+
+def check_shared_pair(shared, noshare):
+    """Shared-prefix vs opted-out run over the same workload and bytes."""
+    errs = []
+    if shared["kv_arena_bytes"] != noshare["kv_arena_bytes"]:
+        errs.append(
+            f"shared/unshared arena bytes differ "
+            f"({shared['kv_arena_bytes']} vs {noshare['kv_arena_bytes']})"
+        )
+    if shared["prefill_tokens_saved"] <= 0:
+        errs.append("shared-prefix run saved no prefill tokens")
+    if shared["shared_pages"] <= 0:
+        errs.append("shared-prefix run mapped no shared pages")
+    if noshare["prefill_tokens_saved"] != 0 or noshare["shared_pages"] != 0:
+        errs.append(
+            f"opted-out run reused KV anyway "
+            f"(saved {noshare['prefill_tokens_saved']}, pages {noshare['shared_pages']})"
+        )
+    ds, du = shared["completions_digest"], noshare["completions_digest"]
+    if ds != du:
+        errs.append(f"completions digests differ: shared {ds} vs unshared {du}")
+    if ds == "0" * 16:
+        errs.append("completions digest was never computed")
+    return errs
+
+
+def load_runs(serve_dir):
+    """{filename: parsed doc} for every SERVE_*.json, sorted by name."""
+    runs = {}
+    for path in sorted(glob.glob(os.path.join(serve_dir, "SERVE_*.json"))):
+        with open(path) as f:
+            runs[os.path.basename(path)] = json.load(f)
+    return runs
+
+
+def pick(runs, tag):
+    return next((d for name, d in runs.items() if tag in name), None)
+
+
+def gate(runs, paged_tag, shared_tag, noshare_tag, require_shared):
+    """All errors across per-run and pair checks; empty means pass."""
+    errs = []
+    for name, doc in runs.items():
+        errs.extend(check_run(name, doc))
+    special = (paged_tag, shared_tag, noshare_tag)
+    whole = next(
+        (d for name, d in runs.items() if not any(t in name for t in special)), None
+    )
+    paged = pick(runs, paged_tag)
+    if whole is None or paged is None:
+        errs.append("missing whole-cache or paged run")
+    else:
+        errs.extend(check_paged_pair(whole, paged))
+    shared, noshare = pick(runs, shared_tag), pick(runs, noshare_tag)
+    if shared is not None and noshare is not None:
+        errs.extend(check_shared_pair(shared, noshare))
+    elif require_shared:
+        errs.append(f"missing {shared_tag} or {noshare_tag} run")
+    return errs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--serve-dir", default="serve-out")
+    ap.add_argument("--paged-tag", default="tiny_paged")
+    ap.add_argument("--shared-tag", default="tiny_shared")
+    ap.add_argument("--noshare-tag", default="tiny_noshare")
+    ap.add_argument(
+        "--require-shared",
+        action="store_true",
+        help="fail when the shared/unshared A/B pair is absent (CI sets this)",
+    )
+    args = ap.parse_args(argv)
+
+    runs = load_runs(args.serve_dir)
+    if not runs:
+        print(f"serve gate: no SERVE_*.json in {args.serve_dir}", file=sys.stderr)
+        return 1
+    errs = gate(runs, args.paged_tag, args.shared_tag, args.noshare_tag, args.require_shared)
+    for name, doc in runs.items():
+        print(
+            f"run {name}: {doc.get('tokens_per_second', 0):.1f} tok/s, "
+            f"joins {doc.get('joins')}, truncated {doc.get('truncated')}, "
+            f"capacity-stopped {doc.get('capacity_stopped')}, "
+            f"prefill saved {doc.get('prefill_tokens_saved')}, "
+            f"shared pages {doc.get('shared_pages')}, "
+            f"cow forks {doc.get('cow_forks')}"
+        )
+    print(f"serve gate: {len(runs)} runs checked")
+    if errs:
+        print("serve gate failed:\n" + "\n".join(errs), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,231 @@
+"""Unit tests for the CI gate scripts in ci/gates/.
+
+The gates used to live as heredocs inside the workflow YAML, where nothing
+exercised them until a real CI run tripped (or silently failed to trip).
+These tests drive both scripts against synthetic pass/fail JSON fixtures so
+a broken gate fails the ordinary pytest job. Dependency-free by design —
+they must run on runners without JAX.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "ci" / "gates"))
+
+import bench_gate  # noqa: E402
+import serve_gate  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# bench_gate
+# ---------------------------------------------------------------------------
+
+
+def write_bench(dirpath, comparisons):
+    doc = {"comparisons": [{"label": l, "speedup": s} for l, s in comparisons]}
+    (dirpath / "BENCH_micro.json").write_text(json.dumps(doc))
+
+
+GOOD_COMPARISONS = [
+    ("bcsr_vs_csr(tiny)", 1.3),
+    ("qbcsr_vs_bcsr(tiny)", 0.9),
+    ("bcsr_simd_vs_generic(tiny)", 1.2),
+    ("fused_simd_vs_generic(tiny)", 1.1),
+]
+
+
+def test_bench_gate_passes_good_run(tmp_path):
+    write_bench(tmp_path, GOOD_COMPARISONS)
+    assert bench_gate.main(["--bench-dir", str(tmp_path), "--history", str(tmp_path / "h.jsonl")]) == 0
+
+
+def test_bench_gate_fails_below_fixed_floor(tmp_path):
+    write_bench(tmp_path, [("bcsr_vs_csr(tiny)", 0.4)])
+    assert bench_gate.main(["--bench-dir", str(tmp_path), "--history", str(tmp_path / "h.jsonl")]) == 1
+
+
+def test_bench_gate_fails_when_no_comparisons_found(tmp_path):
+    write_bench(tmp_path, [("unrelated_label", 2.0)])
+    assert bench_gate.main(["--bench-dir", str(tmp_path), "--history", str(tmp_path / "h.jsonl")]) == 1
+
+
+def test_ratchet_raises_floor_above_fixed():
+    # History sustains 2.0x: the effective floor becomes 1.0x (0.5 x median),
+    # above the 0.7x fixed floor, so a run at 0.8x now fails.
+    entries = [{"ratios": {"bcsr_vs_csr": 2.0}} for _ in range(5)]
+    floor = bench_gate.effective_floor("bcsr_vs_csr", entries)
+    assert floor == pytest.approx(1.0)
+    ok, failed, _ = bench_gate.gate([("bcsr_vs_csr(tiny)", 0.8)], entries)
+    assert not ok and len(failed) == 1
+
+
+def test_ratchet_never_lowers_fixed_floor():
+    # A history of terrible ratios must not relax the fixed floor.
+    entries = [{"ratios": {"bcsr_vs_csr": 0.2}} for _ in range(5)]
+    assert bench_gate.effective_floor("bcsr_vs_csr", entries) == bench_gate.FLOORS["bcsr_vs_csr"]
+
+
+def test_ratchet_uses_rolling_window():
+    # Ancient fast history beyond the window must age out.
+    entries = [{"ratios": {"bcsr_vs_csr": 4.0}}] * 5 + [
+        {"ratios": {"bcsr_vs_csr": 1.0}}
+    ] * bench_gate.HISTORY_WINDOW
+    assert bench_gate.effective_floor("bcsr_vs_csr", entries) == pytest.approx(0.7)
+
+
+def test_append_records_ratios_and_feeds_next_run(tmp_path):
+    write_bench(tmp_path, GOOD_COMPARISONS)
+    hist = tmp_path / "h.jsonl"
+    rc = bench_gate.main(
+        ["--bench-dir", str(tmp_path), "--history", str(hist), "--append", "--note", "unit"]
+    )
+    assert rc == 0
+    entries = bench_gate.read_history(hist)
+    assert len(entries) == 1
+    assert entries[0]["ratios"]["bcsr_vs_csr"] == pytest.approx(1.3)
+    assert entries[0]["note"] == "unit"
+    # The appended entry participates in the next gate's ratchet.
+    assert bench_gate.effective_floor("bcsr_vs_csr", entries) == pytest.approx(0.7)
+
+
+def test_committed_history_parses_and_covers_all_floors():
+    entries = bench_gate.read_history(REPO / "ci" / "bench_history.jsonl")
+    assert entries, "committed bench history is empty"
+    for prefix in bench_gate.FLOORS:
+        assert bench_gate.history_ratios(entries, prefix), f"no history for {prefix}"
+        # Seeds are modest: the fixed floors must still dominate, so CI
+        # behaviour is unchanged until maintainers record faster history.
+        assert bench_gate.effective_floor(prefix, entries) == bench_gate.FLOORS[prefix]
+
+
+# ---------------------------------------------------------------------------
+# serve_gate
+# ---------------------------------------------------------------------------
+
+
+def serve_doc(**overrides):
+    doc = {
+        "schema": "oats-serve-v1",
+        "tokens_per_second": 120.0,
+        "joins": 22,
+        "leaves": 22,
+        "requests": 24,
+        "truncated": 1,
+        "capacity_stopped": 1,
+        "slot_occupancy": {"mean": 0.8},
+        "page_occupancy": {"mean": 0.7},
+        "pages_in_use_at_drain": 0,
+        "ws_buffer_allocs": 9,
+        "kv_arena_bytes": 1 << 20,
+        "decode_batch": {"max": 4.0},
+        "latency_s": {"p50": 0.01, "p95": 0.02, "p99": 0.03},
+        "prefill_tokens_saved": 0,
+        "shared_pages": 0,
+        "cow_forks": 0,
+        "completions_digest": "00c0ffee00c0ffee",
+    }
+    doc.update(overrides)
+    return doc
+
+
+def full_fleet():
+    """A passing four-run fleet: whole, paged, shared, noshare."""
+    return {
+        "SERVE_tiny.json": serve_doc(decode_batch={"max": 3.0}),
+        "SERVE_tiny_paged.json": serve_doc(decode_batch={"max": 6.0}),
+        "SERVE_tiny_shared.json": serve_doc(
+            prefill_tokens_saved=160, shared_pages=12, cow_forks=2
+        ),
+        "SERVE_tiny_noshare.json": serve_doc(),
+    }
+
+
+def run_gate(runs, require_shared=True):
+    return serve_gate.gate(runs, "tiny_paged", "tiny_shared", "tiny_noshare", require_shared)
+
+
+def test_serve_gate_passes_full_fleet():
+    assert run_gate(full_fleet()) == []
+
+
+def test_serve_gate_catches_page_leak():
+    runs = full_fleet()
+    runs["SERVE_tiny_paged.json"]["pages_in_use_at_drain"] = 3
+    assert any("leaked at drain" in e for e in run_gate(runs))
+
+
+def test_serve_gate_catches_narrow_paged_decode():
+    runs = full_fleet()
+    runs["SERVE_tiny_paged.json"]["decode_batch"] = {"max": 2.0}
+    assert any("decode wider" in e for e in run_gate(runs))
+
+
+def test_serve_gate_catches_unequal_arena_bytes():
+    runs = full_fleet()
+    runs["SERVE_tiny_paged.json"]["kv_arena_bytes"] = 1 << 19
+    assert any("arena bytes" in e for e in run_gate(runs))
+
+
+def test_serve_gate_requires_actual_prefix_reuse():
+    runs = full_fleet()
+    runs["SERVE_tiny_shared.json"]["prefill_tokens_saved"] = 0
+    assert any("saved no prefill" in e for e in run_gate(runs))
+    runs = full_fleet()
+    runs["SERVE_tiny_shared.json"]["shared_pages"] = 0
+    assert any("no shared pages" in e for e in run_gate(runs))
+
+
+def test_serve_gate_requires_digest_equality():
+    runs = full_fleet()
+    runs["SERVE_tiny_shared.json"]["completions_digest"] = "deadbeefdeadbeef"
+    assert any("digests differ" in e for e in run_gate(runs))
+
+
+def test_serve_gate_rejects_uncomputed_digest():
+    runs = full_fleet()
+    for name in ("SERVE_tiny_shared.json", "SERVE_tiny_noshare.json"):
+        runs[name]["completions_digest"] = "0" * 16
+    assert any("never computed" in e for e in run_gate(runs))
+
+
+def test_serve_gate_rejects_reuse_in_opted_out_run():
+    runs = full_fleet()
+    runs["SERVE_tiny_noshare.json"]["shared_pages"] = 4
+    assert any("opted-out run reused" in e for e in run_gate(runs))
+
+
+def test_serve_gate_missing_shared_pair_only_fails_when_required():
+    runs = {k: v for k, v in full_fleet().items() if "shared" not in k and "noshare" not in k}
+    assert any("missing tiny_shared" in e for e in run_gate(runs, require_shared=True))
+    assert run_gate(runs, require_shared=False) == []
+
+
+def test_serve_gate_per_run_checks_still_bite():
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["joins"] = 0
+    assert any("join/leave" in e for e in run_gate(runs))
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["capacity_stopped"] = 0
+    assert any("capacity-stopped" in e for e in run_gate(runs))
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["latency_s"] = {"p50": 0.03, "p95": 0.02, "p99": 0.03}
+    assert any("unordered percentiles" in e for e in run_gate(runs))
+
+
+def test_serve_gate_end_to_end_on_disk(tmp_path, capsys):
+    serve_dir = tmp_path / "serve-out"
+    serve_dir.mkdir()
+    for name, doc in full_fleet().items():
+        (serve_dir / name).write_text(json.dumps(doc))
+    rc = serve_gate.main(["--serve-dir", str(serve_dir), "--require-shared"])
+    assert rc == 0
+    assert "4 runs checked" in capsys.readouterr().out
+
+    (serve_dir / "SERVE_tiny_shared.json").write_text(
+        json.dumps(serve_doc(prefill_tokens_saved=0, shared_pages=0))
+    )
+    assert serve_gate.main(["--serve-dir", str(serve_dir), "--require-shared"]) == 1

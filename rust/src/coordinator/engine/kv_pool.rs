@@ -12,11 +12,26 @@
 //! as the sequence grows and all returned to the free list at retirement.
 //!
 //! The reservation is what makes mid-flight growth deadlock-free:
-//! admission only succeeds while `Σ reservations ≤ total pages`, and a
-//! resident sequence never holds more pages than it reserved, so
-//! `free pages = total − Σ held ≥ Σ reserved − Σ held ≥ reserved_i −
-//! held_i ≥ 1` whenever sequence *i* needs its next page — an acquired
-//! slot can always run to retirement without waiting on another sequence.
+//! admission only succeeds while `Σ reservations ≤ total pages − shared`,
+//! and a resident sequence never *owns* more pages than it reserved, so
+//! `free pages = total − shared − Σ owned ≥ Σ reserved − Σ owned ≥
+//! reserved_i − owned_i ≥ 1` whenever sequence *i* needs its next page —
+//! an acquired slot can always run to retirement without waiting on
+//! another sequence.
+//!
+//! **Shared prefix pages.** A filled prefix page can be converted from
+//! owned to *shared* ([`KvPool::share_page`]): the page leaves its
+//! sequence's ownership (and reservation — both sides of the invariant
+//! shrink by one, keeping it intact) and becomes a refcounted [`Arc`]
+//! held by the prefix index and mapped read-only into any number of
+//! joiners ([`KvPool::attach_shared`], no reservation cost — the page is
+//! already paid for pool-wide via `shared_alive`). A joiner that must
+//! write inside a shared page forks it first ([`KvPool::fork_page`]):
+//! one page off the free list, covered by the joiner's own reservation,
+//! carrying a copy of the shared rows. Shared pages return to the free
+//! list only through [`KvPool::reclaim_shared`] once the index holds the
+//! last reference. Conservation therefore reads
+//! `free + Σ owned + shared_alive == total`.
 //!
 //! Slots hand out plain `usize` indices; the pool tracks which are in use
 //! and panics on double-release, on touching a slot that was never
@@ -30,6 +45,7 @@
 
 use crate::config::ModelConfig;
 use crate::model::{KvCache, KvPage};
+use std::sync::Arc;
 
 /// Fixed-size paged arena of reusable KV storage.
 pub struct KvPool {
@@ -39,8 +55,12 @@ pub struct KvPool {
     free_pages: Vec<KvPage>,
     total_pages: usize,
     page_size: usize,
+    page_bytes: usize,
     reserved: Vec<usize>,
     reserved_total: usize,
+    /// Pages converted to shared prefix views: off the free list, owned by
+    /// no slot, alive until [`KvPool::reclaim_shared`].
+    shared_alive: usize,
 }
 
 impl KvPool {
@@ -61,15 +81,19 @@ impl KvPool {
             pages >= per_seq,
             "KV pool needs at least {per_seq} pages of {page_size} (one full sequence)"
         );
+        let free_pages: Vec<KvPage> = (0..pages).map(|_| KvPage::new(cfg, page_size)).collect();
+        let page_bytes = free_pages[0].memory_bytes();
         KvPool {
             caches: (0..slots).map(|_| KvCache::paged(cfg, page_size)).collect(),
             in_use: vec![false; slots],
             free: (0..slots).rev().collect(),
-            free_pages: (0..pages).map(|_| KvPage::new(cfg, page_size)).collect(),
+            free_pages,
             total_pages: pages,
             page_size,
+            page_bytes,
             reserved: vec![0; slots],
             reserved_total: 0,
+            shared_alive: 0,
         }
     }
 
@@ -103,12 +127,18 @@ impl KvPool {
         self.free_pages.len()
     }
 
-    /// Pages attached to resident sequences.
+    /// Pages off the free list: owned by resident sequences or alive as
+    /// shared prefix views.
     pub fn pages_held(&self) -> usize {
         self.total_pages - self.free_pages.len()
     }
 
-    /// Pages promised to resident sequences (held + not yet attached).
+    /// Pages currently alive as shared prefix views.
+    pub fn pages_shared(&self) -> usize {
+        self.shared_alive
+    }
+
+    /// Pages promised to resident sequences (owned + not yet attached).
     pub fn pages_reserved(&self) -> usize {
         self.reserved_total
     }
@@ -118,17 +148,20 @@ impl KvPool {
         positions.max(1).div_ceil(self.page_size)
     }
 
-    /// Whether a joiner reserving `need` pages can be admitted now: a free
-    /// slot plus unreserved page headroom.
+    /// Whether a joiner reserving `need` owned pages can be admitted now:
+    /// a free slot plus unreserved headroom among the non-shared pages.
     pub fn can_admit(&self, need: usize) -> bool {
-        !self.free.is_empty() && self.total_pages - self.reserved_total >= need
+        !self.free.is_empty()
+            && self.total_pages - self.shared_alive - self.reserved_total >= need
     }
 
     /// Resident KV memory of the whole arena in bytes (constant for the
-    /// pool's lifetime — this is the "bounded by config" number).
+    /// pool's lifetime — this is the "bounded by config" number). Shared
+    /// pages are billed here exactly once, however many sequences map them.
     pub fn memory_bytes(&self) -> usize {
         self.caches.iter().map(KvCache::memory_bytes).sum::<usize>()
             + self.free_pages.iter().map(KvPage::memory_bytes).sum::<usize>()
+            + self.shared_alive * self.page_bytes
     }
 
     /// Take a free slot and reserve `reserve_pages` pages for its whole
@@ -141,7 +174,7 @@ impl KvPool {
             "reservation of {reserve_pages} pages outside 1..={}",
             self.total_pages
         );
-        if self.total_pages - self.reserved_total < reserve_pages {
+        if self.total_pages - self.shared_alive - self.reserved_total < reserve_pages {
             return None;
         }
         let idx = self.free.pop()?;
@@ -161,12 +194,78 @@ impl KvPool {
     pub fn acquire_page(&mut self, idx: usize) {
         assert!(self.in_use[idx], "KV slot {idx} not acquired");
         assert!(
-            self.caches[idx].pages_held() < self.reserved[idx],
+            self.caches[idx].owned_pages_held() < self.reserved[idx],
             "KV slot {idx} exceeding its reservation of {} pages",
             self.reserved[idx]
         );
         let page = self.free_pages.pop().expect("free pages despite reservation headroom");
         self.caches[idx].push_page(page);
+    }
+
+    /// Map an existing shared prefix page into slot `idx`'s page table
+    /// (read-only). Costs no reservation and touches no free list — the
+    /// page is already accounted for in `shared_alive`.
+    pub fn attach_shared(&mut self, idx: usize, page: Arc<KvPage>) {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        self.caches[idx].push_shared(page);
+    }
+
+    /// Convert slot `idx`'s owned page `page_idx` into a shared prefix
+    /// view and return the refcounted handle (for the prefix index). The
+    /// page leaves the slot's ownership *and* its reservation: both sides
+    /// of `Σ reserved ≤ total − shared` drop by one, so the deadlock-
+    /// freedom invariant is preserved, and the slot's remaining pulls
+    /// (`reserved − owned`) are unchanged.
+    pub fn share_page(&mut self, idx: usize, page_idx: usize) -> Arc<KvPage> {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        assert!(
+            !self.caches[idx].page_is_shared(page_idx),
+            "KV slot {idx} page {page_idx} is already shared"
+        );
+        let arc = self.caches[idx].share_page(page_idx);
+        self.shared_alive += 1;
+        self.reserved[idx] -= 1;
+        self.reserved_total -= 1;
+        arc
+    }
+
+    /// Copy-on-write: fork slot `idx`'s shared page `page_idx` into a
+    /// fresh owned page off the free list (covered by the slot's own
+    /// reservation), copying the shared rows. The shared original is
+    /// unaffected; this slot's reference to it is dropped.
+    pub fn fork_page(&mut self, idx: usize, page_idx: usize) {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        assert!(
+            self.caches[idx].owned_pages_held() < self.reserved[idx],
+            "KV slot {idx} forking past its reservation of {} pages",
+            self.reserved[idx]
+        );
+        let fresh = self.free_pages.pop().expect("free pages despite reservation headroom");
+        self.caches[idx].fork_page(page_idx, fresh);
+    }
+
+    /// Return a shared page to the free list. The caller (the prefix
+    /// index) must hold the last reference — reclaiming a page some
+    /// sequence still maps would corrupt its history, so that is a panic,
+    /// not a recoverable condition.
+    pub fn reclaim_shared(&mut self, page: Arc<KvPage>) {
+        let page = Arc::try_unwrap(page)
+            .unwrap_or_else(|_| panic!("reclaiming a shared KV page that is still mapped"));
+        self.shared_alive -= 1;
+        self.free_pages.push(page);
+    }
+
+    /// Fast-forward slot `idx`'s cache to `len` positions — the prefix-
+    /// reuse admission step after attaching shared pages, whose KV rows
+    /// already hold the prefix (re-prefilling them is the work being
+    /// skipped). Every skipped position must have a backing page.
+    pub fn resume_at(&mut self, idx: usize, len: usize) {
+        assert!(self.in_use[idx], "KV slot {idx} not acquired");
+        assert!(
+            len <= self.caches[idx].pages_held() * self.page_size,
+            "KV slot {idx} resuming at {len} beyond its attached pages"
+        );
+        self.caches[idx].len = len;
     }
 
     /// Attach a page to `idx` iff its next written position has no backing
@@ -348,6 +447,76 @@ mod tests {
     }
 
     #[test]
+    fn share_fork_reclaim_roundtrip() {
+        // seq_len 64, page_size 16 → 4 pages per full sequence.
+        let mut p = KvPool::with_pages(&cfg(), 3, 16, 12);
+        let bytes = p.memory_bytes();
+        let donor = p.acquire(4).unwrap();
+        p.acquire_page(donor);
+        p.acquire_page(donor);
+        // Publish the first page: it leaves the donor's ownership AND its
+        // reservation, freeing that headroom for other joiners.
+        let reserved_before = p.pages_reserved();
+        let page = p.share_page(donor, 0);
+        assert_eq!(p.pages_shared(), 1);
+        assert_eq!(p.pages_reserved(), reserved_before - 1);
+        assert_eq!(p.memory_bytes(), bytes, "sharing must not change arena bytes");
+
+        // A joiner maps it for free and forks when it must write.
+        let joiner = p.acquire(2).unwrap();
+        p.attach_shared(joiner, Arc::clone(&page));
+        assert_eq!(p.cache(joiner).shared_pages_held(), 1);
+        let free_before = p.pages_free();
+        p.fork_page(joiner, 0);
+        assert_eq!(p.pages_free(), free_before - 1, "fork consumes one free page");
+        assert_eq!(p.cache(joiner).owned_pages_held(), 1);
+        assert_eq!(p.memory_bytes(), bytes);
+
+        // Releases drop references; the index (this test) holds the last
+        // one, and reclaiming returns the page to the free list.
+        p.release(donor);
+        p.release(joiner);
+        assert_eq!(Arc::strong_count(&page), 1);
+        assert_eq!(p.pages_free(), 11);
+        p.reclaim_shared(page);
+        assert_eq!(p.pages_shared(), 0);
+        assert_eq!(p.pages_free(), 12, "all pages home after reclaim");
+        assert_eq!(p.memory_bytes(), bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "still mapped")]
+    fn reclaiming_a_mapped_page_panics() {
+        let mut p = KvPool::with_pages(&cfg(), 2, 16, 8);
+        let donor = p.acquire(2).unwrap();
+        p.acquire_page(donor);
+        let page = p.share_page(donor, 0);
+        // The donor still maps the page: the index may not reclaim it.
+        p.reclaim_shared(page);
+    }
+
+    #[test]
+    fn shared_pages_gate_admission_headroom() {
+        // 8 pages; a 4-page resident plus 2 shared pages leaves headroom
+        // for a 2-page joiner but not a 3-page one.
+        let mut p = KvPool::with_pages(&cfg(), 4, 16, 8);
+        let donor = p.acquire(4).unwrap();
+        for _ in 0..4 {
+            p.acquire_page(donor);
+        }
+        let s0 = p.share_page(donor, 0);
+        let s1 = p.share_page(donor, 1);
+        assert_eq!(p.pages_reserved(), 2, "sharing shrank the reservation");
+        assert_eq!(p.pages_shared(), 2);
+        assert!(p.can_admit(4), "8 − 2 shared − 2 reserved = 4");
+        assert!(!p.can_admit(5));
+        p.release(donor);
+        p.reclaim_shared(s0);
+        p.reclaim_shared(s1);
+        assert!(p.can_admit(8));
+    }
+
+    #[test]
     fn acquire_release_conserves_slots_and_pages_prop() {
         check("kv pool conserves slots and pages", 50, |g| {
             let c = cfg();
@@ -357,8 +526,11 @@ mod tests {
             let total = per_seq + g.usize_range(0, 2 * per_seq * slots);
             let mut p = KvPool::with_pages(&c, slots, page_size, total);
             let mut held: Vec<usize> = Vec::new();
-            for _ in 0..40 {
-                match g.usize_range(0, 3) {
+            // Simulates the prefix index: the out-of-slot holders of
+            // shared pages.
+            let mut index: Vec<Arc<KvPage>> = Vec::new();
+            for _ in 0..60 {
+                match g.usize_range(0, 6) {
                     0 => {
                         let want = g.usize_range(1, per_seq + 1);
                         let admissible = p.can_admit(want);
@@ -376,13 +548,60 @@ mod tests {
                     1 => {
                         if !held.is_empty() {
                             let idx = held[g.usize_range(0, held.len())];
-                            if p.cache(idx).pages_held() < p.reserved[idx] {
+                            if p.cache(idx).owned_pages_held() < p.reserved[idx] {
                                 p.acquire_page(idx);
                             }
                         }
                     }
-                    _ => {
+                    2 => {
+                        // Publish: convert the first still-owned page of
+                        // some resident (sharing proceeds front to back,
+                        // like prefix publication).
                         if !held.is_empty() {
+                            let idx = held[g.usize_range(0, held.len())];
+                            let first_owned = p.cache(idx).shared_pages_held();
+                            if first_owned < p.cache(idx).pages_held()
+                                && !p.cache(idx).page_is_shared(first_owned)
+                            {
+                                index.push(p.share_page(idx, first_owned));
+                            }
+                        }
+                    }
+                    3 => {
+                        // Map a published page into a fresh (pageless)
+                        // resident.
+                        if !held.is_empty() && !index.is_empty() {
+                            let idx = held[g.usize_range(0, held.len())];
+                            let page = &index[g.usize_range(0, index.len())];
+                            if p.cache(idx).pages_held() == 0 {
+                                p.attach_shared(idx, Arc::clone(page));
+                            }
+                        }
+                    }
+                    4 => {
+                        // CoW fork of some mapped shared page, reservation
+                        // permitting.
+                        if !held.is_empty() {
+                            let idx = held[g.usize_range(0, held.len())];
+                            let cache = p.cache(idx);
+                            let shared_at = (0..cache.pages_held())
+                                .find(|&i| cache.page_is_shared(i));
+                            if let Some(i) = shared_at {
+                                if cache.owned_pages_held() < p.reserved[idx] {
+                                    p.fork_page(idx, i);
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        if g.bool() && !index.is_empty() {
+                            // Index eviction: only sole-referenced pages
+                            // may be reclaimed.
+                            let i = g.usize_range(0, index.len());
+                            if Arc::strong_count(&index[i]) == 1 {
+                                p.reclaim_shared(index.swap_remove(i));
+                            }
+                        } else if !held.is_empty() {
                             let i = g.usize_range(0, held.len());
                             p.release(held.swap_remove(i));
                         }
@@ -390,15 +609,33 @@ mod tests {
                 }
                 assert_eq!(p.occupied(), held.len());
                 assert_eq!(p.available() + p.occupied(), slots);
-                assert_eq!(p.pages_free() + p.pages_held(), total, "pages leaked");
-                assert!(p.pages_held() <= p.pages_reserved(), "held past reservation");
-                assert!(p.pages_reserved() <= total, "over-reserved");
+                let owned: usize =
+                    held.iter().map(|&i| p.cache(i).owned_pages_held()).sum();
+                assert_eq!(
+                    p.pages_free() + owned + p.pages_shared(),
+                    total,
+                    "pages leaked"
+                );
+                assert_eq!(p.pages_shared(), index.len(), "index out of sync");
+                assert!(
+                    held.iter().all(|&i| p.cache(i).owned_pages_held() <= p.reserved[i]),
+                    "owned past reservation"
+                );
+                assert!(
+                    p.pages_reserved() + p.pages_shared() <= total,
+                    "over-reserved against shared headroom"
+                );
             }
             for idx in held {
                 p.release(idx);
             }
+            for page in index {
+                assert_eq!(Arc::strong_count(&page), 1, "drain left a mapping alive");
+                p.reclaim_shared(page);
+            }
             assert_eq!(p.pages_free(), total, "pages leaked after full drain");
             assert_eq!(p.pages_reserved(), 0);
+            assert_eq!(p.pages_shared(), 0);
         });
     }
 }

@@ -46,9 +46,11 @@
 //! [`generate_lockstep`]: crate::coordinator::serve::generate_lockstep
 
 pub mod kv_pool;
+pub mod prefix;
 pub mod sched;
 
 pub use kv_pool::KvPool;
+pub use prefix::PrefixIndex;
 pub use sched::{AdmissionPolicy, Batcher, Request, ResponseStatus, Sequence};
 
 use crate::model::TransformerLM;
@@ -161,6 +163,16 @@ pub struct EngineTelemetry {
     /// (lifetime total). Flat across steps once shapes have been seen —
     /// the "decode no longer allocates xt/out per call" regression check.
     pub ws_buffer_allocs: usize,
+    /// Prompt tokens admission skipped because their KV already existed as
+    /// shared prefix pages (lifetime total) — the work shared-prefix reuse
+    /// saves.
+    pub prefill_tokens_saved: usize,
+    /// Shared prefix pages mapped into joiners at admission (lifetime
+    /// total of mappings, not distinct pages).
+    pub shared_pages: usize,
+    /// Copy-on-write forks: writes that landed inside a shared page and
+    /// had to copy it into sequence-owned storage first (lifetime total).
+    pub cow_forks: usize,
 }
 
 impl EngineTelemetry {
@@ -189,6 +201,9 @@ struct StepCounts {
     truncated: usize,
     capacity_stopped: usize,
     leaves: usize,
+    prefill_tokens_saved: usize,
+    shared_pages: usize,
+    cow_forks: usize,
 }
 
 impl StepCounts {
@@ -197,6 +212,9 @@ impl StepCounts {
         self.truncated += other.truncated;
         self.capacity_stopped += other.capacity_stopped;
         self.leaves += other.leaves;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.shared_pages += other.shared_pages;
+        self.cow_forks += other.cow_forks;
     }
 }
 
@@ -209,6 +227,9 @@ pub struct Engine {
     cfg: EngineConfig,
     pool: KvPool,
     seqs: Vec<Sequence>,
+    /// Published prompt pages, keyed by token prefix — what shared-prefix
+    /// admission matches against. Flushed back to the pool at full drain.
+    prefix: PrefixIndex,
     /// Recycled kernel/decode buffers, kept across steps so the decode
     /// loop stops paying per-call `transpose()`/`zeros` allocations.
     ws: Workspace,
@@ -233,7 +254,15 @@ impl Engine {
             kv_bytes: pool.memory_bytes(),
             ..Default::default()
         }));
-        Engine { model, cfg, pool, seqs: Vec::new(), ws: Workspace::new(), telemetry }
+        Engine {
+            model,
+            cfg,
+            pool,
+            seqs: Vec::new(),
+            prefix: PrefixIndex::new(page_size),
+            ws: Workspace::new(),
+            telemetry,
+        }
     }
 
     /// Shared handle to the telemetry (updated once per step).
@@ -303,16 +332,65 @@ impl Engine {
         // zero-budget requests were all answered slot-free above, so this
         // is never reached with a resolved budget of 0.)
         let worst_case = |r: &Request| (r.prompt.len() + r.budget(gen).max(1) - 1).min(cap);
+        let ps = self.pool.page_size();
         while self.pool.available() > 0 {
             let pool = &self.pool;
-            let fits = |r: &Request| pool.can_admit(pool.pages_for(worst_case(r)));
+            let prefix = &self.prefix;
+            // Owned pages a joiner must reserve: its worst case minus the
+            // leading pages the prefix index already holds, plus one spare
+            // when the whole prompt is covered (the last prompt token is
+            // always recomputed for its logits, and that write lands inside
+            // the last shared page — a guaranteed copy-on-write fork).
+            let need_owned = |r: &Request| {
+                let total = pool.pages_for(worst_case(r));
+                if !r.share_prefix {
+                    return total;
+                }
+                let n_shared = prefix.match_prefix(&r.prompt).len();
+                let fork = n_shared > 0 && n_shared * ps == r.prompt.len();
+                total - n_shared + fork as usize
+            };
+            let fits = |r: &Request| pool.can_admit(need_owned(r));
             let Some(req) = queue.pop_where(self.cfg.admission, fits) else {
+                // Page pressure: published pages no sequence maps are the
+                // reclaimable slack — evict one (longest prefix first) and
+                // retry. Without queued work there is nothing to retry for,
+                // and the index is left alone for future joiners.
+                if queue.len() > 0 {
+                    if let Some(page) = self.prefix.evict_unreferenced() {
+                        self.pool.reclaim_shared(page);
+                        continue;
+                    }
+                }
                 break;
             };
-            let need = self.pool.pages_for(worst_case(&req));
+            // Recompute the match for the popped request — nothing mutated
+            // the index since the predicate ran, so this is the same match
+            // the reservation was sized for.
+            let matched =
+                if req.share_prefix { self.prefix.match_prefix(&req.prompt) } else { Vec::new() };
+            let n_shared = matched.len();
+            let shared_len = n_shared * ps;
+            let fork = n_shared > 0 && shared_len == req.prompt.len();
+            let need = self.pool.pages_for(worst_case(&req)) - n_shared + fork as usize;
             let slot = self.pool.acquire(need).expect("admission checked slot and pages");
+            for page in matched {
+                self.pool.attach_shared(slot, page);
+            }
+            // Fast-forward past the prefix the shared pages already hold.
+            // The last prompt token is never skipped: its forward pass
+            // produces the logits the first decode samples from.
+            let resume = shared_len.min(req.prompt.len() - 1);
+            self.pool.resume_at(slot, resume);
             counts.joins += 1;
-            self.seqs.push(Sequence::new(req, slot, self.model.cfg.vocab, gen));
+            counts.prefill_tokens_saved += resume;
+            counts.shared_pages += n_shared;
+            let mut s = Sequence::new(req, slot, self.model.cfg.vocab, gen);
+            s.next_prefill = resume;
+            // The mapped pages are already in the index; the publish cursor
+            // starts past them.
+            s.published = n_shared;
+            self.seqs.push(s);
         }
         counts
     }
@@ -322,10 +400,20 @@ impl Engine {
     /// storing each sequence's fresh logits row. Each participating slot
     /// gets its next KV page attached first if the position being written
     /// has no backing page yet (acquire-on-demand; covered by the
-    /// admission-time reservation, so the free list cannot run dry).
-    fn batch_decode(&mut self, idxs: &[usize], tokens: &[usize]) {
+    /// admission-time reservation, so the free list cannot run dry). A
+    /// write landing inside a *shared* page copies it into owned storage
+    /// first (copy-on-write — also covered by the reservation), so shared
+    /// prefix pages are never mutated.
+    fn batch_decode(&mut self, idxs: &[usize], tokens: &[usize], counts: &mut StepCounts) {
+        let ps = self.pool.page_size();
         let slots: Vec<usize> = idxs.iter().map(|&i| self.seqs[i].slot).collect();
         for &slot in &slots {
+            let cache = self.pool.cache(slot);
+            let page_idx = cache.len / ps;
+            if page_idx < cache.pages_held() && cache.page_is_shared(page_idx) {
+                self.pool.fork_page(slot, page_idx);
+                counts.cow_forks += 1;
+            }
             self.pool.ensure_page(slot);
         }
         let mut caches = self.pool.caches_mut(&slots);
@@ -357,6 +445,9 @@ impl Engine {
         t.page_occupancy.push(held as f64 / self.pool.pages_total() as f64);
         t.pages_in_use_now = held;
         t.ws_buffer_allocs = self.ws.alloc_count();
+        t.prefill_tokens_saved += counts.prefill_tokens_saved;
+        t.shared_pages += counts.shared_pages;
+        t.cow_forks += counts.cow_forks;
         t.trim();
     }
 
@@ -393,9 +484,41 @@ impl Engine {
                     s.prompt[s.next_prefill]
                 })
                 .collect();
-            self.batch_decode(&pidx, &tokens);
+            self.batch_decode(&pidx, &tokens, &mut counts);
             for &i in &pidx {
                 self.seqs[i].next_prefill += 1;
+            }
+        }
+
+        // ── publish freshly filled prompt pages to the prefix index ──
+        // A page is publishable once every one of its positions holds a
+        // *prompt* row (`(cursor+1)·ps ≤ min(prompt, cache.len)`), which is
+        // also why a publisher can never write into a page it published:
+        // its next write position is at or past `cache.len`. Occupied index
+        // keys (same prefix already published, or a hash collision) and
+        // pages this sequence itself mapped as shared are skipped. In the
+        // degenerate whole-sequence layout no admissible prompt ever fills
+        // a page, so sharing self-disables.
+        let ps = self.pool.page_size();
+        for i in 0..self.seqs.len() {
+            if !self.seqs[i].share_prefix {
+                continue;
+            }
+            loop {
+                let s = &self.seqs[i];
+                let (slot, cursor) = (s.slot, s.published);
+                let end = (cursor + 1) * ps;
+                if end > s.prompt.len().min(self.pool.cache(slot).len) {
+                    break;
+                }
+                if !self.pool.cache(slot).page_is_shared(cursor)
+                    && !self.prefix.contains(&s.prompt[..end])
+                {
+                    let prefix_tokens = s.prompt[..end].to_vec();
+                    let page = self.pool.share_page(slot, cursor);
+                    self.prefix.insert(&prefix_tokens, page);
+                }
+                self.seqs[i].published += 1;
             }
         }
 
@@ -419,18 +542,19 @@ impl Engine {
                     s.first_token_at = Some(now);
                 }
                 events.push(SeqEvent::Token { id: s.id, token: t, first });
-                if s.out.len() < s.budget {
+                if s.out.len() < s.budget && !s.stopped_at_token() {
                     cont.push(i);
                     cont_tokens.push(t);
                 }
             }
             // Decode the emitted token only for sequences that still need
-            // the next logits. A sequence that just spent its budget
-            // retires below and its cache is recycled, so the extra
-            // forward pass scalar `generate` performs there would be
-            // discarded — skipping it cannot change any emitted token.
+            // the next logits. A sequence that just spent its budget (or
+            // emitted one of its stop tokens) retires below and its cache
+            // is recycled, so the extra forward pass scalar `generate`
+            // performs there would be discarded — skipping it cannot
+            // change any emitted token.
             if !cont.is_empty() {
-                self.batch_decode(&cont, &cont_tokens);
+                self.batch_decode(&cont, &cont_tokens, &mut counts);
             }
         }
 
@@ -439,13 +563,19 @@ impl Engine {
         let seqs = std::mem::take(&mut self.seqs);
         for s in seqs {
             let budget_met = s.out.len() >= s.budget;
+            let stopped = s.stopped_at_token();
             let capacity_hit = self.pool.cache(s.slot).remaining() == 0;
-            if !s.prefilling() && (budget_met || capacity_hit) {
+            if !s.prefilling() && (budget_met || stopped || capacity_hit) {
                 self.pool.release(s.slot);
                 counts.leaves += 1;
-                // A sequence that filled its KV capacity before reaching
-                // the budget was truncated by memory, not completed.
-                let status = if budget_met {
+                // A stop token is the most specific outcome (it names the
+                // token that ended generation, even when the budget ran out
+                // on the same step); a sequence that filled its KV capacity
+                // before reaching the budget was truncated by memory, not
+                // completed.
+                let status = if stopped {
+                    ResponseStatus::StoppedAtToken
+                } else if budget_met {
                     ResponseStatus::Complete
                 } else {
                     counts.capacity_stopped += 1;
@@ -465,6 +595,16 @@ impl Engine {
 
         // ── same-step backfill: freed slots go straight to the queue ──
         counts.absorb(self.admit(queue, &mut events));
+
+        // ── drained: flush the prefix index back to the pool ──
+        // With no residents and no queued work every published page is
+        // mapped by the index alone, so the flush reclaims them all and
+        // the pages-held leak check stays exact between workloads.
+        if self.seqs.is_empty() && queue.len() == 0 {
+            for page in self.prefix.drain_pages() {
+                self.pool.reclaim_shared(page);
+            }
+        }
 
         self.record_step(queue, didx.len(), counts);
         events
@@ -821,6 +961,111 @@ mod tests {
         assert!(t.decode_batch.iter().all(|&b| b <= 3.0), "{:?}", t.decode_batch);
         assert_eq!(t.joins, 8);
         assert_eq!(t.leaves, 8);
+    }
+
+    #[test]
+    fn shared_prefix_joiner_skips_prefill_and_matches_scalar() {
+        // One slot forces serial residency: the donor prefills and
+        // publishes its prompt pages, then the joiner (same 10-token head,
+        // divergent tail) admits at backfill and maps the two fully
+        // common pages instead of re-prefilling them.
+        let m = tiny();
+        let cfg = EngineConfig { slots: 1, gen_tokens: 4, page_size: 4, ..Default::default() };
+        let head: Vec<usize> = (1..=10).collect();
+        let donor: Vec<usize> = head.iter().copied().chain([11, 12]).collect();
+        let joiner: Vec<usize> = head.iter().copied().chain([13, 14]).collect();
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, donor.clone()));
+        q.push(req(1, joiner.clone()));
+        let done = drain(&mut e, &mut q, 2);
+        let by_id = |id: u64| done.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(by_id(0).tokens, crate::coordinator::serve::generate(&m, &donor, 4));
+        assert_eq!(by_id(1).tokens, crate::coordinator::serve::generate(&m, &joiner, 4));
+        let t = e.telemetry().lock().unwrap().clone();
+        // Pages [0..4) and [4..8) are common and full; [8..12) diverges.
+        assert_eq!(t.shared_pages, 2, "joiner must map the two common pages");
+        assert_eq!(t.prefill_tokens_saved, 8, "8 head tokens never re-prefilled");
+        assert_eq!(t.cow_forks, 0, "divergent tail needs no fork");
+        assert_eq!(t.pages_in_use_now, 0, "shared pages leaked past drain");
+    }
+
+    #[test]
+    fn identical_page_aligned_prompts_fork_before_the_last_token() {
+        // The whole 8-token prompt is covered by shared pages, but the
+        // last prompt token is always recomputed for its logits — that
+        // write lands inside the final shared page and must copy it first.
+        let m = tiny();
+        let cfg = EngineConfig { slots: 1, gen_tokens: 3, page_size: 4, ..Default::default() };
+        let prompt: Vec<usize> = (1..=8).collect();
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, prompt.clone()));
+        q.push(req(1, prompt.clone()));
+        let done = drain(&mut e, &mut q, 2);
+        let want = crate::coordinator::serve::generate(&m, &prompt, 3);
+        for f in &done {
+            assert_eq!(f.tokens, want, "request {} diverged", f.id);
+        }
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.shared_pages, 2);
+        assert_eq!(t.prefill_tokens_saved, 7, "all but the recomputed last token");
+        assert_eq!(t.cow_forks, 1, "the recomputed token must fork the shared page");
+        assert_eq!(t.pages_in_use_now, 0);
+    }
+
+    #[test]
+    fn share_prefix_opt_out_disables_reuse_per_request() {
+        let m = tiny();
+        let cfg = EngineConfig { slots: 1, gen_tokens: 4, page_size: 4, ..Default::default() };
+        let prompt: Vec<usize> = (1..=10).collect();
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, prompt.clone()));
+        q.push(req(1, prompt.clone()).without_prefix_sharing());
+        let done = drain(&mut e, &mut q, 2);
+        let want = crate::coordinator::serve::generate(&m, &prompt, 4);
+        for f in &done {
+            assert_eq!(f.tokens, want);
+        }
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.shared_pages, 0, "opted-out request must not map shared pages");
+        assert_eq!(t.prefill_tokens_saved, 0);
+        assert_eq!(t.pages_in_use_now, 0);
+    }
+
+    #[test]
+    fn stop_token_retires_with_stopped_status_and_truncated_output() {
+        let m = tiny();
+        let prompt = vec![1, 2, 3];
+        let free = crate::coordinator::serve::generate(&m, &prompt, 16);
+        let stop = free[2];
+        // The scalar reference: everything up to the first stop token,
+        // inclusive.
+        let cut = free.iter().position(|&t| t == stop).unwrap();
+        let want = &free[..=cut];
+        let mut e = Engine::new(Arc::clone(&m), EngineConfig::default());
+        let mut q = Batcher::default();
+        q.push(req(0, prompt).with_stop_tokens(vec![stop]));
+        let done = drain(&mut e, &mut q, 1);
+        assert_eq!(done[0].tokens, want);
+        assert_eq!(done[0].status, ResponseStatus::StoppedAtToken);
+        assert_eq!(*done[0].tokens.last().unwrap(), stop);
+    }
+
+    #[test]
+    fn stop_token_never_emitted_completes_normally() {
+        let m = tiny();
+        let prompt = vec![4, 5];
+        let free = crate::coordinator::serve::generate(&m, &prompt, 6);
+        let absent = (0..m.cfg.vocab).find(|t| !free.contains(t)).unwrap();
+        let mut e =
+            Engine::new(Arc::clone(&m), EngineConfig { gen_tokens: 6, ..Default::default() });
+        let mut q = Batcher::default();
+        q.push(req(0, prompt).with_stop_tokens(vec![absent]));
+        let done = drain(&mut e, &mut q, 1);
+        assert_eq!(done[0].tokens, free);
+        assert_eq!(done[0].status, ResponseStatus::Complete);
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Prefix index: shared-prefix KV page lookup at page granularity.
+//!
+//! Requests that open with an identical token prefix (system prompts,
+//! few-shot headers) produce identical KV rows for those positions — the
+//! engine's bit-identity contract guarantees it. The index maps
+//! *page-aligned* token prefixes to the shared KV page holding that page's
+//! rows, so admission can attach already-computed pages into a joiner's
+//! page table instead of re-prefilling them.
+//!
+//! Keys are a cumulative FNV-1a hash of the token prefix up to each page
+//! boundary; every entry also stores the full prefix tokens and lookups
+//! verify token equality, so a hash collision can never alias two distinct
+//! prefixes into the same KV rows (a collision merely prevents the later
+//! prefix from being published). Entries hold an `Arc<KvPage>`; the
+//! [`KvPool`](super::KvPool) bills shared pages pool-wide and reclaims one
+//! only when the index drops the final strong reference.
+
+use crate::model::KvPage;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Cumulative FNV-1a over a token slice — the index key for the prefix
+/// ending at `tokens.len()`.
+fn fnv1a(tokens: &[usize]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &t in tokens {
+        h = (h ^ t as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+struct PrefixEntry {
+    /// Full token prefix this page completes (length is a multiple of the
+    /// page size) — checked on lookup so collisions cannot alias.
+    prefix: Vec<usize>,
+    page: Arc<KvPage>,
+}
+
+/// Page-granular map from token prefixes to shared KV pages.
+///
+/// A `BTreeMap` keyed on the prefix hash keeps iteration order
+/// deterministic, so eviction under memory pressure picks the same victim
+/// on every run — load-independent behaviour is part of the engine's
+/// bit-identity story.
+pub struct PrefixIndex {
+    page_size: usize,
+    entries: BTreeMap<u64, PrefixEntry>,
+}
+
+impl PrefixIndex {
+    pub fn new(page_size: usize) -> PrefixIndex {
+        assert!(page_size > 0, "prefix index needs a positive page size");
+        PrefixIndex { page_size, entries: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest run of leading pages of `prompt` already present in the
+    /// index. Walks page boundaries left to right and stops at the first
+    /// miss; returns one `Arc` per matched page, in position order.
+    ///
+    /// Only *fully filled* prompt-covered pages are candidates: boundary
+    /// `b` is probed only while `b <= prompt.len()`, so a partial last
+    /// page is never matched (its rows would differ beyond the prompt).
+    pub fn match_prefix(&self, prompt: &[usize]) -> Vec<Arc<KvPage>> {
+        let ps = self.page_size;
+        let mut pages = Vec::new();
+        let mut h = FNV_OFFSET;
+        let mut pos = 0;
+        while pos + ps <= prompt.len() {
+            for &t in &prompt[pos..pos + ps] {
+                h = (h ^ t as u64).wrapping_mul(FNV_PRIME);
+            }
+            pos += ps;
+            match self.entries.get(&h) {
+                Some(e) if e.prefix == prompt[..pos] => pages.push(Arc::clone(&e.page)),
+                _ => break,
+            }
+        }
+        pages
+    }
+
+    /// True when the key for this exact prefix length is occupied at all —
+    /// even by a colliding different prefix. Publishing checks this before
+    /// [`PrefixIndex::insert`]: an overwrite would silently drop the
+    /// displaced entry's `Arc` and strand its page in the pool's
+    /// shared-page bill, so occupied keys are simply left alone.
+    pub fn contains(&self, prefix: &[usize]) -> bool {
+        debug_assert!(prefix.len() % self.page_size == 0);
+        self.entries.contains_key(&fnv1a(prefix))
+    }
+
+    /// Publish the page completing `prefix`. The key must be vacant
+    /// (callers gate on [`PrefixIndex::contains`]) and the prefix must be
+    /// page-aligned.
+    pub fn insert(&mut self, prefix: &[usize], page: Arc<KvPage>) {
+        assert!(
+            prefix.len() % self.page_size == 0 && !prefix.is_empty(),
+            "published prefixes must cover whole pages"
+        );
+        let key = fnv1a(prefix);
+        let prev = self.entries.insert(key, PrefixEntry { prefix: prefix.to_vec(), page });
+        assert!(prev.is_none(), "prefix index insert over an occupied key");
+    }
+
+    /// Evict one entry that no live sequence maps (`strong_count == 1`,
+    /// i.e. the index holds the only reference), preferring the *longest*
+    /// prefix so the trie is pruned leaf-first and shorter, more reusable
+    /// prefixes survive. Returns the reclaimed `Arc` for the pool, or
+    /// `None` when every entry is still mapped.
+    pub fn evict_unreferenced(&mut self) -> Option<Arc<KvPage>> {
+        let key = self
+            .entries
+            .iter()
+            .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+            .max_by_key(|(&k, e)| (e.prefix.len(), k))
+            .map(|(&k, _)| k)?;
+        Some(self.entries.remove(&key).unwrap().page)
+    }
+
+    /// Drop every entry, returning the pages for reclamation. Called at
+    /// drain (no residents, empty queue) so the engine's zero-pages-held
+    /// invariant stays exact between workloads.
+    pub fn drain_pages(&mut self) -> Vec<Arc<KvPage>> {
+        let entries = std::mem::take(&mut self.entries);
+        entries.into_values().map(|e| e.page).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn page(ps: usize, tag: f32) -> Arc<KvPage> {
+        // Geometry is irrelevant to the index; a tiny distinguishable page
+        // is enough to check identity plumbing.
+        let cfg = ModelConfig {
+            name: "prefix-test".into(),
+            vocab: 4,
+            d_model: 2,
+            n_heads: 1,
+            n_layers: 1,
+            d_ff: 4,
+            seq_len: ps,
+        };
+        let mut p = KvPage::new(&cfg, ps);
+        p.k[0].data[0] = tag;
+        Arc::new(p)
+    }
+
+    fn tag_of(p: &KvPage) -> f32 {
+        p.k[0].data[0]
+    }
+
+    #[test]
+    fn match_walks_leading_pages_and_stops_at_first_miss() {
+        let ps = 4;
+        let mut idx = PrefixIndex::new(ps);
+        let prompt: Vec<usize> = (0..12).collect();
+        idx.insert(&prompt[..4], page(ps, 1.0));
+        idx.insert(&prompt[..8], page(ps, 2.0));
+        // Third page unpublished: match stops after two.
+        let m = idx.match_prefix(&prompt);
+        assert_eq!(m.len(), 2);
+        assert_eq!(tag_of(&m[0]), 1.0);
+        assert_eq!(tag_of(&m[1]), 2.0);
+
+        // A prompt diverging inside page two matches only page one.
+        let mut div = prompt.clone();
+        div[5] = 99;
+        assert_eq!(idx.match_prefix(&div).len(), 1);
+
+        // Shorter than one page: nothing to match.
+        assert!(idx.match_prefix(&prompt[..3]).is_empty());
+        // Exactly one page: partial-page rule is about the *prompt* end —
+        // a 5-token prompt only ever matches its first page.
+        assert_eq!(idx.match_prefix(&prompt[..5]).len(), 1);
+    }
+
+    #[test]
+    fn lookup_verifies_tokens_so_collisions_cannot_alias() {
+        let ps = 2;
+        let mut idx = PrefixIndex::new(ps);
+        let a = [1usize, 2];
+        idx.insert(&a, page(ps, 1.0));
+        // Forge a colliding entry by inserting under a's hash via the map
+        // directly is not possible from outside; instead simulate the
+        // defensive path: a prompt with different tokens but (hypothetically)
+        // the same hash must not match. We can't construct a real FNV
+        // collision cheaply, so assert the equality check exists by way of
+        // `contains` vs `match_prefix` semantics: contains() is key-based,
+        // match is token-based.
+        assert!(idx.contains(&a));
+        let b = [3usize, 4];
+        assert!(idx.match_prefix(&b).is_empty());
+    }
+
+    #[test]
+    fn eviction_prunes_longest_unreferenced_first_and_skips_mapped() {
+        let ps = 2;
+        let mut idx = PrefixIndex::new(ps);
+        let prompt: Vec<usize> = (10..16).collect();
+        idx.insert(&prompt[..2], page(ps, 1.0));
+        idx.insert(&prompt[..4], page(ps, 2.0));
+        idx.insert(&prompt[..6], page(ps, 3.0));
+
+        // Hold a reference to the longest entry, as a mapped joiner would.
+        let held = idx.match_prefix(&prompt);
+        assert_eq!(held.len(), 3);
+        // Everything is mapped: nothing evictable.
+        assert!(idx.evict_unreferenced().is_none());
+        drop(held);
+
+        // Now leaf-first: 6-token prefix goes before 4 before 2.
+        assert_eq!(tag_of(&idx.evict_unreferenced().unwrap()), 3.0);
+        assert_eq!(tag_of(&idx.evict_unreferenced().unwrap()), 2.0);
+        assert_eq!(tag_of(&idx.evict_unreferenced().unwrap()), 1.0);
+        assert!(idx.evict_unreferenced().is_none());
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn drain_returns_every_page() {
+        let ps = 3;
+        let mut idx = PrefixIndex::new(ps);
+        idx.insert(&[1, 2, 3], page(ps, 1.0));
+        idx.insert(&[1, 2, 3, 4, 5, 6], page(ps, 2.0));
+        let pages = idx.drain_pages();
+        assert_eq!(pages.len(), 2);
+        assert!(idx.is_empty());
+        assert!(pages.iter().all(|p| Arc::strong_count(p) == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "occupied key")]
+    fn insert_over_occupied_key_panics() {
+        let ps = 2;
+        let mut idx = PrefixIndex::new(ps);
+        idx.insert(&[7, 8], page(ps, 1.0));
+        idx.insert(&[7, 8], page(ps, 2.0));
+    }
+}

@@ -21,17 +21,46 @@ pub struct Request {
     /// `ceil(min(len + gen − 1, seq_len) / page_size)`, so a short-budget
     /// request reserves fewer KV pages and admits alongside bigger ones.
     pub gen_tokens: Option<usize>,
+    /// Opt into shared-prefix KV reuse (the default). When `false` this
+    /// request neither maps published prefix pages at admission nor
+    /// publishes its own — useful for privacy-sensitive prompts and for
+    /// the bit-identity gates that compare shared vs unshared runs.
+    pub share_prefix: bool,
+    /// Generation stops early the moment any of these tokens is emitted;
+    /// the stop token itself is included in the output (so the response is
+    /// a prefix of the unstopped generation) and the response reports
+    /// [`ResponseStatus::StoppedAtToken`].
+    pub stop_tokens: Vec<usize>,
 }
 
 impl Request {
     /// A request with the server-default generation budget, enqueued now.
     pub fn new(id: u64, prompt: Vec<usize>) -> Request {
-        Request { id, prompt, enqueued: Instant::now(), gen_tokens: None }
+        Request {
+            id,
+            prompt,
+            enqueued: Instant::now(),
+            gen_tokens: None,
+            share_prefix: true,
+            stop_tokens: Vec::new(),
+        }
     }
 
     /// Attach a per-request generation budget.
     pub fn with_budget(mut self, gen_tokens: usize) -> Request {
         self.gen_tokens = Some(gen_tokens);
+        self
+    }
+
+    /// Attach per-request stop tokens.
+    pub fn with_stop_tokens(mut self, stop_tokens: Vec<usize>) -> Request {
+        self.stop_tokens = stop_tokens;
+        self
+    }
+
+    /// Opt this request out of shared-prefix KV reuse.
+    pub fn without_prefix_sharing(mut self) -> Request {
+        self.share_prefix = false;
         self
     }
 
@@ -55,6 +84,12 @@ pub enum ResponseStatus {
     /// Clients see fewer tokens than they asked for and can tell this
     /// apart from a budget-complete response.
     CapacityStopped,
+    /// Generation ended because a [`Request::stop_tokens`] entry was
+    /// emitted before the budget ran out. The stop token is the last
+    /// output token. Takes precedence over `Complete` when the stop fires
+    /// exactly on the budget's final token — the stop predicate matched,
+    /// whatever the budget said.
+    StoppedAtToken,
 }
 
 /// Per-step admission order for queued requests.
@@ -151,6 +186,15 @@ impl Batcher {
         self.queue.remove(idx)
     }
 
+    /// The request `policy` would admit next, without removing it — the
+    /// engine inspects it (prefix match, page-need computation, index
+    /// eviction under pressure) before committing to the admission.
+    /// `next_index` is deterministic, so a [`Batcher::pop`] with no
+    /// intervening queue mutation removes exactly this request.
+    pub fn peek(&self, policy: AdmissionPolicy) -> Option<&Request> {
+        self.next_index(policy).map(|i| &self.queue[i])
+    }
+
     /// Remove the next request under `policy` only if `admit` accepts it.
     /// A rejected head blocks this admission pass rather than being
     /// skipped: later (smaller) requests never jump an earlier one that is
@@ -180,6 +224,8 @@ pub struct Sequence {
     /// Index into the engine's [`super::KvPool`].
     pub slot: usize,
     /// Next prompt position to prefill; `== prompt.len()` once decoding.
+    /// The prefix-reuse admission path starts this past the shared pages
+    /// (the tokens whose KV already exists are never re-prefilled).
     pub next_prefill: usize,
     /// Logits from this sequence's latest decode step.
     pub logits: Vec<f32>,
@@ -187,6 +233,14 @@ pub struct Sequence {
     /// Tokens to generate — the per-request budget, or the server default
     /// resolved at admission (the engine's retire check reads this).
     pub budget: usize,
+    /// Shared-prefix participation, carried from the request.
+    pub share_prefix: bool,
+    /// Prompt pages this sequence has published to the prefix index so
+    /// far (the publish cursor — pages `0..published` are done).
+    pub published: usize,
+    /// Stop tokens, carried from the request (the engine's retire check
+    /// reads these next to the budget).
+    pub stop_tokens: Vec<usize>,
     pub enqueued: Instant,
     pub first_token_at: Option<Instant>,
 }
@@ -202,6 +256,9 @@ impl Sequence {
             logits: vec![0.0; vocab],
             out: Vec::new(),
             budget,
+            share_prefix: req.share_prefix,
+            published: 0,
+            stop_tokens: req.stop_tokens,
             enqueued: req.enqueued,
             first_token_at: None,
         }
@@ -210,6 +267,13 @@ impl Sequence {
     /// Still consuming prompt tokens?
     pub fn prefilling(&self) -> bool {
         self.next_prefill < self.prompt.len()
+    }
+
+    /// True when the most recent output token is one of this request's
+    /// stop tokens — the retire check's token predicate, evaluated next to
+    /// the budget.
+    pub fn stopped_at_token(&self) -> bool {
+        self.out.last().is_some_and(|t| self.stop_tokens.contains(t))
     }
 }
 

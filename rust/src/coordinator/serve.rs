@@ -56,6 +56,10 @@ pub struct ServeConfig {
     /// Total KV pages in the arena. `0` ⇒ `slots` full sequences' worth
     /// (byte-equivalent to the whole-cache arena).
     pub kv_pages: usize,
+    /// Let requests reuse shared prefix KV pages (the engine's prefix
+    /// index). `false` stamps every submitted request with the per-request
+    /// opt-out — the A/B switch the CI byte-identity gate flips.
+    pub share_prefix: bool,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +73,7 @@ impl Default for ServeConfig {
             quantize: false,
             page_size: 0,
             kv_pages: 0,
+            share_prefix: true,
         }
     }
 }
@@ -105,7 +110,9 @@ pub struct Response {
     /// [`ResponseStatus::Truncated`] marks a prompt that exceeded the
     /// model's `seq_len` and was rejected rather than silently cut;
     /// [`ResponseStatus::CapacityStopped`] marks generation cut short by
-    /// KV capacity (fewer tokens than the budget, by memory not choice).
+    /// KV capacity (fewer tokens than the budget, by memory not choice);
+    /// [`ResponseStatus::StoppedAtToken`] marks generation ended by one of
+    /// the request's stop tokens (which is the last token returned).
     pub status: ResponseStatus,
 }
 
@@ -169,6 +176,19 @@ pub struct ServeStats {
     /// Fresh heap buffers the decode workspace ever allocated — flat once
     /// decode reaches steady state (the xt/out-reuse regression check).
     pub ws_buffer_allocs: usize,
+    /// Prompt tokens admission skipped because their KV already existed as
+    /// shared prefix pages.
+    pub prefill_tokens_saved: usize,
+    /// Shared prefix page mappings attached to joiners at admission.
+    pub shared_pages: usize,
+    /// Copy-on-write forks of shared pages.
+    pub cow_forks: usize,
+    /// Order-independent FNV-1a digest over every `(id, tokens)` pair,
+    /// accumulated in request-id order. Two runs of the same workload with
+    /// byte-identical completions produce the same digest — the handle the
+    /// CI shared-vs-unshared identity gate compares. Zero when the harness
+    /// didn't compute one (e.g. stats taken from a live server snapshot).
+    pub completions_digest: u64,
 }
 
 impl ServeStats {
@@ -207,6 +227,10 @@ impl ServeStats {
             pages_in_use_at_drain: t.pages_in_use_now,
             kv_bytes: t.kv_bytes,
             ws_buffer_allocs: t.ws_buffer_allocs,
+            prefill_tokens_saved: t.prefill_tokens_saved,
+            shared_pages: t.shared_pages,
+            cow_forks: t.cow_forks,
+            completions_digest: 0,
         }
     }
 
@@ -231,6 +255,11 @@ impl ServeStats {
             .set("pages_in_use_at_drain", json::num(self.pages_in_use_at_drain as f64))
             .set("kv_arena_bytes", json::num(self.kv_bytes as f64))
             .set("ws_buffer_allocs", json::num(self.ws_buffer_allocs as f64))
+            .set("prefill_tokens_saved", json::num(self.prefill_tokens_saved as f64))
+            .set("shared_pages", json::num(self.shared_pages as f64))
+            .set("cow_forks", json::num(self.cow_forks as f64))
+            // u64 doesn't fit an f64 losslessly: the digest travels as hex.
+            .set("completions_digest", json::s(&format!("{:016x}", self.completions_digest)))
             .set("latency_s", self.latency.to_json())
             .set("first_token_latency_s", self.first_token_latency.to_json())
             .set("decode_batch", self.batch_sizes.to_json())
@@ -517,8 +546,18 @@ impl Server {
         prompt: Vec<usize>,
         gen_tokens: Option<usize>,
     ) -> mpsc::Receiver<Response> {
+        let mut req = Request::new(id, prompt);
+        req.gen_tokens = gen_tokens;
+        self.submit_request(req)
+    }
+
+    /// Submit a fully-specified [`Request`] — the entry point for the
+    /// per-request knobs the shorthand submitters leave at their defaults
+    /// ([`Request::with_stop_tokens`], [`Request::without_prefix_sharing`],
+    /// [`Request::with_budget`]).
+    pub fn submit_request(&self, req: Request) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        self.send(id, prompt, gen_tokens, ResponseSink::Unary(tx));
+        self.send(req, ResponseSink::Unary(tx));
         rx
     }
 
@@ -527,16 +566,12 @@ impl Server {
     /// then [`StreamEvent::Done`] with the full response.
     pub fn submit_streaming(&self, id: u64, prompt: Vec<usize>) -> mpsc::Receiver<StreamEvent> {
         let (tx, rx) = mpsc::channel();
-        self.send(id, prompt, None, ResponseSink::Stream(tx));
+        self.send(Request::new(id, prompt), ResponseSink::Stream(tx));
         rx
     }
 
-    fn send(&self, id: u64, prompt: Vec<usize>, gen_tokens: Option<usize>, sink: ResponseSink) {
-        self.req_tx
-            .as_ref()
-            .expect("server stopped")
-            .send((Request { id, prompt, enqueued: Instant::now(), gen_tokens }, sink))
-            .expect("engine alive");
+    fn send(&self, req: Request, sink: ResponseSink) {
+        self.req_tx.as_ref().expect("server stopped").send((req, sink)).expect("engine alive");
     }
 
     /// Snapshot of the engine's per-step telemetry so far.
@@ -589,29 +624,49 @@ pub fn run_load_mixed(
     } else {
         model
     };
+    let share = cfg.share_prefix;
     let t0 = Instant::now();
     let server = Server::start(model, cfg);
     let rxs: Vec<mpsc::Receiver<Response>> = requests
         .into_iter()
         .enumerate()
-        .map(|(i, (p, gen))| server.submit_budgeted(i as u64, p, gen))
+        .map(|(i, (p, gen))| {
+            let mut req = Request::new(i as u64, p);
+            req.gen_tokens = gen;
+            req.share_prefix = share;
+            server.submit_request(req)
+        })
         .collect();
     let mut latencies = Vec::new();
     let mut first_token_latencies = Vec::new();
     let mut tokens = 0usize;
+    // FNV-1a over (id, completion) in id order: receivers are indexed by
+    // id, so this digest depends only on what each request got back —
+    // identical completions ⇒ identical digest, whatever the engine's
+    // step-by-step interleaving was.
+    let mut digest: u64 = 0xcbf29ce484222325;
+    let mut fold = |x: u64| digest = (digest ^ x).wrapping_mul(0x100000001b3);
     let n = rxs.len();
-    for rx in rxs {
+    for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("response");
         latencies.push(resp.latency.as_secs_f64());
         if let Some(ftl) = resp.first_token_latency {
             first_token_latencies.push(ftl.as_secs_f64());
         }
         tokens += resp.tokens.len();
+        fold(i as u64);
+        fold(resp.tokens.len() as u64);
+        for &t in &resp.tokens {
+            fold(t as u64);
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let telemetry = server.telemetry();
     server.shutdown();
-    ServeStats::from_run(n, tokens, wall, &latencies, &first_token_latencies, &telemetry)
+    let mut stats =
+        ServeStats::from_run(n, tokens, wall, &latencies, &first_token_latencies, &telemetry);
+    stats.completions_digest = digest;
+    stats
 }
 
 #[cfg(test)]
@@ -632,11 +687,9 @@ mod tests {
         let t0 = Instant::now();
         for i in 0..5u64 {
             let (rtx, _rrx) = mpsc::channel();
-            tx.send((
-                Request { id: i, prompt: vec![1], enqueued: t0, gen_tokens: None },
-                ResponseSink::Unary(rtx),
-            ))
-            .unwrap();
+            let mut req = Request::new(i, vec![1]);
+            req.enqueued = t0;
+            tx.send((req, ResponseSink::Unary(rtx))).unwrap();
         }
         let mut b = Batcher::default();
         let mut sinks = HashMap::new();
@@ -966,6 +1019,69 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_load_matches_unshared_digest_and_saves_prefill() {
+        // The CI shared-prefix gate in miniature: the same workload run
+        // with sharing on and off must produce byte-identical completions
+        // (equal digests) at equal KV bytes, with the shared run actually
+        // skipping prefill work and leaking nothing.
+        let m = tiny();
+        let head: Vec<usize> = (1..=12).collect();
+        let prompts: Vec<Vec<usize>> = (0..8)
+            .map(|i| head.iter().copied().chain([(i * 3) % 16, (i * 5 + 1) % 16]).collect())
+            .collect();
+        let cfg = |share: bool| ServeConfig {
+            slots: 4,
+            gen_tokens: 4,
+            page_size: 4,
+            kv_pages: 24,
+            share_prefix: share,
+            ..Default::default()
+        };
+        let shared = run_load(Arc::clone(&m), cfg(true), prompts.clone());
+        let unshared = run_load(Arc::clone(&m), cfg(false), prompts.clone());
+        assert_eq!(
+            shared.completions_digest, unshared.completions_digest,
+            "prefix sharing changed some completion"
+        );
+        assert_ne!(shared.completions_digest, 0);
+        assert_eq!(shared.kv_bytes, unshared.kv_bytes, "A/B must compare equal arenas");
+        assert!(shared.prefill_tokens_saved > 0, "no prefill was reused");
+        assert!(shared.shared_pages > 0);
+        assert_eq!(unshared.prefill_tokens_saved, 0);
+        assert_eq!(unshared.shared_pages, 0);
+        assert_eq!(shared.pages_in_use_at_drain, 0, "shared run leaked pages");
+        assert_eq!(unshared.pages_in_use_at_drain, 0);
+        // Per-request tokens also equal the scalar reference.
+        let server = Server::start(Arc::clone(&m), cfg(true));
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| server.submit(i as u64, p.clone()))
+            .collect();
+        for (rx, p) in rxs.into_iter().zip(&prompts) {
+            assert_eq!(rx.recv().unwrap().tokens, generate(&m, p, 4), "prompt {p:?}");
+        }
+        drop(server);
+    }
+
+    #[test]
+    fn stop_tokens_surface_stopped_status_through_the_server() {
+        let m = tiny();
+        let prompt = vec![1, 2, 3];
+        let free = generate(&m, &prompt, 8);
+        let stop = free[1];
+        let cut = free.iter().position(|&t| t == stop).unwrap();
+        let cfg = ServeConfig { slots: 2, gen_tokens: 8, ..Default::default() };
+        let server = Server::start(Arc::clone(&m), cfg);
+        let rx = server.submit_request(Request::new(0, prompt).with_stop_tokens(vec![stop]));
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.status, ResponseStatus::StoppedAtToken);
+        assert_eq!(resp.tokens, &free[..=cut]);
+        assert_eq!(*resp.tokens.last().unwrap(), stop);
+        drop(server);
+    }
+
+    #[test]
     fn serve_stats_json_round_trips() {
         let m = tiny();
         let cfg = ServeConfig { slots: 2, gen_tokens: 3, ..Default::default() };
@@ -983,6 +1099,14 @@ mod tests {
         // Workspace telemetry: the decode loop allocated something during
         // warmup, and far fewer buffers than decode calls (reuse works).
         assert!(j.req_f64("ws_buffer_allocs").unwrap() > 0.0);
+        // Shared-prefix telemetry rides along (the CI gates read these);
+        // the digest is a 16-hex-digit string, not a lossy f64.
+        assert!(j.req_f64("prefill_tokens_saved").is_ok());
+        assert!(j.req_f64("shared_pages").is_ok());
+        assert!(j.req_f64("cow_forks").is_ok());
+        let digest = j.get("completions_digest").and_then(Json::as_str).unwrap();
+        assert_eq!(digest.len(), 16);
+        assert!(u64::from_str_radix(digest, 16).is_ok());
         assert!(j.req_f64("page_size").unwrap() > 0.0);
         assert!(j.req_f64("kv_pages").unwrap() > 0.0);
         let occ = j.get("page_occupancy").expect("page occupancy summary");

@@ -12,6 +12,9 @@
 //!                   [--page-size N] [--kv-pages N]
 //!                   [--gen-tokens-mix N,N,...]  # per-request budgets,
 //!                                               # assigned round-robin
+//!                   [--shared-prefix]    # common-head workload (prefix
+//!                                        # KV reuse A/B driver)
+//!                   [--no-share-prefix]  # opt every request out of reuse
 //!                   [--compress] [--quantize] [--quick] [--tag NAME]
 //!                                                   # SERVE_<tag>.json
 //! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
@@ -194,6 +197,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// reservations); note a mix containing `0` turns the at-capacity probe
 /// prompt into a trivially-complete request, which the CI serve gate's
 /// `capacity_stopped ≥ 1` check would reject.
+///
+/// `--shared-prefix` switches to a workload where every request opens with
+/// the same system-prompt head and diverges in its tail — the traffic
+/// shape prefix-KV reuse targets. Run it twice, once with
+/// `--no-share-prefix`, and the two `SERVE_*.json` files must carry equal
+/// `completions_digest` values (the CI shared-prefix gate does exactly
+/// this, and additionally requires `prefill_tokens_saved > 0` from the
+/// sharing run).
 fn cmd_serve_load(args: &Args) -> Result<()> {
     use oats::coordinator::serve::{run_load_mixed, AdmissionPolicy, ServeConfig};
     let preset = args.flag_or("preset", "tiny");
@@ -210,6 +221,7 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         // 0 = whole-sequence pages (the contiguous degenerate layout).
         page_size: args.usize_flag("page-size", 0),
         kv_pages: args.usize_flag("kv-pages", 0),
+        share_prefix: !args.bool_flag("no-share-prefix"),
     };
     let mcfg = ModelConfig::preset(preset)?;
     let mut model = oats::model::TransformerLM::init(&mcfg, 0x5E17E);
@@ -226,11 +238,25 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
     // Mixed-length prompts (1 … seq_len/2), plus one deliberately oversized
     // prompt (truncation-rejection path) and one exactly-at-capacity prompt
     // (capacity-stopped path) to exercise both non-Complete statuses end to
-    // end — the CI gates check their counters.
+    // end — the CI gates check their counters. Under `--shared-prefix`
+    // every regular prompt instead opens with the same seq_len/4 head (the
+    // "system prompt") followed by a per-request tail, so leading pages are
+    // publishable and later arrivals join them.
+    let shared_head: Option<Vec<usize>> = args.bool_flag("shared-prefix").then(|| {
+        (0..(mcfg.seq_len / 4).max(1)).map(|j| (j * 13 + 7) % mcfg.vocab).collect()
+    });
     let mut prompts: Vec<Vec<usize>> = (0..n_req)
-        .map(|i| {
-            let len = 1 + (i * 7) % (mcfg.seq_len / 2).max(1);
-            (0..len).map(|j| (i * 11 + j) % mcfg.vocab).collect()
+        .map(|i| match &shared_head {
+            Some(head) => {
+                let tail = 1 + (i * 7) % (mcfg.seq_len / 4).max(1);
+                let mut p = head.clone();
+                p.extend((0..tail).map(|j| (i * 11 + j) % mcfg.vocab));
+                p
+            }
+            None => {
+                let len = 1 + (i * 7) % (mcfg.seq_len / 2).max(1);
+                (0..len).map(|j| (i * 11 + j) % mcfg.vocab).collect()
+            }
         })
         .collect();
     if let Some(p) = prompts.last_mut() {
@@ -300,6 +326,13 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         stats.page_size,
         stats.page_occupancy.mean,
         stats.pages_in_use_at_drain,
+    );
+    println!(
+        "prefix reuse: {} prefill tokens saved | {} shared pages | {} cow forks | digest {:016x}",
+        stats.prefill_tokens_saved,
+        stats.shared_pages,
+        stats.cow_forks,
+        stats.completions_digest,
     );
     let tag = args.flag_or("tag", preset);
     stats.write_json(tag)?;

@@ -9,6 +9,7 @@ use crate::sparse::{KernelPlan, PackOptions, PackedLinear, Workspace};
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 pub const LINEAR_NAMES: [&str; 6] = ["q", "k", "v", "o", "up", "down"];
 
@@ -237,14 +238,40 @@ impl KvPage {
     }
 }
 
+/// One entry of a [`KvCache`] page table: either a page this sequence
+/// owns outright (it may write rows and must return the page to the pool
+/// at retirement), or a read-only view of a page shared with other
+/// sequences through the prefix index ([`Arc`] refcounted — dropping the
+/// slot is the release). The attention read walk treats both identically;
+/// the write paths ([`KvCache::k_row_mut`] / [`KvCache::v_row_mut`])
+/// refuse shared pages, so a copy-on-write fork is forced *before* any
+/// mutation can alias another sequence's history.
+pub enum PageSlot {
+    Owned(KvPage),
+    Shared(Arc<KvPage>),
+}
+
+impl PageSlot {
+    /// Read-only view of the page, whichever way it is held.
+    #[inline]
+    fn page(&self) -> &KvPage {
+        match self {
+            PageSlot::Owned(p) => p,
+            PageSlot::Shared(p) => p,
+        }
+    }
+}
+
 /// KV cache for incremental decoding: an ordered page table over
 /// [`KvPage`]s, where position `p` lives at row `p % page_size` of page
 /// `p / page_size`. [`KvCache::new`] attaches one whole-sequence page up
 /// front (`page_size == seq_len`), so the scalar decode paths see exactly
 /// the old contiguous layout; [`KvCache::paged`] creates an empty shell
 /// whose pages the serving arena attaches on demand as the sequence grows.
+/// Pages are held through [`PageSlot`]s, so leading pages can be
+/// refcounted shared-prefix views instead of private copies.
 pub struct KvCache {
-    pages: Vec<KvPage>,
+    pages: Vec<PageSlot>,
     page_size: usize,
     capacity: usize,
     pub len: usize,
@@ -256,7 +283,7 @@ impl KvCache {
     /// references use this and never touch the page machinery).
     pub fn new(cfg: &ModelConfig) -> KvCache {
         KvCache {
-            pages: vec![KvPage::new(cfg, cfg.seq_len)],
+            pages: vec![PageSlot::Owned(KvPage::new(cfg, cfg.seq_len))],
             page_size: cfg.seq_len,
             capacity: cfg.seq_len,
             len: 0,
@@ -307,17 +334,87 @@ impl KvCache {
         self.len < self.capacity && self.len >= self.allocated_rows()
     }
 
-    /// Append a page to the page table.
+    /// Append an owned page to the page table.
     pub fn push_page(&mut self, page: KvPage) {
         assert_eq!(page.rows(), self.page_size, "page geometry mismatch");
-        self.pages.push(page);
+        self.pages.push(PageSlot::Owned(page));
     }
 
-    /// Retirement: detach every page (for return to the pool's free list)
-    /// and reset the cache to empty.
+    /// Append a shared (read-only) page view to the page table — the
+    /// prefix-reuse admission path. Shared pages must form the leading
+    /// prefix of the table: a write position can only ever land in the
+    /// last page or a fresh one, so interleaving shared pages after owned
+    /// ones would let CoW and ownership accounting disagree.
+    pub fn push_shared(&mut self, page: Arc<KvPage>) {
+        assert_eq!(page.rows(), self.page_size, "page geometry mismatch");
+        assert!(
+            self.pages.iter().all(|s| matches!(s, PageSlot::Shared(_))),
+            "shared pages must precede owned pages"
+        );
+        self.pages.push(PageSlot::Shared(page));
+    }
+
+    /// True when page `i` is a shared (read-only) view.
+    pub fn page_is_shared(&self, i: usize) -> bool {
+        matches!(self.pages.get(i), Some(PageSlot::Shared(_)))
+    }
+
+    /// Shared pages currently mapped.
+    pub fn shared_pages_held(&self) -> usize {
+        self.pages.iter().filter(|s| matches!(s, PageSlot::Shared(_))).count()
+    }
+
+    /// Owned pages currently held (the ones the pool's free list is owed).
+    pub fn owned_pages_held(&self) -> usize {
+        self.pages.iter().filter(|s| matches!(s, PageSlot::Owned(_))).count()
+    }
+
+    /// Convert owned page `i` into a shared view and return the refcounted
+    /// handle (for the prefix index). Already-shared pages just hand out
+    /// another reference. The page contents are untouched — this is the
+    /// publish step after a prefix page fills.
+    pub fn share_page(&mut self, i: usize) -> Arc<KvPage> {
+        if let PageSlot::Shared(p) = &self.pages[i] {
+            return Arc::clone(p);
+        }
+        let placeholder = PageSlot::Owned(KvPage { k: Vec::new(), v: Vec::new() });
+        let PageSlot::Owned(page) = std::mem::replace(&mut self.pages[i], placeholder) else {
+            unreachable!("shared case returned above")
+        };
+        let shared = Arc::new(page);
+        self.pages[i] = PageSlot::Shared(Arc::clone(&shared));
+        shared
+    }
+
+    /// Copy-on-write: replace shared page `i` with `fresh` (a recycled
+    /// pool page) carrying a copy of the shared contents, making the slot
+    /// owned and writable. The shared reference is dropped (refcount
+    /// decrement — the donor and other readers are unaffected).
+    pub fn fork_page(&mut self, i: usize, mut fresh: KvPage) {
+        assert_eq!(fresh.rows(), self.page_size, "page geometry mismatch");
+        let PageSlot::Shared(src) = &self.pages[i] else {
+            panic!("fork of a page this cache already owns")
+        };
+        for (dst, s) in fresh.k.iter_mut().zip(&src.k) {
+            dst.data.copy_from_slice(&s.data);
+        }
+        for (dst, s) in fresh.v.iter_mut().zip(&src.v) {
+            dst.data.copy_from_slice(&s.data);
+        }
+        self.pages[i] = PageSlot::Owned(fresh);
+    }
+
+    /// Retirement: detach every owned page (for return to the pool's free
+    /// list), drop every shared reference, and reset the cache to empty.
     pub fn take_pages(&mut self) -> Vec<KvPage> {
         self.len = 0;
         std::mem::take(&mut self.pages)
+            .into_iter()
+            .filter_map(|s| match s {
+                PageSlot::Owned(p) => Some(p),
+                PageSlot::Shared(_) => None,
+            })
+            .collect()
     }
 
     /// Recycle this cache for a new sequence while keeping its pages (the
@@ -329,20 +426,28 @@ impl KvCache {
         self.len = 0;
     }
 
-    /// Resident size in bytes (all attached pages).
+    /// Resident size in bytes — owned pages only. Shared views are billed
+    /// once pool-wide (by the arena that backs the prefix index), not per
+    /// mapping, so this never double-counts a page.
     pub fn memory_bytes(&self) -> usize {
-        self.pages.iter().map(KvPage::memory_bytes).sum()
+        self.pages
+            .iter()
+            .filter_map(|s| match s {
+                PageSlot::Owned(p) => Some(p.memory_bytes()),
+                PageSlot::Shared(_) => None,
+            })
+            .sum()
     }
 
     /// The first `n` K rows of `block`, gathered across the page table in
-    /// position order — the attention walk. Yields fewer than `n` rows
-    /// only if the page table is too short (guarded by the decode-entry
-    /// asserts).
+    /// position order — the attention walk. Shared and owned pages read
+    /// identically. Yields fewer than `n` rows only if the page table is
+    /// too short (guarded by the decode-entry asserts).
     pub fn k_rows(&self, block: usize, n: usize) -> impl Iterator<Item = &[f32]> + '_ {
         self.pages
             .iter()
             .flat_map(move |p| {
-                let m = &p.k[block];
+                let m = &p.page().k[block];
                 (0..m.rows).map(move |r| m.row(r))
             })
             .take(n)
@@ -353,7 +458,7 @@ impl KvCache {
         self.pages
             .iter()
             .flat_map(move |p| {
-                let m = &p.v[block];
+                let m = &p.page().v[block];
                 (0..m.rows).map(move |r| m.row(r))
             })
             .take(n)
@@ -361,12 +466,18 @@ impl KvCache {
 
     #[inline]
     pub fn k_row_mut(&mut self, block: usize, pos: usize) -> &mut [f32] {
-        self.pages[pos / self.page_size].k[block].row_mut(pos % self.page_size)
+        match &mut self.pages[pos / self.page_size] {
+            PageSlot::Owned(p) => p.k[block].row_mut(pos % self.page_size),
+            PageSlot::Shared(_) => panic!("write to shared KV page at position {pos}"),
+        }
     }
 
     #[inline]
     pub fn v_row_mut(&mut self, block: usize, pos: usize) -> &mut [f32] {
-        self.pages[pos / self.page_size].v[block].row_mut(pos % self.page_size)
+        match &mut self.pages[pos / self.page_size] {
+            PageSlot::Owned(p) => p.v[block].row_mut(pos % self.page_size),
+            PageSlot::Shared(_) => panic!("write to shared KV page at position {pos}"),
+        }
     }
 }
 
@@ -987,6 +1098,103 @@ mod tests {
         let m = tiny();
         let mut c = KvCache::paged(&m.cfg, 4);
         let _ = m.decode_step(1, &mut c);
+    }
+
+    #[test]
+    fn shared_prefix_pages_decode_identically() {
+        // A joiner that maps the donor's filled prefix page read-only and
+        // recomputes only the tail must produce the exact logits of a
+        // fresh scalar decode of the whole sequence — the bit-identity
+        // contract prefix sharing rests on.
+        let m = tiny();
+        let seq = [7usize, 3, 11, 2, 19, 4];
+        let ps = 3usize;
+        let mut donor = KvCache::paged(&m.cfg, ps);
+        for &t in &seq {
+            if donor.needs_page() {
+                donor.push_page(KvPage::new(&m.cfg, ps));
+            }
+            m.decode_step(t, &mut donor);
+        }
+        let shared = donor.share_page(0);
+        assert_eq!(donor.shared_pages_held(), 1);
+        assert_eq!(donor.owned_pages_held(), 1);
+
+        let mut joiner = KvCache::paged(&m.cfg, ps);
+        joiner.push_shared(Arc::clone(&shared));
+        joiner.len = ps; // prefix positions 0..ps come from the shared page
+        let mut got = Vec::new();
+        for &t in &seq[ps..] {
+            if joiner.needs_page() {
+                joiner.push_page(KvPage::new(&m.cfg, ps));
+            }
+            got = m.decode_step(t, &mut joiner);
+        }
+        let mut clean = KvCache::new(&m.cfg);
+        let mut want = Vec::new();
+        for &t in &seq {
+            want = m.decode_step(t, &mut clean);
+        }
+        assert_eq!(got, want, "shared-prefix decode diverged");
+        // Three holders now: donor, joiner, and the test's handle.
+        assert_eq!(Arc::strong_count(&shared), 3);
+        // Retirement returns only owned pages and drops the shared refs.
+        assert_eq!(joiner.take_pages().len(), 1);
+        assert_eq!(donor.take_pages().len(), 1);
+        assert_eq!(Arc::strong_count(&shared), 1);
+    }
+
+    #[test]
+    fn fork_page_copies_contents_and_restores_writability() {
+        let m = tiny();
+        let seq = [9usize, 1, 5, 13];
+        let ps = 4usize;
+        let mut donor = KvCache::paged(&m.cfg, ps);
+        donor.push_page(KvPage::new(&m.cfg, ps));
+        for &t in &seq {
+            m.decode_step(t, &mut donor);
+        }
+        let shared = donor.share_page(0);
+        let mut joiner = KvCache::paged(&m.cfg, ps);
+        joiner.push_shared(shared);
+        assert!(joiner.page_is_shared(0));
+        assert_eq!(joiner.memory_bytes(), 0, "shared views are billed pool-wide");
+        joiner.fork_page(0, KvPage::new(&m.cfg, ps));
+        assert!(!joiner.page_is_shared(0));
+        // The fork carries the donor's rows bit-for-bit: overwriting the
+        // last position and decoding on top must equal a scalar decode of
+        // the edited sequence.
+        joiner.len = ps - 1;
+        let edited = [9usize, 1, 5, 2, 8];
+        let mut got = Vec::new();
+        for &t in &edited[ps - 1..] {
+            if joiner.needs_page() {
+                joiner.push_page(KvPage::new(&m.cfg, ps));
+            }
+            got = m.decode_step(t, &mut joiner);
+        }
+        let mut clean = KvCache::new(&m.cfg);
+        let mut want = Vec::new();
+        for &t in &edited {
+            want = m.decode_step(t, &mut clean);
+        }
+        assert_eq!(got, want, "post-fork decode diverged");
+    }
+
+    #[test]
+    #[should_panic(expected = "write to shared KV page")]
+    fn writing_into_shared_page_panics() {
+        let m = tiny();
+        let mut donor = KvCache::paged(&m.cfg, 2);
+        donor.push_page(KvPage::new(&m.cfg, 2));
+        m.decode_step(3, &mut donor);
+        m.decode_step(4, &mut donor);
+        let shared = donor.share_page(0);
+        let mut joiner = KvCache::paged(&m.cfg, 2);
+        joiner.push_shared(shared);
+        joiner.len = 1;
+        // Position 1 lands in the shared page: decode must refuse to write.
+        let _ = m.decode_step(5, &mut joiner);
     }
 
     #[test]

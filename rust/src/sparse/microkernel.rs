@@ -361,6 +361,42 @@ pub(crate) trait TileWalk: Sync {
     fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa);
 }
 
+/// The stripe walk shared by the `Bcsr`/`QBcsr` [`TileWalk::fold_tile`]
+/// impls: for each non-empty column tile of the row stripe, slice every
+/// local-CSR row's nonzero run boundaries out of `indptr` and hand
+/// `(tile, lo, hi, column base, b-wide accumulator lane)` to the format's
+/// `fold` closure, which borrows its run storage from the tile and
+/// dispatches the lane kernel. Keeping the walk here means the two tile
+/// formats cannot drift apart on stripe indexing or lane offsets — only
+/// the run type (f32 vs i8 + per-tile scale) differs between them.
+pub(crate) fn fold_tile_stripe<'t, T: 't>(
+    n_ct: usize,
+    col_tile: usize,
+    tile_rows: usize,
+    b: usize,
+    acc: &mut [f32],
+    tile_at: impl Fn(usize) -> &'t T,
+    indptr: impl Fn(&'t T) -> &'t [u32],
+    mut fold: impl FnMut(&'t T, usize, usize, usize, &mut [f32]),
+) {
+    for ct in 0..n_ct {
+        let tile = tile_at(ct);
+        let ip = indptr(tile);
+        // `ip[tile_rows]` is the tile's total nonzero count.
+        if ip[tile_rows] == 0 {
+            continue;
+        }
+        let c0 = ct * col_tile;
+        for lr in 0..tile_rows {
+            let (lo, hi) = (ip[lr] as usize, ip[lr + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            fold(tile, lo, hi, c0, &mut acc[lr * b..(lr + 1) * b]);
+        }
+    }
+}
+
 /// The one tile-walk engine: writes `out[b × rows] = X·Aᵀ (+ (X·Vtᵀ)·Uᵀ)`
 /// for any [`TileWalk`] source.
 ///

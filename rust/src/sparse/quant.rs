@@ -241,28 +241,23 @@ impl TileWalk for QBcsr {
     }
 
     fn fold_tile(&self, r0: usize, r1: usize, xt: &Matrix, acc: &mut [f32], isa: Isa) {
-        let b = xt.cols;
         let n_ct = self.n_col_tiles();
-        let rt = r0 / self.row_tile;
-        for ct in 0..n_ct {
-            let tile = &self.tiles[rt * n_ct + ct];
-            if tile.cols.is_empty() {
-                continue;
-            }
-            let c0 = ct * self.col_tile;
-            for lr in 0..(r1 - r0) {
-                let lo = tile.indptr[lr] as usize;
-                let hi = tile.indptr[lr + 1] as usize;
-                if lo == hi {
-                    continue;
-                }
+        let stripe = &self.tiles[(r0 / self.row_tile) * n_ct..];
+        microkernel::fold_tile_stripe(
+            n_ct,
+            self.col_tile,
+            r1 - r0,
+            xt.cols,
+            acc,
+            |ct| &stripe[ct],
+            |tile| tile.indptr.as_slice(),
+            |tile, lo, hi, c0, arow| {
                 let values = &tile.values[lo..hi];
                 let cols = &tile.cols[lo..hi];
                 let run = I8TileRun { values, cols, base: c0 };
-                let arow = &mut acc[lr * b..(lr + 1) * b];
                 microkernel::fold_i8_tile(isa, run, xt, arow, tile.scale);
-            }
-        }
+            },
+        );
     }
 }
 

@@ -49,6 +49,17 @@ fn drive(
     cfg: EngineConfig,
     arrivals: &[(usize, Vec<usize>)],
 ) -> (HashMap<u64, FinishedSeq>, Engine) {
+    drive_with(model, cfg, arrivals, Request::new)
+}
+
+/// [`drive`] with per-request construction control, so tests can opt
+/// requests out of prefix sharing or attach stop tokens.
+fn drive_with(
+    model: &Arc<TransformerLM>,
+    cfg: EngineConfig,
+    arrivals: &[(usize, Vec<usize>)],
+    make: impl Fn(u64, Vec<usize>) -> Request,
+) -> (HashMap<u64, FinishedSeq>, Engine) {
     let mut engine = Engine::new(Arc::clone(model), cfg);
     let mut queue = Batcher::default();
     let mut done = HashMap::new();
@@ -58,7 +69,7 @@ fn drive(
         for (id, (at, prompt)) in arrivals.iter().enumerate() {
             if *at == step {
                 let prompt = prompt.clone();
-                queue.push(Request::new(id as u64, prompt));
+                queue.push(make(id as u64, prompt));
             }
         }
         for ev in engine.step(&mut queue) {
@@ -361,6 +372,223 @@ fn per_request_budgets_match_scalar_generate_under_arrivals() {
             let f = &done[&(id as u64)];
             assert_eq!(f.status, expected_status(prompt.len(), gen, cap), "budget {budget:?}");
             assert_eq!(f.tokens, generate(&m, prompt, gen), "budget {budget:?}");
+        }
+    });
+}
+
+#[test]
+fn shared_prefix_outputs_bit_identical_to_unshared_and_leak_free() {
+    // The shared-prefix tentpole's parity contract: prefix-KV reuse is an
+    // *optimization*, never a behaviour. For any page geometry, arrival
+    // pattern, and divergence point — tails splitting mid-page, exact
+    // page-aligned duplicates (the CoW fork path), unrelated prompts mixed
+    // in — a run with sharing enabled must produce byte-identical tokens
+    // and statuses to the same workload with every request opted out, both
+    // equal to the lockstep scalar reference, and neither run may leak a
+    // page (shared pages included) once drained.
+    let m = tiny();
+    let cap = m.cfg.seq_len;
+    check("prefix sharing == no sharing == lockstep", 10, |g| {
+        let slots = g.usize_range(2, 5);
+        let page_size = g.usize_range(1, 13);
+        let per_seq = cap.div_ceil(page_size);
+        let kv_pages = g.usize_range(per_seq, slots * per_seq + 1);
+        let cfg = EngineConfig {
+            slots,
+            prefill_chunk: g.usize_range(1, 7),
+            gen_tokens: g.usize_range(1, 6),
+            admission: if g.bool() {
+                AdmissionPolicy::Fcfs
+            } else {
+                AdmissionPolicy::ShortestPrompt
+            },
+            page_size,
+            kv_pages,
+        };
+        // A common system-prompt head most requests open with; tails
+        // diverge at random points relative to page boundaries.
+        let head: Vec<usize> =
+            (0..g.usize_range(1, 13)).map(|_| g.usize_range(0, m.cfg.vocab)).collect();
+        let n_req = g.usize_range(2, 8);
+        let arrivals: Vec<(usize, Vec<usize>)> = (0..n_req)
+            .map(|_| {
+                let prompt = match g.usize_range(0, 8) {
+                    // Exact duplicate of the head: if the head is
+                    // page-aligned this forces a fork before the joiner's
+                    // first decode write.
+                    0 => head.clone(),
+                    // Unrelated prompt: must neither match nor be disturbed.
+                    1 => (0..g.usize_range(1, 17))
+                        .map(|_| g.usize_range(0, m.cfg.vocab))
+                        .collect(),
+                    // Common head, divergent tail.
+                    _ => {
+                        let mut p = head.clone();
+                        p.extend((0..g.usize_range(1, 13)).map(|_| g.usize_range(0, m.cfg.vocab)));
+                        p
+                    }
+                };
+                (g.usize_range(0, 8), prompt)
+            })
+            .collect();
+        let (shared, eng_s) = drive(&m, cfg, &arrivals);
+        let (unshared, eng_u) =
+            drive_with(&m, cfg, &arrivals, |id, p| Request::new(id, p).without_prefix_sharing());
+        for (id, (_, prompt)) in arrivals.iter().enumerate() {
+            let s = &shared[&(id as u64)];
+            let u = &unshared[&(id as u64)];
+            assert_eq!(
+                s.tokens,
+                u.tokens,
+                "sharing changed output for prompt len {} under {cfg:?}",
+                prompt.len()
+            );
+            assert_eq!(s.status, u.status, "sharing changed status under {cfg:?}");
+            assert_eq!(s.status, expected_status(prompt.len(), cfg.gen_tokens, cap));
+            assert_eq!(
+                s.tokens,
+                generate_lockstep(&m, prompt, cfg.gen_tokens),
+                "prompt len {} under {cfg:?}",
+                prompt.len()
+            );
+        }
+        let ts = eng_s.telemetry().lock().unwrap().clone();
+        let tu = eng_u.telemetry().lock().unwrap().clone();
+        assert_eq!(ts.pages_in_use_now, 0, "sharing run leaked pages under {cfg:?}");
+        assert_eq!(tu.pages_in_use_now, 0, "opted-out run leaked pages under {cfg:?}");
+        // Opting out must really opt out.
+        assert_eq!(tu.shared_pages, 0);
+        assert_eq!(tu.prefill_tokens_saved, 0);
+        assert_eq!(tu.cow_forks, 0);
+    });
+}
+
+#[test]
+fn shared_prefix_load_saves_prefill_and_forks_on_duplicates() {
+    // Deterministic end-to-end counter check: a donor publishes its two
+    // head pages, three later arrivals join them (one an exact
+    // page-aligned duplicate, which must fork before recomputing its last
+    // prompt token), and the telemetry adds up exactly.
+    let m = tiny();
+    let gen = 2usize;
+    let cfg = EngineConfig {
+        slots: 3,
+        prefill_chunk: 4,
+        gen_tokens: gen,
+        admission: AdmissionPolicy::Fcfs,
+        page_size: 4,
+        kv_pages: 12,
+    };
+    let head: Vec<usize> = (0..8).map(|j| (j * 5 + 3) % m.cfg.vocab).collect();
+    let with_tail = |tail: &[usize]| {
+        let mut p = head.clone();
+        p.extend_from_slice(tail);
+        p
+    };
+    let arrivals: Vec<(usize, Vec<usize>)> = vec![
+        // Donor: prefill covers both head pages by step 1, publishing them.
+        (0, with_tail(&[1, 2])),
+        // Joiner with a divergent tail: maps 2 pages, resumes at token 8.
+        (4, with_tail(&[3])),
+        // Exact page-aligned duplicate: maps 2 pages, resumes at token 7,
+        // and must CoW-fork page 1 before rewriting position 7.
+        (4, head.clone()),
+        // Late joiner: the index still holds the head pages.
+        (6, with_tail(&[4, 5, 6])),
+    ];
+    let (done, engine) = drive(&m, cfg, &arrivals);
+    for (id, (_, prompt)) in arrivals.iter().enumerate() {
+        assert_eq!(
+            done[&(id as u64)].tokens,
+            generate_lockstep(&m, prompt, gen),
+            "request {id} diverged from the scalar reference"
+        );
+    }
+    let t = engine.telemetry().lock().unwrap().clone();
+    assert_eq!(t.shared_pages, 6, "three joiners × two mapped head pages");
+    // Saved prefill: 8 (divergent tail) + 7 (duplicate resumes one early,
+    // its last prompt token must be recomputed to produce logits) + 8.
+    assert_eq!(t.prefill_tokens_saved, 23);
+    assert_eq!(t.cow_forks, 1, "only the exact duplicate rewrites a shared page");
+    assert_eq!(t.pages_in_use_now, 0, "drain must reclaim published pages too");
+}
+
+#[test]
+fn stop_tokens_match_truncated_scalar_generate() {
+    // Per-request stop tokens: output equals scalar `generate` truncated
+    // at the first stop token *inclusive*, with StoppedAtToken status; a
+    // request whose reference output never hits a stop token is untouched.
+    let m = tiny();
+    let cap = m.cfg.seq_len;
+    check("stop tokens == truncated scalar generate", 10, |g| {
+        let cfg = EngineConfig {
+            slots: g.usize_range(1, 4),
+            prefill_chunk: g.usize_range(1, 7),
+            gen_tokens: g.usize_range(1, 9),
+            admission: if g.bool() {
+                AdmissionPolicy::Fcfs
+            } else {
+                AdmissionPolicy::ShortestPrompt
+            },
+            ..Default::default()
+        };
+        let n_req = g.usize_range(1, 6);
+        let arrivals: Vec<(usize, Vec<usize>, Vec<usize>)> = (0..n_req)
+            .map(|_| {
+                let len = g.usize_range(1, 15);
+                let prompt: Vec<usize> =
+                    (0..len).map(|_| g.usize_range(0, m.cfg.vocab)).collect();
+                // Half the time seed a stop token from the reference output
+                // so stops actually fire mid-stream; always mix in random
+                // vocab draws that may or may not ever be emitted.
+                let full = generate(&m, &prompt, cfg.gen_tokens);
+                let mut stops = Vec::new();
+                if g.bool() && !full.is_empty() {
+                    stops.push(full[g.usize_range(0, full.len())]);
+                }
+                for _ in 0..g.usize_range(0, 3) {
+                    stops.push(g.usize_range(0, m.cfg.vocab));
+                }
+                (g.usize_range(0, 5), prompt, stops)
+            })
+            .collect();
+        let mut engine = Engine::new(Arc::clone(&m), cfg);
+        let mut queue = Batcher::default();
+        let mut done: HashMap<u64, FinishedSeq> = HashMap::new();
+        let mut step = 0usize;
+        while done.len() < arrivals.len() {
+            assert!(step < 10_000, "engine stalled");
+            for (id, (at, prompt, stops)) in arrivals.iter().enumerate() {
+                if *at == step {
+                    queue.push(
+                        Request::new(id as u64, prompt.clone()).with_stop_tokens(stops.clone()),
+                    );
+                }
+            }
+            for ev in engine.step(&mut queue) {
+                if let SeqEvent::Finished(f) = ev {
+                    assert!(done.insert(f.id, f).is_none());
+                }
+            }
+            step += 1;
+        }
+        for (id, (_, prompt, stops)) in arrivals.iter().enumerate() {
+            let f = &done[&(id as u64)];
+            let full = generate(&m, prompt, cfg.gen_tokens);
+            match full.iter().position(|t| stops.contains(t)) {
+                Some(i) => {
+                    assert_eq!(
+                        f.status,
+                        ResponseStatus::StoppedAtToken,
+                        "stop at {i} under {cfg:?}"
+                    );
+                    assert_eq!(f.tokens, &full[..=i], "stop at {i} under {cfg:?}");
+                }
+                None => {
+                    assert_eq!(f.status, expected_status(prompt.len(), cfg.gen_tokens, cap));
+                    assert_eq!(f.tokens, full, "no stop token under {cfg:?}");
+                }
+            }
         }
     });
 }
