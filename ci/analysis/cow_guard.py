@@ -1,0 +1,51 @@
+"""cow-guard: KV row write paths stay behind the copy-on-write guard.
+
+``KvCache::k_row_mut`` / ``v_row_mut`` panic on shared
+(``Arc``-refcounted prefix) pages — that panic *is* the CoW guard that
+keeps shared-prefix reuse an optimization rather than a behaviour. The
+attention write paths in ``model/lm.rs`` are the only audited callers:
+the engine routes every write through ``decode_step``/
+``decode_step_batch``, which fork a shared page (``KvPool::fork_page``)
+before any write can land in it.
+
+A new direct call site elsewhere would bypass that fork discipline and
+turn the guard panic into a production crash (or, worse, motivate
+someone to remove the panic). This rule restricts call sites to
+``model/lm.rs`` plus an explicit allowlist of fork-guarded engine sites
+(currently empty — extend ``ALLOWED_FILES`` in a PR that demonstrates
+the fork happens first).
+"""
+
+from __future__ import annotations
+
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "cow-guard"
+DESCRIPTION = "k_row_mut/v_row_mut calls only in model/lm.rs (+ fork-guarded allowlist)"
+
+# model/lm.rs owns the write paths; add fork-guarded engine sites here
+# explicitly, with a review that shows KvPool::fork_page precedes the write.
+ALLOWED_FILES = ("rust/src/model/lm.rs",)
+
+CALL_RE = re.compile(r"\.\s*(k_row_mut|v_row_mut)\s*\(")
+
+
+def check(scan):
+    findings = []
+    for src in scan.rust_files():
+        if src.path in ALLOWED_FILES:
+            continue
+        for m in CALL_RE.finditer(src.code):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    src.path,
+                    src.line_of(m.start()),
+                    f"`{m.group(1)}` called outside model/lm.rs — KV row "
+                    "writes must stay behind the CoW fork discipline "
+                    "(panics on shared prefix pages)",
+                )
+            )
+    return findings

@@ -1,0 +1,66 @@
+"""float-sort: comparators must use ``total_cmp``, never
+``partial_cmp(..).unwrap()``.
+
+``partial_cmp`` returns ``None`` for NaN, so a
+``sort_by(|a, b| a.partial_cmp(b).unwrap())`` comparator panics the
+moment a NaN reaches it — mid-run, with a `called unwrap on None`
+message that names no culprit. PR 4 fixed exactly this class in
+``Summary::of`` after a NaN latency observation panicked the serve
+telemetry; a grep then found four more live instances on the
+calibration/compression paths where 0/0 saliency scores are one dead
+calibration column away. ``f32::total_cmp``/``f64::total_cmp`` is the
+total order the standard library provides for exactly this purpose.
+
+The rule flags ``partial_cmp`` immediately unwrapped inside the
+comparator argument of ``sort_by`` / ``sort_unstable_by`` / ``max_by`` /
+``min_by``. ``unwrap_or(...)`` fallbacks are tolerated (NaN-safe, if
+order-fuzzy); use total_cmp for new code.
+"""
+
+from __future__ import annotations
+
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "float-sort"
+DESCRIPTION = "ban partial_cmp(..).unwrap() comparators; require total_cmp"
+
+SORT_RE = re.compile(r"\b(sort_by|sort_unstable_by|max_by|min_by)\s*\(")
+PARTIAL_UNWRAP_RE = re.compile(r"partial_cmp\b[^;]*?\.\s*unwrap\s*\(\s*\)")
+
+
+def _balanced_span(code, open_paren):
+    """End offset of the parenthesized span starting at ``open_paren``."""
+    depth = 0
+    for i in range(open_paren, len(code)):
+        c = code[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(code)
+
+
+def check(scan):
+    findings = []
+    for src in scan.rust_files():
+        code = src.code
+        for m in SORT_RE.finditer(code):
+            open_paren = m.end() - 1
+            arg = code[open_paren:_balanced_span(code, open_paren)]
+            pu = PARTIAL_UNWRAP_RE.search(arg)
+            if pu:
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        src.line_of(open_paren + pu.start()),
+                        f"`{m.group(1)}` comparator unwraps `partial_cmp` — "
+                        "panics on NaN; use `total_cmp` (preserving the "
+                        "sort direction)",
+                    )
+                )
+    return findings

@@ -1,0 +1,66 @@
+"""numerics-contract: no FMA contraction or fast-math in the kernel paths.
+
+The serve engine's property tests rest on a documented contract
+(``sparse/microkernel.rs``): results are **bit-identical** across batch
+widths, lane/tail splits, and SIMD-vs-generic dispatch, because every
+output element folds its nonzeros in index order with plain mul-then-add
+f32 arithmetic. A single ``mul_add`` (one rounding instead of two), an
+explicit ``_mm*_fmadd``-family intrinsic, or a fast-math intrinsic
+anywhere in the kernel tree silently breaks that equivalence — the tests
+would only catch it on a host whose dispatch actually diverges.
+
+This rule bans those constructs inside the contract paths:
+``rust/src/sparse/``, ``rust/src/tensor.rs``, and ``rust/src/model/``.
+Code elsewhere (experiments, eval, vit) may use them freely.
+"""
+
+from __future__ import annotations
+
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "numerics-contract"
+DESCRIPTION = "no mul_add / FMA intrinsics / fast-math in the bit-identity kernel paths"
+
+# Paths covered by the bit-identity contract. A trailing slash means the
+# whole subtree.
+CONTRACT_PATHS = ("rust/src/sparse/", "rust/src/tensor.rs", "rust/src/model/")
+
+BANNED = [
+    (re.compile(r"\bmul_add\b"), "`mul_add` contracts mul+add into one rounding"),
+    (
+        re.compile(r"\b_mm\d*_maskz?_?fn?m(?:add|sub)\w*\b|\b_mm\d*_fn?m(?:add|sub)\w*\b"),
+        "FMA-family intrinsic",
+    ),
+    (
+        re.compile(r"\bf(?:add|sub|mul|div|rem)_(?:fast|algebraic)\b"),
+        "fast-math intrinsic relaxes IEEE semantics",
+    ),
+]
+
+
+def in_contract_path(path):
+    return any(
+        path == p or (p.endswith("/") and path.startswith(p)) for p in CONTRACT_PATHS
+    )
+
+
+def check(scan):
+    findings = []
+    for src in scan.rust_files():
+        if not in_contract_path(src.path):
+            continue
+        for pattern, why in BANNED:
+            for m in pattern.finditer(src.code):
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        src.line_of(m.start()),
+                        f"{why}: `{m.group(0)}` would break the "
+                        "bit-identity-across-lane-splits contract "
+                        "(see sparse/microkernel.rs module docs)",
+                    )
+                )
+    return findings

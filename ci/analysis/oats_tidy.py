@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""oats-tidy: in-repo contract-enforcement static analysis.
+
+The codebase's load-bearing guarantees — the bit-identity numerics
+contract every serve-engine property test rests on, the CoW shared-page
+guard, the cached thread probe, the hand-mirrored telemetry schema —
+were enforced only by reviewer discipline. This CLI makes them
+mechanical: a dependency-free walk of the Rust tree plus the committed
+schema lock, failing CI on any violation with ``file:line`` findings.
+
+Usage::
+
+    python3 ci/analysis/oats_tidy.py --all              # every rule (CI)
+    python3 ci/analysis/oats_tidy.py float-sort cow-guard
+    python3 ci/analysis/oats_tidy.py --list-rules
+    python3 ci/analysis/oats_tidy.py --list-suppressions
+    python3 ci/analysis/oats_tidy.py schema-lock --update-lock
+
+Suppression: a finding is waived by a comment on the same line or the
+line above it::
+
+    // tidy-allow(float-sort): scores are clamped finite two lines up
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+Suppressions are tracked — ``--list-suppressions`` prints every one in
+the tree, and the summary line counts them — so waivers stay greppable
+and reviewable instead of invisible.
+
+Exit status: 0 when no unsuppressed findings, 1 otherwise (2 on usage
+errors).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import cow_guard  # noqa: E402
+import float_sort  # noqa: E402
+import numerics_contract  # noqa: E402
+import schema_lock  # noqa: E402
+import thread_probe  # noqa: E402
+import unsafe_hygiene  # noqa: E402
+from tidy_core import RepoScan, apply_suppressions, collect_suppressions  # noqa: E402
+
+RULE_MODULES = [
+    unsafe_hygiene,
+    numerics_contract,
+    float_sort,
+    thread_probe,
+    cow_guard,
+    schema_lock,
+]
+RULES = {m.RULE_ID: m for m in RULE_MODULES}
+
+DEFAULT_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+)
+
+
+def run_rules(scan, rule_ids):
+    """All findings for the requested rules, suppressions applied.
+
+    Returns ``(findings, used_suppressions)``.
+    """
+    findings = []
+    for rid in rule_ids:
+        findings.extend(RULES[rid].check(scan))
+    used = apply_suppressions(findings, scan)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, used
+
+
+def list_suppressions(scan):
+    """Every tidy-allow comment in the tree as (path, line, rule, reason)."""
+    out = []
+    for src in scan.rust_files():
+        for rule, lines in sorted(collect_suppressions(src).items()):
+            for ln, reason in sorted(lines.items()):
+                out.append((src.path, ln, rule, reason))
+    return sorted(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="oats_tidy.py", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument("rules", nargs="*", help="rule ids to run (see --list-rules)")
+    ap.add_argument("--all", action="store_true", help="run every rule")
+    ap.add_argument("--root", default=DEFAULT_ROOT, help="repository root")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument(
+        "--list-suppressions",
+        action="store_true",
+        help="print every tidy-allow comment in the tree and exit",
+    )
+    ap.add_argument(
+        "--update-lock",
+        action="store_true",
+        help="regenerate ci/analysis/schema_lock.json from live extraction "
+        "(review the diff before committing; CI never does this)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for m in RULE_MODULES:
+            print(f"{m.RULE_ID:18} {m.DESCRIPTION}")
+        return 0
+
+    scan = RepoScan(args.root)
+
+    if args.list_suppressions:
+        sups = list_suppressions(scan)
+        for path, ln, rule, reason in sups:
+            print(f"{path}:{ln}: tidy-allow({rule}): {reason or '<no reason>'}")
+        print(f"oats-tidy: {len(sups)} suppression(s) in tree")
+        return 0
+
+    if args.update_lock:
+        path = schema_lock.write_lock(scan)
+        print(f"oats-tidy: schema lock regenerated -> {path}")
+        if not (args.all or args.rules):
+            return 0
+
+    if args.all:
+        rule_ids = list(RULES)
+    else:
+        rule_ids = args.rules
+        unknown = [r for r in rule_ids if r not in RULES]
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)} (see --list-rules)")
+        if not rule_ids:
+            ap.error("no rules requested (use --all or name rules)")
+
+    findings, used = run_rules(scan, rule_ids)
+    live = [f for f in findings if not f.suppressed]
+    for f in live:
+        print(f"{f.path}:{f.line}: [{f.rule}] {f.message}")
+    for path, ln, rule, reason in used:
+        print(f"note: suppressed at {path}:{ln}: tidy-allow({rule}): {reason}")
+    n_files = len(list(scan.rust_paths()))
+    print(
+        f"oats-tidy: {len(live)} finding(s), {len(used)} suppressed, "
+        f"{len(rule_ids)} rule(s) over {n_files} files"
+    )
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

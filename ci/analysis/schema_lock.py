@@ -1,0 +1,231 @@
+"""schema-lock: the telemetry JSON schema is a two-sided committed contract.
+
+The ``SERVE_*.json`` / ``BENCH_*.json`` keys are hand-mirrored in three
+places: the Rust emitters (``ServeStats::to_json`` in
+``coordinator/serve.rs``, ``Bench``/``BenchResult::to_json`` in
+``bench.rs``, the shared ``Summary::to_json`` block in
+``util/stats.rs``), the CI gate readers (``ci/gates/serve_gate.py``,
+``ci/gates/bench_gate.py``), and — implicitly — every archived CI
+artifact. Nothing machine-checks the mirror today: rename a key on one
+side and the gate either crashes (KeyError mid-CI) or, for ``.get``
+reads, silently stops checking anything.
+
+This rule locks the schema in ``ci/analysis/schema_lock.json``:
+
+* **Emitters**: every string key passed to ``.set("…", …)`` in each
+  locked emitter file is extracted and diffed against the lock — a key
+  added without a lock update fails, and a key deleted from the emitter
+  while still locked fails. Drift is loud in *both* directions.
+* **Gate reads**: every string key each gate file reads (``doc["k"]`` /
+  ``doc.get("k")``) is diffed against the lock the same way, and —
+  ignore-listed gate-internal keys aside — must be emitted by some
+  locked emitter. A gate reading a key nothing emits fails the build.
+
+Lock update procedure (for *intentional* schema changes)::
+
+    python3 ci/analysis/oats_tidy.py schema-lock --update-lock
+    git diff ci/analysis/schema_lock.json   # review: is every change intended?
+    git add ci/analysis/schema_lock.json    # commit with the emitter change
+
+CI never writes the lock — the committed file is the contract, so a PR
+that drifts the schema cannot also re-lock it unreviewed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "schema-lock"
+DESCRIPTION = "telemetry keys emitted by Rust == committed lock == keys gates read"
+
+LOCK_PATH = "ci/analysis/schema_lock.json"
+
+# Rust `.set("key", …)` — the one JSON-building idiom the codebase uses.
+RUST_SET_RE = re.compile(r'\.set\(\s*"([A-Za-z0-9_]+)"')
+# Python reads: subscript with a literal key (excluding stores: `]` followed
+# by a single `=`), and .get("key", …).
+PY_SUB_RE = re.compile(r"""\[\s*(['"])([A-Za-z0-9_]+)\1\s*\](?!\s*=(?!=))""")
+PY_GET_RE = re.compile(r"""\.get\(\s*(['"])([A-Za-z0-9_]+)\1""")
+
+
+def load_lock(scan):
+    full = os.path.join(scan.root, LOCK_PATH)
+    try:
+        with open(full, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def extract_emitted_keys(src):
+    """{key: first line} for every ``.set("key", …)`` in a Rust emitter."""
+    keys = {}
+    for m in RUST_SET_RE.finditer(src.code_with_strings):
+        keys.setdefault(m.group(1), src.line_of(m.start()))
+    return keys
+
+
+def extract_gate_reads(text):
+    """{key: first line} for every literal key a gate script reads."""
+    keys = {}
+    line_starts = [0]
+    for i, ch in enumerate(text):
+        if ch == "\n":
+            line_starts.append(i + 1)
+    import bisect
+
+    def line_of(off):
+        return bisect.bisect_right(line_starts, off)
+
+    for regex in (PY_SUB_RE, PY_GET_RE):
+        for m in regex.finditer(text):
+            keys.setdefault(m.group(2), line_of(m.start()))
+    return keys
+
+
+def _read_text(scan, rel_path):
+    try:
+        with open(os.path.join(scan.root, rel_path), encoding="utf-8") as f:
+            return f.read()
+    except OSError:
+        return None
+
+
+UPDATE_HINT = (
+    "intentional change? run `python3 ci/analysis/oats_tidy.py schema-lock "
+    "--update-lock`, review the diff, and commit the lock"
+)
+
+
+def check(scan):
+    findings = []
+    lock = load_lock(scan)
+    if lock is None:
+        findings.append(
+            Finding(RULE_ID, LOCK_PATH, 1, "schema lock missing or unparseable")
+        )
+        return findings
+
+    all_emitted = set()
+    for emitter_path, locked_keys in sorted(lock.get("emitters", {}).items()):
+        src = scan.file(emitter_path)
+        if src is None:
+            findings.append(
+                Finding(
+                    RULE_ID, LOCK_PATH, 1, f"locked emitter {emitter_path} not found"
+                )
+            )
+            continue
+        live = extract_emitted_keys(src)
+        all_emitted.update(live)
+        locked = set(locked_keys)
+        for key in sorted(set(live) - locked):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    emitter_path,
+                    live[key],
+                    f"emitted key \"{key}\" is not in the schema lock — "
+                    f"{UPDATE_HINT}",
+                )
+            )
+        for key in sorted(locked - set(live)):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    emitter_path,
+                    1,
+                    f"locked key \"{key}\" is no longer emitted here — "
+                    "archived consumers and the gates still expect it; "
+                    f"{UPDATE_HINT}",
+                )
+            )
+
+    for gate_path, entry in sorted(lock.get("gates", {}).items()):
+        text = _read_text(scan, gate_path)
+        if text is None:
+            findings.append(
+                Finding(RULE_ID, LOCK_PATH, 1, f"locked gate {gate_path} not found")
+            )
+            continue
+        ignore = set(entry.get("ignore", []))
+        live = {
+            k: ln for k, ln in extract_gate_reads(text).items() if k not in ignore
+        }
+        locked = set(entry.get("reads", []))
+        for key in sorted(set(live) - locked):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    gate_path,
+                    live[key],
+                    f"gate reads key \"{key}\" not recorded in the schema "
+                    f"lock — {UPDATE_HINT}",
+                )
+            )
+        for key in sorted(locked - set(live)):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    gate_path,
+                    1,
+                    f"locked gate read \"{key}\" is no longer read here — "
+                    f"{UPDATE_HINT}",
+                )
+            )
+        for key in sorted((set(live) | locked) - all_emitted):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    gate_path,
+                    live.get(key, 1),
+                    f"gate reads key \"{key}\" that no locked emitter "
+                    "emits — the check would KeyError (or silently pass) "
+                    "in CI",
+                )
+            )
+    return findings
+
+
+def regenerate(scan):
+    """Fresh lock contents from live extraction, preserving the existing
+    lock's gate ignore-lists and file sets. Used by ``--update-lock``."""
+    old = load_lock(scan) or {"emitters": {}, "gates": {}}
+    lock = {
+        "_doc": (
+            "Committed telemetry-schema contract, enforced by "
+            "ci/analysis/schema_lock.py (rule: schema-lock). Regenerate "
+            "with `python3 ci/analysis/oats_tidy.py schema-lock "
+            "--update-lock` and review the diff; CI never writes this file."
+        ),
+        "version": 1,
+        "emitters": {},
+        "gates": {},
+    }
+    for emitter_path in sorted(old.get("emitters", {})):
+        src = scan.file(emitter_path)
+        keys = sorted(extract_emitted_keys(src)) if src is not None else []
+        lock["emitters"][emitter_path] = keys
+    for gate_path, entry in sorted(old.get("gates", {}).items()):
+        ignore = sorted(entry.get("ignore", []))
+        text = _read_text(scan, gate_path)
+        reads = (
+            sorted(k for k in extract_gate_reads(text) if k not in set(ignore))
+            if text is not None
+            else []
+        )
+        lock["gates"][gate_path] = {"reads": reads, "ignore": ignore}
+    return lock
+
+
+def write_lock(scan):
+    lock = regenerate(scan)
+    full = os.path.join(scan.root, LOCK_PATH)
+    with open(full, "w", encoding="utf-8") as f:
+        json.dump(lock, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return full

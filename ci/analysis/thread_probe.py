@@ -1,0 +1,40 @@
+"""thread-probe: ``available_parallelism`` lives in util/threadpool.rs only.
+
+PR 5 found the per-call ``std::thread::available_parallelism()`` syscall
+in the serve decode profile — every batched product in every engine step
+paid it — and centralized the probe behind a process-wide ``OnceLock``
+(``util::threadpool::{detected_parallelism, available_threads}``). This
+rule keeps it that way: any new call site must go through the cached
+accessor, not the raw syscall.
+"""
+
+from __future__ import annotations
+
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "thread-probe"
+DESCRIPTION = "available_parallelism only in util/threadpool.rs (OnceLock cache)"
+
+ALLOWED_FILES = ("rust/src/util/threadpool.rs",)
+PROBE_RE = re.compile(r"\bavailable_parallelism\b")
+
+
+def check(scan):
+    findings = []
+    for src in scan.rust_files():
+        if src.path in ALLOWED_FILES:
+            continue
+        for m in PROBE_RE.finditer(src.code):
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    src.path,
+                    src.line_of(m.start()),
+                    "`available_parallelism` outside util/threadpool.rs — "
+                    "use `util::threadpool::available_threads()` (cached, "
+                    "one syscall per process)",
+                )
+            )
+    return findings

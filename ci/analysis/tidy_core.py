@@ -1,0 +1,315 @@
+"""Shared infrastructure for the oats-tidy static analysis rules.
+
+Everything here is dependency-free standard library, mirroring the
+``ci/gates/`` convention: rule modules import this, ``oats_tidy.py``
+drives them, and ``python/tests/test_oats_tidy.py`` exercises both
+against synthetic fixture trees.
+
+The load-bearing piece is :func:`lex_rust`, a line-preserving lexer that
+blanks out comments and string/char literals from Rust source while
+collecting the comment text per line. Rules that look for *code* tokens
+(``unsafe``, ``mul_add``, ``partial_cmp``...) scan the stripped text so a
+doc comment *mentioning* a banned construct never trips a lint; rules
+that look for *comments* (``// SAFETY:``, ``// tidy-allow(...)``) read
+the collected comment map.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+
+class Finding:
+    """One rule violation at a file:line, plus whether it was suppressed."""
+
+    def __init__(self, rule, path, line, message):
+        self.rule = rule
+        self.path = path  # repo-relative, forward slashes
+        self.line = line  # 1-based
+        self.message = message
+        self.suppressed = False
+        self.suppress_reason = ""
+
+    def __repr__(self):
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}{tag}"
+
+
+class SourceFile:
+    """One lexed source file.
+
+    Attributes:
+        path: repo-relative path with forward slashes.
+        text: raw contents.
+        code: contents with comments and string/char literal *bodies*
+            blanked to spaces (newlines and quote delimiters kept, so
+            offsets and line numbers are unchanged).
+        comment_lines: {1-based line: concatenated comment text on it}.
+    """
+
+    def __init__(self, path, text):
+        self.path = path
+        self.text = text
+        self.code, self.comment_lines = lex_rust(text)
+        self._code_with_strings = None
+        self._line_starts = None
+
+    @property
+    def code_with_strings(self):
+        """Like ``code`` but with string literal contents preserved —
+        for rules that read emitted keys out of string literals."""
+        if self._code_with_strings is None:
+            self._code_with_strings, _ = lex_rust(self.text, keep_strings=True)
+        return self._code_with_strings
+
+    def line_of(self, offset):
+        """1-based line number of a character offset into the text."""
+        if self._line_starts is None:
+            starts = [0]
+            for i, ch in enumerate(self.text):
+                if ch == "\n":
+                    starts.append(i + 1)
+            self._line_starts = starts
+        import bisect
+
+        return bisect.bisect_right(self._line_starts, offset)
+
+    def code_lines(self):
+        """Stripped code split into lines (index 0 = line 1)."""
+        return self.code.split("\n")
+
+
+def lex_rust(text, keep_strings=False):
+    """Blank comments and string/char literals out of Rust source.
+
+    Returns ``(code, comment_lines)`` where ``code`` has the same length
+    and line structure as ``text`` but with comment text and string/char
+    contents replaced by spaces, and ``comment_lines`` maps 1-based line
+    numbers to the comment text that appears on them (line comments,
+    block comments — including every line a multi-line block spans).
+
+    Handles line comments, nested block comments, plain/byte strings
+    with escapes, raw strings (``r"…"``, ``r#"…"#``, ``br##"…"##``), and
+    char literals vs lifetimes.
+    """
+    n = len(text)
+    out = list(text)
+    comments = {}
+    line = 1
+    i = 0
+
+    def blank(j):
+        if out[j] != "\n":
+            out[j] = " "
+
+    def blank_str(j):
+        if not keep_strings and out[j] != "\n":
+            out[j] = " "
+
+    def note_comment(ln, s):
+        comments[ln] = comments.get(ln, "") + s
+
+    raw_open = re.compile(r'(?:b?r)(#*)"')
+
+    while i < n:
+        ch = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if ch == "\n":
+            line += 1
+            i += 1
+            continue
+        if ch == "/" and nxt == "/":
+            j = i
+            while j < n and text[j] != "\n":
+                blank(j)
+                j += 1
+            note_comment(line, text[i:j])
+            i = j
+            continue
+        if ch == "/" and nxt == "*":
+            depth = 1
+            j = i + 2
+            buf = "/*"
+            blank(i)
+            blank(i + 1)
+            cur = line
+            while j < n and depth > 0:
+                if text[j] == "/" and j + 1 < n and text[j + 1] == "*":
+                    depth += 1
+                    buf += "/*"
+                    blank(j)
+                    blank(j + 1)
+                    j += 2
+                elif text[j] == "*" and j + 1 < n and text[j + 1] == "/":
+                    depth -= 1
+                    buf += "*/"
+                    blank(j)
+                    blank(j + 1)
+                    j += 2
+                elif text[j] == "\n":
+                    note_comment(cur, buf)
+                    buf = ""
+                    cur += 1
+                    j += 1
+                else:
+                    buf += text[j]
+                    blank(j)
+                    j += 1
+            if buf:
+                note_comment(cur, buf)
+            line = cur
+            i = j
+            continue
+        m = raw_open.match(text, i)
+        if m and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_")):
+            hashes = m.group(1)
+            j = m.end()
+            close = '"' + hashes
+            end = text.find(close, j)
+            if end == -1:
+                end = n
+            for k in range(j, end):
+                blank_str(k)
+            line += text.count("\n", j, end)
+            i = end + len(close)
+            continue
+        if ch == '"' or (ch == "b" and nxt == '"'):
+            j = i + (2 if ch == "b" else 1)
+            while j < n:
+                if text[j] == "\\":
+                    blank_str(j)
+                    if j + 1 < n:
+                        blank_str(j + 1)
+                    j += 2
+                    continue
+                if text[j] == '"':
+                    break
+                if text[j] == "\n":
+                    line += 1
+                    j += 1
+                    continue
+                blank_str(j)
+                j += 1
+            i = j + 1
+            continue
+        if ch == "'":
+            # char literal iff 'x' or '\...' closes with a quote; else a
+            # lifetime / label tick.
+            if nxt == "\\":
+                j = i + 2
+                while j < n and text[j] != "'":
+                    blank_str(j)
+                    j += 1
+                blank_str(i + 1)
+                i = j + 1
+                continue
+            if i + 2 < n and text[i + 2] == "'" and nxt != "'":
+                blank_str(i + 1)
+                i = i + 3
+                continue
+            i += 1
+            continue
+        i += 1
+    return "".join(out), comments
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+SUPPRESS_RE = re.compile(r"tidy-allow\(([a-z0-9_-]+)\)\s*:?\s*(.*)")
+
+
+def collect_suppressions(src):
+    """``{rule: {line: reason}}`` for every tidy-allow comment in a file.
+
+    A suppression on line N covers findings of that rule on line N and on
+    line N+1 (the comment-above-the-offending-line style).
+    """
+    sups = {}
+    for ln, comment in src.comment_lines.items():
+        for m in SUPPRESS_RE.finditer(comment):
+            rule, reason = m.group(1), m.group(2).strip()
+            sups.setdefault(rule, {})[ln] = reason
+    return sups
+
+
+def apply_suppressions(findings, scan):
+    """Mark findings covered by a tidy-allow comment as suppressed.
+
+    Returns the list of (path, line, rule, reason) suppressions that were
+    actually used, so the CLI can report them (suppressions are tracked,
+    never silent).
+    """
+    used = []
+    by_path = {}
+    for f in findings:
+        by_path.setdefault(f.path, []).append(f)
+    for path, fs in by_path.items():
+        src = scan.file(path)
+        if src is None:
+            continue
+        sups = collect_suppressions(src)
+        for f in fs:
+            lines = sups.get(f.rule, {})
+            for ln in (f.line, f.line - 1):
+                if ln in lines:
+                    f.suppressed = True
+                    f.suppress_reason = lines[ln]
+                    used.append((path, ln, f.rule, lines[ln]))
+                    break
+    return used
+
+
+# ---------------------------------------------------------------------------
+# Repo scan
+# ---------------------------------------------------------------------------
+
+# Directories holding first-party Rust code. rust/vendor is excluded: the
+# shims there mirror external crates and are not held to in-repo contracts.
+RUST_WALK_ROOTS = ("rust/src", "rust/tests", "rust/benches", "examples")
+
+
+class RepoScan:
+    """Lazy view of the repository's first-party Rust tree."""
+
+    def __init__(self, root):
+        self.root = os.path.abspath(root)
+        self._files = {}
+        self._rust_paths = None
+
+    def rust_paths(self):
+        if self._rust_paths is None:
+            paths = []
+            for rel_root in RUST_WALK_ROOTS:
+                top = os.path.join(self.root, rel_root)
+                for dirpath, dirnames, filenames in os.walk(top):
+                    dirnames.sort()
+                    for name in sorted(filenames):
+                        if name.endswith(".rs"):
+                            full = os.path.join(dirpath, name)
+                            paths.append(
+                                os.path.relpath(full, self.root).replace(os.sep, "/")
+                            )
+            self._rust_paths = paths
+        return self._rust_paths
+
+    def file(self, rel_path):
+        """SourceFile for a repo-relative path, or None if unreadable."""
+        if rel_path not in self._files:
+            full = os.path.join(self.root, rel_path.replace("/", os.sep))
+            try:
+                with open(full, encoding="utf-8") as f:
+                    text = f.read()
+            except OSError:
+                self._files[rel_path] = None
+            else:
+                self._files[rel_path] = SourceFile(rel_path, text)
+        return self._files[rel_path]
+
+    def rust_files(self):
+        for p in self.rust_paths():
+            src = self.file(p)
+            if src is not None:
+                yield src

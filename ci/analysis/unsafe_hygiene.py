@@ -1,0 +1,68 @@
+"""unsafe-hygiene: every ``unsafe`` site must carry a ``// SAFETY:`` comment.
+
+rustc-tidy style: an ``unsafe`` block, fn, impl, or trait is only
+acceptable when a comment containing ``SAFETY:`` sits on the same line or
+directly above it (blank lines and attribute lines like
+``#[target_feature(...)]`` may sit between the comment and the keyword;
+any other code line breaks the association).
+
+The comment is the contract: it states *why* the invariants hold, which
+is exactly the part the compiler cannot check and reviewers forget to
+demand. The repo keeps its entire unsafe surface in three files (the
+microkernel scatter, the GEMM stripe split, the SendPtr wrapper) — this
+rule keeps it documented as it grows.
+"""
+
+from __future__ import annotations
+
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "unsafe-hygiene"
+DESCRIPTION = "unsafe blocks/fns/impls need an adjacent // SAFETY: comment"
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+ATTR_RE = re.compile(r"^\s*#!?\[")
+# How far above the unsafe keyword the SAFETY comment may start, counting
+# only comment/blank/attribute lines in between.
+MAX_WALK = 12
+
+
+def _has_adjacent_safety(src, line):
+    """True when a SAFETY: comment is on `line` or directly above it."""
+    if "SAFETY:" in src.comment_lines.get(line, ""):
+        return True
+    code = src.code_lines()
+    for ln in range(line - 1, max(0, line - MAX_WALK), -1):
+        comment = src.comment_lines.get(ln, "")
+        if "SAFETY:" in comment:
+            return True
+        code_ln = code[ln - 1] if ln - 1 < len(code) else ""
+        stripped = code_ln.strip()
+        if not stripped or ATTR_RE.match(code_ln) or comment:
+            continue  # blank, attribute, or pure-comment line: keep walking
+        return False  # a real code line severs the association
+    return False
+
+
+def check(scan):
+    findings = []
+    for src in scan.rust_files():
+        seen_lines = set()
+        for m in UNSAFE_RE.finditer(src.code):
+            line = src.line_of(m.start())
+            if line in seen_lines:
+                continue  # one finding per line even with two unsafe tokens
+            seen_lines.add(line)
+            if not _has_adjacent_safety(src, line):
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        line,
+                        "`unsafe` without an adjacent `// SAFETY:` comment "
+                        "stating why the invariants hold",
+                    )
+                )
+    return findings

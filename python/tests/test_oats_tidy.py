@@ -1,0 +1,544 @@
+"""Unit tests for the oats-tidy static analysis layer in ci/analysis/.
+
+Every rule is exercised against synthetic fixture trees with a passing
+and a failing snippet, the suppression mechanism is tested end to end,
+and the schema lock is driven through drift in both directions — plus
+in-sync checks against the real repository tree, so the acceptance
+criterion "`oats_tidy.py --all` exits 0 with zero suppressions" is
+itself a test. Dependency-free by design, like test_ci_gates.py.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "ci" / "analysis"))
+
+import cow_guard  # noqa: E402
+import float_sort  # noqa: E402
+import numerics_contract  # noqa: E402
+import oats_tidy  # noqa: E402
+import schema_lock  # noqa: E402
+import thread_probe  # noqa: E402
+import tidy_core  # noqa: E402
+import unsafe_hygiene  # noqa: E402
+
+
+def make_scan(tmp_path, files):
+    """Write a synthetic repo tree and return a RepoScan over it."""
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return tidy_core.RepoScan(str(tmp_path))
+
+
+def rust(tmp_path, text, rel="rust/src/sample.rs"):
+    return make_scan(tmp_path, {rel: text})
+
+
+# ---------------------------------------------------------------------------
+# lexer
+# ---------------------------------------------------------------------------
+
+
+def test_lexer_blanks_comments_and_strings_preserving_lines():
+    text = 'let a = 1; // unsafe partial_cmp\nlet s = "mul_add";\n'
+    code, comments = tidy_core.lex_rust(text)
+    assert len(code) == len(text)
+    assert code.count("\n") == text.count("\n")
+    assert "unsafe" not in code and "partial_cmp" not in code
+    assert "mul_add" not in code
+    assert '"' in code, "string delimiters survive, contents do not"
+    assert "unsafe partial_cmp" in comments[1]
+
+
+def test_lexer_handles_nested_block_comments():
+    text = "a /* outer /* inner */ still comment */ b\n"
+    code, comments = tidy_core.lex_rust(text)
+    assert "inner" not in code and "still" not in code
+    assert code.startswith("a ") and code.rstrip().endswith("b")
+    assert "inner" in comments[1]
+
+
+def test_lexer_multiline_block_comment_covers_every_line():
+    text = "x\n/* one\ntwo\nthree */\ny\n"
+    code, comments = tidy_core.lex_rust(text)
+    assert set(comments) == {2, 3, 4}
+    assert "two" in comments[3]
+    assert code.splitlines()[4] == "y"
+
+
+def test_lexer_raw_strings_and_escapes():
+    text = 'let r = r#"unsafe "quoted" here"#; let e = "a\\"unsafe";\n'
+    code, _ = tidy_core.lex_rust(text)
+    assert "unsafe" not in code
+
+
+def test_lexer_char_literal_vs_lifetime():
+    text = "fn f<'a>(x: &'a u8) { let c = 'u'; let n = '\\n'; }\n"
+    code, _ = tidy_core.lex_rust(text)
+    # Lifetimes survive as code; char literal contents are blanked.
+    assert "'a" in code
+    assert "'u'" not in code
+
+
+def test_lexer_keep_strings_preserves_literals_not_comments():
+    text = 'o.set("key", v); // set("not_a_key", w)\n'
+    code, _ = tidy_core.lex_rust(text, keep_strings=True)
+    assert '"key"' in code
+    assert "not_a_key" not in code
+
+
+# ---------------------------------------------------------------------------
+# unsafe-hygiene
+# ---------------------------------------------------------------------------
+
+UNSAFE_BAD = """\
+pub fn f(p: *mut f32) {
+    unsafe { *p = 0.0; }
+}
+"""
+
+UNSAFE_GOOD_ABOVE = """\
+pub fn f(p: *mut f32) {
+    // SAFETY: caller guarantees p is valid and exclusive.
+    unsafe { *p = 0.0; }
+}
+"""
+
+UNSAFE_GOOD_THROUGH_ATTRS = """\
+// SAFETY: unsafe fn solely because of #[target_feature]; the dispatcher
+// checks detected_isa before calling.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn kernel() {}
+"""
+
+UNSAFE_SEVERED = """\
+// SAFETY: this comment documents g, not f.
+fn g() {}
+unsafe fn f() {}
+"""
+
+
+def test_unsafe_without_safety_comment_fails(tmp_path):
+    scan = rust(tmp_path, UNSAFE_BAD)
+    fs = unsafe_hygiene.check(scan)
+    assert len(fs) == 1
+    assert fs[0].line == 2
+    assert fs[0].rule == "unsafe-hygiene"
+
+
+def test_unsafe_with_safety_above_passes(tmp_path):
+    assert unsafe_hygiene.check(rust(tmp_path, UNSAFE_GOOD_ABOVE)) == []
+
+
+def test_safety_comment_reaches_through_attributes(tmp_path):
+    assert unsafe_hygiene.check(rust(tmp_path, UNSAFE_GOOD_THROUGH_ATTRS)) == []
+
+
+def test_code_line_severs_safety_association(tmp_path):
+    fs = unsafe_hygiene.check(rust(tmp_path, UNSAFE_SEVERED))
+    assert len(fs) == 1 and fs[0].line == 3
+
+
+def test_unsafe_in_comment_or_string_is_ignored(tmp_path):
+    text = '// unsafe in prose\nlet s = "unsafe";\n'
+    assert unsafe_hygiene.check(rust(tmp_path, text)) == []
+
+
+def test_two_unsafe_tokens_one_line_one_finding(tmp_path):
+    text = "unsafe fn f() { unsafe { () } }\n"
+    assert len(unsafe_hygiene.check(rust(tmp_path, text))) == 1
+
+
+# ---------------------------------------------------------------------------
+# numerics-contract
+# ---------------------------------------------------------------------------
+
+
+def test_mul_add_in_kernel_path_fails(tmp_path):
+    scan = rust(tmp_path, "let y = a.mul_add(b, c);\n", rel="rust/src/sparse/kern.rs")
+    fs = numerics_contract.check(scan)
+    assert len(fs) == 1 and "mul_add" in fs[0].message
+
+
+def test_fma_intrinsic_in_tensor_fails(tmp_path):
+    scan = rust(
+        tmp_path,
+        "let v = _mm256_fmadd_ps(a, b, c);\n",
+        rel="rust/src/tensor.rs",
+    )
+    fs = numerics_contract.check(scan)
+    assert len(fs) == 1 and "FMA" in fs[0].message
+
+
+def test_fast_math_intrinsic_in_model_fails(tmp_path):
+    scan = rust(tmp_path, "let y = fadd_fast(a, b);\n", rel="rust/src/model/lm.rs")
+    assert len(numerics_contract.check(scan)) == 1
+
+
+def test_mul_add_outside_contract_paths_is_fine(tmp_path):
+    scan = rust(tmp_path, "let y = a.mul_add(b, c);\n", rel="rust/src/vit/mod.rs")
+    assert numerics_contract.check(scan) == []
+
+
+def test_mul_add_in_doc_comment_does_not_trip(tmp_path):
+    text = "/// Unlike `mul_add`, this keeps two roundings.\nfn f() {}\n"
+    scan = rust(tmp_path, text, rel="rust/src/sparse/kern.rs")
+    assert numerics_contract.check(scan) == []
+
+
+# ---------------------------------------------------------------------------
+# float-sort
+# ---------------------------------------------------------------------------
+
+
+def test_partial_cmp_unwrap_in_sort_by_fails(tmp_path):
+    text = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"
+    fs = float_sort.check(rust(tmp_path, text))
+    assert len(fs) == 1 and fs[0].rule == "float-sort"
+
+
+def test_partial_cmp_unwrap_in_max_by_fails(tmp_path):
+    text = "let m = xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap());\n"
+    assert len(float_sort.check(rust(tmp_path, text))) == 1
+
+
+def test_total_cmp_comparator_passes(tmp_path):
+    text = "xs.sort_by(|a, b| a.total_cmp(b));\n"
+    assert float_sort.check(rust(tmp_path, text)) == []
+
+
+def test_unwrap_or_fallback_is_tolerated(tmp_path):
+    text = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));\n"
+    assert float_sort.check(rust(tmp_path, text)) == []
+
+
+def test_partial_cmp_outside_sort_is_not_flagged(tmp_path):
+    text = "let o = a.partial_cmp(&b).unwrap();\n"
+    assert float_sort.check(rust(tmp_path, text)) == []
+
+
+def test_multiline_comparator_is_caught(tmp_path):
+    text = "xs.sort_by(|a, b| {\n    b.partial_cmp(a).unwrap()\n});\n"
+    fs = float_sort.check(rust(tmp_path, text))
+    assert len(fs) == 1 and fs[0].line == 2
+
+
+# ---------------------------------------------------------------------------
+# thread-probe
+# ---------------------------------------------------------------------------
+
+
+def test_available_parallelism_outside_threadpool_fails(tmp_path):
+    text = "let n = std::thread::available_parallelism().unwrap();\n"
+    fs = thread_probe.check(rust(tmp_path, text, rel="rust/src/bench.rs"))
+    assert len(fs) == 1 and "available_threads" in fs[0].message
+
+
+def test_available_parallelism_in_threadpool_passes(tmp_path):
+    text = "let n = thread::available_parallelism().ok();\n"
+    scan = rust(tmp_path, text, rel="rust/src/util/threadpool.rs")
+    assert thread_probe.check(scan) == []
+
+
+# ---------------------------------------------------------------------------
+# cow-guard
+# ---------------------------------------------------------------------------
+
+
+def test_k_row_mut_outside_lm_fails(tmp_path):
+    text = "let row = cache.k_row_mut(layer, pos);\n"
+    scan = rust(tmp_path, text, rel="rust/src/coordinator/engine/mod.rs")
+    fs = cow_guard.check(scan)
+    assert len(fs) == 1 and "k_row_mut" in fs[0].message
+
+
+def test_v_row_mut_in_lm_passes(tmp_path):
+    text = "let row = self.v_row_mut(layer, pos);\n"
+    scan = rust(tmp_path, text, rel="rust/src/model/lm.rs")
+    assert cow_guard.check(scan) == []
+
+
+def test_row_mut_mention_in_comment_passes(tmp_path):
+    text = "// the engine never calls .k_row_mut( directly\nfn f() {}\n"
+    scan = rust(tmp_path, text, rel="rust/src/coordinator/serve.rs")
+    assert cow_guard.check(scan) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+SUPPRESSED_SAME_LINE = (
+    "xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); "
+    "// tidy-allow(float-sort): inputs clamped finite above\n"
+)
+
+SUPPRESSED_LINE_ABOVE = """\
+// tidy-allow(float-sort): inputs clamped finite above
+xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+"""
+
+WRONG_RULE_SUPPRESSION = """\
+// tidy-allow(unsafe-hygiene): wrong rule id
+xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+"""
+
+
+@pytest.mark.parametrize("text", [SUPPRESSED_SAME_LINE, SUPPRESSED_LINE_ABOVE])
+def test_tidy_allow_suppresses_and_is_tracked(tmp_path, text):
+    scan = rust(tmp_path, text)
+    findings = float_sort.check(scan)
+    used = tidy_core.apply_suppressions(findings, scan)
+    assert len(findings) == 1 and findings[0].suppressed
+    assert len(used) == 1
+    assert used[0][2] == "float-sort"
+    assert "clamped finite" in used[0][3]
+
+
+def test_suppression_for_wrong_rule_does_not_apply(tmp_path):
+    scan = rust(tmp_path, WRONG_RULE_SUPPRESSION)
+    findings = float_sort.check(scan)
+    used = tidy_core.apply_suppressions(findings, scan)
+    assert used == []
+    assert not findings[0].suppressed
+
+
+def test_list_suppressions_finds_the_comment(tmp_path):
+    scan = rust(tmp_path, SUPPRESSED_LINE_ABOVE)
+    sups = oats_tidy.list_suppressions(scan)
+    assert sups == [
+        ("rust/src/sample.rs", 1, "float-sort", "inputs clamped finite above")
+    ]
+
+
+# ---------------------------------------------------------------------------
+# schema-lock (synthetic tree)
+# ---------------------------------------------------------------------------
+
+EMITTER = """\
+fn to_json(&self) -> Json {
+    Json::obj().set("alpha", self.a).set("beta", self.b)
+}
+"""
+
+GATE = """\
+def main(doc):
+    a = doc["alpha"]
+    b = doc.get("beta", 0)
+    doc["note"] = "stores are not reads"
+    return a + b
+"""
+
+
+def lock_doc(emitter_keys, gate_reads, ignore=()):
+    return {
+        "emitters": {"rust/src/bench.rs": sorted(emitter_keys)},
+        "gates": {
+            "ci/gates/g.py": {"reads": sorted(gate_reads), "ignore": sorted(ignore)}
+        },
+    }
+
+
+def schema_tree(tmp_path, lock, emitter=EMITTER, gate=GATE):
+    return make_scan(
+        tmp_path,
+        {
+            "rust/src/bench.rs": emitter,
+            "ci/gates/g.py": gate,
+            "ci/analysis/schema_lock.json": json.dumps(lock),
+        },
+    )
+
+
+def test_schema_lock_in_sync_passes(tmp_path):
+    scan = schema_tree(tmp_path, lock_doc(["alpha", "beta"], ["alpha", "beta"]))
+    assert schema_lock.check(scan) == []
+
+
+def test_emitted_key_missing_from_lock_fails(tmp_path):
+    scan = schema_tree(tmp_path, lock_doc(["alpha"], ["alpha", "beta"]))
+    msgs = [f.message for f in schema_lock.check(scan)]
+    assert any('emitted key "beta" is not in the schema lock' in m for m in msgs)
+
+
+def test_locked_key_no_longer_emitted_fails(tmp_path):
+    lock = lock_doc(["alpha", "beta", "gamma"], ["alpha", "beta"])
+    scan = schema_tree(tmp_path, lock)
+    msgs = [f.message for f in schema_lock.check(scan)]
+    assert any('locked key "gamma" is no longer emitted' in m for m in msgs)
+
+
+def test_gate_read_missing_from_lock_fails(tmp_path):
+    scan = schema_tree(tmp_path, lock_doc(["alpha", "beta"], ["alpha"]))
+    msgs = [f.message for f in schema_lock.check(scan)]
+    assert any('gate reads key "beta" not recorded' in m for m in msgs)
+
+
+def test_locked_read_no_longer_read_fails(tmp_path):
+    scan = schema_tree(tmp_path, lock_doc(["alpha", "beta"], ["alpha", "beta", "delta"]))
+    msgs = [f.message for f in schema_lock.check(scan)]
+    assert any('locked gate read "delta" is no longer read' in m for m in msgs)
+
+
+def test_gate_read_never_emitted_fails(tmp_path):
+    gate = GATE + "    c = doc['ghost']\n"
+    lock = lock_doc(["alpha", "beta"], ["alpha", "beta", "ghost"])
+    scan = schema_tree(tmp_path, lock, gate=gate)
+    msgs = [f.message for f in schema_lock.check(scan)]
+    assert any('"ghost" that no locked emitter emits' in m for m in msgs)
+
+
+def test_store_subscripts_are_not_reads(tmp_path):
+    # doc["note"] = ... in GATE must not register as a read.
+    scan = schema_tree(tmp_path, lock_doc(["alpha", "beta"], ["alpha", "beta"]))
+    text = (tmp_path / "ci/gates/g.py").read_text()
+    assert "note" not in schema_lock.extract_gate_reads(text)
+
+
+def test_ignore_list_waives_gate_internal_keys(tmp_path):
+    gate = GATE + "    h = hist['ratios']\n"
+    lock = lock_doc(["alpha", "beta"], ["alpha", "beta"], ignore=["ratios"])
+    scan = schema_tree(tmp_path, lock, gate=gate)
+    assert schema_lock.check(scan) == []
+
+
+def test_missing_lock_is_a_finding(tmp_path):
+    scan = make_scan(tmp_path, {"rust/src/bench.rs": EMITTER})
+    fs = schema_lock.check(scan)
+    assert len(fs) == 1 and "missing" in fs[0].message
+
+
+def test_update_lock_round_trips(tmp_path):
+    # Start with a drifted lock; regenerate; the tree then checks clean,
+    # and the ignore list survives regeneration.
+    gate = GATE + "    h = hist['ratios']\n"
+    lock = lock_doc(["alpha"], ["alpha"], ignore=["ratios"])
+    scan = schema_tree(tmp_path, lock, gate=gate)
+    assert schema_lock.check(scan) != []
+    schema_lock.write_lock(scan)
+    fresh = tidy_core.RepoScan(str(tmp_path))
+    assert schema_lock.check(fresh) == []
+    new_lock = json.loads((tmp_path / "ci/analysis/schema_lock.json").read_text())
+    assert new_lock["gates"]["ci/gates/g.py"]["ignore"] == ["ratios"]
+    assert new_lock["emitters"]["rust/src/bench.rs"] == ["alpha", "beta"]
+
+
+# ---------------------------------------------------------------------------
+# schema-lock (real tree): the committed contract round-trips
+# ---------------------------------------------------------------------------
+
+
+def copy_schema_slice(tmp_path):
+    """Copy the real lock + every file it names into a scratch tree."""
+    lock = json.loads((REPO / "ci" / "analysis" / "schema_lock.json").read_text())
+    rels = list(lock["emitters"]) + list(lock["gates"])
+    for rel in rels + ["ci/analysis/schema_lock.json"]:
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        dst.write_text((REPO / rel).read_text())
+    return lock
+
+
+def test_real_lock_matches_real_emitters_and_gates(tmp_path):
+    copy_schema_slice(tmp_path)
+    scan = tidy_core.RepoScan(str(tmp_path))
+    assert schema_lock.check(scan) == []
+
+
+def test_deleting_any_emitted_key_from_real_lock_fails(tmp_path):
+    lock = copy_schema_slice(tmp_path)
+    for emitter, keys in lock["emitters"].items():
+        assert keys, f"lock lists no keys for {emitter}"
+    # Drop one key from each emitter's locked list: every drop must fail.
+    mutated = json.loads(json.dumps(lock))
+    dropped = [keys.pop(0) for keys in mutated["emitters"].values()]
+    (tmp_path / "ci/analysis/schema_lock.json").write_text(json.dumps(mutated))
+    msgs = [f.message for f in schema_lock.check(tidy_core.RepoScan(str(tmp_path)))]
+    for key in dropped:
+        assert any(f'"{key}" is not in the schema lock' in m for m in msgs), key
+
+
+def test_removing_a_gate_read_key_from_real_emitters_fails(tmp_path):
+    lock = copy_schema_slice(tmp_path)
+    # Pick a key a real gate reads that a real emitter emits, rename it in
+    # the emitter source: the read-but-never-emitted check must fire.
+    emitted = {k for keys in lock["emitters"].values() for k in keys}
+    key = None
+    for entry in lock["gates"].values():
+        for k in entry["reads"]:
+            if k in emitted:
+                key = k
+                break
+        if key:
+            break
+    assert key is not None, "no gate-read key overlaps the emitters"
+    for emitter in lock["emitters"]:
+        p = tmp_path / emitter
+        p.write_text(p.read_text().replace(f'.set("{key}"', f'.set("{key}_x"'))
+    msgs = [f.message for f in schema_lock.check(tidy_core.RepoScan(str(tmp_path)))]
+    assert any(f'"{key}" that no locked emitter emits' in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_list_rules_exits_zero(capsys):
+    assert oats_tidy.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in oats_tidy.RULES:
+        assert rid in out
+
+
+def test_cli_unknown_rule_is_usage_error(tmp_path):
+    with pytest.raises(SystemExit) as e:
+        oats_tidy.main(["no-such-rule", "--root", str(tmp_path)])
+    assert e.value.code == 2
+
+
+def test_cli_fails_then_passes_after_fix(tmp_path, capsys):
+    rust(tmp_path, "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n")
+    assert oats_tidy.main(["float-sort", "--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "rust/src/sample.rs:1: [float-sort]" in out
+    (tmp_path / "rust/src/sample.rs").write_text(
+        "xs.sort_by(|a, b| a.total_cmp(b));\n"
+    )
+    assert oats_tidy.main(["float-sort", "--root", str(tmp_path)]) == 0
+
+
+def test_cli_reports_suppressions_but_exits_zero(tmp_path, capsys):
+    rust(tmp_path, SUPPRESSED_LINE_ABOVE)
+    assert oats_tidy.main(["float-sort", "--root", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "note: suppressed at rust/src/sample.rs:1" in out
+    assert "1 suppressed" in out
+
+
+def test_cli_update_lock_writes_file(tmp_path, capsys):
+    schema_tree(tmp_path, lock_doc(["alpha"], ["alpha", "beta"]))
+    assert oats_tidy.main(["--update-lock", "--root", str(tmp_path)]) == 0
+    fresh = tidy_core.RepoScan(str(tmp_path))
+    assert schema_lock.check(fresh) == []
+
+
+# ---------------------------------------------------------------------------
+# The real tree is clean — the acceptance criterion, as a test
+# ---------------------------------------------------------------------------
+
+
+def test_real_tree_has_no_findings_and_no_suppressions():
+    scan = tidy_core.RepoScan(str(REPO))
+    findings, used = oats_tidy.run_rules(scan, list(oats_tidy.RULES))
+    live = [f for f in findings if not f.suppressed]
+    assert live == [], f"tree has unsuppressed findings: {live}"
+    banned = [u for u in used if u[2] in ("float-sort", "thread-probe")]
+    assert banned == [], f"float-sort/thread-probe may not be suppressed: {banned}"

@@ -134,7 +134,9 @@ impl CalibStats {
             .map(|j| {
                 let mut col: Vec<f32> =
                     (0..n).map(|r| self.sample_rows.at(r, j).abs()).collect();
-                col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // total_cmp: NaN activations (upstream 0/0) sort above every
+                // finite |x| instead of panicking the calibration pass.
+                col.sort_by(|a, b| a.total_cmp(b));
                 let med = col[n / 2];
                 if med > 1e-12 {
                     med
@@ -299,6 +301,19 @@ mod tests {
             "median must reflect the late batches, got {}",
             d[0]
         );
+    }
+
+    #[test]
+    fn robust_scale_survives_nan_samples() {
+        // Regression: the median sort used `partial_cmp(..).unwrap()` and
+        // panicked on the first NaN activation (e.g. an upstream 0/0).
+        // With `total_cmp`, NaN sorts above every finite |x| and the
+        // median of the mostly-finite column stays finite.
+        let x = Matrix::from_vec(5, 1, vec![1.0, f32::NAN, 2.0, 3.0, 4.0]);
+        let stats = CalibStats::from_activations(&x);
+        let d = stats.robust_scale();
+        assert!(d[0].is_finite(), "NaN sample must not poison the median: {}", d[0]);
+        assert!((d[0] - 3.0).abs() < 1e-6, "median(|1,NaN,2,3,4|) keeps NaN last");
     }
 
     #[test]

@@ -77,7 +77,9 @@ pub fn compress(w: &Matrix, stats: &CalibStats, cfg: &CompressConfig) -> Result<
                                 (s, j)
                             })
                             .collect();
-                        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                        // total_cmp: a 0/0 saliency (dead column) is NaN and
+                        // must sort deterministically, not panic mid-sweep.
+                        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
                         let keep = if gend - g == m {
                             n
                         } else {
@@ -100,7 +102,7 @@ pub fn compress(w: &Matrix, stats: &CalibStats, cfg: &CompressConfig) -> Result<
                             ((wk.at(row, j) / rjj).powi(2), j)
                         })
                         .collect();
-                    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    scored.sort_by(|a, b| a.0.total_cmp(&b.0));
                     for &(_, j) in scored.iter().take(n_prune) {
                         mask_prune[row * bw + (j - b0)] = true;
                     }
@@ -206,6 +208,25 @@ mod tests {
         let out =
             compress(&w, &stats, &cfg(0.5, SparsityPattern::Nm { n: 2, m: 4 })).unwrap();
         assert!(crate::sparse::NmPattern::TWO_FOUR.validates(&out.to_dense()));
+    }
+
+    #[test]
+    fn nan_saliency_scores_do_not_panic_the_sort() {
+        // Regression: the per-block saliency sorts used
+        // `partial_cmp(..).unwrap()`, so one NaN weight (or 0/0 score)
+        // panicked the whole compression pass. With `total_cmp`, NaN
+        // scores sort deterministically (to the always-keep end for the
+        // descending N:M sort, to the always-prune end ascending) and the
+        // sweep completes for both patterns.
+        let mut rng = Rng::new(5);
+        let mut w = Matrix::randn(4, 16, 1.0, &mut rng);
+        *w.at_mut(1, 3) = f32::NAN;
+        let x = Matrix::randn(64, 16, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&x);
+        for pattern in [SparsityPattern::RowWise, SparsityPattern::Nm { n: 2, m: 4 }] {
+            let out = compress(&w, &stats, &cfg(0.5, pattern)).unwrap();
+            let _ = out.to_dense(); // must complete without panicking
+        }
     }
 
     #[test]

@@ -290,6 +290,68 @@ impl KvPool {
         self.free.push(idx);
     }
 
+    /// Debug-build conservation audit over the whole arena, asserting the
+    /// module-doc invariants directly on the live state:
+    ///
+    /// * `free + Σ owned + shared_alive == total` — no page is ever lost
+    ///   or double-tracked across acquire/share/fork/release churn;
+    /// * `owned_i ≤ reserved_i` per in-use slot (a slot never outgrows its
+    ///   admission-time reservation — the deadlock-freedom premise);
+    /// * free slots hold no reservation and no pages;
+    /// * `Σ reserved == reserved_total` and
+    ///   `reserved_total + shared_alive ≤ total` (admission headroom
+    ///   bookkeeping is exact).
+    ///
+    /// The engine calls this once per step and at drain, so every debug
+    /// test run checks pool conservation continuously instead of only in
+    /// the dedicated property tests. Compiled out of release builds.
+    #[cfg(debug_assertions)]
+    pub fn audit(&self) {
+        let mut owned = 0;
+        let mut reserved_sum = 0;
+        for (i, cache) in self.caches.iter().enumerate() {
+            if self.in_use[i] {
+                let held = cache.owned_pages_held();
+                assert!(
+                    held <= self.reserved[i],
+                    "audit: slot {i} owns {held} pages past its reservation of {}",
+                    self.reserved[i]
+                );
+                owned += held;
+                reserved_sum += self.reserved[i];
+            } else {
+                assert_eq!(self.reserved[i], 0, "audit: free slot {i} holds a reservation");
+                assert_eq!(cache.pages_held(), 0, "audit: free slot {i} holds pages");
+                assert_eq!(cache.len, 0, "audit: free slot {i} was not reset");
+            }
+        }
+        assert_eq!(
+            self.free_pages.len() + owned + self.shared_alive,
+            self.total_pages,
+            "audit: page conservation broken (free {} + owned {owned} + shared {} != total {})",
+            self.free_pages.len(),
+            self.shared_alive,
+            self.total_pages
+        );
+        assert_eq!(
+            reserved_sum,
+            self.reserved_total,
+            "audit: reservation ledger out of sync with per-slot reservations"
+        );
+        assert!(
+            self.reserved_total + self.shared_alive <= self.total_pages,
+            "audit: reservations {} + shared {} overcommit the {} total pages",
+            self.reserved_total,
+            self.shared_alive,
+            self.total_pages
+        );
+        assert_eq!(
+            self.free.len() + self.in_use.iter().filter(|&&u| u).count(),
+            self.caches.len(),
+            "audit: slot free list out of sync"
+        );
+    }
+
     /// Borrow one acquired slot's cache.
     pub fn cache(&self, idx: usize) -> &KvCache {
         assert!(self.in_use[idx], "KV slot {idx} not acquired");
@@ -482,6 +544,45 @@ mod tests {
         assert_eq!(p.pages_shared(), 0);
         assert_eq!(p.pages_free(), 12, "all pages home after reclaim");
         assert_eq!(p.memory_bytes(), bytes);
+    }
+
+    // The audit (and therefore these tests) only exists in debug builds;
+    // `--release --all-targets` must still compile, so the gate is on the
+    // tests too, not just the method.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn audit_holds_across_share_fork_release_churn() {
+        let mut p = KvPool::with_pages(&cfg(), 3, 16, 12);
+        p.audit();
+        let donor = p.acquire(4).unwrap();
+        p.acquire_page(donor);
+        p.acquire_page(donor);
+        p.audit();
+        let page = p.share_page(donor, 0);
+        p.audit();
+        let joiner = p.acquire(2).unwrap();
+        p.attach_shared(joiner, Arc::clone(&page));
+        p.audit();
+        p.fork_page(joiner, 0);
+        p.audit();
+        p.release(donor);
+        p.release(joiner);
+        p.audit();
+        p.reclaim_shared(page);
+        p.audit();
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "page conservation broken")]
+    fn audit_catches_a_leaked_page() {
+        let mut p = KvPool::with_pages(&cfg(), 2, 16, 8);
+        let a = p.acquire(2).unwrap();
+        p.acquire_page(a);
+        // Corrupt the arena the way a bookkeeping bug would: a page leaves
+        // the cache without returning to the free list.
+        let _leaked = p.caches[a].take_pages();
+        p.audit();
     }
 
     #[test]

@@ -467,6 +467,8 @@ impl Engine {
             if !events.is_empty() {
                 self.record_step(queue, 0, counts);
             }
+            #[cfg(debug_assertions)]
+            self.pool.audit();
             return events;
         }
 
@@ -605,6 +607,13 @@ impl Engine {
                 self.pool.reclaim_shared(page);
             }
         }
+
+        // Debug builds re-prove the pool conservation invariants after
+        // every step (and hence after every drain, thanks to the flush
+        // above): `free + Σ owned + shared == total`, `owned ≤ reserved`
+        // per slot. Compiled out of release builds.
+        #[cfg(debug_assertions)]
+        self.pool.audit();
 
         self.record_step(queue, didx.len(), counts);
         events

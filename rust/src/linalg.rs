@@ -148,7 +148,8 @@ pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
         }
         *s = norm.sqrt() as f32;
     }
-    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+    // total_cmp: a NaN column norm (degenerate input) must sort, not panic.
+    order.sort_by(|&a, &b| sigmas[b].total_cmp(&sigmas[a]));
     let mut u_out = Matrix::zeros(m, n);
     let mut vt_out = Matrix::zeros(n, n);
     for (jj, &j) in order.iter().enumerate() {
@@ -302,7 +303,7 @@ pub fn jacobi_eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
     }
     // Sort descending by eigenvalue.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| m[j * n + j].partial_cmp(&m[i * n + i]).unwrap());
+    order.sort_by(|&i, &j| m[j * n + j].total_cmp(&m[i * n + i]));
     let evals: Vec<f64> = order.iter().map(|&i| m[i * n + i]).collect();
     let mut v_out = Matrix::zeros(n, n);
     for (jj, &j) in order.iter().enumerate() {

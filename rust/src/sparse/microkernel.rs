@@ -291,6 +291,11 @@ fn fold_row_lanes<R: NnzRun>(run: R, xt: &Matrix, acc: &mut [f32], scale: f32) {
 /// operation-for-operation the generic path's — only the vectors widen.
 macro_rules! isa_dispatch {
     ($(#[$doc:meta])* $name:ident, $avx2:ident, $run:ty) => {
+        // SAFETY: `unsafe fn` solely because of `#[target_feature]` — the
+        // body is the same safe portable fold, recompiled with wider
+        // vectors. Callers must guarantee avx2+fma are actually available;
+        // the dispatcher below is the only caller and checks `detected_isa`
+        // first.
         #[cfg(target_arch = "x86_64")]
         #[target_feature(enable = "avx2,fma")]
         unsafe fn $avx2(run: $run, xt: &Matrix, acc: &mut [f32], scale: f32) {

@@ -257,6 +257,8 @@ pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
         let r0 = s * stripe;
         let r1 = ((s + 1) * stripe).min(m);
         let cp = c_ptr;
+        // SAFETY: each stripe writes a disjoint row range of C, and
+        // `parallel_for` joins every worker before C is read again.
         let cdat = unsafe { std::slice::from_raw_parts_mut(cp.0.add(r0 * n), (r1 - r0) * n) };
         for i in r0..r1 {
             let arow = &a.data[i * k..(i + 1) * k];

@@ -99,7 +99,15 @@ impl Drop for ThreadPool {
 /// by the GEMM and sparse kernels so the unsafe surface lives in one place.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr(pub(crate) *mut f32);
+// SAFETY: SendPtr is a bare address with no aliasing claims of its own.
+// Every user (the GEMM stripes, the microkernel scatter) splits the target
+// buffer into disjoint per-worker regions and writes only inside its own
+// region, and `parallel_for`/`thread::scope` joins all workers before the
+// buffer is read — so no two threads ever touch the same element and no
+// access outlives the borrow.
 unsafe impl Send for SendPtr {}
+// SAFETY: same disjoint-region contract as `Send` above — shared
+// references to SendPtr only ever copy the address out.
 unsafe impl Sync for SendPtr {}
 
 /// Run `f(i)` for `i in 0..n` on transient scoped threads, collecting no

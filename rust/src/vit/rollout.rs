@@ -41,7 +41,7 @@ pub fn discard_low(mut heat: Vec<f32>) -> Vec<f32> {
         return heat;
     }
     let mut sorted: Vec<f32> = heat.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let thresh = sorted[cut - 1];
     for v in &mut heat {
         if *v <= thresh {
@@ -153,6 +153,20 @@ mod tests {
         let zeros = out.iter().filter(|&&v| v == 0.0).count();
         assert_eq!(zeros, 4);
         assert!(out[9] > 0.0);
+    }
+
+    #[test]
+    fn discard_low_tolerates_nan_heat() {
+        // Regression: the threshold sort unwrapped `partial_cmp` and a NaN
+        // heat value (degenerate rollout on an all-masked image) panicked
+        // the visualization. `total_cmp` sorts NaN above every finite heat,
+        // keeping the cut threshold finite.
+        let mut heat: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        heat[3] = f32::NAN;
+        let out = discard_low(heat);
+        assert_eq!(out.len(), 10);
+        let zeros = out.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 4, "cut fraction unchanged by the NaN entry");
     }
 
     #[test]
