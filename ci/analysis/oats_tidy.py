@@ -43,6 +43,7 @@ import float_sort  # noqa: E402
 import numerics_contract  # noqa: E402
 import schema_lock  # noqa: E402
 import thread_probe  # noqa: E402
+import trace_hygiene  # noqa: E402
 import unsafe_hygiene  # noqa: E402
 from tidy_core import RepoScan, apply_suppressions, collect_suppressions  # noqa: E402
 
@@ -52,6 +53,7 @@ RULE_MODULES = [
     float_sort,
     thread_probe,
     cow_guard,
+    trace_hygiene,
     schema_lock,
 ]
 RULES = {m.RULE_ID: m for m in RULE_MODULES}

@@ -1,0 +1,107 @@
+"""trace-hygiene: span names must be 'static snake_case literals from the
+committed registry.
+
+The trace recorder stores event names as ``&'static str`` and never
+copies them, so a name is an identity, not a message: the Perfetto
+timeline groups by it, ``trace_gate.py`` keys its lifecycle chains on
+it, and the SERVE json folds ``kernel_*`` span durations by it. A name
+built at runtime (or invented ad hoc at one call site) silently forks
+that taxonomy — the gate stops seeing the events and nobody notices,
+because a trace with a misspelled span still loads fine.
+
+The rule therefore requires every ``trace::span`` / ``span_args`` /
+``instant`` / ``instant_args`` / ``counter`` / ``timed`` call site to
+pass a string literal, snake_case (``[a-z][a-z0-9_]*``), that appears in
+``ci/analysis/trace_registry.json``. Adding a span means adding its name
+to the registry in the same PR — the registry diff is the review
+surface for taxonomy growth.
+
+``rust/src/util/trace.rs`` itself is exempt: the recorder's unit tests
+exercise the API with throwaway probe names that deliberately stay out
+of the production taxonomy.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "trace-hygiene"
+DESCRIPTION = "trace span names must be snake_case literals from trace_registry.json"
+
+REGISTRY_REL = "ci/analysis/trace_registry.json"
+
+CALL_RE = re.compile(r"\btrace::(span_args|span|instant_args|instant|counter|timed)\s*\(")
+# First argument: a string literal, possibly on the following line
+# (rustfmt breaks wide call sites one-arg-per-line).
+LITERAL_RE = re.compile(r'\s*"([^"]*)"')
+SNAKE_RE = re.compile(r"[a-z][a-z0-9_]*")
+
+# The recorder's own unit tests probe the API with unit_probe_* names.
+EXEMPT = ("rust/src/util/trace.rs",)
+
+
+def load_registry(scan):
+    """(sorted name list, error message or None) from the committed registry."""
+    path = os.path.join(scan.root, REGISTRY_REL.replace("/", os.sep))
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+        names = doc["names"]
+        if not isinstance(names, list) or not all(isinstance(n, str) for n in names):
+            raise ValueError("names must be a list of strings")
+    except (OSError, ValueError, KeyError) as e:
+        return [], f"{REGISTRY_REL} missing or unparseable ({e})"
+    return sorted(names), None
+
+
+def check(scan):
+    findings = []
+    registry, reg_err = load_registry(scan)
+    if reg_err:
+        findings.append(Finding(RULE_ID, REGISTRY_REL, 1, reg_err))
+    names = set(registry)
+    for src in scan.rust_files():
+        if src.path in EXEMPT:
+            continue
+        code = src.code_with_strings
+        for m in CALL_RE.finditer(code):
+            line = src.line_of(m.start())
+            lit = LITERAL_RE.match(code, m.end())
+            if lit is None:
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        line,
+                        f"`trace::{m.group(1)}` name is not a string literal — "
+                        "the recorder needs a 'static registry name, not a "
+                        "runtime-built string",
+                    )
+                )
+                continue
+            name = lit.group(1)
+            if SNAKE_RE.fullmatch(name) is None:
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        line,
+                        f'trace name "{name}" is not snake_case '
+                        "([a-z][a-z0-9_]*)",
+                    )
+                )
+            elif not reg_err and name not in names:
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        line,
+                        f'trace name "{name}" is not in {REGISTRY_REL} — '
+                        "register it (sorted) in the same PR",
+                    )
+                )
+    return findings

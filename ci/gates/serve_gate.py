@@ -9,8 +9,10 @@ of checks:
   continuous-batching telemetry is present and consistent (joins == leaves
   > 0, occupancies in (0, 1], ordered latency percentiles, the decode
   workspace warmed), the non-Complete statuses were exercised (serve-load
-  always submits one oversized and one exactly-at-capacity prompt), and
-  the paged arena leaked zero pages at drain.
+  always submits one oversized and one exactly-at-capacity prompt), the
+  paged arena leaked zero pages at drain, the queue-wait summary covers
+  every request, and the per-phase breakdown (admit/prefill/decode/retire)
+  sums to no more than the step wall-clock.
 * **Whole-vs-paged pair**: at equal ``kv_arena_bytes``, the paged arena
   must decode wider than the whole-cache arena (peak decode batch).
 * **Shared-vs-unshared pair**: the ``--shared-prefix`` run must have
@@ -70,6 +72,25 @@ def check_run(name, doc):
         bad(f"latency missing {missing}")
     elif not lat["p50"] <= lat["p95"] <= lat["p99"]:
         bad(f"unordered percentiles {lat}")
+    qw = doc["queue_wait"]
+    if qw["mean"] < 0:
+        bad(f"negative mean queue wait {qw['mean']}")
+    if qw["n"] != requests:
+        bad(f"queue_wait n {qw['n']} != requests {requests}")
+    # The four phase clocks are disjoint sub-intervals of the step loop, so
+    # their sum must be positive (the engine did work) and must not exceed
+    # the step wall-clock by more than float/bookkeeping slack.
+    phase_sum = (
+        doc["time_admit_s"] + doc["time_prefill_s"] + doc["time_decode_s"] + doc["time_retire_s"]
+    )
+    step_s = doc["time_step_s"]
+    if phase_sum <= 0:
+        bad("per-phase clocks never ran (phase sum == 0)")
+    if phase_sum > step_s * 1.10:
+        bad(f"phase sum {phase_sum:.6f}s exceeds step wall-clock {step_s:.6f}s")
+    for fmt, secs in sorted(doc["kernel_time"].items()):
+        if secs < 0:
+            bad(f"negative kernel time {secs} for format {fmt}")
     return errs
 
 

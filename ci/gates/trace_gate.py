@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Trace gate: well-formedness, span balance, and per-request completeness.
+
+Validates the Chrome trace-event JSON (schema ``oats-trace-v1``) written by
+``oats serve-load --trace`` and the bench harness:
+
+* **Well-formedness**: the schema marker is present, ``traceEvents`` is a
+  non-empty array, every event carries name/ph/ts/pid/tid, phases are
+  limited to the ones the recorder emits (``X`` complete spans, ``i``
+  instants, ``C`` counters), and timestamps/durations are non-negative.
+* **Span balance**: within one (pid, tid) track, complete spans must nest
+  — a span may not straddle the boundary of the span enclosing it. The
+  recorder's RAII guards guarantee this by construction, so a violation
+  means clock or export corruption.
+* **Request completeness**: lifecycle instants grouped by their ``id``
+  argument must form ordered chains (enqueued <= admitted <= first_token
+  <= retired), and at least ``--min-chains`` chains must be complete.
+
+``droppedEvents > 0`` is reported as a warning, not a failure: the ring
+drops newest-first under overload by design, and a partially-dropped trace
+is still loadable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "oats-trace-v1"
+PH_ALLOWED = ("X", "i", "C")
+# Nesting slack in microseconds: timestamps are ns-precise but exported as
+# fractional-us floats, so boundaries can wobble by well under a ns.
+EPS = 1e-3
+LIFECYCLE = ("request_enqueued", "request_admitted", "request_first_token", "request_retired")
+
+
+def check_events(name, events):
+    """Per-event well-formedness errors."""
+    errs = []
+    for i, ev in enumerate(events):
+        missing = [k for k in ("name", "ph", "ts", "pid", "tid") if k not in ev]
+        if missing:
+            errs.append(f"{name}: event {i} missing {missing}")
+            continue
+        ph = ev["ph"]
+        if ph not in PH_ALLOWED:
+            errs.append(f"{name}: event {i} ({ev['name']}) has unknown phase {ph!r}")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            errs.append(f"{name}: event {i} ({ev['name']}) has bad ts {ev['ts']!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"{name}: span {ev['name']} has bad dur {dur!r}")
+    return errs
+
+
+def check_span_nesting(name, events):
+    """Spans within one (pid, tid) track must nest, never straddle."""
+    errs = []
+    tracks = {}
+    for ev in events:
+        if ev.get("ph") == "X" and isinstance(ev.get("dur"), (int, float)):
+            key = (ev["pid"], ev["tid"])
+            tracks.setdefault(key, []).append((ev["ts"], ev["dur"], ev["name"]))
+    for key, spans in sorted(tracks.items()):
+        # Sort outermost-first at equal start so enclosers are pushed first.
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack = []
+        for ts, dur, span_name in spans:
+            while stack and ts >= stack[-1][0] + stack[-1][1] - EPS:
+                stack.pop()
+            if stack and ts + dur > stack[-1][0] + stack[-1][1] + EPS:
+                errs.append(
+                    f"{name}: span {span_name} [{ts}, {ts + dur}] straddles "
+                    f"enclosing {stack[-1][2]} on track {key}"
+                )
+            stack.append((ts, dur, span_name))
+    return errs
+
+
+def lifecycle_chains(events):
+    """{request id: {instant name: first ts}} for the lifecycle instants."""
+    chains = {}
+    for ev in events:
+        if ev.get("ph") != "i" or ev.get("name") not in LIFECYCLE:
+            continue
+        rid = ev.get("args", {}).get("id")
+        if rid is None:
+            continue
+        chains.setdefault(rid, {}).setdefault(ev["name"], ev["ts"])
+    return chains
+
+
+def check_chains(name, chains, min_chains):
+    """Ordering and completeness errors for the per-request chains."""
+    errs = []
+    complete = 0
+    for rid, chain in sorted(chains.items()):
+        enq, adm, ft, ret = (chain.get(k) for k in LIFECYCLE)
+        if enq is None or ret is None:
+            errs.append(f"{name}: request {rid:g} chain lacks enqueued/retired")
+            continue
+        if enq > ret + EPS:
+            errs.append(f"{name}: request {rid:g} retired ({ret}) before enqueued ({enq})")
+        if adm is not None and not enq - EPS <= adm <= ret + EPS:
+            errs.append(f"{name}: request {rid:g} admission {adm} outside [{enq}, {ret}]")
+        if ft is not None:
+            if adm is None:
+                errs.append(f"{name}: request {rid:g} has a first token but no admission")
+            elif not adm - EPS <= ft <= ret + EPS:
+                errs.append(f"{name}: request {rid:g} first token {ft} outside [{adm}, {ret}]")
+        if adm is not None and ft is not None:
+            complete += 1
+    if complete < min_chains:
+        errs.append(
+            f"{name}: only {complete} complete request chains "
+            f"(enqueued through retired), expected >= {min_chains}"
+        )
+    return errs, complete
+
+
+def check_trace(name, doc, min_chains):
+    """(errors, summary line) for one parsed trace document."""
+    if doc.get("schema") != SCHEMA:
+        return [f"{name}: unexpected schema {doc.get('schema')!r}"], ""
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{name}: traceEvents missing or empty"], ""
+    errs = check_events(name, events)
+    if errs:
+        # Malformed events would make the structural checks misfire.
+        return errs, ""
+    errs.extend(check_span_nesting(name, events))
+    chains = lifecycle_chains(events)
+    chain_errs, complete = check_chains(name, chains, min_chains)
+    errs.extend(chain_errs)
+    spans = sum(1 for ev in events if ev["ph"] == "X")
+    dropped = doc.get("droppedEvents", 0)
+    summary = (
+        f"{name}: {len(events)} events ({spans} spans), "
+        f"{complete}/{len(chains)} complete request chains, {dropped} dropped"
+    )
+    if dropped:
+        summary += " [warning: ring overflowed; trace is partial]"
+    return errs, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="trace JSON files to validate")
+    ap.add_argument(
+        "--min-chains",
+        type=int,
+        default=1,
+        help="minimum complete request lifecycle chains per trace",
+    )
+    args = ap.parse_args(argv)
+
+    failed = []
+    for path in args.paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            failed.append(f"{name}: unreadable ({e})")
+            continue
+        errs, summary = check_trace(name, doc, args.min_chains)
+        if summary:
+            print(summary)
+        failed.extend(errs)
+    print(f"trace gate: {len(args.paths)} traces checked")
+    if failed:
+        print("trace gate failed:\n" + "\n".join(failed), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

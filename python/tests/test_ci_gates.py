@@ -18,6 +18,7 @@ sys.path.insert(0, str(REPO / "ci" / "gates"))
 
 import bench_gate  # noqa: E402
 import serve_gate  # noqa: E402
+import trace_gate  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +128,13 @@ def serve_doc(**overrides):
         "shared_pages": 0,
         "cow_forks": 0,
         "completions_digest": "00c0ffee00c0ffee",
+        "queue_wait": {"n": 24, "mean": 0.002},
+        "time_admit_s": 0.01,
+        "time_prefill_s": 0.2,
+        "time_decode_s": 0.5,
+        "time_retire_s": 0.01,
+        "time_step_s": 0.8,
+        "kernel_time": {},
     }
     doc.update(overrides)
     return doc
@@ -216,6 +224,25 @@ def test_serve_gate_per_run_checks_still_bite():
     assert any("unordered percentiles" in e for e in run_gate(runs))
 
 
+def test_serve_gate_catches_bad_queue_wait_and_phases():
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["queue_wait"] = {"n": 7, "mean": 0.002}
+    assert any("queue_wait n" in e for e in run_gate(runs))
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["queue_wait"] = {"n": 24, "mean": -1.0}
+    assert any("negative mean queue wait" in e for e in run_gate(runs))
+    runs = full_fleet()
+    for phase in ("time_admit_s", "time_prefill_s", "time_decode_s", "time_retire_s"):
+        runs["SERVE_tiny.json"][phase] = 0.0
+    assert any("clocks never ran" in e for e in run_gate(runs))
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["time_decode_s"] = 5.0
+    assert any("exceeds step wall-clock" in e for e in run_gate(runs))
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["kernel_time"] = {"bcsr": -0.1}
+    assert any("negative kernel time" in e for e in run_gate(runs))
+
+
 def test_serve_gate_end_to_end_on_disk(tmp_path, capsys):
     serve_dir = tmp_path / "serve-out"
     serve_dir.mkdir()
@@ -229,3 +256,128 @@ def test_serve_gate_end_to_end_on_disk(tmp_path, capsys):
         json.dumps(serve_doc(prefill_tokens_saved=0, shared_pages=0))
     )
     assert serve_gate.main(["--serve-dir", str(serve_dir), "--require-shared"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# trace_gate
+# ---------------------------------------------------------------------------
+
+
+def trace_event(name, ph, ts, pid=1, tid=1, **extra):
+    ev = {"name": name, "ph": ph, "ts": ts, "pid": pid, "tid": tid}
+    ev.update(extra)
+    return ev
+
+
+def lifecycle(rid, enq, adm, ft, ret):
+    return [
+        trace_event(name, "i", ts, s="t", args={"id": rid})
+        for name, ts in [
+            ("request_enqueued", enq),
+            ("request_admitted", adm),
+            ("request_first_token", ft),
+            ("request_retired", ret),
+        ]
+    ]
+
+
+def trace_doc(events, dropped=0):
+    return {
+        "schema": "oats-trace-v1",
+        "displayTimeUnit": "ms",
+        "droppedEvents": dropped,
+        "traceEvents": events,
+    }
+
+
+def good_trace():
+    events = [
+        trace_event("engine_step", "X", 0.0, dur=100.0),
+        trace_event("prefill_chunk", "X", 10.0, dur=30.0),
+        trace_event("decode_batch", "X", 50.0, dur=40.0),
+        trace_event("kernel_bcsr", "X", 55.0, dur=10.0, tid=2),
+        trace_event("queue_depth", "C", 5.0, args={"value": 3.0}),
+    ]
+    events += lifecycle(1, 1.0, 12.0, 60.0, 95.0)
+    events += lifecycle(2, 2.0, 13.0, 61.0, 96.0)
+    return trace_doc(events)
+
+
+def trace_errs(doc, min_chains=1):
+    errs, _ = trace_gate.check_trace("t.json", doc, min_chains)
+    return errs
+
+
+def test_trace_gate_passes_good_trace():
+    assert trace_errs(good_trace()) == []
+
+
+def test_trace_gate_rejects_wrong_schema_and_empty():
+    assert any("unexpected schema" in e for e in trace_errs({"schema": "nope"}))
+    assert any("missing or empty" in e for e in trace_errs(trace_doc([])))
+
+
+def test_trace_gate_rejects_malformed_events():
+    doc = trace_doc([{"name": "engine_step", "ph": "X", "ts": 0.0}])
+    assert any("missing" in e for e in trace_errs(doc))
+    doc = trace_doc([trace_event("engine_step", "B", 0.0)])
+    assert any("unknown phase" in e for e in trace_errs(doc))
+    doc = trace_doc([trace_event("engine_step", "X", -1.0, dur=5.0)])
+    assert any("bad ts" in e for e in trace_errs(doc))
+    doc = trace_doc([trace_event("engine_step", "X", 0.0, dur=-5.0)])
+    assert any("bad dur" in e for e in trace_errs(doc))
+
+
+def test_trace_gate_rejects_straddling_spans():
+    doc = good_trace()
+    doc["traceEvents"].append(trace_event("decode_batch", "X", 90.0, dur=20.0))
+    assert any("straddles" in e for e in trace_errs(doc))
+    # The same span on its own thread track nests fine.
+    doc = good_trace()
+    doc["traceEvents"].append(trace_event("decode_batch", "X", 90.0, dur=20.0, tid=3))
+    assert trace_errs(doc) == []
+
+
+def test_trace_gate_rejects_unordered_or_incomplete_chains():
+    doc = good_trace()
+    doc["traceEvents"] += lifecycle(3, 10.0, 5.0, 60.0, 95.0)
+    assert any("admission" in e and "outside" in e for e in trace_errs(doc))
+    doc = good_trace()
+    doc["traceEvents"] += lifecycle(4, 10.0, 20.0, 120.0, 95.0)
+    assert any("first token" in e and "outside" in e for e in trace_errs(doc))
+    doc = good_trace()
+    doc["traceEvents"] += [
+        trace_event("request_first_token", "i", 50.0, s="t", args={"id": 5}),
+        trace_event("request_enqueued", "i", 1.0, s="t", args={"id": 5}),
+        trace_event("request_retired", "i", 95.0, s="t", args={"id": 5}),
+    ]
+    assert any("no admission" in e for e in trace_errs(doc))
+    doc = good_trace()
+    doc["traceEvents"].append(trace_event("request_enqueued", "i", 1.0, s="t", args={"id": 6}))
+    assert any("lacks enqueued/retired" in e for e in trace_errs(doc))
+
+
+def test_trace_gate_enforces_min_chains():
+    assert trace_errs(good_trace(), min_chains=2) == []
+    assert any("complete request chains" in e for e in trace_errs(good_trace(), min_chains=3))
+
+
+def test_trace_gate_dropped_events_warn_but_pass():
+    errs, summary = trace_gate.check_trace("t.json", trace_doc(good_trace()["traceEvents"], dropped=7), 1)
+    assert errs == []
+    assert "warning" in summary and "7 dropped" in summary
+
+
+def test_trace_gate_end_to_end_on_disk(tmp_path, capsys):
+    good = tmp_path / "TRACE_good.json"
+    good.write_text(json.dumps(good_trace()))
+    assert trace_gate.main([str(good)]) == 0
+    assert "1 traces checked" in capsys.readouterr().out
+
+    bad = tmp_path / "TRACE_bad.json"
+    doc = good_trace()
+    doc["traceEvents"] += lifecycle(9, 50.0, 5.0, 60.0, 95.0)
+    bad.write_text(json.dumps(doc))
+    assert trace_gate.main([str(good), str(bad)]) == 1
+
+    assert trace_gate.main([str(tmp_path / "TRACE_absent.json")]) == 1

@@ -24,6 +24,7 @@ import oats_tidy  # noqa: E402
 import schema_lock  # noqa: E402
 import thread_probe  # noqa: E402
 import tidy_core  # noqa: E402
+import trace_hygiene  # noqa: E402
 import unsafe_hygiene  # noqa: E402
 
 
@@ -269,6 +270,101 @@ def test_row_mut_mention_in_comment_passes(tmp_path):
     text = "// the engine never calls .k_row_mut( directly\nfn f() {}\n"
     scan = rust(tmp_path, text, rel="rust/src/coordinator/serve.rs")
     assert cow_guard.check(scan) == []
+
+
+# ---------------------------------------------------------------------------
+# trace-hygiene
+# ---------------------------------------------------------------------------
+
+TRACE_REGISTRY = json.dumps({"names": ["engine_step", "queue_depth"]})
+
+
+def trace_tree(tmp_path, text, registry=TRACE_REGISTRY):
+    files = {"rust/src/sample.rs": text}
+    if registry is not None:
+        files["ci/analysis/trace_registry.json"] = registry
+    return make_scan(tmp_path, files)
+
+
+def test_registered_literal_names_pass(tmp_path):
+    text = (
+        'let _s = trace::span("engine_step");\n'
+        'trace::counter("queue_depth", 1.0);\n'
+        'let t = trace::timed("engine_step");\n'
+    )
+    assert trace_hygiene.check(trace_tree(tmp_path, text)) == []
+
+
+def test_unregistered_name_fails(tmp_path):
+    text = 'let _s = trace::span("mystery_span");\n'
+    fs = trace_hygiene.check(trace_tree(tmp_path, text))
+    assert len(fs) == 1 and fs[0].rule == "trace-hygiene"
+    assert "not in ci/analysis/trace_registry.json" in fs[0].message
+
+
+def test_non_snake_case_name_fails(tmp_path):
+    text = 'trace::instant("EngineStep");\n'
+    fs = trace_hygiene.check(trace_tree(tmp_path, text))
+    assert len(fs) == 1 and "not snake_case" in fs[0].message
+
+
+def test_runtime_built_name_fails(tmp_path):
+    text = "let _s = trace::span_args(name, &tags);\n"
+    fs = trace_hygiene.check(trace_tree(tmp_path, text))
+    assert len(fs) == 1 and "not a string literal" in fs[0].message
+
+
+def test_rustfmt_broken_call_site_is_still_read(tmp_path):
+    # rustfmt puts wide call sites one-arg-per-line; the literal is found
+    # across the newline.
+    text = 'trace::instant_args(\n    "engine_step",\n    &[("id", 1.0)],\n);\n'
+    assert trace_hygiene.check(trace_tree(tmp_path, text)) == []
+    bad = text.replace("engine_step", "ghost_span")
+    fs = trace_hygiene.check(trace_tree(tmp_path, bad))
+    assert len(fs) == 1 and fs[0].line == 1
+
+
+def test_trace_call_in_comment_is_ignored(tmp_path):
+    text = '// e.g. trace::span("bogus_name") would allocate\nfn f() {}\n'
+    assert trace_hygiene.check(trace_tree(tmp_path, text)) == []
+
+
+def test_missing_registry_is_a_finding(tmp_path):
+    text = 'let _s = trace::span("engine_step");\n'
+    fs = trace_hygiene.check(trace_tree(tmp_path, text, registry=None))
+    assert len(fs) == 1
+    assert fs[0].path == "ci/analysis/trace_registry.json"
+    assert "missing or unparseable" in fs[0].message
+
+
+def test_recorder_unit_tests_are_exempt(tmp_path):
+    scan = make_scan(
+        tmp_path,
+        {
+            "rust/src/util/trace.rs": 'let _s = trace::span("unit_probe_nested");\n',
+            "ci/analysis/trace_registry.json": TRACE_REGISTRY,
+        },
+    )
+    assert trace_hygiene.check(scan) == []
+
+
+def test_trace_hygiene_suppression_is_tracked(tmp_path):
+    text = (
+        "// tidy-allow(trace-hygiene): migration shim, registry entry follows\n"
+        'let _s = trace::span("legacy_name_not_yet_registered");\n'
+    )
+    scan = trace_tree(tmp_path, text)
+    findings = trace_hygiene.check(scan)
+    used = tidy_core.apply_suppressions(findings, scan)
+    assert len(findings) == 1 and findings[0].suppressed
+    assert used[0][2] == "trace-hygiene"
+
+
+def test_real_call_sites_all_registered():
+    # Every trace:: call in the real tree resolves against the committed
+    # registry — the acceptance criterion for the rule, as a test.
+    scan = tidy_core.RepoScan(str(REPO))
+    assert trace_hygiene.check(scan) == []
 
 
 # ---------------------------------------------------------------------------

@@ -140,6 +140,44 @@ fn simd_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
     let _ = b.compare(&format!("fused_simd_vs_generic_{d}_b{batch}"), &gen_fused, &simd_fused);
 }
 
+/// Tracing-overhead comparison: the fused serving kernel with the trace
+/// recorder disabled vs enabled. The disabled side pays one relaxed atomic
+/// load per dispatch; the enabled side adds the clock reads and the ring
+/// push. CI floors the `trace_overhead` comparison so an accidentally
+/// heavy span site (allocation, locking) fails the perf gate. The drained
+/// events are exported as `TRACE_micro.json`, so the bench artifacts
+/// always include a small loadable example trace.
+fn trace_overhead(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
+    use oats::util::trace;
+    println!("-- trace overhead {d}x{d}, batch {batch} --");
+    let x = Matrix::randn(batch, d, 1.0, rng);
+    let r = d / 16;
+    let spl = SparsePlusLowRank {
+        sparse: Csr::from_dense(&random_sparse(d, d, 0.625, rng)),
+        low_rank: Some(LowRank {
+            u: Matrix::randn(d, r, 1.0, rng),
+            vt: Matrix::randn(r, d, 1.0, rng),
+        }),
+    };
+    let packed = PackedLinear::from_spl(&spl, batch);
+    let off_name = format!("spl fused trace-off {d}x{d} b{batch}");
+    let on_name = format!("spl fused trace-on {d}x{d} b{batch}");
+    b.run(&off_name, || {
+        black_box(packed.forward(&x));
+    });
+    trace::set_enabled(true);
+    b.run(&on_name, || {
+        black_box(packed.forward(&x));
+    });
+    trace::set_enabled(false);
+    let _ = b.compare(&format!("trace_overhead_fused_{d}_b{batch}"), &off_name, &on_name);
+    let events = trace::drain();
+    let dir = std::env::var("OATS_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("TRACE_micro.json");
+    trace::write_chrome_trace(&path, &events).expect("write TRACE_micro.json");
+    println!("  trace: {} events → {}", events.len(), path.display());
+}
+
 fn main() {
     let mut rng = Rng::new(1);
     let mut b = Bench::from_env();
@@ -209,6 +247,9 @@ fn main() {
 
     // Register-blocked SIMD dispatch vs the generic build, serving-sized.
     simd_comparison(&mut b, 2048, 8, &mut rng);
+
+    // Trace-recorder overhead on the fused serving kernel.
+    trace_overhead(&mut b, 512, 8, &mut rng);
 
     // randomized SVD — the OATS compression hot spot
     let w = Matrix::randn(d, d, 1.0, &mut rng);

@@ -45,6 +45,7 @@
 
 use crate::config::ModelConfig;
 use crate::model::{KvCache, KvPage};
+use crate::util::trace;
 use std::sync::Arc;
 
 /// Fixed-size paged arena of reusable KV storage.
@@ -184,6 +185,10 @@ impl KvPool {
         self.in_use[idx] = true;
         self.reserved[idx] = reserve_pages;
         self.reserved_total += reserve_pages;
+        trace::instant_args(
+            "kv_slot_acquire",
+            &[("slot", idx as f64), ("reserved", reserve_pages as f64)],
+        );
         Some(idx)
     }
 
@@ -200,6 +205,7 @@ impl KvPool {
         );
         let page = self.free_pages.pop().expect("free pages despite reservation headroom");
         self.caches[idx].push_page(page);
+        trace::instant_args("kv_page_acquire", &[("slot", idx as f64)]);
     }
 
     /// Map an existing shared prefix page into slot `idx`'s page table
@@ -208,6 +214,7 @@ impl KvPool {
     pub fn attach_shared(&mut self, idx: usize, page: Arc<KvPage>) {
         assert!(self.in_use[idx], "KV slot {idx} not acquired");
         self.caches[idx].push_shared(page);
+        trace::instant_args("kv_shared_attach", &[("slot", idx as f64)]);
     }
 
     /// Convert slot `idx`'s owned page `page_idx` into a shared prefix
@@ -226,6 +233,7 @@ impl KvPool {
         self.shared_alive += 1;
         self.reserved[idx] -= 1;
         self.reserved_total -= 1;
+        trace::instant_args("kv_page_share", &[("slot", idx as f64), ("page", page_idx as f64)]);
         arc
     }
 
@@ -242,6 +250,7 @@ impl KvPool {
         );
         let fresh = self.free_pages.pop().expect("free pages despite reservation headroom");
         self.caches[idx].fork_page(page_idx, fresh);
+        trace::instant_args("kv_cow_fork", &[("slot", idx as f64), ("page", page_idx as f64)]);
     }
 
     /// Return a shared page to the free list. The caller (the prefix
@@ -253,6 +262,7 @@ impl KvPool {
             .unwrap_or_else(|_| panic!("reclaiming a shared KV page that is still mapped"));
         self.shared_alive -= 1;
         self.free_pages.push(page);
+        trace::instant("kv_shared_reclaim");
     }
 
     /// Fast-forward slot `idx`'s cache to `len` positions — the prefix-
@@ -288,6 +298,7 @@ impl KvPool {
         self.reserved[idx] = 0;
         self.in_use[idx] = false;
         self.free.push(idx);
+        trace::instant_args("kv_slot_release", &[("slot", idx as f64)]);
     }
 
     /// Debug-build conservation audit over the whole arena, asserting the

@@ -56,8 +56,15 @@ pub use sched::{AdmissionPolicy, Batcher, Request, ResponseStatus, Sequence};
 use crate::model::TransformerLM;
 use crate::sparse::Workspace;
 use crate::tensor::argmax;
+use crate::util::trace;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Distinguishes engines within one process in trace event args (tests and
+/// benches often run several engines; trace ids keep their lifecycle
+/// instants separable after a global drain).
+static NEXT_ENGINE_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Engine knobs (the serving-layer [`ServeConfig`] derives one of these).
 ///
@@ -112,6 +119,10 @@ pub struct FinishedSeq {
     pub tokens: Vec<usize>,
     pub status: ResponseStatus,
     pub enqueued: Instant,
+    /// Time from enqueue to admission (for slot-free answers: to the
+    /// answering step) — the component of first-token latency that is
+    /// queueing, not compute.
+    pub queue_wait: Duration,
     pub first_token_latency: Option<Duration>,
 }
 
@@ -173,6 +184,22 @@ pub struct EngineTelemetry {
     /// Copy-on-write forks: writes that landed inside a shared page and
     /// had to copy it into sequence-owned storage first (lifetime total).
     pub cow_forks: usize,
+    /// Wall-clock spent in admission (both passes: admit + same-step
+    /// backfill), lifetime total in seconds. Always measured — the phase
+    /// clocks do not depend on the trace flag.
+    pub time_admit_s: f64,
+    /// Wall-clock spent in chunked prefill (including prefix-page
+    /// publishing), lifetime total in seconds.
+    pub time_prefill_s: f64,
+    /// Wall-clock spent in lockstep decode, lifetime total in seconds.
+    pub time_decode_s: f64,
+    /// Wall-clock spent retiring finished sequences, lifetime total in
+    /// seconds.
+    pub time_retire_s: f64,
+    /// Whole-step wall-clock, lifetime total in seconds. The four phase
+    /// totals above sum to at most this (the remainder is bookkeeping:
+    /// drain flush, telemetry, debug audits).
+    pub time_step_s: f64,
 }
 
 impl EngineTelemetry {
@@ -206,6 +233,19 @@ struct StepCounts {
     cow_forks: usize,
 }
 
+/// Per-phase wall-clock for one engine step, folded into the telemetry
+/// alongside [`StepCounts`]. Measured unconditionally (plain `Instant`
+/// reads at phase boundaries) so the SERVE json breakdown exists even with
+/// tracing off.
+#[derive(Clone, Copy, Default)]
+struct PhaseTimes {
+    admit: f64,
+    prefill: f64,
+    decode: f64,
+    retire: f64,
+    step: f64,
+}
+
 impl StepCounts {
     fn absorb(&mut self, other: StepCounts) {
         self.joins += other.joins;
@@ -234,6 +274,8 @@ pub struct Engine {
     /// loop stops paying per-call `transpose()`/`zeros` allocations.
     ws: Workspace,
     telemetry: Arc<Mutex<EngineTelemetry>>,
+    /// Process-unique id carried in this engine's trace event args.
+    trace_id: u64,
 }
 
 impl Engine {
@@ -262,6 +304,7 @@ impl Engine {
             prefix: PrefixIndex::new(page_size),
             ws: Workspace::new(),
             telemetry,
+            trace_id: NEXT_ENGINE_ID.fetch_add(1, Ordering::Relaxed),
         }
     }
 
@@ -315,11 +358,16 @@ impl Engine {
                 counts.capacity_stopped += 1;
                 ResponseStatus::CapacityStopped
             };
+            trace::instant_args(
+                "request_retired",
+                &[("id", req.id as f64), ("engine", self.trace_id as f64)],
+            );
             events.push(SeqEvent::Finished(FinishedSeq {
                 id: req.id,
                 tokens: Vec::new(),
                 status,
                 enqueued: req.enqueued,
+                queue_wait: Instant::now().saturating_duration_since(req.enqueued),
                 first_token_latency: None,
             }));
         }
@@ -385,6 +433,10 @@ impl Engine {
             counts.joins += 1;
             counts.prefill_tokens_saved += resume;
             counts.shared_pages += n_shared;
+            trace::instant_args(
+                "request_admitted",
+                &[("id", req.id as f64), ("engine", self.trace_id as f64)],
+            );
             let mut s = Sequence::new(req, slot, self.model.cfg.vocab, gen);
             s.next_prefill = resume;
             // The mapped pages are already in the index; the publish cursor
@@ -430,8 +482,16 @@ impl Engine {
     }
 
     /// Fold one worked step into the telemetry (single lock).
-    fn record_step(&self, queue: &Batcher, decode_width: usize, counts: StepCounts) {
+    fn record_step(
+        &self,
+        queue: &Batcher,
+        decode_width: usize,
+        counts: StepCounts,
+        phases: PhaseTimes,
+    ) {
         let held = self.pool.pages_held();
+        trace::counter("queue_depth", queue.len() as f64);
+        trace::counter("kv_pages_in_use", held as f64);
         let mut t = self.telemetry.lock().unwrap();
         t.steps += 1;
         t.joins += counts.joins;
@@ -448,6 +508,11 @@ impl Engine {
         t.prefill_tokens_saved += counts.prefill_tokens_saved;
         t.shared_pages += counts.shared_pages;
         t.cow_forks += counts.cow_forks;
+        t.time_admit_s += phases.admit;
+        t.time_prefill_s += phases.prefill;
+        t.time_decode_s += phases.decode;
+        t.time_retire_s += phases.retire;
+        t.time_step_s += phases.step;
         t.trim();
     }
 
@@ -459,13 +524,21 @@ impl Engine {
     /// count as a worked step and sample telemetry, so rejection-only
     /// traffic still produces meaningful `SERVE_*.json` summaries.
     pub fn step(&mut self, queue: &mut Batcher) -> Vec<SeqEvent> {
+        let step_start = Instant::now();
+        let _step = trace::span("engine_step");
         let mut events = Vec::new();
-        let mut counts = self.admit(queue, &mut events);
+        let mut counts = {
+            let _admit = trace::span("admit");
+            self.admit(queue, &mut events)
+        };
+        let mut phases =
+            PhaseTimes { admit: step_start.elapsed().as_secs_f64(), ..Default::default() };
         if self.seqs.is_empty() {
             // Nothing resident: only slot-free answers may have happened
             // (a join would have left a resident sequence).
             if !events.is_empty() {
-                self.record_step(queue, 0, counts);
+                phases.step = step_start.elapsed().as_secs_f64();
+                self.record_step(queue, 0, counts, phases);
             }
             #[cfg(debug_assertions)]
             self.pool.audit();
@@ -473,12 +546,14 @@ impl Engine {
         }
 
         // ── chunked prefill (batched across joiners) ──
+        let phase_start = Instant::now();
         for _ in 0..self.cfg.prefill_chunk.max(1) {
             let pidx: Vec<usize> =
                 (0..self.seqs.len()).filter(|&i| self.seqs[i].prefilling()).collect();
             if pidx.is_empty() {
                 break;
             }
+            let _chunk = trace::span_args("prefill_chunk", &[("width", pidx.len() as f64)]);
             let tokens: Vec<usize> = pidx
                 .iter()
                 .map(|&i| {
@@ -523,8 +598,10 @@ impl Engine {
                 self.seqs[i].published += 1;
             }
         }
+        phases.prefill = phase_start.elapsed().as_secs_f64();
 
         // ── lockstep decode over prefilled sequences with room to emit ──
+        let phase_start = Instant::now();
         let didx: Vec<usize> = (0..self.seqs.len())
             .filter(|&i| {
                 let s = &self.seqs[i];
@@ -532,6 +609,7 @@ impl Engine {
             })
             .collect();
         if !didx.is_empty() {
+            let _decode = trace::span_args("decode_batch", &[("width", didx.len() as f64)]);
             let now = Instant::now();
             let mut cont = Vec::with_capacity(didx.len());
             let mut cont_tokens = Vec::with_capacity(didx.len());
@@ -542,6 +620,10 @@ impl Engine {
                 let first = s.out.len() == 1;
                 if first {
                     s.first_token_at = Some(now);
+                    trace::instant_args(
+                        "request_first_token",
+                        &[("id", s.id as f64), ("engine", self.trace_id as f64)],
+                    );
                 }
                 events.push(SeqEvent::Token { id: s.id, token: t, first });
                 if s.out.len() < s.budget && !s.stopped_at_token() {
@@ -559,44 +641,60 @@ impl Engine {
                 self.batch_decode(&cont, &cont_tokens, &mut counts);
             }
         }
+        phases.decode = phase_start.elapsed().as_secs_f64();
 
         // ── retire finished sequences, releasing their slots (and every
         // page they held, back to the free list) ──
-        let seqs = std::mem::take(&mut self.seqs);
-        for s in seqs {
-            let budget_met = s.out.len() >= s.budget;
-            let stopped = s.stopped_at_token();
-            let capacity_hit = self.pool.cache(s.slot).remaining() == 0;
-            if !s.prefilling() && (budget_met || stopped || capacity_hit) {
-                self.pool.release(s.slot);
-                counts.leaves += 1;
-                // A stop token is the most specific outcome (it names the
-                // token that ended generation, even when the budget ran out
-                // on the same step); a sequence that filled its KV capacity
-                // before reaching the budget was truncated by memory, not
-                // completed.
-                let status = if stopped {
-                    ResponseStatus::StoppedAtToken
-                } else if budget_met {
-                    ResponseStatus::Complete
+        let phase_start = Instant::now();
+        {
+            let _retire = trace::span("retire");
+            let seqs = std::mem::take(&mut self.seqs);
+            for s in seqs {
+                let budget_met = s.out.len() >= s.budget;
+                let stopped = s.stopped_at_token();
+                let capacity_hit = self.pool.cache(s.slot).remaining() == 0;
+                if !s.prefilling() && (budget_met || stopped || capacity_hit) {
+                    self.pool.release(s.slot);
+                    counts.leaves += 1;
+                    // A stop token is the most specific outcome (it names
+                    // the token that ended generation, even when the budget
+                    // ran out on the same step); a sequence that filled its
+                    // KV capacity before reaching the budget was truncated
+                    // by memory, not completed.
+                    let status = if stopped {
+                        ResponseStatus::StoppedAtToken
+                    } else if budget_met {
+                        ResponseStatus::Complete
+                    } else {
+                        counts.capacity_stopped += 1;
+                        ResponseStatus::CapacityStopped
+                    };
+                    trace::instant_args(
+                        "request_retired",
+                        &[("id", s.id as f64), ("engine", self.trace_id as f64)],
+                    );
+                    events.push(SeqEvent::Finished(FinishedSeq {
+                        id: s.id,
+                        tokens: s.out,
+                        status,
+                        enqueued: s.enqueued,
+                        queue_wait: s.admitted.saturating_duration_since(s.enqueued),
+                        first_token_latency: s.first_token_at.map(|t| t - s.enqueued),
+                    }));
                 } else {
-                    counts.capacity_stopped += 1;
-                    ResponseStatus::CapacityStopped
-                };
-                events.push(SeqEvent::Finished(FinishedSeq {
-                    id: s.id,
-                    tokens: s.out,
-                    status,
-                    enqueued: s.enqueued,
-                    first_token_latency: s.first_token_at.map(|t| t - s.enqueued),
-                }));
-            } else {
-                self.seqs.push(s);
+                    self.seqs.push(s);
+                }
             }
         }
+        phases.retire = phase_start.elapsed().as_secs_f64();
 
         // ── same-step backfill: freed slots go straight to the queue ──
-        counts.absorb(self.admit(queue, &mut events));
+        let phase_start = Instant::now();
+        {
+            let _backfill = trace::span("backfill");
+            counts.absorb(self.admit(queue, &mut events));
+        }
+        phases.admit += phase_start.elapsed().as_secs_f64();
 
         // ── drained: flush the prefix index back to the pool ──
         // With no residents and no queued work every published page is
@@ -615,7 +713,8 @@ impl Engine {
         #[cfg(debug_assertions)]
         self.pool.audit();
 
-        self.record_step(queue, didx.len(), counts);
+        phases.step = step_start.elapsed().as_secs_f64();
+        self.record_step(queue, didx.len(), counts, phases);
         events
     }
 }
@@ -1075,6 +1174,28 @@ mod tests {
         let done = drain(&mut e, &mut q, 1);
         assert_eq!(done[0].tokens, free);
         assert_eq!(done[0].status, ResponseStatus::Complete);
+    }
+
+    #[test]
+    fn phase_times_are_recorded_and_sum_within_step() {
+        let m = tiny();
+        let mut e = Engine::new(m, EngineConfig { gen_tokens: 4, ..Default::default() });
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2, 3]));
+        q.push(req(1, vec![4, 5]));
+        let done = drain(&mut e, &mut q, 2);
+        assert_eq!(done.len(), 2);
+        for f in &done {
+            assert!(f.queue_wait <= f.enqueued.elapsed(), "queue wait exceeds request lifetime");
+            if let Some(ftl) = f.first_token_latency {
+                assert!(f.queue_wait <= ftl, "queue wait is a component of first-token latency");
+            }
+        }
+        let t = e.telemetry().lock().unwrap().clone();
+        let phase_sum = t.time_admit_s + t.time_prefill_s + t.time_decode_s + t.time_retire_s;
+        assert!(phase_sum > 0.0, "phase clocks must run without tracing enabled");
+        assert!(t.time_decode_s > 0.0, "decode happened");
+        assert!(phase_sum <= t.time_step_s, "phases are sub-intervals of the step: {t:?}");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! only when the index drops the final strong reference.
 
 use crate::model::KvPage;
+use crate::util::trace;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -108,6 +109,7 @@ impl PrefixIndex {
             "published prefixes must cover whole pages"
         );
         let key = fnv1a(prefix);
+        trace::instant_args("prefix_publish", &[("prefix_len", prefix.len() as f64)]);
         let prev = self.entries.insert(key, PrefixEntry { prefix: prefix.to_vec(), page });
         assert!(prev.is_none(), "prefix index insert over an occupied key");
     }
@@ -124,7 +126,9 @@ impl PrefixIndex {
             .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
             .max_by_key(|(&k, e)| (e.prefix.len(), k))
             .map(|(&k, _)| k)?;
-        Some(self.entries.remove(&key).unwrap().page)
+        let entry = self.entries.remove(&key).unwrap();
+        trace::instant_args("prefix_evict", &[("prefix_len", entry.prefix.len() as f64)]);
+        Some(entry.page)
     }
 
     /// Drop every entry, returning the pages for reclamation. Called at
@@ -132,6 +136,9 @@ impl PrefixIndex {
     /// invariant stays exact between workloads.
     pub fn drain_pages(&mut self) -> Vec<Arc<KvPage>> {
         let entries = std::mem::take(&mut self.entries);
+        if !entries.is_empty() {
+            trace::instant_args("prefix_drain", &[("pages", entries.len() as f64)]);
+        }
         entries.into_values().map(|e| e.page).collect()
     }
 }

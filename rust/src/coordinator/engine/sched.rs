@@ -6,6 +6,7 @@
 //! admission behavior is unit-testable in isolation; the model-touching
 //! step loop lives in [`super::Engine`].
 
+use crate::util::trace;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -36,6 +37,7 @@ pub struct Request {
 impl Request {
     /// A request with the server-default generation budget, enqueued now.
     pub fn new(id: u64, prompt: Vec<usize>) -> Request {
+        trace::instant_args("request_enqueued", &[("id", id as f64)]);
         Request {
             id,
             prompt,
@@ -242,6 +244,10 @@ pub struct Sequence {
     /// reads these next to the budget).
     pub stop_tokens: Vec<usize>,
     pub enqueued: Instant,
+    /// When the engine admitted this sequence into its KV slot (stamped in
+    /// [`Sequence::new`]); `admitted − enqueued` is the queue wait the
+    /// serve layer summarizes.
+    pub admitted: Instant,
     pub first_token_at: Option<Instant>,
 }
 
@@ -260,6 +266,7 @@ impl Sequence {
             published: 0,
             stop_tokens: req.stop_tokens,
             enqueued: req.enqueued,
+            admitted: Instant::now(),
             first_token_at: None,
         }
     }

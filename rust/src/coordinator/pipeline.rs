@@ -12,7 +12,7 @@ use crate::calib::{BlockPropagator, CalibSet};
 use crate::compress::{self, owl, CalibStats, CompressedLayer};
 use crate::config::{CompressConfig, Method};
 use crate::model::{LinearId, LinearOp, TransformerLM, LINEAR_NAMES};
-use crate::util::time::Stopwatch;
+use crate::util::trace;
 use anyhow::Result;
 use std::sync::mpsc;
 
@@ -66,11 +66,14 @@ pub fn compress_model(
     workers: usize,
 ) -> Result<CompressionReport> {
     let mut report = CompressionReport::default();
-    let mut sw = Stopwatch::new();
+    // Always-measuring spans double as the report's wall-clock source, so
+    // the numbers in `CompressionReport` and an exported trace agree.
+    let whole = trace::timed("compress_model");
 
     // ── OWL pre-pass: per-block rates from outlier fractions ──
     let n_blocks = model.blocks.len();
     let block_rates: Vec<f64> = if cfg.owl {
+        let t_owl = trace::timed("owl_calibration");
         let mut prop = BlockPropagator::new(model, calib);
         let mut fracs = Vec::with_capacity(n_blocks);
         let mut params = Vec::with_capacity(n_blocks);
@@ -91,7 +94,7 @@ pub fn compress_model(
         }
         let rates = owl::layerwise_rates(&fracs, &params, cfg.rate, cfg.owl_lambda);
         report.owl_rates = Some(rates.clone());
-        sw.lap("owl");
+        t_owl.finish();
         rates
     } else {
         vec![cfg.rate; n_blocks]
@@ -108,7 +111,7 @@ pub fn compress_model(
     let s = calib.seq_len;
 
     for b in 0..n_blocks {
-        let block_t0 = std::time::Instant::now();
+        let t_block = trace::timed("compress_block");
         // capture stats with current (compressed-so-far) activations
         let stats: std::collections::HashMap<&'static str, CalibStats> = {
             let mut map: std::collections::HashMap<&'static str, CalibStats> =
@@ -143,10 +146,9 @@ pub fn compress_model(
                     let tx = tx.clone();
                     let lc = layer_cfg.clone();
                     scope.spawn(move || {
-                        let t0 = std::time::Instant::now();
+                        let t_layer = trace::timed("compress_layer");
                         let r = compress::compress_layer(w, st, &lc);
-                        let dt = t0.elapsed().as_secs_f64();
-                        let _ = tx.send((*name, r, dt));
+                        let _ = tx.send((*name, r, t_layer.finish()));
                     });
                 }
             });
@@ -155,9 +157,9 @@ pub fn compress_model(
         } else {
             jobs.iter()
                 .map(|(name, w, st)| {
-                    let t0 = std::time::Instant::now();
+                    let t_layer = trace::timed("compress_layer");
                     let r = compress::compress_layer(w, st, &layer_cfg);
-                    (*name, r, t0.elapsed().as_secs_f64())
+                    (*name, r, t_layer.finish())
                 })
                 .collect()
         };
@@ -185,10 +187,10 @@ pub fn compress_model(
         for (h, &bsz) in hidden.iter_mut().zip(&batch_sizes) {
             *h = model.block_forward(b, h, bsz, s, None, None);
         }
-        report.block_seconds.push(block_t0.elapsed().as_secs_f64());
+        report.block_seconds.push(t_block.finish());
     }
 
-    report.total_seconds = sw.elapsed();
+    report.total_seconds = whole.finish();
     report.layers.sort_by_key(|l| (l.id.block, l.id.name));
     Ok(report)
 }

@@ -105,6 +105,9 @@ pub struct Response {
     pub tokens: Vec<usize>,
     /// Enqueue → completion.
     pub latency: Duration,
+    /// Enqueue → admission into a KV slot (for slot-free answers: to the
+    /// answering step) — the queueing share of `first_token_latency`.
+    pub queue_wait: Duration,
     /// Enqueue → first generated token (`None` if nothing was generated).
     pub first_token_latency: Option<Duration>,
     /// [`ResponseStatus::Truncated`] marks a prompt that exceeded the
@@ -143,6 +146,10 @@ pub struct ServeStats {
     pub wall_seconds: f64,
     /// Enqueue → completion, per request (seconds).
     pub latency: Summary,
+    /// Enqueue → admission, per request (seconds) — how long requests sat
+    /// in the queue before the engine took them, reported separately from
+    /// `first_token_latency` (which it is a component of).
+    pub queue_wait: Summary,
     /// Enqueue → first generated token, over requests that generated.
     pub first_token_latency: Summary,
     /// Decode-batch width per engine step.
@@ -183,6 +190,19 @@ pub struct ServeStats {
     pub shared_pages: usize,
     /// Copy-on-write forks of shared pages.
     pub cow_forks: usize,
+    /// Engine wall-clock by phase, lifetime totals in seconds (admission
+    /// incl. same-step backfill / chunked prefill / lockstep decode /
+    /// retirement / whole step). Always measured; the four phase totals
+    /// sum to at most `time_step_s`.
+    pub time_admit_s: f64,
+    pub time_prefill_s: f64,
+    pub time_decode_s: f64,
+    pub time_retire_s: f64,
+    pub time_step_s: f64,
+    /// Per-kernel-format forward time in seconds, aggregated from
+    /// `kernel_*` trace spans (e.g. `("bcsr", 1.2)`). Empty unless the run
+    /// was traced — kernel spans only exist when tracing is enabled.
+    pub kernel_time: Vec<(String, f64)>,
     /// Order-independent FNV-1a digest over every `(id, tokens)` pair,
     /// accumulated in request-id order. Two runs of the same workload with
     /// byte-identical completions produce the same digest — the handle the
@@ -202,6 +222,7 @@ impl ServeStats {
         tokens_generated: usize,
         wall_seconds: f64,
         latencies: &[f64],
+        queue_waits: &[f64],
         first_token_latencies: &[f64],
         t: &EngineTelemetry,
     ) -> ServeStats {
@@ -210,6 +231,7 @@ impl ServeStats {
             tokens_generated,
             wall_seconds,
             latency: Summary::of(latencies),
+            queue_wait: Summary::of(queue_waits),
             first_token_latency: Summary::of(first_token_latencies),
             batch_sizes: Summary::of(&t.decode_batch),
             slot_occupancy: Summary::of(&t.occupancy),
@@ -230,6 +252,12 @@ impl ServeStats {
             prefill_tokens_saved: t.prefill_tokens_saved,
             shared_pages: t.shared_pages,
             cow_forks: t.cow_forks,
+            time_admit_s: t.time_admit_s,
+            time_prefill_s: t.time_prefill_s,
+            time_decode_s: t.time_decode_s,
+            time_retire_s: t.time_retire_s,
+            time_step_s: t.time_step_s,
+            kernel_time: Vec::new(),
             completions_digest: 0,
         }
     }
@@ -258,15 +286,26 @@ impl ServeStats {
             .set("prefill_tokens_saved", json::num(self.prefill_tokens_saved as f64))
             .set("shared_pages", json::num(self.shared_pages as f64))
             .set("cow_forks", json::num(self.cow_forks as f64))
+            .set("time_admit_s", json::num(self.time_admit_s))
+            .set("time_prefill_s", json::num(self.time_prefill_s))
+            .set("time_decode_s", json::num(self.time_decode_s))
+            .set("time_retire_s", json::num(self.time_retire_s))
+            .set("time_step_s", json::num(self.time_step_s))
             // u64 doesn't fit an f64 losslessly: the digest travels as hex.
             .set("completions_digest", json::s(&format!("{:016x}", self.completions_digest)))
             .set("latency_s", self.latency.to_json())
+            .set("queue_wait", self.queue_wait.to_json())
             .set("first_token_latency_s", self.first_token_latency.to_json())
             .set("decode_batch", self.batch_sizes.to_json())
             .set("slot_occupancy", self.slot_occupancy.to_json())
             .set("queue_depth", self.queue_depth.to_json())
             .set("page_occupancy", self.page_occupancy.to_json())
             .set("pages_in_use", self.pages_in_use.to_json());
+        let mut kt = Json::obj();
+        for (fmt, secs) in &self.kernel_time {
+            kt.set(fmt, json::num(*secs));
+        }
+        o.set("kernel_time", kt);
         o
     }
 
@@ -464,6 +503,7 @@ fn dispatch(ev: SeqEvent, sinks: &mut HashMap<u64, ResponseSink>) {
                 id: f.id,
                 tokens: f.tokens,
                 latency: f.enqueued.elapsed(),
+                queue_wait: f.queue_wait,
                 first_token_latency: f.first_token_latency,
                 status: f.status,
             };
@@ -638,6 +678,7 @@ pub fn run_load_mixed(
         })
         .collect();
     let mut latencies = Vec::new();
+    let mut queue_waits = Vec::new();
     let mut first_token_latencies = Vec::new();
     let mut tokens = 0usize;
     // FNV-1a over (id, completion) in id order: receivers are indexed by
@@ -650,6 +691,7 @@ pub fn run_load_mixed(
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("response");
         latencies.push(resp.latency.as_secs_f64());
+        queue_waits.push(resp.queue_wait.as_secs_f64());
         if let Some(ftl) = resp.first_token_latency {
             first_token_latencies.push(ftl.as_secs_f64());
         }
@@ -663,8 +705,15 @@ pub fn run_load_mixed(
     let wall = t0.elapsed().as_secs_f64();
     let telemetry = server.telemetry();
     server.shutdown();
-    let mut stats =
-        ServeStats::from_run(n, tokens, wall, &latencies, &first_token_latencies, &telemetry);
+    let mut stats = ServeStats::from_run(
+        n,
+        tokens,
+        wall,
+        &latencies,
+        &queue_waits,
+        &first_token_latencies,
+        &telemetry,
+    );
     stats.completions_digest = digest;
     stats
 }
@@ -1096,6 +1145,19 @@ mod tests {
         // Paged-arena telemetry rides along (the CI gates read these).
         assert_eq!(j.req_f64("capacity_stopped").unwrap(), 0.0);
         assert_eq!(j.req_f64("pages_in_use_at_drain").unwrap(), 0.0);
+        // Queue wait is its own summary, distinct from first-token latency.
+        let qw = j.get("queue_wait").expect("queue wait summary");
+        assert_eq!(qw.req_f64("n").unwrap(), 3.0, "every request reports a queue wait");
+        assert!(qw.req_f64("mean").unwrap() >= 0.0);
+        // The per-phase breakdown sums to at most the step wall-clock.
+        let phase_sum = j.req_f64("time_admit_s").unwrap()
+            + j.req_f64("time_prefill_s").unwrap()
+            + j.req_f64("time_decode_s").unwrap()
+            + j.req_f64("time_retire_s").unwrap();
+        assert!(phase_sum > 0.0, "phase clocks must run without tracing");
+        assert!(phase_sum <= j.req_f64("time_step_s").unwrap());
+        // Untraced runs carry an empty kernel_time object.
+        assert!(j.get("kernel_time").is_some());
         // Workspace telemetry: the decode loop allocated something during
         // warmup, and far fewer buffers than decode calls (reuse works).
         assert!(j.req_f64("ws_buffer_allocs").unwrap() > 0.0);

@@ -13,6 +13,7 @@ use crate::coordinator::serve::{generate, run_load, ServeConfig, ServeStats};
 use crate::json::{self, Json};
 use crate::model::TransformerLM;
 use crate::report::{speedup, Table};
+use crate::util::trace;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -48,9 +49,9 @@ pub fn sequence_walltime(model: &TransformerLM, tokens: usize) -> (f64, usize) {
     } else {
         model
     };
-    let t0 = std::time::Instant::now();
+    let t = trace::timed("walltime_generate");
     let out = generate(m, &[1, 2, 3], tokens);
-    (t0.elapsed().as_secs_f64(), out.len())
+    (t.finish(), out.len())
 }
 
 /// Sequential-generation throughput (tokens/s).
@@ -169,19 +170,19 @@ pub fn walltime_rows(quick: bool) -> Result<Vec<WalltimeRow>> {
             );
         };
         // Serial.
-        let t0 = std::time::Instant::now();
+        let t_serial = trace::timed("walltime_serial");
         for m in &mats {
             run_one(m);
         }
-        let serial = t0.elapsed().as_secs_f64() / iters as f64;
+        let serial = t_serial.finish() / iters as f64;
         // Parallel (4 workers, as in paper §A.2's multi-GPU analogy).
-        let t0 = std::time::Instant::now();
+        let t_par = trace::timed("walltime_parallel");
         std::thread::scope(|s| {
             for m in &mats {
                 s.spawn(move || run_one(m));
             }
         });
-        let par = t0.elapsed().as_secs_f64() / iters as f64;
+        let par = t_par.finish() / iters as f64;
         rows.push(WalltimeRow { preset, serial_s_per_iter: serial, parallel_s_per_iter: par });
     }
     Ok(rows)

@@ -15,6 +15,8 @@
 //!                   [--shared-prefix]    # common-head workload (prefix
 //!                                        # KV reuse A/B driver)
 //!                   [--no-share-prefix]  # opt every request out of reuse
+//!                   [--trace FILE]       # Chrome trace-event JSON
+//!                                        # (load in Perfetto / about:tracing)
 //!                   [--compress] [--quantize] [--quick] [--tag NAME]
 //!                                                   # SERVE_<tag>.json
 //! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
@@ -205,8 +207,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// `completions_digest` values (the CI shared-prefix gate does exactly
 /// this, and additionally requires `prefill_tokens_saved > 0` from the
 /// sharing run).
+///
+/// `--trace FILE` turns on the [`oats::util::trace`] recorder for the load
+/// run and writes a Chrome trace-event JSON (`oats-trace-v1`) to FILE; the
+/// per-format kernel span totals are folded into the SERVE json's
+/// `kernel_time` object. Tracing observes and never reorders, so the
+/// `completions_digest` is identical with and without it.
 fn cmd_serve_load(args: &Args) -> Result<()> {
     use oats::coordinator::serve::{run_load_mixed, AdmissionPolicy, ServeConfig};
+    use oats::util::trace;
     let preset = args.flag_or("preset", "tiny");
     let quick = args.bool_flag("quick");
     let n_req = args.usize_flag("requests", if quick { 24 } else { 96 });
@@ -300,7 +309,28 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         cfg.prefill_chunk,
         cfg.admission.name()
     );
-    let stats = run_load_mixed(std::sync::Arc::new(model), cfg, requests);
+    // Enabled only around the load run so `kernel_time` and the exported
+    // trace cover the serve stack, not the optional compression pass.
+    let trace_path = args.flag("trace");
+    if trace_path.is_some() {
+        trace::set_enabled(true);
+    }
+    let mut stats = run_load_mixed(std::sync::Arc::new(model), cfg, requests);
+    if let Some(path) = trace_path {
+        trace::set_enabled(false);
+        let events = trace::drain();
+        let mut kernel: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
+        for e in &events {
+            if let (Some(fmt), trace::EventKind::Span { dur_ns }) =
+                (e.name.strip_prefix("kernel_"), &e.kind)
+            {
+                *kernel.entry(fmt).or_insert(0.0) += *dur_ns as f64 / 1e9;
+            }
+        }
+        stats.kernel_time = kernel.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        trace::write_chrome_trace(std::path::Path::new(path), &events)?;
+        println!("trace: {} events → {path} ({} dropped)", events.len(), trace::dropped_events());
+    }
     println!(
         "served {} requests | {} tokens | {:.1} tok/s | p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
         stats.n_requests,

@@ -52,6 +52,12 @@ impl Csr {
         self.values.len()
     }
 
+    /// In-memory footprint of the packed representation (u32 indptr + u32
+    /// column ids + f32 values).
+    pub fn memory_bytes(&self) -> usize {
+        4 * self.indptr.len() + 4 * self.indices.len() + 4 * self.values.len()
+    }
+
     /// Fraction of entries that are zero.
     pub fn sparsity(&self) -> f64 {
         1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64

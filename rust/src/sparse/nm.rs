@@ -136,6 +136,12 @@ impl NmPacked {
         self.nnz
     }
 
+    /// In-memory footprint of the packed representation (f32 value slots +
+    /// u8 in-group offsets, padding slots included).
+    pub fn memory_bytes(&self) -> usize {
+        4 * self.values.len() + self.offsets.len()
+    }
+
     /// Portable CSR view — O(nnz), no dense temporary. Groups and in-group
     /// offsets are stored ascending, so indices come out ascending.
     pub fn to_csr(&self) -> crate::sparse::Csr {

@@ -32,6 +32,12 @@ use super::nm::{NmPacked, NmPattern};
 use super::quant::QBcsr;
 use super::spl::SparsePlusLowRank;
 use crate::tensor::Matrix;
+use crate::util::trace;
+
+/// Arg tags for a `kernel_*` dispatch span.
+fn kernel_tags(nnz: usize, batch: usize, bytes: usize) -> [(&'static str, f64); 3] {
+    [("nnz", nnz as f64), ("batch", batch as f64), ("bytes", bytes as f64)]
+}
 
 /// Above this density the dense GEMM path wins over index-based formats.
 pub const DENSE_DENSITY_CUTOFF: f64 = 0.7;
@@ -387,12 +393,44 @@ impl PackedLinear {
     /// low-rank term is folded in the same accumulator pass.
     pub fn forward_ws(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let lr = self.low_rank.as_ref();
+        // Kernel spans are gated up front so a disabled dispatch pays one
+        // relaxed load and never touches the size accessors.
+        let traced = trace::enabled();
         match &self.sparse {
-            PackedSparse::Bcsr(b) => microkernel::fused_forward_ws(b, lr, x, ws),
-            PackedSparse::QBcsr(q) => microkernel::fused_forward_ws(q, lr, x, ws),
-            PackedSparse::Csr(c) => microkernel::fused_forward_ws(c, lr, x, ws),
-            PackedSparse::Nm(nm) => microkernel::fused_forward_ws(nm, lr, x, ws),
+            PackedSparse::Bcsr(b) => {
+                let _k = traced.then(|| {
+                    trace::span_args("kernel_bcsr", &kernel_tags(b.nnz(), x.rows, b.memory_bytes()))
+                });
+                microkernel::fused_forward_ws(b, lr, x, ws)
+            }
+            PackedSparse::QBcsr(q) => {
+                let _k = traced.then(|| {
+                    trace::span_args(
+                        "kernel_qbcsr",
+                        &kernel_tags(q.nnz(), x.rows, q.memory_bytes()),
+                    )
+                });
+                microkernel::fused_forward_ws(q, lr, x, ws)
+            }
+            PackedSparse::Csr(c) => {
+                let _k = traced.then(|| {
+                    trace::span_args("kernel_csr", &kernel_tags(c.nnz(), x.rows, c.memory_bytes()))
+                });
+                microkernel::fused_forward_ws(c, lr, x, ws)
+            }
+            PackedSparse::Nm(nm) => {
+                let _k = traced.then(|| {
+                    trace::span_args("kernel_nm", &kernel_tags(nm.nnz(), x.rows, nm.memory_bytes()))
+                });
+                microkernel::fused_forward_ws(nm, lr, x, ws)
+            }
             PackedSparse::Dense(w) => {
+                let _k = traced.then(|| {
+                    // Stored-element count, not true nonzeros: counting
+                    // zeros in a dense weight would scan it per dispatch.
+                    let stored = w.rows * w.cols;
+                    trace::span_args("kernel_dense", &kernel_tags(stored, x.rows, 4 * stored))
+                });
                 // Uninit is safe: matmul_bt_into overwrites every element.
                 let mut out = ws.matrix_uninit(x.rows, w.rows);
                 crate::tensor::matmul_bt_into(x, w, &mut out);

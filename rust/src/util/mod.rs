@@ -9,6 +9,7 @@ pub mod prop;
 pub mod stats;
 pub mod threadpool;
 pub mod time;
+pub mod trace;
 
 pub use prng::Rng;
 pub use stats::Summary;

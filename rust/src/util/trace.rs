@@ -1,0 +1,586 @@
+//! `oats-trace`: always-compiled, cheap-when-off structured tracing.
+//!
+//! The serve stack (engine step phases, request lifecycle, KV pool, kernel
+//! dispatch) and the compression pipeline emit **spans** (RAII begin/end
+//! pairs collapsed into one complete event at drop), **instants** (point
+//! events), and **counters** (sampled values) into per-thread lock-free
+//! ring buffers. A single global enable flag gates every site: when
+//! tracing is off, a span/instant/counter call costs one relaxed atomic
+//! load and allocates nothing, so instrumentation stays in release builds
+//! permanently (the `trace_overhead` bench comparison in CI keeps both
+//! claims honest — tracing-off free, tracing-on < 5 % on decode).
+//!
+//! Architecture:
+//!
+//! * **One SPSC ring per thread** ([`Ring`]): the owning thread is the
+//!   only producer, and the drain side — serialized through the global
+//!   registry mutex — is the only consumer, so both sides are a handful
+//!   of atomic loads/stores with no CAS loop. A full ring drops the
+//!   *newest* event (and counts it) rather than blocking or reallocating:
+//!   tracing observes, never stalls.
+//! * **Monotonic timeline**: every timestamp is nanoseconds since a
+//!   process-wide [`Instant`] epoch, so events from different threads
+//!   order correctly and the Chrome export needs no clock reconciliation.
+//! * **`'static` names**: span/instant/counter names are `&'static str`
+//!   literals from the committed registry
+//!   (`ci/analysis/trace_registry.json`, enforced by the `trace-hygiene`
+//!   oats-tidy rule) — events never own or hash strings on the hot path,
+//!   and the Chrome export / `ci/gates/trace_gate.py` stay stable.
+//!
+//! Export is Chrome trace-event JSON (`chrome://tracing`, or
+//! <https://ui.perfetto.dev> — "Open trace file"): `ph:"X"` complete
+//! spans with microsecond `ts`/`dur`, `ph:"i"` instants, `ph:"C"`
+//! counters. `oats serve-load --trace <path>` and the micro bench write
+//! it; `ci/gates/trace_gate.py` validates well-formedness, span nesting,
+//! and per-request lifecycle completeness.
+//!
+//! The numerics contract is untouched by design: tracing *observes* the
+//! serve stack — it never reorders, batches, or drops work, so engine
+//! outputs are bit-identical with tracing on or off (property-tested in
+//! `rust/tests/serve_engine.rs`).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::json::{self, Json};
+
+/// Per-thread ring capacity (events). Power of two; at ~80 B/event this
+/// is ≈2.6 MiB per *traced* thread, allocated lazily on its first event.
+/// Sized so a quick-mode traced serve-load fits without drops.
+const RING_CAPACITY: usize = 1 << 15;
+
+/// What an [`Event`] records beyond its name/timestamp/thread.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A completed span: begin at `ts_ns`, lasting `dur_ns`.
+    Span { dur_ns: u64 },
+    /// A point event.
+    Instant,
+    /// A sampled value (rendered as a counter track in Perfetto).
+    Counter { value: f64 },
+}
+
+/// One trace event, as drained from the rings.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// `'static` snake_case name from the committed registry.
+    pub name: &'static str,
+    /// Nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+    /// Sequential trace-thread id (1-based, assigned at first event).
+    pub tid: u64,
+    pub kind: EventKind,
+    /// Numeric key/value annotations (request id, nnz, batch, ...).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+// ---------------------------------------------------------------------------
+// SPSC ring buffer
+// ---------------------------------------------------------------------------
+
+/// Lock-free single-producer/single-consumer ring of [`Event`]s.
+///
+/// The owning thread pushes; the global drain — serialized by the
+/// registry mutex — consumes. `head` and `tail` are *monotonic* event
+/// counts (never wrapped); slot index is `count & mask`. Full ring ⇒ the
+/// incoming event is dropped and counted, the producer never waits.
+pub struct Ring {
+    slots: Box<[UnsafeCell<Option<Event>>]>,
+    mask: usize,
+    /// Next write position (monotonic). Written by the producer only.
+    head: AtomicUsize,
+    /// Next read position (monotonic). Written by the consumer only.
+    tail: AtomicUsize,
+    /// Events discarded because the ring was full.
+    dropped: AtomicUsize,
+}
+
+// SAFETY: the SPSC discipline makes the UnsafeCell slots data-race free:
+// the producer writes only slots in [tail, head) that the Release store
+// of `head` has not yet published, and the consumer reads only slots in
+// [tail, head) after Acquire-loading `head` — each slot is therefore
+// accessed by at most one thread between a matching Release/Acquire
+// pair. Single-consumer is enforced by draining only under the REGISTRY
+// lock; single-producer by the ring being reachable for pushes only via
+// its owning thread's thread-local handle.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    /// A ring holding `capacity` events (rounded up to a power of two).
+    pub fn with_capacity(capacity: usize) -> Ring {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots: Vec<UnsafeCell<Option<Event>>> =
+            (0..cap).map(|_| UnsafeCell::new(None)).collect();
+        Ring {
+            slots: slots.into_boxed_slice(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        }
+    }
+
+    /// Producer side: append one event, dropping it (and counting the
+    /// drop) when the ring is full. Only the owning thread may call this.
+    pub fn push(&self, ev: Event) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: slot `head & mask` is outside the consumer's visible
+        // [tail, head) window until the Release store below publishes
+        // it, so the producer holds exclusive access here (see the Sync
+        // impl's protocol note).
+        unsafe {
+            *self.slots[head & self.mask].get() = Some(ev);
+        }
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side: move every published event into `out`, in push
+    /// order. Only one thread may drain at a time (the global drain
+    /// holds the registry lock).
+    pub fn drain_into(&self, out: &mut Vec<Event>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail != head {
+            // SAFETY: slot `tail & mask` is inside [tail, head): the
+            // Acquire load of `head` synchronized with the producer's
+            // Release store, so the write to this slot happens-before
+            // this read, and the producer will not touch it again until
+            // the Release store of `tail` below hands it back.
+            if let Some(ev) = unsafe { (*self.slots[tail & self.mask].get()).take() } {
+                out.push(ev);
+            }
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+
+    /// Events discarded because the ring was full.
+    pub fn dropped(&self) -> usize {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global state: enable flag, epoch, thread registry
+// ---------------------------------------------------------------------------
+
+/// The one flag every instrumentation site checks. Relaxed is enough:
+/// the flag only gates *whether* to record — event visibility is ordered
+/// by the rings' own Release/Acquire pairs.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Process-wide monotonic epoch all timestamps are relative to.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Every thread's ring, registered at its first event; kept alive here
+/// even after the thread exits so late drains still see its events.
+static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+
+/// Sequential trace-thread ids (1-based).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LOCAL: (Arc<Ring>, u64) = {
+        let ring = Arc::new(Ring::with_capacity(RING_CAPACITY));
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(ring.clone());
+        (ring, tid)
+    };
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn push_event(name: &'static str, ts_ns: u64, kind: EventKind, args: Vec<(&'static str, f64)>) {
+    // try_with: a drop-glue event during thread teardown is silently
+    // discarded instead of panicking on the dead thread-local.
+    let _ = LOCAL.try_with(|(ring, tid)| {
+        ring.push(Event { name, ts_ns, tid: *tid, kind, args });
+    });
+}
+
+/// Turn global tracing on or off. Off is the default; every span site
+/// then costs one relaxed atomic load.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is tracing currently enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drain every thread's ring into one timestamp-sorted event list.
+pub fn drain() -> Vec<Event> {
+    let registry = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for ring in registry.iter() {
+        ring.drain_into(&mut out);
+    }
+    out.sort_by_key(|e| e.ts_ns);
+    out
+}
+
+/// Total events dropped across all rings since process start.
+pub fn dropped_events() -> usize {
+    let registry = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    registry.iter().map(|r| r.dropped()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Recording API: spans, instants, counters
+// ---------------------------------------------------------------------------
+
+/// RAII span: created by [`span`]/[`span_args`], emits one complete
+/// event covering its lifetime when dropped. Inert (no clock read, no
+/// allocation) when tracing was off at creation.
+pub struct SpanGuard {
+    name: &'static str,
+    start_ns: Option<u64>,
+    args: Vec<(&'static str, f64)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start_ns.take() {
+            let dur = now_ns().saturating_sub(start);
+            push_event(
+                self.name,
+                start,
+                EventKind::Span { dur_ns: dur },
+                std::mem::take(&mut self.args),
+            );
+        }
+    }
+}
+
+/// Begin a span; it ends (and records) when the guard drops.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, start_ns: None, args: Vec::new() };
+    }
+    SpanGuard { name, start_ns: Some(now_ns()), args: Vec::new() }
+}
+
+/// [`span`] with numeric annotations (copied only when tracing is on).
+#[inline]
+pub fn span_args(name: &'static str, args: &[(&'static str, f64)]) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, start_ns: None, args: Vec::new() };
+    }
+    SpanGuard { name, start_ns: Some(now_ns()), args: args.to_vec() }
+}
+
+/// Record a point event.
+#[inline]
+pub fn instant(name: &'static str) {
+    if enabled() {
+        push_event(name, now_ns(), EventKind::Instant, Vec::new());
+    }
+}
+
+/// [`instant`] with numeric annotations.
+#[inline]
+pub fn instant_args(name: &'static str, args: &[(&'static str, f64)]) {
+    if enabled() {
+        push_event(name, now_ns(), EventKind::Instant, args.to_vec());
+    }
+}
+
+/// Record a counter sample (a value-over-time track in Perfetto).
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if enabled() {
+        push_event(name, now_ns(), EventKind::Counter { value }, Vec::new());
+    }
+}
+
+/// A span that *always* measures wall-clock — for call sites (the
+/// compression pipeline, the walltime tables) that need the duration for
+/// their own reports regardless of tracing. The trace event itself is
+/// still emitted only when tracing is on.
+#[must_use = "call finish() to obtain the measured seconds"]
+pub struct TimedSpan {
+    name: &'static str,
+    start_ns: u64,
+}
+
+/// Begin an always-measuring span; [`TimedSpan::finish`] returns seconds.
+#[inline]
+pub fn timed(name: &'static str) -> TimedSpan {
+    TimedSpan { name, start_ns: now_ns() }
+}
+
+impl TimedSpan {
+    /// End the span, returning its duration in seconds (and emitting the
+    /// trace event when tracing is enabled).
+    pub fn finish(self) -> f64 {
+        let dur = now_ns().saturating_sub(self.start_ns);
+        if enabled() {
+            push_event(self.name, self.start_ns, EventKind::Span { dur_ns: dur }, Vec::new());
+        }
+        dur as f64 / 1e9
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Render events as a Chrome trace-event JSON document (Perfetto-loadable).
+///
+/// Timestamps and durations are microseconds (the format's unit), kept
+/// as fractional values so nanosecond ordering survives. `dropped` is
+/// surfaced as a top-level `droppedEvents` count (extra top-level keys
+/// are legal in the format and ignored by viewers).
+pub fn chrome_trace(events: &[Event], dropped: usize) -> Json {
+    let mut rows = Vec::with_capacity(events.len());
+    for e in events {
+        let ph = match e.kind {
+            EventKind::Span { .. } => "X",
+            EventKind::Instant => "i",
+            EventKind::Counter { .. } => "C",
+        };
+        let mut o = Json::obj();
+        o.set("name", json::s(e.name))
+            .set("ph", json::s(ph))
+            .set("ts", json::num(e.ts_ns as f64 / 1e3))
+            .set("pid", json::num(1.0))
+            .set("tid", json::num(e.tid as f64));
+        match e.kind {
+            EventKind::Span { dur_ns } => {
+                o.set("dur", json::num(dur_ns as f64 / 1e3));
+            }
+            // "t" = thread-scoped instant (the viewer draws it on its tid).
+            EventKind::Instant => {
+                o.set("s", json::s("t"));
+            }
+            EventKind::Counter { .. } => {}
+        }
+        let value = match e.kind {
+            EventKind::Counter { value } => Some(value),
+            _ => None,
+        };
+        if !e.args.is_empty() || value.is_some() {
+            let mut a = Json::obj();
+            for (k, v) in &e.args {
+                a.set(k, json::num(*v));
+            }
+            if let Some(v) = value {
+                a.set("value", json::num(v));
+            }
+            o.set("args", a);
+        }
+        rows.push(o);
+    }
+    let mut doc = Json::obj();
+    doc.set("schema", json::s("oats-trace-v1"))
+        .set("displayTimeUnit", json::s("ms"))
+        .set("droppedEvents", json::num(dropped as f64))
+        .set("traceEvents", json::arr(rows));
+    doc
+}
+
+/// Write a Chrome trace file for `events` (creating parent directories),
+/// stamping the process-wide dropped-event count.
+pub fn write_chrome_trace(path: &std::path::Path, events: &[Event]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(events, dropped_events()).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that touch the global enable flag / registry —
+    /// they would otherwise steal each other's drained events.
+    static GLOBAL: Mutex<()> = Mutex::new(());
+
+    fn lock_global() -> std::sync::MutexGuard<'static, ()> {
+        GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn ev(name: &'static str, ts_ns: u64, kind: EventKind) -> Event {
+        Event { name, ts_ns, tid: 1, kind, args: Vec::new() }
+    }
+
+    #[test]
+    fn ring_preserves_order_across_wraparound() {
+        let ring = Ring::with_capacity(4);
+        let mut out = Vec::new();
+        // Three full cycles through a 4-slot ring: indices wrap, order
+        // and content survive.
+        for cycle in 0..3u64 {
+            for i in 0..4u64 {
+                ring.push(ev("unit_probe", cycle * 4 + i, EventKind::Instant));
+            }
+            ring.drain_into(&mut out);
+        }
+        assert_eq!(out.len(), 12);
+        for (i, e) in out.iter().enumerate() {
+            assert_eq!(e.ts_ns, i as u64);
+        }
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_newest_and_counts() {
+        let ring = Ring::with_capacity(2);
+        for i in 0..5u64 {
+            ring.push(ev("unit_probe", i, EventKind::Instant));
+        }
+        assert_eq!(ring.dropped(), 3);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        // The two *oldest* events survive; newest were dropped.
+        assert_eq!(out.iter().map(|e| e.ts_ns).collect::<Vec<_>>(), vec![0, 1]);
+        // After the drain the ring accepts events again.
+        ring.push(ev("unit_probe", 9, EventKind::Instant));
+        out.clear();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn disabled_sites_record_nothing() {
+        let _g = lock_global();
+        set_enabled(false);
+        drain(); // flush anything a prior test left behind
+        {
+            let _s = span("unit_probe");
+            instant("unit_probe");
+            counter("unit_probe", 1.0);
+        }
+        let got: Vec<_> = drain().into_iter().filter(|e| e.name == "unit_probe").collect();
+        assert!(got.is_empty(), "disabled tracing must record nothing: {got:?}");
+    }
+
+    #[test]
+    fn span_guard_records_duration_and_args() {
+        let _g = lock_global();
+        set_enabled(true);
+        drain();
+        {
+            let _s = span_args("unit_probe_span", &[("id", 7.0)]);
+            instant("unit_probe_inner");
+        }
+        set_enabled(false);
+        let events = drain();
+        let s = events.iter().find(|e| e.name == "unit_probe_span").expect("span recorded");
+        let i = events.iter().find(|e| e.name == "unit_probe_inner").expect("instant recorded");
+        let dur = match s.kind {
+            EventKind::Span { dur_ns } => dur_ns,
+            k => panic!("expected span, got {k:?}"),
+        };
+        assert_eq!(s.args, vec![("id", 7.0)]);
+        // The inner instant falls inside the span's [ts, ts+dur] window.
+        assert!(s.ts_ns <= i.ts_ns && i.ts_ns <= s.ts_ns + dur);
+    }
+
+    #[test]
+    fn timed_span_measures_even_when_disabled() {
+        let _g = lock_global();
+        set_enabled(false);
+        drain();
+        let t = timed("unit_probe_timed");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let secs = t.finish();
+        assert!(secs >= 0.001, "timed() must measure with tracing off: {secs}");
+        let got: Vec<_> = drain().into_iter().filter(|e| e.name == "unit_probe_timed").collect();
+        assert!(got.is_empty(), "no event may be emitted while disabled");
+    }
+
+    #[test]
+    fn multi_thread_events_drain_ordered_per_thread() {
+        let _g = lock_global();
+        set_enabled(true);
+        drain();
+        const PER_THREAD: usize = 100;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for i in 0..PER_THREAD {
+                        instant_args("unit_probe_mt", &[("i", i as f64)]);
+                    }
+                });
+            }
+        });
+        set_enabled(false);
+        let events: Vec<_> = drain().into_iter().filter(|e| e.name == "unit_probe_mt").collect();
+        assert_eq!(events.len(), 4 * PER_THREAD);
+        // Per-thread sequence numbers arrive in push order, and the
+        // global sort by timestamp is non-decreasing.
+        let mut per_tid: std::collections::BTreeMap<u64, Vec<f64>> = Default::default();
+        for e in &events {
+            per_tid.entry(e.tid).or_default().push(e.args[0].1);
+        }
+        assert_eq!(per_tid.len(), 4);
+        for (_, seq) in per_tid {
+            let want: Vec<f64> = (0..PER_THREAD).map(|i| i as f64).collect();
+            assert_eq!(seq, want);
+        }
+        for w in events.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns);
+        }
+    }
+
+    #[test]
+    fn chrome_export_shapes_all_three_phases() {
+        let events = vec![
+            Event {
+                name: "unit_probe_span",
+                ts_ns: 1_500,
+                tid: 3,
+                kind: EventKind::Span { dur_ns: 2_500 },
+                args: vec![("nnz", 64.0)],
+            },
+            ev("unit_probe_i", 2_000, EventKind::Instant),
+            Event {
+                name: "unit_probe_c",
+                ts_ns: 3_000,
+                tid: 1,
+                kind: EventKind::Counter { value: 5.0 },
+                args: Vec::new(),
+            },
+        ];
+        let doc = chrome_trace(&events, 2);
+        // Round-trip through the parser: the export is valid JSON with
+        // the Chrome trace-event shape.
+        let parsed = json::parse(&doc.to_string()).expect("export parses");
+        assert_eq!(parsed.get("schema").and_then(|v| v.as_str()), Some("oats-trace-v1"));
+        assert_eq!(parsed.get("droppedEvents").and_then(|v| v.as_f64()), Some(2.0));
+        let rows = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+        assert_eq!(rows.len(), 3);
+        let s = &rows[0];
+        assert_eq!(s.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(s.get("ts").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(s.get("dur").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(
+            s.get("args").and_then(|a| a.get("nnz")).and_then(|v| v.as_f64()),
+            Some(64.0)
+        );
+        let i = &rows[1];
+        assert_eq!(i.get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(i.get("s").and_then(|v| v.as_str()), Some("t"));
+        let c = &rows[2];
+        assert_eq!(c.get("ph").and_then(|v| v.as_str()), Some("C"));
+        assert_eq!(
+            c.get("args").and_then(|a| a.get("value")).and_then(|v| v.as_f64()),
+            Some(5.0)
+        );
+    }
+}

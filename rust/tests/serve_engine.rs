@@ -20,6 +20,7 @@ use oats::coordinator::engine::{
 use oats::coordinator::serve::{generate, generate_lockstep};
 use oats::model::TransformerLM;
 use oats::util::prop::check;
+use oats::util::trace;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -591,6 +592,68 @@ fn stop_tokens_match_truncated_scalar_generate() {
             }
         }
     });
+}
+
+#[test]
+fn tracing_observes_without_reordering_and_orders_lifecycle_events() {
+    // Tracing is an observer, never a participant: the same workload with
+    // the recorder on must produce byte-identical tokens and statuses, and
+    // the recorded lifecycle instants must be complete and ordered per
+    // request (enqueued <= admitted <= first_token <= retired).
+    let m = tiny();
+    let cfg = EngineConfig {
+        slots: 3,
+        prefill_chunk: 4,
+        gen_tokens: 4,
+        admission: AdmissionPolicy::Fcfs,
+        page_size: 4,
+        kv_pages: 24,
+    };
+    // The trace flag and rings are process-global and tests in this binary
+    // run in parallel, so this test claims an id range no other workload
+    // uses and filters the drained events on it.
+    const BASE: u64 = 100_000;
+    let arrivals: Vec<(usize, Vec<usize>)> = (0..6)
+        .map(|i| (i % 3, (0..(1 + (i * 5) % 11)).map(|j| (i * 7 + j) % 16).collect()))
+        .collect();
+
+    let (untraced, _) = drive_with(&m, cfg, &arrivals, |id, p| Request::new(BASE + id, p));
+    trace::set_enabled(true);
+    let (traced, _) = drive_with(&m, cfg, &arrivals, |id, p| Request::new(BASE + id, p));
+    trace::set_enabled(false);
+    let events = trace::drain();
+
+    let mut times: HashMap<u64, HashMap<&str, u64>> = HashMap::new();
+    for e in &events {
+        if let Some(&(_, id)) = e.args.iter().find(|(k, _)| *k == "id") {
+            if id as u64 >= BASE {
+                times.entry(id as u64).or_default().insert(e.name, e.ts_ns);
+            }
+        }
+    }
+    for (id, (_, prompt)) in arrivals.iter().enumerate() {
+        let key = BASE + id as u64;
+        assert_eq!(
+            traced[&key].tokens,
+            untraced[&key].tokens,
+            "tracing changed the output for prompt len {}",
+            prompt.len()
+        );
+        assert_eq!(traced[&key].status, untraced[&key].status);
+        let t = &times[&key];
+        let (enq, adm) = (t["request_enqueued"], t["request_admitted"]);
+        let (ft, ret) = (t["request_first_token"], t["request_retired"]);
+        assert!(
+            enq <= adm && adm <= ft && ft <= ret,
+            "request {key} lifecycle out of order: {enq} {adm} {ft} {ret}"
+        );
+    }
+    assert!(
+        events
+            .iter()
+            .any(|e| e.name == "engine_step" && matches!(e.kind, trace::EventKind::Span { .. })),
+        "traced run recorded no engine_step spans"
+    );
 }
 
 #[test]
