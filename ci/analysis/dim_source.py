@@ -1,0 +1,76 @@
+"""dim-source: forward-path code reads layer dims from the layer, not cfg.
+
+With rotate-and-slice in the pipeline, a block's FFN width is no longer
+``cfg.d_ff`` — a sliced pair runs in its kept width, and only the layer
+itself (``LinearOp::in_dim``/``out_dim``) knows it. The forward-path
+refactor sourced every activation-buffer size and loop bound from the
+layer ops; a new ``cfg.d_model``/``cfg.d_ff`` read inside a forward-path
+function would silently re-assume uniform shapes and panic (or worse,
+read garbage) the first time a sliced checkpoint is served.
+
+This rule walks the bodies of the forward-path functions in
+``rust/src/model/`` and flags any ``cfg.d_model`` / ``cfg.d_ff`` token.
+Construction-time code (``init``, ``KvPage::new``, checkpoint IO, tests)
+is out of scope: allocating by config there is correct — shapes are
+being *created*, not *assumed*.
+"""
+
+from __future__ import annotations
+
+import re
+
+from tidy_core import Finding
+
+RULE_ID = "dim-source"
+DESCRIPTION = "forward-path fns in model/ read dims from LinearOp, not cfg.d_model/d_ff"
+
+# Longest-first so the alternation never stops at a prefix of a longer name.
+FN_RE = re.compile(
+    r"\bfn\s+(decode_step_batch_ws|decode_step_batch|decode_step"
+    r"|block_forward|forward_ws|forward_vec|forward)\s*[(<]"
+)
+DIM_RE = re.compile(r"\bcfg\s*\.\s*d_(model|ff)\b")
+MODEL_PREFIX = "rust/src/model/"
+
+
+def _body_span(code, start):
+    """(open, close) offsets of the brace-matched body after ``start``."""
+    open_i = code.find("{", start)
+    if open_i == -1:
+        return None
+    depth = 0
+    for j in range(open_i, len(code)):
+        c = code[j]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return (open_i, j + 1)
+    return (open_i, len(code))
+
+
+def check(scan):
+    findings = []
+    for src in scan.rust_files():
+        if not src.path.startswith(MODEL_PREFIX):
+            continue
+        for fm in FN_RE.finditer(src.code):
+            span = _body_span(src.code, fm.end())
+            if span is None:
+                continue
+            body = src.code[span[0] : span[1]]
+            for dm in DIM_RE.finditer(body):
+                off = span[0] + dm.start()
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        src.path,
+                        src.line_of(off),
+                        f"`cfg.d_{dm.group(1)}` read inside `{fm.group(1)}` — "
+                        "forward-path dims must come from the layer "
+                        "(`LinearOp::in_dim`/`out_dim`); sliced layers run "
+                        "in their kept width, not the config width",
+                    )
+                )
+    return findings

@@ -39,6 +39,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import cow_guard  # noqa: E402
+import dim_source  # noqa: E402
 import float_sort  # noqa: E402
 import numerics_contract  # noqa: E402
 import schema_lock  # noqa: E402
@@ -53,6 +54,7 @@ RULE_MODULES = [
     float_sort,
     thread_probe,
     cow_guard,
+    dim_source,
     trace_hygiene,
     schema_lock,
 ]

@@ -18,6 +18,7 @@ REPO = pathlib.Path(__file__).resolve().parents[2]
 sys.path.insert(0, str(REPO / "ci" / "analysis"))
 
 import cow_guard  # noqa: E402
+import dim_source  # noqa: E402
 import float_sort  # noqa: E402
 import numerics_contract  # noqa: E402
 import oats_tidy  # noqa: E402
@@ -270,6 +271,84 @@ def test_row_mut_mention_in_comment_passes(tmp_path):
     text = "// the engine never calls .k_row_mut( directly\nfn f() {}\n"
     scan = rust(tmp_path, text, rel="rust/src/coordinator/serve.rs")
     assert cow_guard.check(scan) == []
+
+
+# ---------------------------------------------------------------------------
+# dim-source
+# ---------------------------------------------------------------------------
+
+DIM_BAD_FORWARD = """\
+impl Lm {
+    pub fn forward(&self, cfg: &Config, x: &[f32]) -> Vec<f32> {
+        let mut buf = vec![0.0; cfg.d_ff];
+        buf
+    }
+}
+"""
+
+DIM_GOOD_FORWARD = """\
+impl Lm {
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut buf = vec![0.0; self.up.out_dim()];
+        buf
+    }
+}
+"""
+
+DIM_CONSTRUCTION_TIME = """\
+impl Lm {
+    pub fn init(cfg: &Config) -> Self {
+        let w = vec![0.0; cfg.d_ff * cfg.d_model];
+        Self { w }
+    }
+}
+"""
+
+
+def test_cfg_dim_inside_forward_body_fails(tmp_path):
+    scan = rust(tmp_path, DIM_BAD_FORWARD, rel="rust/src/model/lm.rs")
+    fs = dim_source.check(scan)
+    assert len(fs) == 1 and fs[0].rule == "dim-source"
+    assert fs[0].line == 3
+    assert "cfg.d_ff" in fs[0].message and "forward" in fs[0].message
+
+
+def test_layer_sourced_dims_pass(tmp_path):
+    scan = rust(tmp_path, DIM_GOOD_FORWARD, rel="rust/src/model/lm.rs")
+    assert dim_source.check(scan) == []
+
+
+def test_construction_time_cfg_dims_are_fine(tmp_path):
+    scan = rust(tmp_path, DIM_CONSTRUCTION_TIME, rel="rust/src/model/lm.rs")
+    assert dim_source.check(scan) == []
+
+
+def test_cfg_dims_outside_model_tree_are_fine(tmp_path):
+    scan = rust(tmp_path, DIM_BAD_FORWARD, rel="rust/src/coordinator/pipeline.rs")
+    assert dim_source.check(scan) == []
+
+
+def test_decode_step_batch_ws_is_covered(tmp_path):
+    text = DIM_BAD_FORWARD.replace("fn forward", "fn decode_step_batch_ws").replace(
+        "cfg.d_ff", "cfg.d_model"
+    )
+    scan = rust(tmp_path, text, rel="rust/src/model/lm.rs")
+    fs = dim_source.check(scan)
+    assert len(fs) == 1 and "cfg.d_model" in fs[0].message
+    assert "decode_step_batch_ws" in fs[0].message
+
+
+def test_cfg_dim_in_comment_inside_forward_is_ignored(tmp_path):
+    text = (
+        "impl Lm {\n"
+        "    pub fn forward(&self, x: &[f32]) -> Vec<f32> {\n"
+        "        // cfg.d_ff would be wrong here: layers know their width\n"
+        "        vec![0.0; self.up.out_dim()]\n"
+        "    }\n"
+        "}\n"
+    )
+    scan = rust(tmp_path, text, rel="rust/src/model/lm.rs")
+    assert dim_source.check(scan) == []
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,7 @@
 //! generic-build comparisons for the register-blocked microkernels, and
 //! `metrics` entries recording the bcsr vs qbcsr byte footprints plus the
 //! microkernel's `simd_dispatch`/`lanes` telemetry. CI's perf gate reads
-//! the csr→bcsr, bcsr→qbcsr, and *_simd_vs_generic
+//! the csr→bcsr, bcsr→qbcsr, sliced-vs-dense, and *_simd_vs_generic
 //! `comparisons[].speedup` values against conservative floors.
 
 use oats::bench::{black_box, Bench};
@@ -140,6 +140,50 @@ fn simd_comparison(b: &mut Bench, d: usize, batch: usize, rng: &mut Rng) {
     let _ = b.compare(&format!("fused_simd_vs_generic_{d}_b{batch}"), &gen_fused, &simd_fused);
 }
 
+/// Rotate-and-slice vs dense on the FFN "down" shape: a sliced layer is a
+/// plain GEMM in a narrower shape, so the win tracks the deleted d_ff
+/// channels — and the Xᵀ panel the batched kernel streams per call
+/// shrinks by the same factor. CI floors the `sliced_vs_dense`
+/// comparisons and the footprint metrics record the panel shrinkage.
+fn sliced_comparison(b: &mut Bench, d: usize, d_ff: usize, batch: usize, rng: &mut Rng) {
+    use oats::compress::slice::{select_channels, select_cols, SliceMap};
+    println!("-- sliced vs dense {d}x{d_ff} (down proj), batch {batch} --");
+    let w = Matrix::randn(d, d_ff, 1.0, rng);
+    let x = Matrix::randn(batch, d_ff, 1.0, rng);
+    let dense = PackedLinear::from_dense(&w, batch);
+    let dense_name = format!("dense down {d}x{d_ff} b{batch}");
+    b.run(&dense_name, || {
+        black_box(dense.forward(&x));
+    });
+    let dense_panel = (4 * batch * d_ff) as f64;
+    b.metric(&format!("dense_xt_panel_bytes_{d_ff}_b{batch}"), dense_panel);
+
+    for pct in [25u32, 50] {
+        // Synthetic descending energies: the kept set is the first
+        // (1 − rate)·d_ff channels, exactly what the energy ranking
+        // produces on a layer whose leading channels dominate.
+        let energies: Vec<f64> = (0..d_ff).map(|j| (d_ff - j) as f64).collect();
+        let map = select_channels(&energies, pct as f64 / 100.0);
+        let ws = select_cols(&w, &map.kept);
+        let xs = select_cols(&x, &map.kept);
+        let keep = map.len();
+        let packed = PackedLinear::from_sliced(&ws, map, SliceMap::identity(d), batch);
+        println!("  plan: {}", packed.plan.describe());
+        let name = format!("sliced({pct}%) down {d}x{keep} b{batch}");
+        b.run(&name, || {
+            black_box(packed.forward(&xs));
+        });
+        let _ =
+            b.compare(&format!("sliced_vs_dense_{pct}pct_{d_ff}_b{batch}"), &dense_name, &name);
+        let panel = (4 * batch * keep) as f64;
+        b.metric(&format!("sliced_xt_panel_bytes_{pct}pct_{d_ff}_b{batch}"), panel);
+        b.metric(
+            &format!("sliced_panel_shrink_{pct}pct_{d_ff}_b{batch}"),
+            panel / dense_panel,
+        );
+    }
+}
+
 /// Tracing-overhead comparison: the fused serving kernel with the trace
 /// recorder disabled vs enabled. The disabled side pays one relaxed atomic
 /// load per dispatch; the enabled side adds the clock reads and the ring
@@ -247,6 +291,9 @@ fn main() {
 
     // Register-blocked SIMD dispatch vs the generic build, serving-sized.
     simd_comparison(&mut b, 2048, 8, &mut rng);
+
+    // Rotate-and-slice vs dense on the FFN down-projection shape.
+    sliced_comparison(&mut b, 512, 2048, 8, &mut rng);
 
     // Trace-recorder overhead on the fused serving kernel.
     trace_overhead(&mut b, 512, 8, &mut rng);

@@ -182,7 +182,7 @@ mod tests {
         let (_, stats) = stats_with_bias(32, 6);
         let cfg = CompressConfig { method: Method::DsNoT, rate: 0.5, ..Default::default() };
         let out = compress(&w, &stats, &cfg).unwrap();
-        assert!((out.compression_rate() - 0.5).abs() < 0.06);
+        assert!((out.compression_rate((16, 32)) - 0.5).abs() < 0.06);
     }
 
     #[test]

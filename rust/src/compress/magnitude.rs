@@ -41,6 +41,6 @@ mod tests {
             ..Default::default()
         };
         let out = compress(&w, &cfg).unwrap();
-        assert!((out.compression_rate() - 0.6).abs() < 0.05);
+        assert!((out.compression_rate((32, 32)) - 0.6).abs() < 0.05);
     }
 }

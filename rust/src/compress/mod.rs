@@ -11,6 +11,7 @@ pub mod magnitude;
 pub mod oats;
 pub mod owl;
 pub mod params;
+pub mod slice;
 pub mod sparsegpt;
 pub mod threshold;
 pub mod wanda;
@@ -166,15 +167,38 @@ pub enum CompressedLayer {
     Sparse(Csr),
     /// OATS' sparse + low-rank decomposition.
     Spl(SparsePlusLowRank),
+    /// Rotate-and-slice result: a dense weight in the SLICED shape plus the
+    /// index maps back into the original dense dimensions. `shape()` reports
+    /// the sliced dims (what the forward path sees); rate accounting uses
+    /// the maps' `full` sizes.
+    SlicedDense {
+        w: Matrix,
+        in_map: slice::SliceMap,
+        out_map: slice::SliceMap,
+    },
 }
 
 impl CompressedLayer {
-    /// Dense reconstruction, for evaluation paths that want plain GEMM.
+    /// Dense reconstruction IN THE LAYER'S OWN SHAPE, for evaluation paths
+    /// that want plain GEMM. For `SlicedDense` this is the sliced weight;
+    /// use [`CompressedLayer::to_original_dense`] for the pre-slice shape.
     pub fn to_dense(&self) -> Matrix {
         match self {
             CompressedLayer::Dense(w) => w.clone(),
             CompressedLayer::Sparse(s) => s.to_dense(),
             CompressedLayer::Spl(spl) => spl.to_dense(),
+            CompressedLayer::SlicedDense { w, .. } => w.clone(),
+        }
+    }
+
+    /// Dense reconstruction in the ORIGINAL dense shape (sliced channels
+    /// scattered back to their source indices, deleted channels zero).
+    pub fn to_original_dense(&self) -> Matrix {
+        match self {
+            CompressedLayer::SlicedDense { w, in_map, out_map } => {
+                slice::scatter_to_original(w, out_map, in_map)
+            }
+            other => other.to_dense(),
         }
     }
 
@@ -184,20 +208,39 @@ impl CompressedLayer {
             CompressedLayer::Dense(w) => w.rows * w.cols,
             CompressedLayer::Sparse(s) => s.nnz(),
             CompressedLayer::Spl(spl) => spl.param_count(),
+            CompressedLayer::SlicedDense { w, .. } => w.rows * w.cols,
         }
     }
 
+    /// The shape the forward path consumes (sliced dims for `SlicedDense`).
     pub fn shape(&self) -> (usize, usize) {
         match self {
             CompressedLayer::Dense(w) => (w.rows, w.cols),
             CompressedLayer::Sparse(s) => (s.rows, s.cols),
             CompressedLayer::Spl(spl) => (spl.sparse.rows, spl.sparse.cols),
+            CompressedLayer::SlicedDense { w, .. } => (w.rows, w.cols),
         }
     }
 
-    /// Achieved compression rate 1 − params/dense.
-    pub fn compression_rate(&self) -> f64 {
-        let (r, c) = self.shape();
+    /// The pre-compression dense shape — the correct rate denominator.
+    /// Identical to `shape()` for every variant except `SlicedDense`.
+    pub fn original_shape(&self) -> (usize, usize) {
+        match self {
+            CompressedLayer::SlicedDense { in_map, out_map, .. } => {
+                (out_map.full, in_map.full)
+            }
+            other => other.shape(),
+        }
+    }
+
+    /// Achieved compression rate 1 − params/original. The original dense
+    /// shape is an explicit argument: deriving the denominator from
+    /// `shape()` over-reports the rate for any shape-changing variant
+    /// (a sliced layer's own shape is already smaller than the weight it
+    /// replaced).
+    pub fn compression_rate(&self, original: (usize, usize)) -> f64 {
+        let (r, c) = original;
+        assert!(r > 0 && c > 0, "degenerate original shape {original:?}");
         1.0 - self.param_count() as f64 / (r * c) as f64
     }
 }
@@ -324,6 +367,63 @@ mod tests {
         let cfg = CompressConfig { method: Method::Dense, ..Default::default() };
         let out = compress_layer(&w, &stats, &cfg).unwrap();
         assert!(out.to_dense().fro_dist(&w) < 1e-9);
-        assert_eq!(out.compression_rate(), 0.0);
+        assert_eq!(out.compression_rate((8, 8)), 0.0);
+    }
+
+    #[test]
+    fn compression_rate_accounts_against_original_shape() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let x = Matrix::randn(32, 8, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&x);
+        let orig = (8, 8);
+
+        // Sparse at rate 0.5: shape is unchanged, so the explicit original
+        // shape agrees with the layer's own shape.
+        let cfg = CompressConfig { method: Method::Wanda, rate: 0.5, ..Default::default() };
+        let sparse = compress_layer(&w, &stats, &cfg).unwrap();
+        assert_eq!(sparse.shape(), sparse.original_shape());
+        assert!((sparse.compression_rate(orig) - 0.5).abs() < 0.05);
+
+        // SPL: same invariant, budget split across S and L.
+        let cfg =
+            CompressConfig { method: Method::Oats, rate: 0.5, iters: 5, ..Default::default() };
+        let spl = compress_layer(&w, &stats, &cfg).unwrap();
+        assert_eq!(spl.shape(), spl.original_shape());
+        assert!((spl.compression_rate(orig) - 0.5).abs() < 0.05);
+
+        // Sliced: keeping half the output rows of an 8×8 halves the params.
+        // The latent bug: a shape()-based denominator (4·8) would report
+        // rate 0 here; the original-shape denominator reports 0.5.
+        let sliced = CompressedLayer::SlicedDense {
+            w: Matrix::randn(4, 8, 1.0, &mut rng),
+            in_map: slice::SliceMap::identity(8),
+            out_map: slice::SliceMap { kept: vec![0, 2, 4, 6], full: 8 },
+        };
+        assert_eq!(sliced.shape(), (4, 8));
+        assert_eq!(sliced.original_shape(), (8, 8));
+        let wrong_denominator = {
+            let (r, c) = sliced.shape();
+            1.0 - sliced.param_count() as f64 / (r * c) as f64
+        };
+        assert_eq!(wrong_denominator, 0.0);
+        assert_eq!(sliced.compression_rate(orig), 0.5);
+    }
+
+    #[test]
+    fn sliced_to_original_dense_scatters_back() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let sliced = CompressedLayer::SlicedDense {
+            w,
+            in_map: slice::SliceMap { kept: vec![2, 0], full: 3 },
+            out_map: slice::SliceMap { kept: vec![1, 3], full: 4 },
+        };
+        let full = sliced.to_original_dense();
+        assert_eq!((full.rows, full.cols), (4, 3));
+        assert_eq!(full.at(1, 2), 1.0);
+        assert_eq!(full.at(1, 0), 2.0);
+        assert_eq!(full.at(3, 2), 3.0);
+        assert_eq!(full.at(3, 0), 4.0);
+        assert_eq!(full.nnz(), 4);
     }
 }

@@ -215,7 +215,7 @@ mod tests {
                 ..default_cfg()
             };
             let out = compress(&w, &stats, &cfg).unwrap();
-            let achieved = out.compression_rate();
+            let achieved = out.compression_rate((dout, din));
             // Row-wise flooring + rank ceil ⇒ achieved ≥ target − small slack.
             let tol = (dout + din) as f64 / (dout * din) as f64 + 1.0 / din as f64;
             assert!(
@@ -338,7 +338,7 @@ mod tests {
                 ..default_cfg()
             };
             let out = compress(&w, &stats, &cfg).unwrap();
-            assert!(out.compression_rate() > 0.3);
+            assert!(out.compression_rate((w.rows, w.cols)) > 0.3);
         }
     }
 

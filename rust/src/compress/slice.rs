@@ -1,0 +1,311 @@
+//! SliceGPT-style rotate-and-slice structured compression (Ashkboos et al.,
+//! see PAPERS.md), specialized to the FFN pair.
+//!
+//! The general recipe rotates a hidden dimension into the eigenbasis of its
+//! calibration gram, folds the rotation into the adjacent weights, and
+//! deletes the lowest-energy trailing columns. Between `up` and `down` sits
+//! an elementwise GELU, which does NOT commute with an arbitrary rotation —
+//! but it commutes with any *permutation*, and permutations are orthogonal.
+//! So the rotation Q used here is the energy-ranked permutation of the d_ff
+//! channels: channel energies come from the eigendecomposition of the
+//! post-GELU gram (the `linalg.rs` eigen path), channels are reordered
+//! energy-descending, and slicing keeps the leading (highest-energy) block.
+//! Folding Q into the weights is then exact row/column selection:
+//! `up`'s output rows and `down`'s input columns, one shared kept set per
+//! block, with no runtime rotation matmul surviving.
+
+use crate::compress::CalibStats;
+use crate::linalg::jacobi_eigh;
+use crate::tensor::Matrix;
+
+/// Index map from a sliced dimension back into the original dense dimension.
+///
+/// `kept[i]` is the original channel index occupying sliced position `i`.
+/// Entries are ordered energy-descending, so at slice rate 0 the map is a
+/// genuine permutation of `0..full` (not necessarily the identity).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SliceMap {
+    /// Kept original indices, energy-descending.
+    pub kept: Vec<u32>,
+    /// Size of the original dense dimension.
+    pub full: usize,
+}
+
+impl SliceMap {
+    /// The trivial map for an unsliced dimension.
+    pub fn identity(full: usize) -> SliceMap {
+        SliceMap { kept: (0..full as u32).collect(), full }
+    }
+
+    /// Sliced dimension size.
+    pub fn len(&self) -> usize {
+        self.kept.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kept.is_empty()
+    }
+
+    /// True iff this map neither reorders nor deletes channels.
+    pub fn is_identity(&self) -> bool {
+        self.kept.len() == self.full
+            && self.kept.iter().enumerate().all(|(i, &k)| k as usize == i)
+    }
+
+    /// Internal consistency: indices in range and pairwise distinct.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.kept.len() <= self.full, "more kept than full");
+        let mut seen = vec![false; self.full];
+        for &k in &self.kept {
+            let k = k as usize;
+            anyhow::ensure!(k < self.full, "kept index {k} out of range {}", self.full);
+            anyhow::ensure!(!seen[k], "duplicate kept index {k}");
+            seen[k] = true;
+        }
+        Ok(())
+    }
+}
+
+/// Per-channel second-moment energies E[x_j²]·n from the eigendecomposition
+/// of the calibration gram: energy_j = Σ_k λ_k v_jk². (Algebraically the
+/// gram diagonal, reconstructed through the eigen path so the ranking is
+/// exactly the one the rotation basis induces.)
+pub fn channel_energies(stats: &CalibStats) -> Vec<f64> {
+    let n = stats.gram.rows;
+    let (vals, vecs) = jacobi_eigh(&stats.gram);
+    (0..n)
+        .map(|j| {
+            let mut e = 0.0f64;
+            for (k, &lam) in vals.iter().enumerate() {
+                let v = vecs.at(j, k) as f64;
+                e += lam * v * v;
+            }
+            e.max(0.0)
+        })
+        .collect()
+}
+
+/// Rank channels energy-descending and keep the top `1 − slice_rate`
+/// fraction. Ties break by original index so the map is deterministic.
+/// At least one channel is always kept.
+pub fn select_channels(energies: &[f64], slice_rate: f64) -> SliceMap {
+    let full = energies.len();
+    assert!(full > 0, "cannot slice an empty dimension");
+    assert!((0.0..1.0).contains(&slice_rate), "slice_rate must be in [0,1)");
+    let drop = (full as f64 * slice_rate).floor() as usize;
+    let keep = full.saturating_sub(drop).max(1);
+    let mut order: Vec<u32> = (0..full as u32).collect();
+    // total_cmp: a NaN energy (degenerate gram) sorts below every finite
+    // energy instead of panicking, and the ordering stays total.
+    order.sort_by(|&a, &b| {
+        energies[b as usize]
+            .total_cmp(&energies[a as usize])
+            .then(a.cmp(&b))
+    });
+    order.truncate(keep);
+    SliceMap { kept: order, full }
+}
+
+/// Row-select `w` (out×in) down to the kept output channels, in map order.
+pub fn select_rows(w: &Matrix, kept: &[u32]) -> Matrix {
+    let mut out = Matrix::zeros(kept.len(), w.cols);
+    for (ri, &ro) in kept.iter().enumerate() {
+        out.row_mut(ri).copy_from_slice(w.row(ro as usize));
+    }
+    out
+}
+
+/// Column-select `w` (out×in) down to the kept input channels, in map order.
+pub fn select_cols(w: &Matrix, kept: &[u32]) -> Matrix {
+    let mut out = Matrix::zeros(w.rows, kept.len());
+    for r in 0..w.rows {
+        let src = w.row(r);
+        let dst = out.row_mut(r);
+        for (ci, &co) in kept.iter().enumerate() {
+            dst[ci] = src[co as usize];
+        }
+    }
+    out
+}
+
+/// Scatter a sliced weight back to the ORIGINAL dense shape: kept entries
+/// return to their source indices, deleted channels stay zero. Used for
+/// weight-space error accounting and for dense evaluation paths.
+pub fn scatter_to_original(w: &Matrix, out_map: &SliceMap, in_map: &SliceMap) -> Matrix {
+    assert_eq!(w.rows, out_map.len());
+    assert_eq!(w.cols, in_map.len());
+    let mut full = Matrix::zeros(out_map.full, in_map.full);
+    for (ri, &ro) in out_map.kept.iter().enumerate() {
+        let src = w.row(ri);
+        let dst = full.row_mut(ro as usize);
+        for (ci, &co) in in_map.kept.iter().enumerate() {
+            dst[co as usize] = src[ci];
+        }
+    }
+    full
+}
+
+/// One block's FFN pair after rotate-and-slice: `up` row-selected to
+/// keep×d_model, `down` column-selected to d_model×keep, sharing `map`
+/// over the d_ff dimension.
+#[derive(Clone, Debug)]
+pub struct SlicedPair {
+    pub up: Matrix,
+    pub down: Matrix,
+    pub map: SliceMap,
+}
+
+/// Rotate-and-slice a block's FFN pair. `stats_down` is the calibration
+/// gram of `down`'s INPUT (the post-GELU activations, d_ff wide) — the
+/// dimension both weights share and the only contract-free dimension in
+/// the block (attention and residual stream stay at d_model).
+pub fn slice_ffn_pair(
+    w_up: &Matrix,
+    w_down: &Matrix,
+    stats_down: &CalibStats,
+    slice_rate: f64,
+) -> SlicedPair {
+    let d_ff = w_up.rows;
+    assert_eq!(w_down.cols, d_ff, "FFN pair dims disagree");
+    assert_eq!(stats_down.gram.rows, d_ff, "stats are not d_ff wide");
+    let energies = channel_energies(stats_down);
+    let map = select_channels(&energies, slice_rate);
+    SlicedPair {
+        up: select_rows(w_up, &map.kept),
+        down: select_cols(w_down, &map.kept),
+        map,
+    }
+}
+
+/// Per-layer arbitration gate for the slice pass, mirroring `QuantGate`:
+/// weight-space relative reconstruction error ‖W − scatter(Ŵ)‖_F / ‖W‖_F
+/// against a configured bound. The pipeline keeps the sliced pair only when
+/// BOTH layers accept.
+#[derive(Clone, Copy, Debug)]
+pub struct SliceGate {
+    pub rel_error: f64,
+    pub bound: f64,
+}
+
+impl SliceGate {
+    /// Evaluate the gate for one layer: `orig` is the pre-slice dense
+    /// weight, `scattered` its sliced reconstruction in the original shape.
+    pub fn evaluate(orig: &Matrix, scattered: &Matrix, bound: f64) -> SliceGate {
+        let denom = orig.fro_norm().max(1e-12);
+        SliceGate { rel_error: orig.fro_dist(scattered) / denom, bound }
+    }
+
+    pub fn accept(&self) -> bool {
+        self.rel_error <= self.bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn stats_with_channel_scales(scales: &[f32]) -> CalibStats {
+        let mut rng = Rng::new(0x51C3);
+        let mut x = Matrix::randn(64, scales.len(), 1.0, &mut rng);
+        for (j, &s) in scales.iter().enumerate() {
+            x.scale_column(j, s);
+        }
+        CalibStats::from_activations(&x)
+    }
+
+    #[test]
+    fn energies_rank_by_activation_scale() {
+        let stats = stats_with_channel_scales(&[1.0, 10.0, 0.1, 3.0]);
+        let e = channel_energies(&stats);
+        assert_eq!(e.len(), 4);
+        assert!(e[1] > e[3] && e[3] > e[0] && e[0] > e[2], "{e:?}");
+        // The eigen-path reconstruction must agree with the gram diagonal.
+        for (j, &ej) in e.iter().enumerate() {
+            let g = stats.gram.at(j, j) as f64;
+            assert!((ej - g).abs() < 1e-2 * g.abs().max(1.0), "{j}: {ej} vs {g}");
+        }
+    }
+
+    #[test]
+    fn select_channels_rate_zero_is_full_permutation() {
+        let stats = stats_with_channel_scales(&[1.0, 10.0, 0.1, 3.0]);
+        let map = select_channels(&channel_energies(&stats), 0.0);
+        assert_eq!(map.len(), 4);
+        map.validate().unwrap();
+        assert_eq!(map.kept, vec![1, 3, 0, 2], "energy-descending order");
+        assert!(!map.is_identity());
+    }
+
+    #[test]
+    fn select_channels_drops_lowest_energy() {
+        let stats = stats_with_channel_scales(&[1.0, 10.0, 0.1, 3.0]);
+        let map = select_channels(&channel_energies(&stats), 0.5);
+        assert_eq!(map.kept, vec![1, 3], "the two weakest channels go");
+        assert_eq!(map.full, 4);
+    }
+
+    #[test]
+    fn select_channels_keeps_at_least_one_and_is_deterministic() {
+        let e = vec![1.0; 8];
+        let a = select_channels(&e, 0.99);
+        assert_eq!(a.len(), 1);
+        let b = select_channels(&e, 0.99);
+        assert_eq!(a, b);
+        // Uniform energies tie-break by index → leading channels survive.
+        let half = select_channels(&e, 0.5);
+        assert_eq!(half.kept, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rate_zero_pair_scatter_is_bit_exact() {
+        let mut rng = Rng::new(7);
+        let w_up = Matrix::randn(16, 8, 1.0, &mut rng);
+        let w_down = Matrix::randn(8, 16, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&Matrix::randn(32, 16, 1.0, &mut rng));
+        let pair = slice_ffn_pair(&w_up, &w_down, &stats, 0.0);
+        assert_eq!(pair.up.rows, 16);
+        assert_eq!(pair.down.cols, 16);
+        let up_back = scatter_to_original(
+            &pair.up,
+            &pair.map,
+            &SliceMap::identity(8),
+        );
+        let down_back = scatter_to_original(
+            &pair.down,
+            &SliceMap::identity(8),
+            &pair.map,
+        );
+        // Pure permutation: scatter-back restores the weights exactly.
+        assert_eq!(up_back, w_up);
+        assert_eq!(down_back, w_down);
+        let g = SliceGate::evaluate(&w_up, &up_back, 0.75);
+        assert_eq!(g.rel_error, 0.0);
+        assert!(g.accept());
+    }
+
+    #[test]
+    fn nonzero_rate_shrinks_and_gate_sees_error() {
+        let mut rng = Rng::new(8);
+        let w_up = Matrix::randn(16, 8, 1.0, &mut rng);
+        let w_down = Matrix::randn(8, 16, 1.0, &mut rng);
+        let stats = CalibStats::from_activations(&Matrix::randn(32, 16, 1.0, &mut rng));
+        let pair = slice_ffn_pair(&w_up, &w_down, &stats, 0.25);
+        assert_eq!(pair.up.rows, 12);
+        assert_eq!(pair.down.cols, 12);
+        assert_eq!(pair.up.cols, 8, "d_model untouched");
+        assert_eq!(pair.down.rows, 8, "d_model untouched");
+        let back = scatter_to_original(&pair.up, &pair.map, &SliceMap::identity(8));
+        let g = SliceGate::evaluate(&w_up, &back, 1e-6);
+        assert!(g.rel_error > 0.0, "dropped rows must register as error");
+        assert!(!g.accept());
+    }
+
+    #[test]
+    fn slice_map_validate_rejects_garbage() {
+        assert!(SliceMap { kept: vec![0, 0], full: 4 }.validate().is_err());
+        assert!(SliceMap { kept: vec![9], full: 4 }.validate().is_err());
+        assert!(SliceMap { kept: vec![3, 1], full: 4 }.validate().is_ok());
+        assert!(SliceMap::identity(4).is_identity());
+    }
+}

@@ -170,7 +170,7 @@ mod tests {
         let x = Matrix::randn(128, 64, 1.0, &mut rng);
         let stats = CalibStats::from_activations(&x);
         let out = compress(&w, &stats, &cfg(0.5, SparsityPattern::RowWise)).unwrap();
-        let rate = out.compression_rate();
+        let rate = out.compression_rate((16, 64));
         assert!((rate - 0.5).abs() < 0.05, "rate={rate}");
     }
 

@@ -86,7 +86,7 @@ mod tests {
                 ..Default::default()
             };
             let out = compress(&w, &stats, &cfg).unwrap();
-            assert!((out.compression_rate() - rate).abs() < 0.06, "rate {rate}");
+            assert!((out.compression_rate((w.rows, w.cols)) - rate).abs() < 0.06, "rate {rate}");
         }
     }
 }

@@ -219,6 +219,18 @@ pub struct CompressConfig {
     pub owl_lambda: f64,
     /// OWL outlier threshold multiple M.
     pub owl_m: f64,
+    /// Structured rotate-and-slice on each block's FFN pair: `Some(rate)`
+    /// deletes the lowest-energy fraction of d_ff channels (0.0 =
+    /// rotation-only, an exact energy-ranked permutation). `None` (default)
+    /// disables the pass entirely.
+    pub slice_rate: Option<f64>,
+    /// Per-layer error gate for the slice pass: the sliced pair is kept only
+    /// when both layers' weight-space relative reconstruction errors stay at
+    /// or below this bound (same ‖W−Ŵ‖_F/‖W‖_F machinery as `QuantGate`).
+    /// Dropped-channel error scales like sqrt(slice_rate) on
+    /// uniform-energy weights, so this bound is far looser than the i8
+    /// quantization gate's 5 %.
+    pub slice_max_rel_error: f64,
     /// Seed for the randomized SVD.
     pub seed: u64,
 }
@@ -238,6 +250,8 @@ impl Default for CompressConfig {
             owl: false,
             owl_lambda: 0.08,
             owl_m: 5.0,
+            slice_rate: None,
+            slice_max_rel_error: 0.75,
             seed: 0xA75,
         }
     }

@@ -88,6 +88,11 @@ pub struct EngineConfig {
     /// whole-cache arena). Values below one full sequence are raised to
     /// that minimum so any admissible request can always be served.
     pub kv_pages: usize,
+    /// Max entries the prefix index keeps resident (`0` ⇒ unbounded).
+    /// Overflow evicts least-recently-used unreferenced entries on a
+    /// deterministic logical clock; evicted pages return to the pool and
+    /// count as `prefix_evictions_cap` in the telemetry.
+    pub prefix_cap: usize,
 }
 
 impl Default for EngineConfig {
@@ -99,6 +104,7 @@ impl Default for EngineConfig {
             admission: AdmissionPolicy::Fcfs,
             page_size: 0,
             kv_pages: 0,
+            prefix_cap: 0,
         }
     }
 }
@@ -184,6 +190,10 @@ pub struct EngineTelemetry {
     /// Copy-on-write forks: writes that landed inside a shared page and
     /// had to copy it into sequence-owned storage first (lifetime total).
     pub cow_forks: usize,
+    /// Prefix-index entries LRU-evicted to honor the configured capacity
+    /// cap (lifetime total). Distinct from page-pressure eviction, which
+    /// is demand-driven and uncounted here.
+    pub prefix_evictions_cap: usize,
     /// Wall-clock spent in admission (both passes: admit + same-step
     /// backfill), lifetime total in seconds. Always measured — the phase
     /// clocks do not depend on the trace flag.
@@ -231,6 +241,7 @@ struct StepCounts {
     prefill_tokens_saved: usize,
     shared_pages: usize,
     cow_forks: usize,
+    prefix_evictions_cap: usize,
 }
 
 /// Per-phase wall-clock for one engine step, folded into the telemetry
@@ -255,6 +266,7 @@ impl StepCounts {
         self.prefill_tokens_saved += other.prefill_tokens_saved;
         self.shared_pages += other.shared_pages;
         self.cow_forks += other.cow_forks;
+        self.prefix_evictions_cap += other.prefix_evictions_cap;
     }
 }
 
@@ -301,7 +313,7 @@ impl Engine {
             cfg,
             pool,
             seqs: Vec::new(),
-            prefix: PrefixIndex::new(page_size),
+            prefix: PrefixIndex::with_cap(page_size, cfg.prefix_cap),
             ws: Workspace::new(),
             telemetry,
             trace_id: NEXT_ENGINE_ID.fetch_add(1, Ordering::Relaxed),
@@ -414,9 +426,13 @@ impl Engine {
             };
             // Recompute the match for the popped request — nothing mutated
             // the index since the predicate ran, so this is the same match
-            // the reservation was sized for.
-            let matched =
-                if req.share_prefix { self.prefix.match_prefix(&req.prompt) } else { Vec::new() };
+            // the reservation was sized for. The commitment also stamps
+            // the matched entries' LRU recency (the probe above did not).
+            let matched = if req.share_prefix {
+                self.prefix.match_and_touch(&req.prompt)
+            } else {
+                Vec::new()
+            };
             let n_shared = matched.len();
             let shared_len = n_shared * ps;
             let fork = n_shared > 0 && shared_len == req.prompt.len();
@@ -508,6 +524,7 @@ impl Engine {
         t.prefill_tokens_saved += counts.prefill_tokens_saved;
         t.shared_pages += counts.shared_pages;
         t.cow_forks += counts.cow_forks;
+        t.prefix_evictions_cap += counts.prefix_evictions_cap;
         t.time_admit_s += phases.admit;
         t.time_prefill_s += phases.prefill;
         t.time_decode_s += phases.decode;
@@ -593,7 +610,13 @@ impl Engine {
                 {
                     let prefix_tokens = s.prompt[..end].to_vec();
                     let page = self.pool.share_page(slot, cursor);
-                    self.prefix.insert(&prefix_tokens, page);
+                    // A publish that overflows the capacity cap LRU-evicts
+                    // stale unreferenced entries; their pages go straight
+                    // back to the pool's free list.
+                    for evicted in self.prefix.insert(&prefix_tokens, page) {
+                        self.pool.reclaim_shared(evicted);
+                        counts.prefix_evictions_cap += 1;
+                    }
                 }
                 self.seqs[i].published += 1;
             }
@@ -1140,6 +1163,54 @@ mod tests {
         assert_eq!(t.shared_pages, 0, "opted-out request must not map shared pages");
         assert_eq!(t.prefill_tokens_saved, 0);
         assert_eq!(t.pages_in_use_now, 0);
+    }
+
+    #[test]
+    fn prefix_cap_evicts_stale_entries_and_serves_identically() {
+        // Three disjoint 8-token prompts through a cap-1 index at page
+        // size 4: each sequence publishes two pages, so the previous
+        // sequence's (by-then unreferenced) entries must be LRU-evicted
+        // to honor the cap — visibly in the telemetry, invisibly in the
+        // outputs.
+        let m = tiny();
+        let cfg = EngineConfig {
+            slots: 1,
+            gen_tokens: 3,
+            page_size: 4,
+            prefix_cap: 1,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        let prompts: Vec<Vec<usize>> =
+            (0..3).map(|i| (0..8).map(|j| (i * 7 + j + 1) % 16).collect()).collect();
+        for (i, p) in prompts.iter().enumerate() {
+            q.push(req(i as u64, p.clone()));
+        }
+        let done = drain(&mut e, &mut q, prompts.len());
+        for f in &done {
+            let want = crate::coordinator::serve::generate(&m, &prompts[f.id as usize], 3);
+            assert_eq!(f.tokens, want, "capped engine diverged on request {}", f.id);
+        }
+        let t = e.telemetry().lock().unwrap().clone();
+        assert!(t.prefix_evictions_cap > 0, "cap must have evicted: {t:?}");
+        assert_eq!(t.pages_in_use_now, 0, "cap-evicted pages must return to the pool");
+
+        // The same load through an unbounded index evicts nothing.
+        let mut e0 = Engine::new(
+            Arc::clone(&m),
+            EngineConfig { prefix_cap: 0, ..cfg },
+        );
+        let mut q0 = Batcher::default();
+        for (i, p) in prompts.iter().enumerate() {
+            q0.push(req(i as u64, p.clone()));
+        }
+        let done0 = drain(&mut e0, &mut q0, prompts.len());
+        for f in &done0 {
+            let capped = done.iter().find(|g| g.id == f.id).unwrap();
+            assert_eq!(f.tokens, capped.tokens, "cap changed request {}'s output", f.id);
+        }
+        assert_eq!(e0.telemetry().lock().unwrap().prefix_evictions_cap, 0);
     }
 
     #[test]

@@ -38,6 +38,9 @@ struct PrefixEntry {
     /// page size) — checked on lookup so collisions cannot alias.
     prefix: Vec<usize>,
     page: Arc<KvPage>,
+    /// Logical-clock stamp of the last publish or successful match —
+    /// the LRU tier for capacity eviction.
+    last_use: u64,
 }
 
 /// Page-granular map from token prefixes to shared KV pages.
@@ -45,16 +48,31 @@ struct PrefixEntry {
 /// A `BTreeMap` keyed on the prefix hash keeps iteration order
 /// deterministic, so eviction under memory pressure picks the same victim
 /// on every run — load-independent behaviour is part of the engine's
-/// bit-identity story.
+/// bit-identity story. The same contract shapes the capacity policy: the
+/// LRU tier runs on a logical clock bumped per index operation, never wall
+/// time.
 pub struct PrefixIndex {
     page_size: usize,
+    /// Maximum resident entries (0 = unbounded). Enforced best-effort at
+    /// insert time: only entries no live sequence maps can be reclaimed,
+    /// so the index may transiently exceed the cap under heavy sharing.
+    cap: usize,
+    /// Deterministic LRU clock (monotone, bumped on publish and match).
+    clock: u64,
     entries: BTreeMap<u64, PrefixEntry>,
 }
 
 impl PrefixIndex {
     pub fn new(page_size: usize) -> PrefixIndex {
+        Self::with_cap(page_size, 0)
+    }
+
+    /// An index bounded to `cap` entries (0 = unbounded) — long-running
+    /// many-tenant loads keep publishing fresh prefixes, and without a cap
+    /// the index (and the pool's shared-page bill) grows monotonically.
+    pub fn with_cap(page_size: usize, cap: usize) -> PrefixIndex {
         assert!(page_size > 0, "prefix index needs a positive page size");
-        PrefixIndex { page_size, entries: BTreeMap::new() }
+        PrefixIndex { page_size, cap, clock: 0, entries: BTreeMap::new() }
     }
 
     pub fn len(&self) -> usize {
@@ -69,12 +87,11 @@ impl PrefixIndex {
     /// index. Walks page boundaries left to right and stops at the first
     /// miss; returns one `Arc` per matched page, in position order.
     ///
-    /// Only *fully filled* prompt-covered pages are candidates: boundary
-    /// `b` is probed only while `b <= prompt.len()`, so a partial last
-    /// page is never matched (its rows would differ beyond the prompt).
-    pub fn match_prefix(&self, prompt: &[usize]) -> Vec<Arc<KvPage>> {
+    /// Index keys of the longest run of leading pages of `prompt` present
+    /// in the index (token-verified, stops at the first miss).
+    fn matched_keys(&self, prompt: &[usize]) -> Vec<u64> {
         let ps = self.page_size;
-        let mut pages = Vec::new();
+        let mut keys = Vec::new();
         let mut h = FNV_OFFSET;
         let mut pos = 0;
         while pos + ps <= prompt.len() {
@@ -83,9 +100,35 @@ impl PrefixIndex {
             }
             pos += ps;
             match self.entries.get(&h) {
-                Some(e) if e.prefix == prompt[..pos] => pages.push(Arc::clone(&e.page)),
+                Some(e) if e.prefix == prompt[..pos] => keys.push(h),
                 _ => break,
             }
+        }
+        keys
+    }
+
+    /// Only *fully filled* prompt-covered pages are candidates: boundary
+    /// `b` is probed only while `b <= prompt.len()`, so a partial last
+    /// page is never matched (its rows would differ beyond the prompt).
+    ///
+    /// Read-only: admission predicates probe with this (possibly many
+    /// times per step) without disturbing LRU recency. The commitment
+    /// path uses [`PrefixIndex::match_and_touch`].
+    pub fn match_prefix(&self, prompt: &[usize]) -> Vec<Arc<KvPage>> {
+        self.matched_keys(prompt).iter().map(|k| Arc::clone(&self.entries[k].page)).collect()
+    }
+
+    /// [`PrefixIndex::match_prefix`], plus an LRU-stamp refresh on every
+    /// matched entry — a prefix a joiner actually maps is exactly the one
+    /// the capacity policy must keep resident.
+    pub fn match_and_touch(&mut self, prompt: &[usize]) -> Vec<Arc<KvPage>> {
+        let keys = self.matched_keys(prompt);
+        let mut pages = Vec::with_capacity(keys.len());
+        for k in keys {
+            self.clock += 1;
+            let e = self.entries.get_mut(&k).expect("matched key present");
+            e.last_use = self.clock;
+            pages.push(Arc::clone(&e.page));
         }
         pages
     }
@@ -102,16 +145,48 @@ impl PrefixIndex {
 
     /// Publish the page completing `prefix`. The key must be vacant
     /// (callers gate on [`PrefixIndex::contains`]) and the prefix must be
-    /// page-aligned.
-    pub fn insert(&mut self, prefix: &[usize], page: Arc<KvPage>) {
+    /// page-aligned. Returns the pages LRU-evicted to honor the capacity
+    /// cap — the caller must hand them back to the pool.
+    pub fn insert(&mut self, prefix: &[usize], page: Arc<KvPage>) -> Vec<Arc<KvPage>> {
         assert!(
             prefix.len() % self.page_size == 0 && !prefix.is_empty(),
             "published prefixes must cover whole pages"
         );
         let key = fnv1a(prefix);
         trace::instant_args("prefix_publish", &[("prefix_len", prefix.len() as f64)]);
-        let prev = self.entries.insert(key, PrefixEntry { prefix: prefix.to_vec(), page });
+        self.clock += 1;
+        let prev = self.entries.insert(
+            key,
+            PrefixEntry { prefix: prefix.to_vec(), page, last_use: self.clock },
+        );
         assert!(prev.is_none(), "prefix index insert over an occupied key");
+        self.enforce_cap()
+    }
+
+    /// LRU-tier capacity eviction: drop least-recently-used unreferenced
+    /// entries until the index fits `cap`. Ties on the stamp break by key,
+    /// so the victim sequence is identical on every run. Entries a live
+    /// sequence still maps are never touched — their pages cannot be
+    /// reclaimed — so under heavy sharing the cap is exceeded rather than
+    /// violated-by-aliasing.
+    fn enforce_cap(&mut self) -> Vec<Arc<KvPage>> {
+        let mut evicted = Vec::new();
+        if self.cap == 0 {
+            return evicted;
+        }
+        while self.entries.len() > self.cap {
+            let key = self
+                .entries
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                .min_by_key(|(&k, e)| (e.last_use, k))
+                .map(|(&k, _)| k);
+            let Some(key) = key else { break };
+            let entry = self.entries.remove(&key).unwrap();
+            trace::instant_args("prefix_evict", &[("prefix_len", entry.prefix.len() as f64)]);
+            evicted.push(entry.page);
+        }
+        evicted
     }
 
     /// Evict one entry that no live sequence maps (`strong_count == 1`,
@@ -246,6 +321,73 @@ mod tests {
         assert_eq!(pages.len(), 2);
         assert!(idx.is_empty());
         assert!(pages.iter().all(|p| Arc::strong_count(p) == 1));
+    }
+
+    #[test]
+    fn cap_evicts_least_recently_used_unreferenced_entry() {
+        let ps = 2;
+        let mut idx = PrefixIndex::with_cap(ps, 2);
+        idx.insert(&[1, 2], page(ps, 1.0));
+        idx.insert(&[3, 4], page(ps, 2.0));
+        // A mapped match refreshes the older entry's LRU stamp (the pages
+        // drop at the end of the statement, so nothing stays referenced)...
+        assert_eq!(idx.match_and_touch(&[1, 2]).len(), 1);
+        // ...so the overflow victim is the *untouched* entry even though
+        // it was published later.
+        let evicted = idx.insert(&[5, 6], page(ps, 3.0));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(tag_of(&evicted[0]), 2.0);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.match_prefix(&[1, 2]).len(), 1);
+        assert!(idx.match_prefix(&[3, 4]).is_empty());
+        assert_eq!(idx.match_prefix(&[5, 6]).len(), 1);
+    }
+
+    #[test]
+    fn read_only_match_does_not_disturb_lru_order() {
+        let ps = 2;
+        let mut idx = PrefixIndex::with_cap(ps, 2);
+        idx.insert(&[1, 2], page(ps, 1.0));
+        idx.insert(&[3, 4], page(ps, 2.0));
+        // A reservation *probe* must not refresh recency: the oldest
+        // publish stays the victim.
+        assert_eq!(idx.match_prefix(&[1, 2]).len(), 1);
+        let evicted = idx.insert(&[5, 6], page(ps, 3.0));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(tag_of(&evicted[0]), 1.0);
+    }
+
+    #[test]
+    fn cap_never_evicts_entries_live_sequences_still_map() {
+        let ps = 2;
+        let mut idx = PrefixIndex::with_cap(ps, 1);
+        idx.insert(&[1, 2], page(ps, 1.0));
+        let held = idx.match_and_touch(&[1, 2]); // mapped by a joiner
+        // The mapped entry cannot go, so the strict-LRU victim is the
+        // newcomer itself — the cap holds without aliasing a live page.
+        let evicted = idx.insert(&[3, 4], page(ps, 2.0));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(tag_of(&evicted[0]), 2.0);
+        assert_eq!(idx.len(), 1);
+        drop(held);
+        // Unmapped now: the stale resident finally goes.
+        let evicted = idx.insert(&[5, 6], page(ps, 3.0));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(tag_of(&evicted[0]), 1.0);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.match_prefix(&[5, 6]).len(), 1);
+    }
+
+    #[test]
+    fn cap_exceeds_rather_than_evicting_when_everything_is_mapped() {
+        let ps = 2;
+        let mut idx = PrefixIndex::with_cap(ps, 1);
+        let p1 = page(ps, 1.0);
+        let p2 = page(ps, 2.0);
+        idx.insert(&[1, 2], Arc::clone(&p1));
+        let evicted = idx.insert(&[3, 4], Arc::clone(&p2));
+        assert!(evicted.is_empty(), "both pages are mapped — nothing reclaimable");
+        assert_eq!(idx.len(), 2, "cap is exceeded, never aliased");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! 4. commit + telemetry (per-layer residuals, achieved rates, wall-clock).
 
 use crate::calib::{BlockPropagator, CalibSet};
+use crate::compress::slice::{self, SliceGate, SliceMap};
 use crate::compress::{self, owl, CalibStats, CompressedLayer};
 use crate::config::{CompressConfig, Method};
 use crate::model::{LinearId, LinearOp, TransformerLM, LINEAR_NAMES};
@@ -176,11 +177,76 @@ pub fn compress_model(
             report.layers.push(LayerReport {
                 id,
                 target_rate: block_rates[b],
-                achieved_rate: compressed.compression_rate(),
+                // Rate accounting is always against the ORIGINAL dense
+                // shape — `shape()`-derived denominators over-report for
+                // shape-changing variants.
+                achieved_rate: compressed.compression_rate((w_orig.rows, w_orig.cols)),
                 rel_error: diff.fro_norm() / denom,
                 seconds: dt,
             });
             model.set_linear(id, LinearOp::Compressed(compressed));
+        }
+
+        // ── rotate-and-slice arbitration for the FFN pair ──
+        // The structured candidate is computed from the pre-compression
+        // dense weights and the same per-block stats; the gate (identical
+        // rel_error machinery to `QuantGate`) decides per block whether the
+        // sliced-dense pair replaces whatever the unstructured pass chose.
+        // Only up's output / down's input shrink — the residual stream and
+        // attention/KV stay at d_model, so forward propagation is unchanged.
+        if let Some(sr) = cfg.slice_rate {
+            let w_up = &jobs.iter().find(|j| j.0 == "up").expect("up job").1;
+            let w_down = &jobs.iter().find(|j| j.0 == "down").expect("down job").1;
+            let d_model = w_up.cols;
+            let pair = slice::slice_ffn_pair(w_up, w_down, &stats["down"], sr);
+            let up_back = slice::scatter_to_original(
+                &pair.up,
+                &pair.map,
+                &SliceMap::identity(d_model),
+            );
+            let down_back = slice::scatter_to_original(
+                &pair.down,
+                &SliceMap::identity(d_model),
+                &pair.map,
+            );
+            let up_gate = SliceGate::evaluate(w_up, &up_back, cfg.slice_max_rel_error);
+            let down_gate = SliceGate::evaluate(w_down, &down_back, cfg.slice_max_rel_error);
+            if up_gate.accept() && down_gate.accept() {
+                let commits = [
+                    (
+                        "up",
+                        CompressedLayer::SlicedDense {
+                            w: pair.up,
+                            in_map: SliceMap::identity(d_model),
+                            out_map: pair.map.clone(),
+                        },
+                        up_gate.rel_error,
+                        (w_up.rows, w_up.cols),
+                    ),
+                    (
+                        "down",
+                        CompressedLayer::SlicedDense {
+                            w: pair.down,
+                            in_map: pair.map,
+                            out_map: SliceMap::identity(d_model),
+                        },
+                        down_gate.rel_error,
+                        (w_down.rows, w_down.cols),
+                    ),
+                ];
+                for (name, layer, rel_error, orig) in commits {
+                    let id = LinearId { block: b, name };
+                    let entry = report
+                        .layers
+                        .iter_mut()
+                        .rev()
+                        .find(|l| l.id == id)
+                        .expect("layer committed above");
+                    entry.achieved_rate = layer.compression_rate(orig);
+                    entry.rel_error = rel_error;
+                    model.set_linear(id, LinearOp::Compressed(layer));
+                }
+            }
         }
 
         // propagate through the now-compressed block
@@ -208,9 +274,11 @@ pub fn compress_clone(
     Ok((m, report))
 }
 
-/// Methods with no compression work (Dense) skip the pipeline entirely.
+/// Methods with no compression work (Dense) skip the pipeline entirely —
+/// unless a slice pass is requested, which has work to do even at
+/// `method = Dense` (and even at slice rate 0: the rotation still permutes).
 pub fn is_noop(cfg: &CompressConfig) -> bool {
-    matches!(cfg.method, Method::Dense) || cfg.rate <= 0.0
+    (matches!(cfg.method, Method::Dense) || cfg.rate <= 0.0) && cfg.slice_rate.is_none()
 }
 
 #[cfg(test)]
@@ -277,6 +345,112 @@ mod tests {
         assert_eq!(rates.len(), model.blocks.len());
         let achieved = m.achieved_compression();
         assert!((achieved - 0.6).abs() < 0.07, "achieved {achieved} rates {rates:?}");
+    }
+
+    #[test]
+    fn slice_pass_slices_ffn_pair_only() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig {
+            method: Method::Dense,
+            slice_rate: Some(0.25),
+            ..Default::default()
+        };
+        let (m, report) = compress_clone(&model, &calib, &cfg, 1).unwrap();
+        let d_ff = model.cfg.d_ff;
+        let keep = d_ff - d_ff / 4;
+        for blk in &m.blocks {
+            assert_eq!(blk.up.out_dim(), keep, "up output sliced");
+            assert_eq!(blk.down.in_dim(), keep, "down input sliced");
+            assert_eq!(blk.up.in_dim(), model.cfg.d_model);
+            assert_eq!(blk.q.out_dim(), model.cfg.d_model, "attention untouched");
+            assert!(matches!(
+                blk.up,
+                LinearOp::Compressed(CompressedLayer::SlicedDense { .. })
+            ));
+        }
+        // Per-layer telemetry: sliced layers report nonzero rel_error and
+        // an achieved rate against the ORIGINAL dense shape.
+        for l in report.layers.iter().filter(|l| l.id.name == "up" || l.id.name == "down") {
+            assert!(l.rel_error > 0.0, "{}: {}", l.id, l.rel_error);
+            assert!((l.achieved_rate - 0.25).abs() < 1e-9, "{}: {}", l.id, l.achieved_rate);
+        }
+        // The sliced model still runs end to end.
+        let logits = m.forward(&[vec![1usize, 2, 3, 4]]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rotation_only_slice_matches_dense_logits() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig {
+            method: Method::Dense,
+            slice_rate: Some(0.0),
+            ..Default::default()
+        };
+        let (m, report) = compress_clone(&model, &calib, &cfg, 1).unwrap();
+        for blk in &m.blocks {
+            assert_eq!(blk.up.out_dim(), model.cfg.d_ff, "rate 0 deletes nothing");
+        }
+        for l in report.layers.iter().filter(|l| l.id.name == "up" || l.id.name == "down") {
+            assert_eq!(l.rel_error, 0.0, "{}: permutation is exact in weight space", l.id);
+        }
+        let toks = vec![vec![3usize, 1, 4, 1, 5, 9, 2, 6]];
+        let d = m.forward(&toks).fro_dist(&model.forward(&toks));
+        assert!(d < 1e-3, "rotation-only divergence {d}");
+    }
+
+    #[test]
+    fn slice_gate_rejects_at_tight_bound() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig {
+            method: Method::Dense,
+            slice_rate: Some(0.25),
+            slice_max_rel_error: 1e-9,
+            ..Default::default()
+        };
+        let (m, _) = compress_clone(&model, &calib, &cfg, 1).unwrap();
+        for blk in &m.blocks {
+            assert_eq!(blk.up.out_dim(), model.cfg.d_ff, "gate must keep the dense pair");
+            assert!(matches!(blk.up, LinearOp::Compressed(CompressedLayer::Dense(_))));
+        }
+    }
+
+    #[test]
+    fn slice_composes_with_oats_on_attention() {
+        let (model, calib) = setup();
+        let cfg = CompressConfig {
+            rate: 0.5,
+            rank_ratio: 0.25,
+            iters: 2,
+            slice_rate: Some(0.25),
+            ..Default::default()
+        };
+        let (m, report) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+        for blk in &m.blocks {
+            assert!(
+                matches!(blk.up, LinearOp::Compressed(CompressedLayer::SlicedDense { .. })),
+                "FFN pair goes sliced-dense"
+            );
+            assert!(
+                matches!(blk.q, LinearOp::Compressed(CompressedLayer::Spl(_))),
+                "attention stays OATS"
+            );
+        }
+        assert_eq!(report.layers.len(), model.blocks.len() * 6);
+        let logits = m.forward(&[vec![1usize, 2, 3, 4]]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn is_noop_accounts_for_slice() {
+        let dense = CompressConfig { method: Method::Dense, ..Default::default() };
+        assert!(is_noop(&dense));
+        let sliced = CompressConfig {
+            method: Method::Dense,
+            slice_rate: Some(0.0),
+            ..Default::default()
+        };
+        assert!(!is_noop(&sliced), "rotation-only still has work to do");
     }
 
     #[test]

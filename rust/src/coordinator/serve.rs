@@ -60,6 +60,10 @@ pub struct ServeConfig {
     /// index). `false` stamps every submitted request with the per-request
     /// opt-out — the A/B switch the CI byte-identity gate flips.
     pub share_prefix: bool,
+    /// Max entries the prefix index keeps resident (`0` ⇒ unbounded).
+    /// Overflow LRU-evicts unreferenced entries deterministically and
+    /// reports them as `prefix_evictions_cap`.
+    pub prefix_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +78,7 @@ impl Default for ServeConfig {
             page_size: 0,
             kv_pages: 0,
             share_prefix: true,
+            prefix_cap: 0,
         }
     }
 }
@@ -94,6 +99,7 @@ impl ServeConfig {
             admission: self.admission,
             page_size: self.page_size,
             kv_pages: self.kv_pages,
+            prefix_cap: self.prefix_cap,
         }
     }
 }
@@ -190,6 +196,8 @@ pub struct ServeStats {
     pub shared_pages: usize,
     /// Copy-on-write forks of shared pages.
     pub cow_forks: usize,
+    /// Prefix-index entries LRU-evicted by the capacity cap.
+    pub prefix_evictions_cap: usize,
     /// Engine wall-clock by phase, lifetime totals in seconds (admission
     /// incl. same-step backfill / chunked prefill / lockstep decode /
     /// retirement / whole step). Always measured; the four phase totals
@@ -252,6 +260,7 @@ impl ServeStats {
             prefill_tokens_saved: t.prefill_tokens_saved,
             shared_pages: t.shared_pages,
             cow_forks: t.cow_forks,
+            prefix_evictions_cap: t.prefix_evictions_cap,
             time_admit_s: t.time_admit_s,
             time_prefill_s: t.time_prefill_s,
             time_decode_s: t.time_decode_s,
@@ -286,6 +295,7 @@ impl ServeStats {
             .set("prefill_tokens_saved", json::num(self.prefill_tokens_saved as f64))
             .set("shared_pages", json::num(self.shared_pages as f64))
             .set("cow_forks", json::num(self.cow_forks as f64))
+            .set("prefix_evictions_cap", json::num(self.prefix_evictions_cap as f64))
             .set("time_admit_s", json::num(self.time_admit_s))
             .set("time_prefill_s", json::num(self.time_prefill_s))
             .set("time_decode_s", json::num(self.time_decode_s))
@@ -1166,6 +1176,7 @@ mod tests {
         assert!(j.req_f64("prefill_tokens_saved").is_ok());
         assert!(j.req_f64("shared_pages").is_ok());
         assert!(j.req_f64("cow_forks").is_ok());
+        assert!(j.req_f64("prefix_evictions_cap").is_ok());
         let digest = j.get("completions_digest").and_then(Json::as_str).unwrap();
         assert_eq!(digest.len(), 16);
         assert!(u64::from_str_radix(digest, 16).is_ok());

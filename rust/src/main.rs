@@ -5,11 +5,14 @@
 //! oats train        --preset small [--steps N]
 //! oats compress     --preset small --method oats --rate 0.5 [--rank-ratio κ]
 //!                   [--iters N] [--pattern row|layer|N:M] [--owl] [--out dir]
+//!                   [--slice-rate r]            # rotate-and-slice the FFN
+//!                                               # pair (0 = rotation only)
+//!                   [--slice-max-rel-error e]   # per-layer slice gate
 //! oats eval         --model models/small-oats-50
 //! oats serve-bench  --preset small [--seq]          # Tables 7 / 14
 //! oats serve-load   [--preset tiny] [--requests N] [--gen N] [--slots N]
 //!                   [--prefill-chunk N] [--admission fcfs|shortest]
-//!                   [--page-size N] [--kv-pages N]
+//!                   [--page-size N] [--kv-pages N] [--prefix-cap N]
 //!                   [--gen-tokens-mix N,N,...]  # per-request budgets,
 //!                                               # assigned round-robin
 //!                   [--shared-prefix]    # common-head workload (prefix
@@ -18,6 +21,8 @@
 //!                   [--trace FILE]       # Chrome trace-event JSON
 //!                                        # (load in Perfetto / about:tracing)
 //!                   [--compress] [--quantize] [--quick] [--tag NAME]
+//!                   [--slice-rate r]     # with --compress: rotate-and-
+//!                                        # slice the FFN pair first
 //!                                                   # SERVE_<tag>.json
 //! oats bench-table  t2|t3|t4|t5|t6|t8|t9|t10|t11|t12|t13|t15|t16|t17|t20|all
 //! oats sweep        rank-ratio|iters|nm|grid        # Figures 1–2, Table 15
@@ -105,6 +110,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--slice-rate` is a *presence* flag: absent ⇒ the slice pass is off
+/// entirely, `0` ⇒ rotation-only (the exact energy permutation), so a
+/// plain default can't express it and it is parsed by hand.
+fn parse_slice_rate(args: &Args) -> Result<Option<f64>> {
+    match args.flag("slice-rate") {
+        Some(s) => {
+            let r: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--slice-rate expects a number, got '{s}'"))?;
+            anyhow::ensure!((0.0..1.0).contains(&r), "--slice-rate must be in [0, 1), got {r}");
+            Ok(Some(r))
+        }
+        None => Ok(None),
+    }
+}
+
 fn parse_compress_cfg(args: &Args) -> Result<CompressConfig> {
     Ok(CompressConfig {
         method: Method::parse(args.flag_or("method", "oats"))?,
@@ -117,6 +138,8 @@ fn parse_compress_cfg(args: &Args) -> Result<CompressConfig> {
         threshold_first: args.bool_flag("threshold-first"),
         scale_lowrank_only: args.bool_flag("scale-lowrank-only"),
         owl: args.bool_flag("owl"),
+        slice_rate: parse_slice_rate(args)?,
+        slice_max_rel_error: args.f64_flag("slice-max-rel-error", 0.75),
         ..Default::default()
     })
 }
@@ -142,6 +165,14 @@ fn cmd_compress(args: &Args) -> Result<()> {
         report.mean_rel_error(),
         report.total_seconds
     );
+    if cfg.slice_rate.is_some() {
+        for l in report.layers.iter().filter(|l| l.id.name == "up" || l.id.name == "down") {
+            println!(
+                "  slice {}: rel_error {:.4} | achieved rate {:.2}",
+                l.id, l.rel_error, l.achieved_rate
+            );
+        }
+    }
     let corpus = oats::data::SyntheticCorpus::new(ctx.corpus(preset)?.cfg.clone());
     let (eb, ep) = (ctx.eval_batches(), ctx.eval_probes());
     let row = oats::eval::evaluate(&cm, &corpus, "compressed", eb, ep);
@@ -231,6 +262,8 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         page_size: args.usize_flag("page-size", 0),
         kv_pages: args.usize_flag("kv-pages", 0),
         share_prefix: !args.bool_flag("no-share-prefix"),
+        // 0 = unbounded prefix index (no capacity eviction).
+        prefix_cap: args.usize_flag("prefix-cap", 0),
     };
     let mcfg = ModelConfig::preset(preset)?;
     let mut model = oats::model::TransformerLM::init(&mcfg, 0x5E17E);
@@ -240,8 +273,20 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
             1,
         ));
         let calib = oats::calib::CalibSet::sample(&corpus, 8, 32, 8);
-        let cc = CompressConfig { rate: 0.5, rank_ratio: 0.25, iters: 3, ..Default::default() };
-        let (cm, _) = oats::coordinator::pipeline::compress_clone(&model, &calib, &cc, 6)?;
+        let cc = CompressConfig {
+            rate: 0.5,
+            rank_ratio: 0.25,
+            iters: 3,
+            slice_rate: parse_slice_rate(args)?,
+            slice_max_rel_error: args.f64_flag("slice-max-rel-error", 0.75),
+            ..Default::default()
+        };
+        let (cm, report) = oats::coordinator::pipeline::compress_clone(&model, &calib, &cc, 6)?;
+        if cc.slice_rate.is_some() {
+            for l in report.layers.iter().filter(|l| l.id.name == "up" || l.id.name == "down") {
+                println!("  slice {}: rel_error {:.4}", l.id, l.rel_error);
+            }
+        }
         model = cm;
     }
     // Mixed-length prompts (1 … seq_len/2), plus one deliberately oversized

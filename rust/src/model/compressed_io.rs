@@ -8,6 +8,7 @@
 
 use super::io;
 use super::lm::{LinearOp, TransformerLM, LINEAR_NAMES};
+use crate::compress::slice::SliceMap;
 use crate::compress::CompressedLayer;
 use crate::config::ModelConfig;
 use crate::json::{self, Json};
@@ -70,9 +71,21 @@ fn read_tensor(entry: &Json, bytes: &[u8]) -> Result<Matrix> {
     Ok(Matrix::from_vec(rows, cols, read_f32(bytes, off, rows * cols)?))
 }
 
-/// Recover the portable (dense/CSR/SPL) structure of a packed layer: the
-/// on-disk format is pack-agnostic; `load_packed` re-derives kernel plans.
+/// Recover the portable (dense/CSR/SPL/sliced) structure of a packed layer:
+/// the on-disk format is pack-agnostic; `load_packed` re-derives kernel
+/// plans.
 fn unpacked_layer(p: &PackedLinear) -> CompressedLayer {
+    // Slice metadata first: a sliced layer stores a dense block, and the
+    // density heuristics below would otherwise drop its index maps.
+    if let Some(meta) = p.slice() {
+        if let PackedSparse::Dense(w) = p.sparse() {
+            return CompressedLayer::SlicedDense {
+                w: w.clone(),
+                in_map: meta.in_map.clone(),
+                out_map: meta.out_map.clone(),
+            };
+        }
+    }
     let csr = match p.sparse() {
         PackedSparse::Dense(w) => {
             // A Dense *plan* can still hold a sparse weight (density above
@@ -122,8 +135,39 @@ fn compressed_entry(blob: &mut Blob, layer: &CompressedLayer) -> Json {
                 e.set("vt", tensor_entry(blob, &lr.vt));
             }
         }
+        CompressedLayer::SlicedDense { w, in_map, out_map } => {
+            // Versioned entry: the sliced format is newer than
+            // oats-compressed-v1, so readers check the version explicitly
+            // instead of relying on the manifest-wide format tag. Old
+            // checkpoints never contain this kind and load unchanged.
+            e.set("kind", json::s("sliced"));
+            e.set("version", json::num(SLICED_ENTRY_VERSION as f64));
+            e.set("tensor", tensor_entry(blob, w));
+            e.set("in_map", slice_map_entry(blob, in_map));
+            e.set("out_map", slice_map_entry(blob, out_map));
+        }
     }
     e
+}
+
+/// Current version of the `"sliced"` manifest entry.
+const SLICED_ENTRY_VERSION: usize = 1;
+
+fn slice_map_entry(blob: &mut Blob, map: &SliceMap) -> Json {
+    let (off, n) = blob.push_u32(&map.kept);
+    let mut e = Json::obj();
+    e.set("full", json::num(map.full as f64))
+        .set("kept_off", json::num(off as f64))
+        .set("kept_len", json::num(n as f64));
+    e
+}
+
+fn read_slice_map(entry: &Json, bytes: &[u8]) -> Result<SliceMap> {
+    let full = entry.req_usize("full")?;
+    let n = entry.req_usize("kept_len")?;
+    let map = SliceMap { kept: read_u32(bytes, entry.req_usize("kept_off")?, n)?, full };
+    map.validate()?;
+    Ok(map)
 }
 
 fn linear_entry(blob: &mut Blob, op: &LinearOp) -> Json {
@@ -190,6 +234,26 @@ fn read_linear(entry: &Json, bytes: &[u8]) -> Result<LinearOp> {
                 sparse,
                 low_rank,
             })))
+        }
+        "sliced" => {
+            let version = entry.req_usize("version")?;
+            anyhow::ensure!(
+                version <= SLICED_ENTRY_VERSION,
+                "sliced entry version {version} is newer than this reader"
+            );
+            let w = read_tensor(entry.get("tensor").context("sliced missing tensor")?, bytes)?;
+            let in_map = read_slice_map(entry.get("in_map").context("sliced in_map")?, bytes)?;
+            let out_map =
+                read_slice_map(entry.get("out_map").context("sliced out_map")?, bytes)?;
+            anyhow::ensure!(
+                w.rows == out_map.len() && w.cols == in_map.len(),
+                "sliced tensor {}x{} disagrees with maps {}x{}",
+                w.rows,
+                w.cols,
+                out_map.len(),
+                in_map.len()
+            );
+            Ok(LinearOp::Compressed(CompressedLayer::SlicedDense { w, in_map, out_map }))
         }
         other => anyhow::bail!("unknown linear kind '{other}'"),
     }
@@ -423,6 +487,87 @@ mod tests {
         let toks = vec![vec![1usize, 3, 5, 7]];
         assert!(m.forward(&toks).fro_dist(&m2.forward(&toks)) < 1e-3);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn sliced_model() -> TransformerLM {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let model = TransformerLM::init(&cfg, 0x51);
+        let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, 3));
+        let calib = CalibSet::sample(&corpus, 4, 16, 4);
+        let cc = CompressConfig {
+            rate: 0.5,
+            rank_ratio: 0.25,
+            iters: 3,
+            slice_rate: Some(0.4),
+            ..Default::default()
+        };
+        compress_clone(&model, &calib, &cc, 2).unwrap().0
+    }
+
+    #[test]
+    fn sliced_roundtrip_is_bit_exact() {
+        let m = sliced_model();
+        let dir = std::env::temp_dir().join(format!("oats_cio_s_{}", std::process::id()));
+        save(&m, &dir).unwrap();
+        let m2 = load(&dir).unwrap();
+        for (blk, blk2) in m.blocks.iter().zip(&m2.blocks) {
+            for name in ["up", "down"] {
+                let (a, b) = (blk.linear(name), blk2.linear(name));
+                match (a, b) {
+                    (
+                        LinearOp::Compressed(CompressedLayer::SlicedDense {
+                            w, in_map, out_map,
+                        }),
+                        LinearOp::Compressed(CompressedLayer::SlicedDense {
+                            w: w2, in_map: i2, out_map: o2,
+                        }),
+                    ) => {
+                        // Bit-exact: raw f32 round-trips via to_le_bytes.
+                        assert_eq!(w.data, w2.data, "{name} weight bits");
+                        assert_eq!((w.rows, w.cols), (w2.rows, w2.cols));
+                        assert_eq!(in_map, i2, "{name} in_map");
+                        assert_eq!(out_map, o2, "{name} out_map");
+                    }
+                    other => panic!("{name} did not round-trip as sliced: {other:?}"),
+                }
+            }
+        }
+        let toks = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+        assert_eq!(
+            m.forward(&toks).data,
+            m2.forward(&toks).data,
+            "bit-exact weights must give bit-exact logits"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sliced_load_packed_derives_sliced_plans_and_resaves() {
+        let m = sliced_model();
+        let dir = std::env::temp_dir().join(format!("oats_cio_sp_{}", std::process::id()));
+        save(&m, &dir).unwrap();
+        let packed = load_packed(&dir, 8).unwrap();
+        let sliced_plans = packed
+            .kernel_plans()
+            .into_iter()
+            .filter(|(_, p)| p.choice == crate::sparse::KernelChoice::SlicedDense)
+            .count();
+        assert_eq!(sliced_plans, m.cfg.n_layers * 2, "up+down per block");
+        let toks = vec![vec![2usize, 4, 6, 8]];
+        let d = m.forward(&toks).fro_dist(&packed.forward(&toks));
+        assert!(d < 1e-4, "packed sliced load diverges: {d}");
+        // Re-saving the packed model keeps the slice metadata (the
+        // unpacked_layer path), so a second round trip is still sliced.
+        let dir2 = std::env::temp_dir().join(format!("oats_cio_sp2_{}", std::process::id()));
+        save(&packed, &dir2).unwrap();
+        let back = load(&dir2).unwrap();
+        assert!(matches!(
+            back.blocks[0].up,
+            LinearOp::Compressed(CompressedLayer::SlicedDense { .. })
+        ));
+        assert_eq!(back.prunable_param_count(), m.prunable_param_count());
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&dir2).unwrap();
     }
 
     #[test]

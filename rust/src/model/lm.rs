@@ -63,6 +63,11 @@ impl LinearOp {
             LinearOp::Compressed(CompressedLayer::Dense(w)) => tensor::matmul_bt(x, w),
             LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matmul_xt(x),
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply_batch(x),
+            // Sliced layers are plain GEMM in their own (smaller) shape; the
+            // adjacent layers were sliced to match, so no map lookup runs.
+            LinearOp::Compressed(CompressedLayer::SlicedDense { w, .. }) => {
+                tensor::matmul_bt(x, w)
+            }
             LinearOp::Packed(p) => p.forward(x),
         }
     }
@@ -77,7 +82,10 @@ impl LinearOp {
     pub fn forward_ws(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         match self {
             LinearOp::Packed(p) => p.forward_ws(x, ws),
-            LinearOp::Dense(w) | LinearOp::Compressed(CompressedLayer::Dense(w)) => {
+            LinearOp::Dense(w)
+            | LinearOp::Compressed(
+                CompressedLayer::Dense(w) | CompressedLayer::SlicedDense { w, .. },
+            ) => {
                 // Uninit is safe: matmul_bt_into overwrites every element.
                 let mut out = ws.matrix_uninit(x.rows, w.rows);
                 tensor::matmul_bt_into(x, w, &mut out);
@@ -102,6 +110,11 @@ impl LinearOp {
             }
             LinearOp::Compressed(CompressedLayer::Sparse(s)) => s.matvec(x, y),
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => spl.apply(x, y),
+            LinearOp::Compressed(CompressedLayer::SlicedDense { w, .. }) => {
+                for (r, out) in y.iter_mut().enumerate() {
+                    *out = tensor::dot(w.row(r), x);
+                }
+            }
             LinearOp::Packed(p) => p.forward_vec(x, y),
         }
     }
@@ -138,6 +151,14 @@ impl LinearOp {
             }
             LinearOp::Compressed(CompressedLayer::Spl(spl)) => {
                 Some(LinearOp::Packed(Box::new(PackedLinear::from_spl_with(spl, opts))))
+            }
+            LinearOp::Compressed(CompressedLayer::SlicedDense { w, in_map, out_map }) => {
+                Some(LinearOp::Packed(Box::new(PackedLinear::from_sliced_with(
+                    w,
+                    in_map.clone(),
+                    out_map.clone(),
+                    opts,
+                ))))
             }
             _ => None,
         }
@@ -559,7 +580,10 @@ impl TransformerLM {
         mut attn_out_probs: Option<&mut Vec<Matrix>>,
     ) -> Matrix {
         let blk = &self.blocks[block_idx];
-        let d = self.cfg.d_model;
+        // Dims come from the layers, not the config: compression may have
+        // changed per-layer shapes (the residual/attention width is q's
+        // input dim — slicing only ever touches the FFN inner dim).
+        let d = blk.q.in_dim();
         let nh = self.cfg.n_heads;
         let hd = d / nh;
         let scale = 1.0 / (hd as f32).sqrt();
@@ -674,7 +698,10 @@ impl TransformerLM {
     /// logits row for this position. `token` is appended at position
     /// `cache.len`.
     pub fn decode_step(&self, token: usize, cache: &mut KvCache) -> Vec<f32> {
-        let d = self.cfg.d_model;
+        // Dims come from the weights, not the config: the embedding width is
+        // the residual width, and the FFN inner buffer sizes to the largest
+        // per-block `up` output (blocks may be sliced to different widths).
+        let d = self.tok_emb.cols;
         let nh = self.cfg.n_heads;
         let hd = d / nh;
         let scale = 1.0 / (hd as f32).sqrt();
@@ -686,11 +713,12 @@ impl TransformerLM {
         for (x, &p) in h.iter_mut().zip(self.pos_emb.row(t)) {
             *x += p;
         }
+        let max_ff = self.blocks.iter().map(|b| b.up.out_dim()).max().unwrap_or(0);
         let mut kbuf = vec![0.0f32; d];
         let mut vbuf = vec![0.0f32; d];
         let mut qbuf = vec![0.0f32; d];
         let mut ctx = vec![0.0f32; d];
-        let mut ubuf = vec![0.0f32; self.cfg.d_ff];
+        let mut ubuf = vec![0.0f32; max_ff];
         let mut mlp = vec![0.0f32; d];
         for (bi, blk) in self.blocks.iter().enumerate() {
             let x = layernorm_vec(&h, &blk.ln1_g, &blk.ln1_b);
@@ -723,11 +751,12 @@ impl TransformerLM {
                 *hv += a;
             }
             let x2 = layernorm_vec(&h, &blk.ln2_g, &blk.ln2_b);
-            blk.up.forward_vec(&x2, &mut ubuf);
+            let ubuf = &mut ubuf[..blk.up.out_dim()];
+            blk.up.forward_vec(&x2, ubuf);
             for v in ubuf.iter_mut() {
                 *v = tensor::gelu(*v);
             }
-            blk.down.forward_vec(&ubuf, &mut mlp);
+            blk.down.forward_vec(ubuf, &mut mlp);
             for (hv, &m) in h.iter_mut().zip(&mlp) {
                 *hv += m;
             }
@@ -774,7 +803,9 @@ impl TransformerLM {
     ) -> Matrix {
         let b = tokens.len();
         assert_eq!(b, caches.len(), "one cache per sequence");
-        let d = self.cfg.d_model;
+        // Residual width from the embedding (the FFN inner dim never appears
+        // here: `forward_ws` outputs take their shape from each layer).
+        let d = self.tok_emb.cols;
         let nh = self.cfg.n_heads;
         let hd = d / nh;
         let scale = 1.0 / (hd as f32).sqrt();
@@ -909,7 +940,9 @@ impl TransformerLM {
                 matches!(
                     b.linear(n),
                     LinearOp::Compressed(
-                        CompressedLayer::Sparse(_) | CompressedLayer::Spl(_)
+                        CompressedLayer::Sparse(_)
+                            | CompressedLayer::Spl(_)
+                            | CompressedLayer::SlicedDense { .. }
                     )
                 )
             })

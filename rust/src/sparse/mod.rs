@@ -40,7 +40,7 @@ pub use csr::Csr;
 pub use lowrank::LowRank;
 pub use microkernel::{Isa, Workspace};
 pub use nm::{NmPacked, NmPattern};
-pub use plan::{KernelChoice, KernelPlan, PackedLinear, PackedSparse};
+pub use plan::{KernelChoice, KernelPlan, PackedLinear, PackedSparse, SliceMeta};
 pub use plan::{PackOptions, QuantGate, QBCSR_MAX_REL_ERROR};
 pub use quant::QBcsr;
 pub use spl::SparsePlusLowRank;

@@ -31,6 +31,7 @@ use super::microkernel::{self, Workspace};
 use super::nm::{NmPacked, NmPattern};
 use super::quant::QBcsr;
 use super::spl::SparsePlusLowRank;
+use crate::compress::slice::SliceMap;
 use crate::tensor::Matrix;
 use crate::util::trace;
 
@@ -65,6 +66,11 @@ pub enum KernelChoice {
     /// i8-quantized BCSR tiles with per-tile f32 scales.
     QBcsr,
     Nm { n: usize, m: usize },
+    /// Structurally sliced dense weight (rotate-and-slice): plain GEMM on a
+    /// SMALLER matrix. Never chosen by the density ladder — it enters only
+    /// through [`PackedLinear::from_sliced`], because the win is the shrunken
+    /// shape, not the storage format.
+    SlicedDense,
 }
 
 impl KernelChoice {
@@ -75,6 +81,7 @@ impl KernelChoice {
             KernelChoice::Bcsr => "bcsr".into(),
             KernelChoice::QBcsr => "qbcsr".into(),
             KernelChoice::Nm { n, m } => format!("{n}:{m}"),
+            KernelChoice::SlicedDense => "sliced".into(),
         }
     }
 }
@@ -240,6 +247,16 @@ pub enum PackedSparse {
     Nm(NmPacked),
 }
 
+/// Slice metadata carried by a packed sliced-dense layer: the index maps
+/// from the sliced dims back into the original dense dims. The kernel never
+/// consults them (it runs plain GEMM in the sliced shape); they exist for
+/// re-serialization and original-shape rate accounting.
+#[derive(Clone, Debug)]
+pub struct SliceMeta {
+    pub in_map: SliceMap,
+    pub out_map: SliceMap,
+}
+
 /// A linear layer packed for execution: the planned sparse-term format plus
 /// the (optional) low-rank term. This is what compressed checkpoints load
 /// into and what the serving engine's batched decode runs.
@@ -248,6 +265,7 @@ pub struct PackedLinear {
     pub plan: KernelPlan,
     sparse: PackedSparse,
     low_rank: Option<LowRank>,
+    slice: Option<SliceMeta>,
 }
 
 impl PackedLinear {
@@ -290,8 +308,9 @@ impl PackedLinear {
                 }
             }
             // The base ladder never emits QBcsr directly; it only appears
-            // via the gate above.
+            // via the gate above. SlicedDense only enters via from_sliced.
             KernelChoice::QBcsr => unreachable!("qbcsr requires the quantization gate"),
+            KernelChoice::SlicedDense => unreachable!("sliced enters via from_sliced"),
             KernelChoice::Nm { n, m } => {
                 match NmPacked::pack(&csr.to_dense(), NmPattern { n, m }) {
                     Some(packed) => PackedSparse::Nm(packed),
@@ -305,7 +324,7 @@ impl PackedLinear {
                 }
             }
         };
-        PackedLinear { plan, sparse, low_rank }
+        PackedLinear { plan, sparse, low_rank, slice: None }
     }
 
     /// Pack from a dense weight, sparsifying if the zero structure warrants.
@@ -329,13 +348,53 @@ impl PackedLinear {
                 }
             }
             KernelChoice::QBcsr => unreachable!("qbcsr requires the quantization gate"),
+            KernelChoice::SlicedDense => unreachable!("sliced enters via from_sliced"),
             KernelChoice::Nm { n, m } => {
                 let packed = NmPacked::pack(w, NmPattern { n, m })
                     .expect("detect_nm validated the pattern");
                 PackedSparse::Nm(packed)
             }
         };
-        PackedLinear { plan, sparse, low_rank: None }
+        PackedLinear { plan, sparse, low_rank: None, slice: None }
+    }
+
+    /// Pack a rotate-and-slice layer: a dense weight already in the SLICED
+    /// shape plus the index maps back to the original dims. Bypasses the
+    /// density ladder — the format is dense GEMM by construction; the win
+    /// is the smaller shape (smaller Xᵀ panel, fewer output rows).
+    pub fn from_sliced(
+        w: &Matrix,
+        in_map: SliceMap,
+        out_map: SliceMap,
+        batch_hint: usize,
+    ) -> PackedLinear {
+        Self::from_sliced_with(w, in_map, out_map, &PackOptions::for_batch(batch_hint))
+    }
+
+    /// [`PackedLinear::from_sliced`] with explicit packing options (only
+    /// `batch_hint` applies — a sliced layer never quantizes).
+    pub fn from_sliced_with(
+        w: &Matrix,
+        in_map: SliceMap,
+        out_map: SliceMap,
+        opts: &PackOptions,
+    ) -> PackedLinear {
+        assert_eq!(w.rows, out_map.len(), "weight rows vs out_map");
+        assert_eq!(w.cols, in_map.len(), "weight cols vs in_map");
+        let plan = KernelPlan {
+            choice: KernelChoice::SlicedDense,
+            density: w.nnz() as f64 / (w.rows * w.cols).max(1) as f64,
+            rows: w.rows,
+            cols: w.cols,
+            batch_hint: opts.batch_hint,
+            quant_rel_error: None,
+        };
+        PackedLinear {
+            plan,
+            sparse: PackedSparse::Dense(w.clone()),
+            low_rank: None,
+            slice: Some(SliceMeta { in_map, out_map }),
+        }
     }
 
     pub fn sparse(&self) -> &PackedSparse {
@@ -346,13 +405,31 @@ impl PackedLinear {
         self.low_rank.as_ref()
     }
 
+    /// Slice metadata, present iff this layer was packed via `from_sliced`.
+    pub fn slice(&self) -> Option<&SliceMeta> {
+        self.slice.as_ref()
+    }
+
+    /// The shape the kernel executes (sliced dims for a sliced layer).
     pub fn shape(&self) -> (usize, usize) {
         (self.plan.rows, self.plan.cols)
     }
 
+    /// The pre-compression dense shape — the rate-accounting denominator.
+    pub fn original_shape(&self) -> (usize, usize) {
+        match &self.slice {
+            Some(s) => (s.out_map.full, s.in_map.full),
+            None => self.shape(),
+        }
+    }
+
     /// Nonzero-parameter count (same accounting as the unpacked layer —
-    /// a Dense-planned sparse layer still counts only its nonzeros).
+    /// a Dense-planned sparse layer still counts only its nonzeros, while
+    /// a sliced layer stores and counts its full sliced dense block).
     pub fn param_count(&self) -> usize {
+        if self.slice.is_some() {
+            return self.plan.rows * self.plan.cols;
+        }
         let sparse = match &self.sparse {
             PackedSparse::Dense(w) => w.nnz(),
             PackedSparse::Csr(c) => c.nnz(),
@@ -429,7 +506,14 @@ impl PackedLinear {
                     // Stored-element count, not true nonzeros: counting
                     // zeros in a dense weight would scan it per dispatch.
                     let stored = w.rows * w.cols;
-                    trace::span_args("kernel_dense", &kernel_tags(stored, x.rows, 4 * stored))
+                    let tags = kernel_tags(stored, x.rows, 4 * stored);
+                    // Sliced layers run the same GEMM but report their own
+                    // span so per-kernel serve telemetry separates them.
+                    if self.slice.is_some() {
+                        trace::span_args("kernel_sliced", &tags)
+                    } else {
+                        trace::span_args("kernel_dense", &tags)
+                    }
                 });
                 // Uninit is safe: matmul_bt_into overwrites every element.
                 let mut out = ws.matrix_uninit(x.rows, w.rows);
@@ -661,5 +745,34 @@ mod tests {
     fn plan_describe_mentions_choice() {
         let p = KernelPlan::choose(256, 256, 100, None, 8, None);
         assert!(p.describe().contains("csr") || p.describe().contains("bcsr"));
+    }
+
+    #[test]
+    fn packed_sliced_runs_plain_gemm_in_sliced_shape() {
+        let mut rng = Rng::new(21);
+        // 12-of-16 output channels kept, input dim untouched.
+        let w = Matrix::randn(12, 8, 1.0, &mut rng);
+        let out_map = SliceMap { kept: (0..12).map(|i| (15 - i) as u32).collect(), full: 16 };
+        let packed = PackedLinear::from_sliced(&w, SliceMap::identity(8), out_map, 4);
+        assert_eq!(packed.plan.choice, KernelChoice::SlicedDense);
+        assert_eq!(packed.plan.choice.name(), "sliced");
+        assert!(packed.plan.describe().contains("sliced"));
+        assert_eq!(packed.shape(), (12, 8));
+        assert_eq!(packed.original_shape(), (16, 8));
+        assert_eq!(packed.param_count(), 12 * 8);
+        assert!(packed.slice().is_some());
+
+        let x = Matrix::randn(4, 8, 1.0, &mut rng);
+        let want = crate::tensor::matmul_bt(&x, &w);
+        assert!(packed.forward(&x).fro_dist(&want) < 1e-6);
+        let mut y = vec![0.0; 12];
+        packed.forward_vec(x.row(0), &mut y);
+        for (a, b) in y.iter().zip(want.row(0)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Non-sliced layers report no slice metadata and identical shapes.
+        let plain = PackedLinear::from_dense(&w, 4);
+        assert!(plain.slice().is_none());
+        assert_eq!(plain.original_shape(), plain.shape());
     }
 }

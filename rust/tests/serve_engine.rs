@@ -165,6 +165,7 @@ fn paged_engine_matches_lockstep_under_randomized_page_geometry() {
             },
             page_size,
             kv_pages,
+            prefix_cap: 0,
         };
         let n_req = g.usize_range(1, 8);
         let arrivals: Vec<(usize, Vec<usize>)> = (0..n_req)
@@ -225,6 +226,7 @@ fn equal_kv_bytes_paged_arena_admits_more_concurrency() {
         admission: AdmissionPolicy::Fcfs,
         page_size: 0,
         kv_pages: 0,
+        prefix_cap: 0,
     };
     let paged = EngineConfig { slots: 8, page_size: 8, kv_pages: 16, ..whole };
 
@@ -405,6 +407,7 @@ fn shared_prefix_outputs_bit_identical_to_unshared_and_leak_free() {
             },
             page_size,
             kv_pages,
+            prefix_cap: 0,
         };
         // A common system-prompt head most requests open with; tails
         // diverge at random points relative to page boundaries.
@@ -479,6 +482,7 @@ fn shared_prefix_load_saves_prefill_and_forks_on_duplicates() {
         admission: AdmissionPolicy::Fcfs,
         page_size: 4,
         kv_pages: 12,
+        prefix_cap: 0,
     };
     let head: Vec<usize> = (0..8).map(|j| (j * 5 + 3) % m.cfg.vocab).collect();
     let with_tail = |tail: &[usize]| {
@@ -608,6 +612,7 @@ fn tracing_observes_without_reordering_and_orders_lifecycle_events() {
         admission: AdmissionPolicy::Fcfs,
         page_size: 4,
         kv_pages: 24,
+        prefix_cap: 0,
     };
     // The trace flag and rings are process-global and tests in this binary
     // run in parallel, so this test claims an id range no other workload

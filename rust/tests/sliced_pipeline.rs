@@ -1,0 +1,149 @@
+//! End-to-end tests for the rotate-and-slice pipeline: the rotation-only
+//! exactness property across random models, bit-exact sliced checkpoint
+//! round trips through the serving loader, and the continuous-batching
+//! engine driving a sliced model with a capped prefix index.
+
+use oats::calib::CalibSet;
+use oats::compress::CompressedLayer;
+use oats::config::{CompressConfig, Method, ModelConfig};
+use oats::coordinator::pipeline::compress_clone;
+use oats::coordinator::serve::{run_load, ServeConfig};
+use oats::data::{CorpusConfig, SyntheticCorpus};
+use oats::model::{LinearOp, TransformerLM};
+use std::sync::Arc;
+
+fn setup_seeded(seed: u64) -> (TransformerLM, SyntheticCorpus, CalibSet) {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let model = TransformerLM::init(&cfg, seed);
+    let corpus = SyntheticCorpus::new(CorpusConfig::for_vocab(cfg.vocab, seed ^ 0x5CE));
+    let calib = CalibSet::sample(&corpus, 4, 16, 4);
+    (model, corpus, calib)
+}
+
+#[test]
+fn rotation_only_slice_is_exact_across_models() {
+    // Slicing at rate 0 is a pure channel permutation of the FFN pair —
+    // orthogonal, and commuting with the elementwise activation — so for
+    // ANY model the logits must match dense to float-accumulation noise.
+    // Property-tested across independently initialised models and corpora,
+    // not just the one seed the unit tests use.
+    oats::util::prop::check("rotation_only_exact", 4, |g| {
+        let seed = g.rng().next_u64();
+        let (model, corpus, calib) = setup_seeded(seed);
+        let cfg = CompressConfig {
+            method: Method::Dense,
+            slice_rate: Some(0.0),
+            ..Default::default()
+        };
+        let (m, _) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+        let b = corpus.batch(2, 16, &mut corpus.stream(7));
+        let dense = model.forward(&b.inputs);
+        let sliced = m.forward(&b.inputs);
+        let norm = dense.data.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
+        let d = dense.fro_dist(&sliced);
+        assert!(
+            d < 1e-3 * norm.max(1.0),
+            "seed {seed:#x}: rotation-only divergence {d} vs norm {norm}"
+        );
+    });
+}
+
+#[test]
+fn sliced_checkpoint_round_trips_bit_exactly_through_serving_loader() {
+    // Save a sliced+OATS model, reload through the packing loader the
+    // server uses, and require the unpacked weights — and therefore the
+    // logits of the unpacked form — to be bit-identical.
+    let (model, _, calib) = setup_seeded(0x517CED);
+    let cfg = CompressConfig {
+        method: Method::Oats,
+        rate: 0.4,
+        rank_ratio: 0.25,
+        iters: 3,
+        slice_rate: Some(0.4),
+        ..Default::default()
+    };
+    let (cm, _) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+    let dir = std::env::temp_dir().join(format!("oats_sliced_e2e_{}", std::process::id()));
+    oats::model::compressed_io::save(&cm, &dir).unwrap();
+    let loaded = oats::model::compressed_io::load(&dir).unwrap();
+    for (b, (blk, blk2)) in cm.blocks.iter().zip(&loaded.blocks).enumerate() {
+        for name in ["up", "down"] {
+            match (blk.linear(name), blk2.linear(name)) {
+                (
+                    LinearOp::Compressed(CompressedLayer::SlicedDense { w, in_map, out_map }),
+                    LinearOp::Compressed(CompressedLayer::SlicedDense {
+                        w: w2,
+                        in_map: i2,
+                        out_map: o2,
+                    }),
+                ) => {
+                    assert_eq!(w.data, w2.data, "block{b}.{name} weight bits");
+                    assert_eq!(in_map, i2, "block{b}.{name} in_map");
+                    assert_eq!(out_map, o2, "block{b}.{name} out_map");
+                }
+                other => panic!("block{b}.{name} did not round-trip sliced: {other:?}"),
+            }
+        }
+    }
+    let toks = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+    assert_eq!(
+        cm.forward(&toks).data,
+        loaded.forward(&toks).data,
+        "bit-exact weights must give bit-exact logits"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn serving_engine_runs_sliced_model_with_capped_prefix_index() {
+    // The full serving path on a sliced model: paged KV arena, prefix
+    // reuse with a capacity-capped index, per-request completion. Capping
+    // the index must change which pages stay resident, never what any
+    // request receives — checked via the order-independent completions
+    // digest against an uncapped run of the same workload.
+    let (model, _, calib) = setup_seeded(0x5E12);
+    let cfg = CompressConfig {
+        method: Method::Oats,
+        rate: 0.4,
+        rank_ratio: 0.25,
+        iters: 3,
+        slice_rate: Some(0.25),
+        ..Default::default()
+    };
+    let (cm, _) = compress_clone(&model, &calib, &cfg, 2).unwrap();
+    let cm = Arc::new(cm);
+    // Disjoint prompt groups so successive publishes churn the capped
+    // index. With 2 slots and 2 requests per group, group i+2's first
+    // admission implies group i has fully retired (FCFS over 2 slots),
+    // so its published entries are unreferenced by then and the insert
+    // at cap 1 must evict them — deterministically, any interleaving.
+    let prompts: Vec<Vec<usize>> = (0..6)
+        .map(|i| {
+            let g = i / 2;
+            (0..10).map(|j| (g * 11 + j + 1) % 16).collect()
+        })
+        .collect();
+    let scfg = ServeConfig {
+        slots: 2,
+        gen_tokens: 4,
+        page_size: 4,
+        kv_pages: 24,
+        prefix_cap: 1,
+        ..Default::default()
+    };
+    let capped = run_load(Arc::clone(&cm), scfg.clone(), prompts.clone());
+    let uncapped = run_load(cm, ServeConfig { prefix_cap: 0, ..scfg }, prompts);
+    assert_eq!(capped.n_requests, 6);
+    assert!(capped.tokens_per_second() > 0.0);
+    assert_eq!(capped.pages_in_use_at_drain, 0, "capped run leaked pages");
+    assert_eq!(uncapped.pages_in_use_at_drain, 0, "uncapped run leaked pages");
+    assert!(
+        capped.prefix_evictions_cap > 0,
+        "cap 1 under 3 disjoint prefix groups must evict"
+    );
+    assert_eq!(uncapped.prefix_evictions_cap, 0, "unbounded index never cap-evicts");
+    assert_eq!(
+        capped.completions_digest, uncapped.completions_digest,
+        "prefix-cap policy must not change completions"
+    );
+}
