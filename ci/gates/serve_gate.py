@@ -20,6 +20,12 @@ of checks:
   at equal ``kv_arena_bytes``, and its ``completions_digest`` must equal
   the ``--no-share-prefix`` run's byte for byte — prefix sharing is an
   optimization, never a behaviour.
+* **Overload trio** (``--require-overload``): the burst-arrival overload
+  run must actually preempt (``preemptions > 0``) and shed (``shed > 0``)
+  while keeping ``goodput_under_slo > 0`` and interactive first-token p99
+  no worse than batch p99; the storm A/B pair (shedding off, preemption
+  toggled) must be ``completions_digest``-equal at equal arena bytes —
+  preemption is scheduling, never behaviour.
 
 Runs are matched to roles by the tag embedded in the filename
 (``SERVE_<tag>.json``); the whole-cache run is the one carrying none of the
@@ -61,11 +67,21 @@ def check_run(name, doc):
     capstop, trunc, requests = doc["capacity_stopped"], doc["truncated"], doc["requests"]
     if capstop < 1 or trunc < 1:
         bad(f"expected >=1 capacity-stopped and truncated, got {capstop}/{trunc}")
-    if capstop + trunc + joins < requests or capstop + trunc > requests:
+    # Outcome conservation, generalized for overload: every request ends in
+    # exactly one of {admitted-and-retired, truncated, shed}; each
+    # preemption re-counts its victim's readmission as a fresh join (or
+    # resolves it slot-free into capacity_stopped), so unique admissions are
+    # joins - preemptions at minimum.
+    shed, preempt = doc["shed"], doc["preemptions"]
+    if capstop + trunc + shed + joins - preempt < requests or capstop + trunc + shed > requests:
         bad(
             f"inconsistent outcome counters capstop {capstop} + trunc {trunc} "
-            f"vs joins {joins}, requests {requests}"
+            f"+ shed {shed} vs joins {joins}, preemptions {preempt}, requests {requests}"
         )
+    if not 0 <= doc["goodput_under_slo"] <= 1:
+        bad(f"goodput_under_slo {doc['goodput_under_slo']} outside [0, 1]")
+    if preempt == 0 and doc["victim_recompute_tokens"] != 0:
+        bad("victim recompute tokens without a preemption")
     lat = doc["latency_s"]
     missing = [q for q in ("p50", "p95", "p99") if q not in lat]
     if missing:
@@ -137,6 +153,54 @@ def check_shared_pair(shared, noshare):
     return errs
 
 
+def check_overload(overload, storm_on, storm_off):
+    """Overload trio: preemption + shedding exercised, and bit-identity.
+
+    ``overload`` ran with preemption and the shedder on under burst
+    arrivals; ``storm_on``/``storm_off`` are the same storm with shedding
+    off and preemption toggled, so their completions must be digest-equal
+    at equal arena bytes (preemption is scheduling, never behaviour).
+    """
+    errs = []
+    if overload["preemptions"] < 1:
+        errs.append("overload run never preempted (the storm must force eviction)")
+    elif overload["victim_recompute_tokens"] < 1:
+        errs.append("overload run preempted but recomputed nothing")
+    if overload["shed"] < 1:
+        errs.append("overload run never shed (the backlog must blow the SLO)")
+    if overload["goodput_under_slo"] <= 0:
+        errs.append("overload run reports zero goodput under the SLO")
+    fi = overload["first_token_latency_interactive"]
+    fb = overload["first_token_latency_batch"]
+    if fi["n"] < 1 or fb["n"] < 1:
+        errs.append(
+            f"overload run must serve both interactive and batch tiers "
+            f"(got n={fi['n']}/{fb['n']})"
+        )
+    elif fi["p99"] > fb["p99"]:
+        errs.append(
+            f"priority inversion: interactive p99 first token {fi['p99']:.4f}s "
+            f"exceeds batch p99 {fb['p99']:.4f}s"
+        )
+    if storm_on["kv_arena_bytes"] != storm_off["kv_arena_bytes"]:
+        errs.append(
+            f"storm arena bytes differ ({storm_on['kv_arena_bytes']} vs "
+            f"{storm_off['kv_arena_bytes']}) — the A/B must hold KV bytes equal"
+        )
+    if storm_on["preemptions"] < 1:
+        errs.append("storm_on run never preempted")
+    if storm_off["preemptions"] != 0:
+        errs.append(f"storm_off run preempted {storm_off['preemptions']} times with it off")
+    if storm_on["shed"] != 0 or storm_off["shed"] != 0:
+        errs.append("storm A/B must run with shedding off (shed decisions diverge)")
+    ds, du = storm_on["completions_digest"], storm_off["completions_digest"]
+    if ds != du:
+        errs.append(f"completions digests differ: preemption-on {ds} vs off {du}")
+    if ds == "0" * 16:
+        errs.append("storm completions digest was never computed")
+    return errs
+
+
 def load_runs(serve_dir):
     """{filename: parsed doc} for every SERVE_*.json, sorted by name."""
     runs = {}
@@ -150,12 +214,22 @@ def pick(runs, tag):
     return next((d for name, d in runs.items() if tag in name), None)
 
 
-def gate(runs, paged_tag, shared_tag, noshare_tag, require_shared):
-    """All errors across per-run and pair checks; empty means pass."""
+def gate(
+    runs,
+    paged_tag,
+    shared_tag,
+    noshare_tag,
+    require_shared,
+    overload_tag="tiny_overload",
+    storm_on_tag="tiny_storm_on",
+    storm_off_tag="tiny_storm_off",
+    require_overload=False,
+):
+    """All errors across per-run, pair, and overload-trio checks."""
     errs = []
     for name, doc in runs.items():
         errs.extend(check_run(name, doc))
-    special = (paged_tag, shared_tag, noshare_tag)
+    special = (paged_tag, shared_tag, noshare_tag, overload_tag, storm_on_tag, storm_off_tag)
     whole = next(
         (d for name, d in runs.items() if not any(t in name for t in special)), None
     )
@@ -169,6 +243,11 @@ def gate(runs, paged_tag, shared_tag, noshare_tag, require_shared):
         errs.extend(check_shared_pair(shared, noshare))
     elif require_shared:
         errs.append(f"missing {shared_tag} or {noshare_tag} run")
+    trio = [pick(runs, t) for t in (overload_tag, storm_on_tag, storm_off_tag)]
+    if all(d is not None for d in trio):
+        errs.extend(check_overload(*trio))
+    elif require_overload:
+        errs.append(f"missing {overload_tag}, {storm_on_tag}, or {storm_off_tag} run")
     return errs
 
 
@@ -183,13 +262,31 @@ def main(argv=None):
         action="store_true",
         help="fail when the shared/unshared A/B pair is absent (CI sets this)",
     )
+    ap.add_argument("--overload-tag", default="tiny_overload")
+    ap.add_argument("--storm-on-tag", default="tiny_storm_on")
+    ap.add_argument("--storm-off-tag", default="tiny_storm_off")
+    ap.add_argument(
+        "--require-overload",
+        action="store_true",
+        help="fail when the overload/storm trio is absent (CI sets this)",
+    )
     args = ap.parse_args(argv)
 
     runs = load_runs(args.serve_dir)
     if not runs:
         print(f"serve gate: no SERVE_*.json in {args.serve_dir}", file=sys.stderr)
         return 1
-    errs = gate(runs, args.paged_tag, args.shared_tag, args.noshare_tag, args.require_shared)
+    errs = gate(
+        runs,
+        args.paged_tag,
+        args.shared_tag,
+        args.noshare_tag,
+        args.require_shared,
+        args.overload_tag,
+        args.storm_on_tag,
+        args.storm_off_tag,
+        args.require_overload,
+    )
     for name, doc in runs.items():
         print(
             f"run {name}: {doc.get('tokens_per_second', 0):.1f} tok/s, "
@@ -197,7 +294,8 @@ def main(argv=None):
             f"capacity-stopped {doc.get('capacity_stopped')}, "
             f"prefill saved {doc.get('prefill_tokens_saved')}, "
             f"shared pages {doc.get('shared_pages')}, "
-            f"cow forks {doc.get('cow_forks')}"
+            f"cow forks {doc.get('cow_forks')}, "
+            f"preemptions {doc.get('preemptions')}, shed {doc.get('shed')}"
         )
     print(f"serve gate: {len(runs)} runs checked")
     if errs:

@@ -15,6 +15,11 @@ Validates the Chrome trace-event JSON (schema ``oats-trace-v1``) written by
 * **Request completeness**: lifecycle instants grouped by their ``id``
   argument must form ordered chains (enqueued <= admitted <= first_token
   <= retired), and at least ``--min-chains`` chains must be complete.
+* **Preemption lifecycle**: any request that was preempted must show the
+  full eviction round trip in order (admitted <= preempt <= requeue <=
+  readmit_recompute <= retired); ``--min-preempted`` (CI sets it on the
+  overload run) requires that many such complete chains, proving the storm
+  actually forced eviction and the victims recovered.
 
 ``droppedEvents > 0`` is reported as a warning, not a failure: the ring
 drops newest-first under overload by design, and a partially-dropped trace
@@ -34,6 +39,8 @@ PH_ALLOWED = ("X", "i", "C")
 # fractional-us floats, so boundaries can wobble by well under a ns.
 EPS = 1e-3
 LIFECYCLE = ("request_enqueued", "request_admitted", "request_first_token", "request_retired")
+# Instants an eviction round trip adds to a victim's chain, in order.
+PREEMPTION = ("preempt", "requeue", "readmit_recompute")
 
 
 def check_events(name, events):
@@ -84,7 +91,7 @@ def lifecycle_chains(events):
     """{request id: {instant name: first ts}} for the lifecycle instants."""
     chains = {}
     for ev in events:
-        if ev.get("ph") != "i" or ev.get("name") not in LIFECYCLE:
+        if ev.get("ph") != "i" or ev.get("name") not in LIFECYCLE + PREEMPTION:
             continue
         rid = ev.get("args", {}).get("id")
         if rid is None:
@@ -121,7 +128,43 @@ def check_chains(name, chains, min_chains):
     return errs, complete
 
 
-def check_trace(name, doc, min_chains):
+def check_preempt_chains(name, chains, min_preempted):
+    """Eviction round trips must be ordered and, under ``--min-preempted``,
+    present: admitted <= preempt <= requeue <= readmit_recompute <= retired.
+    """
+    errs = []
+    complete = 0
+    for rid, chain in sorted(chains.items()):
+        pre, req, rea = (chain.get(k) for k in PREEMPTION)
+        if pre is None and req is None and rea is None:
+            continue
+        _, adm, _, ret = (chain.get(k) for k in LIFECYCLE)
+        if pre is None or req is None:
+            errs.append(f"{name}: request {rid:g} has a partial preempt/requeue pair")
+            continue
+        if adm is None or not adm - EPS <= pre:
+            errs.append(f"{name}: request {rid:g} preempted ({pre}) before admission ({adm})")
+        if pre > req + EPS:
+            errs.append(f"{name}: request {rid:g} requeued ({req}) before preempt ({pre})")
+        # A victim resolved slot-free at readmission (its stream already
+        # fills capacity) legitimately never recomputes; otherwise the
+        # readmission must recompute, inside the requeue..retired window.
+        if rea is not None:
+            if not req - EPS <= rea:
+                errs.append(f"{name}: request {rid:g} readmitted ({rea}) before requeue ({req})")
+            if ret is not None and rea > ret + EPS:
+                errs.append(f"{name}: request {rid:g} readmitted ({rea}) after retire ({ret})")
+            if ret is not None:
+                complete += 1
+    if complete < min_preempted:
+        errs.append(
+            f"{name}: only {complete} complete preemption chains "
+            f"(admitted through readmit_recompute to retired), expected >= {min_preempted}"
+        )
+    return errs, complete
+
+
+def check_trace(name, doc, min_chains, min_preempted=0):
     """(errors, summary line) for one parsed trace document."""
     if doc.get("schema") != SCHEMA:
         return [f"{name}: unexpected schema {doc.get('schema')!r}"], ""
@@ -136,11 +179,14 @@ def check_trace(name, doc, min_chains):
     chains = lifecycle_chains(events)
     chain_errs, complete = check_chains(name, chains, min_chains)
     errs.extend(chain_errs)
+    preempt_errs, preempted = check_preempt_chains(name, chains, min_preempted)
+    errs.extend(preempt_errs)
     spans = sum(1 for ev in events if ev["ph"] == "X")
     dropped = doc.get("droppedEvents", 0)
     summary = (
         f"{name}: {len(events)} events ({spans} spans), "
-        f"{complete}/{len(chains)} complete request chains, {dropped} dropped"
+        f"{complete}/{len(chains)} complete request chains, "
+        f"{preempted} preemption round trips, {dropped} dropped"
     )
     if dropped:
         summary += " [warning: ring overflowed; trace is partial]"
@@ -156,6 +202,12 @@ def main(argv=None):
         default=1,
         help="minimum complete request lifecycle chains per trace",
     )
+    ap.add_argument(
+        "--min-preempted",
+        type=int,
+        default=0,
+        help="minimum complete preemption round trips per trace (overload CI sets this)",
+    )
     args = ap.parse_args(argv)
 
     failed = []
@@ -167,7 +219,7 @@ def main(argv=None):
         except (OSError, ValueError) as e:
             failed.append(f"{name}: unreadable ({e})")
             continue
-        errs, summary = check_trace(name, doc, args.min_chains)
+        errs, summary = check_trace(name, doc, args.min_chains, args.min_preempted)
         if summary:
             print(summary)
         failed.extend(errs)

@@ -128,6 +128,14 @@ def serve_doc(**overrides):
         "shared_pages": 0,
         "cow_forks": 0,
         "completions_digest": "00c0ffee00c0ffee",
+        "preemptions": 0,
+        "shed": 0,
+        "victim_recompute_tokens": 0,
+        "goodput_under_slo": 1.0,
+        "arrivals": "closed",
+        "first_token_latency_interactive": {"n": 0, "p99": 0.0},
+        "first_token_latency_batch": {"n": 0, "p99": 0.0},
+        "first_token_latency_background": {"n": 0, "p99": 0.0},
         "queue_wait": {"n": 24, "mean": 0.002},
         "time_admit_s": 0.01,
         "time_prefill_s": 0.2,
@@ -152,8 +160,42 @@ def full_fleet():
     }
 
 
-def run_gate(runs, require_shared=True):
-    return serve_gate.gate(runs, "tiny_paged", "tiny_shared", "tiny_noshare", require_shared)
+def overload_trio():
+    """A passing overload + storm A/B trio (rides along with full_fleet)."""
+    return {
+        # 24 requests: 1 truncated, 2 shed, 21 admitted; 3 preemptions each
+        # re-join their victim, so joins = 21 + 3 = 24.
+        "SERVE_tiny_overload.json": serve_doc(
+            joins=24,
+            leaves=24,
+            preemptions=3,
+            victim_recompute_tokens=40,
+            shed=2,
+            goodput_under_slo=0.8,
+            arrivals="burst:6:4",
+            first_token_latency_interactive={"n": 8, "p99": 0.012},
+            first_token_latency_batch={"n": 7, "p99": 0.055},
+        ),
+        "SERVE_tiny_storm_on.json": serve_doc(
+            joins=25,
+            leaves=25,
+            preemptions=2,
+            victim_recompute_tokens=24,
+            arrivals="burst:6:4",
+        ),
+        "SERVE_tiny_storm_off.json": serve_doc(arrivals="burst:6:4"),
+    }
+
+
+def run_gate(runs, require_shared=True, require_overload=False):
+    return serve_gate.gate(
+        runs,
+        "tiny_paged",
+        "tiny_shared",
+        "tiny_noshare",
+        require_shared,
+        require_overload=require_overload,
+    )
 
 
 def test_serve_gate_passes_full_fleet():
@@ -241,6 +283,81 @@ def test_serve_gate_catches_bad_queue_wait_and_phases():
     runs = full_fleet()
     runs["SERVE_tiny.json"]["kernel_time"] = {"bcsr": -0.1}
     assert any("negative kernel time" in e for e in run_gate(runs))
+
+
+def test_serve_gate_passes_overload_trio():
+    assert run_gate({**full_fleet(), **overload_trio()}, require_overload=True) == []
+
+
+def test_serve_gate_missing_overload_trio_only_fails_when_required():
+    runs = full_fleet()
+    assert any("missing tiny_overload" in e for e in run_gate(runs, require_overload=True))
+    assert run_gate(runs, require_overload=False) == []
+
+
+def test_serve_gate_requires_preemption_and_shed_in_overload_run():
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_overload.json"]["preemptions"] = 0
+    runs["SERVE_tiny_overload.json"]["victim_recompute_tokens"] = 0
+    runs["SERVE_tiny_overload.json"]["joins"] = 21
+    runs["SERVE_tiny_overload.json"]["leaves"] = 21
+    assert any("never preempted" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_overload.json"]["victim_recompute_tokens"] = 0
+    assert any("recomputed nothing" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_overload.json"]["shed"] = 0
+    runs["SERVE_tiny_overload.json"]["joins"] = 26
+    runs["SERVE_tiny_overload.json"]["leaves"] = 26
+    assert any("never shed" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_overload.json"]["goodput_under_slo"] = 0.0
+    assert any("zero goodput" in e for e in run_gate(runs))
+
+
+def test_serve_gate_catches_priority_inversion():
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_overload.json"]["first_token_latency_interactive"]["p99"] = 0.5
+    assert any("priority inversion" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_overload.json"]["first_token_latency_batch"]["n"] = 0
+    assert any("both interactive and batch" in e for e in run_gate(runs))
+
+
+def test_serve_gate_storm_ab_must_be_digest_equal_with_shed_off():
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_storm_on.json"]["completions_digest"] = "deadbeefdeadbeef"
+    assert any("preemption-on" in e and "digests differ" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_storm_off.json"]["preemptions"] = 1
+    runs["SERVE_tiny_storm_off.json"]["victim_recompute_tokens"] = 8
+    assert any("storm_off run preempted" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_storm_on.json"]["shed"] = 1
+    runs["SERVE_tiny_storm_on.json"]["joins"] = 24
+    runs["SERVE_tiny_storm_on.json"]["leaves"] = 24
+    assert any("shedding off" in e for e in run_gate(runs))
+    runs = {**full_fleet(), **overload_trio()}
+    runs["SERVE_tiny_storm_on.json"]["kv_arena_bytes"] = 1 << 19
+    assert any("storm arena bytes differ" in e for e in run_gate(runs))
+
+
+def test_serve_gate_shed_accounting_must_balance():
+    # A shed that the outcome counters don't cover (joins too low) trips
+    # the generalized conservation check.
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["shed"] = 5
+    runs["SERVE_tiny.json"]["joins"] = 10
+    runs["SERVE_tiny.json"]["leaves"] = 10
+    assert any("inconsistent outcome counters" in e for e in run_gate(runs))
+    # Recompute tokens can only come from a preemption.
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["victim_recompute_tokens"] = 9
+    assert any("recompute tokens without a preemption" in e for e in run_gate(runs))
+    # Goodput is a fraction of requests.
+    runs = full_fleet()
+    runs["SERVE_tiny.json"]["goodput_under_slo"] = 1.4
+    assert any("outside [0, 1]" in e for e in run_gate(runs))
 
 
 def test_serve_gate_end_to_end_on_disk(tmp_path, capsys):
@@ -360,6 +477,57 @@ def test_trace_gate_rejects_unordered_or_incomplete_chains():
 def test_trace_gate_enforces_min_chains():
     assert trace_errs(good_trace(), min_chains=2) == []
     assert any("complete request chains" in e for e in trace_errs(good_trace(), min_chains=3))
+
+
+def preempted_lifecycle(rid, enq, adm, pre, req, rea, ret, ft=None):
+    names = [
+        ("request_enqueued", enq),
+        ("request_admitted", adm),
+        ("preempt", pre),
+        ("requeue", req),
+        ("readmit_recompute", rea),
+        ("request_retired", ret),
+    ]
+    if ft is not None:
+        names.append(("request_first_token", ft))
+    return [trace_event(name, "i", ts, s="t", args={"id": rid}) for name, ts in names]
+
+
+def test_trace_gate_passes_a_preemption_round_trip():
+    doc = good_trace()
+    doc["traceEvents"] += preempted_lifecycle(7, 1.0, 12.0, 30.0, 31.0, 50.0, 95.0, ft=60.0)
+    errs, summary = trace_gate.check_trace("t.json", doc, 1, 1)
+    assert errs == []
+    assert "1 preemption round trips" in summary
+
+
+def test_trace_gate_rejects_disordered_preemption_chains():
+    # Preempted before it was ever admitted.
+    doc = good_trace()
+    doc["traceEvents"] += preempted_lifecycle(7, 1.0, 40.0, 30.0, 41.0, 50.0, 95.0)
+    assert any("preempted" in e and "before admission" in e for e in trace_errs(doc))
+    # Requeue precedes the eviction that caused it.
+    doc = good_trace()
+    doc["traceEvents"] += preempted_lifecycle(7, 1.0, 12.0, 35.0, 30.0, 50.0, 95.0)
+    assert any("requeued" in e and "before preempt" in e for e in trace_errs(doc))
+    # Recompute before the victim was back in the queue.
+    doc = good_trace()
+    doc["traceEvents"] += preempted_lifecycle(7, 1.0, 12.0, 30.0, 45.0, 40.0, 95.0)
+    assert any("readmitted" in e and "before requeue" in e for e in trace_errs(doc))
+    # A preempt with no matching requeue is a half-recorded eviction.
+    doc = good_trace()
+    doc["traceEvents"].append(trace_event("preempt", "i", 30.0, s="t", args={"id": 8}))
+    doc["traceEvents"] += lifecycle(8, 1.0, 12.0, 60.0, 95.0)
+    assert any("partial preempt/requeue pair" in e for e in trace_errs(doc))
+
+
+def test_trace_gate_enforces_min_preempted():
+    # A clean trace with zero preemptions passes by default but fails the
+    # overload bar.
+    errs, _ = trace_gate.check_trace("t.json", good_trace(), 1, 0)
+    assert errs == []
+    errs, _ = trace_gate.check_trace("t.json", good_trace(), 1, 1)
+    assert any("complete preemption chains" in e for e in errs)
 
 
 def test_trace_gate_dropped_events_warn_but_pass():

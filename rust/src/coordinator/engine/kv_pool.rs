@@ -313,6 +313,15 @@ impl KvPool {
     ///   `reserved_total + shared_alive ≤ total` (admission headroom
     ///   bookkeeping is exact).
     ///
+    /// The invariants are deliberately phrased over the live state, so
+    /// they also pin the **preemption lifecycle** (evict → requeue →
+    /// readmit): an evicted victim's release must return every owned page
+    /// to the free list and drop its reservation ledger entry in the same
+    /// call, while pages it *published* stay accounted under
+    /// `shared_alive` (the prefix index owns them now) — any eviction
+    /// path that strands a page between those ledgers fails the
+    /// conservation sum on the very step it happens.
+    ///
     /// The engine calls this once per step and at drain, so every debug
     /// test run checks pool conservation continuously instead of only in
     /// the dedicated property tests. Compiled out of release builds.
@@ -593,6 +602,57 @@ mod tests {
         // Corrupt the arena the way a bookkeeping bug would: a page leaves
         // the cache without returning to the free list.
         let _leaked = p.caches[a].take_pages();
+        p.audit();
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn audit_holds_across_a_preemption_lifecycle() {
+        // Evict → requeue → readmit, exactly as `Engine::preempt_for`
+        // drives the pool: the victim's owned pages all return to the
+        // free list and its reservation entry drops in the same release,
+        // while the page it published stays alive in the index and is
+        // re-attachable after readmission.
+        let mut p = KvPool::with_pages(&cfg(), 3, 16, 8);
+        let victim = p.acquire(3).unwrap();
+        p.acquire_page(victim);
+        p.acquire_page(victim);
+        let published = p.share_page(victim, 0);
+        p.audit();
+
+        let free_before = p.pages_free();
+        p.release(victim); // the eviction
+        p.audit();
+        assert_eq!(p.pages_free(), free_before + 1, "victim's owned page came home");
+        assert_eq!(p.pages_reserved(), 0, "victim's reservation entry dropped");
+        assert_eq!(p.pages_shared(), 1, "published page survives the eviction");
+
+        // Readmission: a fresh reservation maps the surviving shared page
+        // and recomputes the rest into newly owned pages.
+        let again = p.acquire(2).unwrap();
+        p.attach_shared(again, Arc::clone(&published));
+        p.acquire_page(again);
+        p.audit();
+
+        p.release(again);
+        p.reclaim_shared(published);
+        p.audit();
+        assert_eq!(p.pages_free(), 8, "clean drain after the preemption round trip");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "page conservation broken")]
+    fn audit_catches_a_leaked_victim_page() {
+        // A buggy eviction path that detaches the victim's pages without
+        // handing them back to the free list must trip the conservation
+        // audit on the very step — even though the release itself then
+        // completes "cleanly" from the slot ledger's point of view.
+        let mut p = KvPool::with_pages(&cfg(), 2, 16, 8);
+        let victim = p.acquire(2).unwrap();
+        p.acquire_page(victim);
+        let _lost = p.caches[victim].take_pages();
+        p.release(victim); // slot freed, but one page never came home
         p.audit();
     }
 

@@ -51,7 +51,9 @@ pub mod sched;
 
 pub use kv_pool::KvPool;
 pub use prefix::PrefixIndex;
-pub use sched::{AdmissionPolicy, Batcher, Request, ResponseStatus, Sequence};
+pub use sched::{
+    AdmissionPolicy, Batcher, Priority, Request, ResponseStatus, Sequence, ShedPolicy,
+};
 
 use crate::model::TransformerLM;
 use crate::sparse::Workspace;
@@ -93,6 +95,20 @@ pub struct EngineConfig {
     /// deterministic logical clock; evicted pages return to the pool and
     /// count as `prefix_evictions_cap` in the telemetry.
     pub prefix_cap: usize,
+    /// Allow admission to evict a resident victim when the queue's next
+    /// pick STRICTLY outranks it by base tier and no pages (or slots) are
+    /// otherwise available. The victim releases every page it holds and
+    /// re-queues with its generated tokens saved; readmission re-prefills
+    /// them, and greedy decode from the recomputed prefix is
+    /// deterministic, so completions stay bit-identical to a
+    /// preemption-off run.
+    pub preemption: bool,
+    /// First-token SLO in engine steps (logical clock, measured from the
+    /// request's arrival tick). `0` ⇒ no SLO: every first token counts as
+    /// goodput and the shedder never fires.
+    pub slo_first_token_steps: usize,
+    /// What to shed when the predicted queue wait exceeds the SLO.
+    pub shed_policy: ShedPolicy,
 }
 
 impl Default for EngineConfig {
@@ -105,6 +121,9 @@ impl Default for EngineConfig {
             page_size: 0,
             kv_pages: 0,
             prefix_cap: 0,
+            preemption: false,
+            slo_first_token_steps: 0,
+            shed_policy: ShedPolicy::Off,
         }
     }
 }
@@ -124,6 +143,9 @@ pub struct FinishedSeq {
     pub id: u64,
     pub tokens: Vec<usize>,
     pub status: ResponseStatus,
+    /// Scheduling tier the request ran (or was shed) under — the serve
+    /// layer's per-tier latency summaries bucket on this.
+    pub priority: Priority,
     pub enqueued: Instant,
     /// Time from enqueue to admission (for slot-free answers: to the
     /// answering step) — the component of first-token latency that is
@@ -152,15 +174,31 @@ pub struct EngineTelemetry {
     /// Steps that did any work — decode, prefill, or slot-free answers
     /// (idle polls are not counted).
     pub steps: usize,
-    /// Sequences admitted into a KV slot.
+    /// Sequences admitted into a KV slot. A preempted victim's
+    /// readmission counts again, pairing with the `leave` its eviction
+    /// recorded — so `joins == leaves` holds exactly at drain.
     pub joins: usize,
-    /// Sequences retired from a KV slot.
+    /// Sequences that vacated a KV slot (retirement or preemption).
     pub leaves: usize,
     /// Requests rejected for oversized prompts.
     pub truncated: usize,
     /// Requests whose generation was stopped by KV capacity rather than
     /// by reaching the budget ([`ResponseStatus::CapacityStopped`]).
     pub capacity_stopped: usize,
+    /// Residents evicted mid-flight so a strictly higher-tier request
+    /// could admit; each re-queued with its generated tokens saved.
+    pub preemptions: usize,
+    /// Queued requests dropped by the SLO-aware load shedder
+    /// ([`ResponseStatus::Shed`]).
+    pub shed: usize,
+    /// Tokens re-prefilled on readmission of preempted victims (their KV
+    /// was released at eviction) — the recompute cost preemption trades
+    /// for priority inversion.
+    pub victim_recompute_tokens: usize,
+    /// First tokens emitted within `slo_first_token_steps` of arrival
+    /// (every first token when no SLO is set) — the numerator of the
+    /// serve layer's `goodput_under_slo`.
+    pub slo_hits: usize,
     /// Decode-batch width per step.
     pub decode_batch: Vec<f64>,
     /// Occupied-slot fraction per step (sampled after same-step backfill).
@@ -238,6 +276,10 @@ struct StepCounts {
     truncated: usize,
     capacity_stopped: usize,
     leaves: usize,
+    preemptions: usize,
+    shed: usize,
+    victim_recompute_tokens: usize,
+    slo_hits: usize,
     prefill_tokens_saved: usize,
     shared_pages: usize,
     cow_forks: usize,
@@ -263,6 +305,10 @@ impl StepCounts {
         self.truncated += other.truncated;
         self.capacity_stopped += other.capacity_stopped;
         self.leaves += other.leaves;
+        self.preemptions += other.preemptions;
+        self.shed += other.shed;
+        self.victim_recompute_tokens += other.victim_recompute_tokens;
+        self.slo_hits += other.slo_hits;
         self.prefill_tokens_saved += other.prefill_tokens_saved;
         self.shared_pages += other.shared_pages;
         self.cow_forks += other.cow_forks;
@@ -354,13 +400,16 @@ impl Engine {
         let gen = self.cfg.gen_tokens;
         let mut counts = StepCounts::default();
         let slot_free = queue
-            .take_where(|r| r.prompt.len() >= cap || r.prompt.is_empty() || r.budget(gen) == 0);
+            .take_where(|r| r.prefill_len() >= cap || r.prompt.is_empty() || r.budget(gen) == 0);
         for req in slot_free {
             // prompt > cap is the rejection (`Truncated`); an empty prompt
             // or zero budget matches scalar `generate` (no logits to
             // decode from / nothing asked for — an empty completion); a
-            // prompt that exactly fills the capacity had generation
-            // stopped by memory, not by its budget.
+            // prefill stream that exactly fills the capacity had generation
+            // stopped by memory, not by its budget. (For a preempted
+            // requeue the stream is prompt + generated-so-far, and the
+            // saved tokens are the answer — identical to what the resident
+            // run would have capacity-stopped with.)
             let status = if req.prompt.len() > cap {
                 counts.truncated += 1;
                 ResponseStatus::Truncated
@@ -376,11 +425,19 @@ impl Engine {
             );
             events.push(SeqEvent::Finished(FinishedSeq {
                 id: req.id,
-                tokens: Vec::new(),
+                tokens: req.resume.tokens,
                 status,
+                priority: req.priority,
                 enqueued: req.enqueued,
-                queue_wait: Instant::now().saturating_duration_since(req.enqueued),
-                first_token_latency: None,
+                queue_wait: req
+                    .resume
+                    .admitted
+                    .unwrap_or_else(Instant::now)
+                    .saturating_duration_since(req.enqueued),
+                first_token_latency: req
+                    .resume
+                    .first_token_at
+                    .map(|t| t.saturating_duration_since(req.enqueued)),
             }));
         }
         // Worst-case KV positions a joiner can ever write: its prompt plus
@@ -391,9 +448,22 @@ impl Engine {
         // zero stranded pages. (The `.max(1)` only guards the arithmetic:
         // zero-budget requests were all answered slot-free above, so this
         // is never reached with a resolved budget of 0.)
+        // (The formula also covers preempted requeues unchanged: their
+        // budget is pinned to the value resolved at first admission, and
+        // `prompt + budget` counts the resumed tokens exactly once whether
+        // they arrive via prefill or decode.)
         let worst_case = |r: &Request| (r.prompt.len() + r.budget(gen).max(1) - 1).min(cap);
         let ps = self.pool.page_size();
-        while self.pool.available() > 0 {
+        loop {
+            if self.pool.available() == 0 {
+                // Slot pressure: every slot is resident. A strictly
+                // higher-tier queued request may still get in by evicting
+                // a lower-tier victim (which frees its slot and pages).
+                if self.cfg.preemption && self.preempt_for(queue, &mut counts) {
+                    continue;
+                }
+                break;
+            }
             let pool = &self.pool;
             let prefix = &self.prefix;
             // Owned pages a joiner must reserve: its worst case minus the
@@ -419,6 +489,12 @@ impl Engine {
                 if queue.len() > 0 {
                     if let Some(page) = self.prefix.evict_unreferenced() {
                         self.pool.reclaim_shared(page);
+                        continue;
+                    }
+                    // Page pressure with nothing left to reclaim from the
+                    // index: a strictly higher-tier head may preempt a
+                    // lower-tier resident for its pages.
+                    if self.cfg.preemption && self.preempt_for(queue, &mut counts) {
                         continue;
                     }
                 }
@@ -449,6 +525,16 @@ impl Engine {
             counts.joins += 1;
             counts.prefill_tokens_saved += resume;
             counts.shared_pages += n_shared;
+            if req.resume.preempted {
+                // Everything past the shared-prefix resume point is
+                // recompute the preemption caused: the original prompt
+                // tail plus every token the victim had already generated.
+                counts.victim_recompute_tokens += req.prefill_len() - resume;
+                trace::instant_args(
+                    "readmit_recompute",
+                    &[("id", req.id as f64), ("engine", self.trace_id as f64)],
+                );
+            }
             trace::instant_args(
                 "request_admitted",
                 &[("id", req.id as f64), ("engine", self.trace_id as f64)],
@@ -461,6 +547,110 @@ impl Engine {
             self.seqs.push(s);
         }
         counts
+    }
+
+    /// Evict one resident sequence to relieve slot or page pressure, but
+    /// only when the queue's next pick STRICTLY outranks a resident by
+    /// base tier — aging credit is deliberately excluded, so two same-tier
+    /// requests can never preempt each other back and forth (no thrash).
+    /// The victim with the lowest base tier (ties: least compute sunk,
+    /// then lowest id — all deterministic) releases its slot and every
+    /// page it holds back to the pool and re-queues at the FRONT with its
+    /// generated tokens saved; readmission re-prefills them (see
+    /// [`sched::ResumeState`]). Pages the victim *published* to the prefix
+    /// index are owned by the index, not the slot, so they survive the
+    /// release and stay mappable by other requests. Returns whether a
+    /// victim was evicted; an eviction counts as a `leave` (the slot was
+    /// vacated) and the later readmission as a fresh `join`, so
+    /// `joins == leaves` still holds exactly at drain.
+    fn preempt_for(&mut self, queue: &mut Batcher, counts: &mut StepCounts) -> bool {
+        let Some(head) = queue.peek(self.cfg.admission) else {
+            return false;
+        };
+        let head_rank = head.priority.rank();
+        let victim = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.priority.rank() < head_rank)
+            .min_by_key(|&(_, s)| (s.priority.rank(), s.next_prefill + s.out.len(), s.id))
+            .map(|(i, _)| i);
+        let Some(idx) = victim else {
+            return false;
+        };
+        let s = self.seqs.remove(idx);
+        trace::instant_args("preempt", &[("id", s.id as f64), ("engine", self.trace_id as f64)]);
+        self.pool.release(s.slot);
+        let req = s.into_request();
+        trace::instant_args("requeue", &[("id", req.id as f64), ("engine", self.trace_id as f64)]);
+        queue.reinsert(req);
+        counts.preemptions += 1;
+        counts.leaves += 1;
+        true
+    }
+
+    /// SLO-aware load shedding: estimate the engine steps until the queue
+    /// would drain to its first token (resident prefill chunks + decode
+    /// steps, plus the queued requests' own, spread across the slots) and,
+    /// while that estimate exceeds `slo_first_token_steps`, drop the
+    /// newest lowest-tier queued request with [`ResponseStatus::Shed`] —
+    /// admitted work keeps its SLO instead of the whole queue missing it.
+    /// Deterministic: the predictor reads only logical quantities (queue
+    /// contents, resident progress), never wall time.
+    fn shed_over_slo(
+        &mut self,
+        queue: &mut Batcher,
+        events: &mut Vec<SeqEvent>,
+        counts: &mut StepCounts,
+    ) {
+        let slo = self.cfg.slo_first_token_steps;
+        let gen = self.cfg.gen_tokens;
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let slots = self.cfg.slots.max(1);
+        while queue.len() > 0 {
+            let resident: usize = self
+                .seqs
+                .iter()
+                .map(|s| {
+                    let prefill = s.prompt.len().saturating_sub(s.next_prefill);
+                    prefill.div_ceil(chunk) + s.budget.saturating_sub(s.out.len())
+                })
+                .sum();
+            let queued: usize = queue
+                .iter()
+                .map(|r| r.prefill_len().div_ceil(chunk) + r.budget(gen).max(1))
+                .sum();
+            if (resident + queued) / slots <= slo {
+                break;
+            }
+            let Some(req) = queue.shed_pop() else {
+                break;
+            };
+            trace::instant_args("shed", &[("id", req.id as f64), ("engine", self.trace_id as f64)]);
+            trace::instant_args(
+                "request_retired",
+                &[("id", req.id as f64), ("engine", self.trace_id as f64)],
+            );
+            counts.shed += 1;
+            events.push(SeqEvent::Finished(FinishedSeq {
+                id: req.id,
+                // A shed request that had run before preemption returns
+                // its partial output; a never-admitted one returns none.
+                tokens: req.resume.tokens,
+                status: ResponseStatus::Shed,
+                priority: req.priority,
+                enqueued: req.enqueued,
+                queue_wait: req
+                    .resume
+                    .admitted
+                    .unwrap_or_else(Instant::now)
+                    .saturating_duration_since(req.enqueued),
+                first_token_latency: req
+                    .resume
+                    .first_token_at
+                    .map(|t| t.saturating_duration_since(req.enqueued)),
+            }));
+        }
     }
 
     /// One lockstep model call over the given resident sequences (indices
@@ -514,6 +704,10 @@ impl Engine {
         t.truncated += counts.truncated;
         t.capacity_stopped += counts.capacity_stopped;
         t.leaves += counts.leaves;
+        t.preemptions += counts.preemptions;
+        t.shed += counts.shed;
+        t.victim_recompute_tokens += counts.victim_recompute_tokens;
+        t.slo_hits += counts.slo_hits;
         t.decode_batch.push(decode_width as f64);
         t.occupancy.push(self.pool.occupied() as f64 / self.pool.slots() as f64);
         t.queue_depth.push(queue.len() as f64);
@@ -543,10 +737,21 @@ impl Engine {
     pub fn step(&mut self, queue: &mut Batcher) -> Vec<SeqEvent> {
         let step_start = Instant::now();
         let _step = trace::span("engine_step");
+        // Advance the queue's logical clock exactly once per step — the
+        // deterministic time base for aging credit and the first-token
+        // SLO. (Idle polls tick too; with nothing queued there is nothing
+        // aging, so that is harmless.)
+        queue.tick();
         let mut events = Vec::new();
         let mut counts = {
             let _admit = trace::span("admit");
-            self.admit(queue, &mut events)
+            let mut c = self.admit(queue, &mut events);
+            if self.cfg.shed_policy == ShedPolicy::LowestPriority
+                && self.cfg.slo_first_token_steps > 0
+            {
+                self.shed_over_slo(queue, &mut events, &mut c);
+            }
+            c
         };
         let mut phases =
             PhaseTimes { admit: step_start.elapsed().as_secs_f64(), ..Default::default() };
@@ -643,6 +848,15 @@ impl Engine {
                 let first = s.out.len() == 1;
                 if first {
                     s.first_token_at = Some(now);
+                    // Goodput: the first token landed within the SLO's
+                    // logical-step window (or no SLO is configured). A
+                    // preempted-with-output victim never re-enters here —
+                    // its pre-seeded `out` keeps `first` false — so each
+                    // request is counted at most once.
+                    let slo = self.cfg.slo_first_token_steps as u64;
+                    if slo == 0 || queue.clock().saturating_sub(s.arrived_tick) <= slo {
+                        counts.slo_hits += 1;
+                    }
                     trace::instant_args(
                         "request_first_token",
                         &[("id", s.id as f64), ("engine", self.trace_id as f64)],
@@ -700,6 +914,7 @@ impl Engine {
                         id: s.id,
                         tokens: s.out,
                         status,
+                        priority: s.priority,
                         enqueued: s.enqueued,
                         queue_wait: s.admitted.saturating_duration_since(s.enqueued),
                         first_token_latency: s.first_token_at.map(|t| t - s.enqueued),
@@ -1278,5 +1493,126 @@ mod tests {
         let done = drain(&mut e, &mut q, 1);
         let ftl = done[0].first_token_latency.expect("generated ≥1 token");
         assert!(ftl <= done[0].enqueued.elapsed());
+    }
+
+    #[test]
+    fn preemption_evicts_lower_tier_and_outputs_stay_bit_identical() {
+        // One slot: a long-running Background resident blocks an
+        // Interactive arrival. With preemption on, the resident is
+        // evicted (its generated tokens saved), the Interactive request
+        // runs first, and the victim readmits and recomputes — both
+        // completions must still match the scalar reference exactly.
+        let m = tiny();
+        let cfg = EngineConfig {
+            slots: 1,
+            gen_tokens: 8,
+            preemption: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        let bg = vec![1, 2, 3];
+        let hi = vec![4, 5];
+        q.push(req(0, bg.clone()).with_priority(Priority::Background));
+        // Let the Background sequence admit and emit a couple of tokens
+        // before the Interactive request shows up.
+        for _ in 0..4 {
+            e.step(&mut q);
+        }
+        assert_eq!(e.occupied_slots(), 1);
+        q.push(req(1, hi.clone()).with_priority(Priority::Interactive));
+        let done = drain(&mut e, &mut q, 2);
+        let by_id = |id: u64| done.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(by_id(0).tokens, crate::coordinator::serve::generate(&m, &bg, 8));
+        assert_eq!(by_id(1).tokens, crate::coordinator::serve::generate(&m, &hi, 8));
+        assert_eq!(by_id(0).status, ResponseStatus::Complete);
+        assert_eq!(by_id(0).priority, Priority::Background);
+        // The Interactive request finished strictly before the victim.
+        let pos = |id: u64| done.iter().position(|f| f.id == id).unwrap();
+        assert!(pos(1) < pos(0), "preemption must reorder completion");
+        let t = e.telemetry().lock().unwrap().clone();
+        assert!(t.preemptions >= 1, "the resident must have been evicted: {t:?}");
+        assert!(t.victim_recompute_tokens > 0, "readmission recomputes the saved tokens");
+        assert_eq!(t.joins, t.leaves, "evictions pair with readmissions");
+        assert_eq!(t.pages_in_use_now, 0, "pages leaked across the preemption lifecycle");
+    }
+
+    #[test]
+    fn preemption_requires_a_strictly_lower_tier_victim() {
+        // Same-tier work must never preempt itself (no thrash): with two
+        // Batch requests on one slot, the second simply waits.
+        let m = tiny();
+        let cfg = EngineConfig {
+            slots: 1,
+            gen_tokens: 4,
+            preemption: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(m, cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2]));
+        e.step(&mut q);
+        q.push(req(1, vec![3, 4]));
+        let done = drain(&mut e, &mut q, 2);
+        assert_eq!(done.len(), 2);
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.preemptions, 0, "equal tiers must not preempt each other");
+    }
+
+    #[test]
+    fn shed_drops_lowest_tier_and_accounting_balances() {
+        // One slot, tiny SLO: the Background backlog behind an Interactive
+        // request can never make its first token in time, so the shedder
+        // drops it (newest first) instead of letting everything miss.
+        let m = tiny();
+        let cfg = EngineConfig {
+            slots: 1,
+            gen_tokens: 8,
+            slo_first_token_steps: 3,
+            shed_policy: ShedPolicy::LowestPriority,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Arc::clone(&m), cfg);
+        let mut q = Batcher::default();
+        q.push(req(0, vec![1, 2, 3, 4]).with_priority(Priority::Interactive));
+        for i in 1..5u64 {
+            q.push(req(i, vec![1, 2, 3, 4]).with_priority(Priority::Background));
+        }
+        let done = drain(&mut e, &mut q, 5);
+        let shed: Vec<&FinishedSeq> =
+            done.iter().filter(|f| f.status == ResponseStatus::Shed).collect();
+        assert!(!shed.is_empty(), "the backlog must have been shed");
+        assert!(shed.iter().all(|f| f.priority == Priority::Background), "only the lowest tier");
+        assert!(shed.iter().all(|f| f.tokens.is_empty()), "never-admitted sheds carry no tokens");
+        let ok = done.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(ok.tokens.len(), 8, "the interactive request is untouched");
+        let t = e.telemetry().lock().unwrap().clone();
+        assert_eq!(t.shed, shed.len());
+        // Accounting: every request leaves exactly once — shed from the
+        // queue, or retired from a slot (leaves minus preemption evictions).
+        assert_eq!(t.shed + (t.leaves - t.preemptions), 5);
+        assert_eq!(t.joins, t.leaves);
+        assert!(t.slo_hits >= 1, "the admitted request made its SLO: {t:?}");
+        assert_eq!(t.pages_in_use_now, 0);
+    }
+
+    #[test]
+    fn shed_policy_off_never_sheds_even_past_the_slo() {
+        let m = tiny();
+        let cfg = EngineConfig {
+            slots: 1,
+            gen_tokens: 8,
+            slo_first_token_steps: 1,
+            shed_policy: ShedPolicy::Off,
+            ..Default::default()
+        };
+        let mut e = Engine::new(m, cfg);
+        let mut q = Batcher::default();
+        for i in 0..4u64 {
+            q.push(req(i, vec![1, 2, 3]).with_priority(Priority::Background));
+        }
+        let done = drain(&mut e, &mut q, 4);
+        assert!(done.iter().all(|f| f.status == ResponseStatus::Complete));
+        assert_eq!(e.telemetry().lock().unwrap().shed, 0);
     }
 }

@@ -14,6 +14,13 @@
 //! prefix from being published). Entries hold an `Arc<KvPage>`; the
 //! [`KvPool`](super::KvPool) bills shared pages pool-wide and reclaims one
 //! only when the index drops the final strong reference.
+//!
+//! Because the index holds its *own* strong reference to every published
+//! page, a donor's published pages survive the donor's release — including
+//! a preemption eviction. `KvPool::release` only returns the slot's owned
+//! pages; shared pages stay alive under the index's `Arc`, so a readmitted
+//! victim (or any other joiner) can re-attach the very pages the victim
+//! published before it was evicted.
 
 use crate::model::KvPage;
 use crate::util::trace;
@@ -388,6 +395,34 @@ mod tests {
         let evicted = idx.insert(&[3, 4], Arc::clone(&p2));
         assert!(evicted.is_empty(), "both pages are mapped — nothing reclaimable");
         assert_eq!(idx.len(), 2, "cap is exceeded, never aliased");
+    }
+
+    #[test]
+    fn published_pages_survive_donor_eviction() {
+        // Preemption releases the donor's slot, but the index's own Arc
+        // keeps every page it published alive and matchable — a readmitted
+        // victim re-attaches the prefix it computed before the eviction.
+        let ps = 2;
+        let mut idx = PrefixIndex::new(ps);
+        let prompt = [1usize, 2, 3, 4];
+        let donor_view = {
+            // Scope the donor's mapping the way `KvPool::release` ends it:
+            // the donor publishes, then its references drop.
+            let p1 = page(ps, 1.0);
+            let p2 = page(ps, 2.0);
+            idx.insert(&prompt[..2], Arc::clone(&p1));
+            idx.insert(&prompt, Arc::clone(&p2));
+            vec![p1, p2]
+        };
+        drop(donor_view); // the eviction: donor's page table is torn down
+        let m = idx.match_and_touch(&prompt);
+        assert_eq!(m.len(), 2, "published pages outlive the donor");
+        assert_eq!(tag_of(&m[0]), 1.0);
+        assert_eq!(tag_of(&m[1]), 2.0);
+        assert!(
+            m.iter().all(|p| Arc::strong_count(p) == 2),
+            "index + readmitted mapping are the only references"
+        );
     }
 
     #[test]

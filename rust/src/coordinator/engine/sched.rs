@@ -1,6 +1,8 @@
 //! Scheduling types for the continuous-batching engine: the admission
 //! queue ([`Batcher`] — the surviving piece of the old static batcher), the
-//! admission policy, and the per-sequence in-flight state.
+//! admission policy, priority classes with deterministic logical-clock
+//! aging, the preemption resume state, and the per-sequence in-flight
+//! state.
 //!
 //! Everything here is pure bookkeeping (no model, no threads), so the
 //! admission behavior is unit-testable in isolation; the model-touching
@@ -9,6 +11,86 @@
 use crate::util::trace;
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Logical-clock ticks of queue wait that buy one rank of aging credit.
+/// The engine ticks the queue once per step, so a request that has waited
+/// `AGE_TICKS_PER_RANK` steps gains one effective rank; after
+/// `(rank_gap + 1) × AGE_TICKS_PER_RANK` steps it strictly outranks every
+/// fresher arrival of every tier. That bounds starvation for the low tiers
+/// and for `ShortestPrompt` (a long prompt outranks fresh short ones after
+/// one rank of credit) — property-tested below and in the engine's
+/// integration tests.
+pub const AGE_TICKS_PER_RANK: u64 = 16;
+
+/// Scheduling class for a request. Higher tiers admit first under
+/// contention; lower tiers are the preferred victims for preemption and
+/// load shedding. Admission compares tiers through [`Priority::rank`] plus
+/// a deterministic aging credit (see [`AGE_TICKS_PER_RANK`]), so low-tier
+/// work is deprioritized, never starved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns): admits ahead of everything
+    /// and may preempt lower tiers under page pressure.
+    Interactive,
+    /// The default tier for ordinary throughput work.
+    #[default]
+    Batch,
+    /// Best-effort work (offline evals, cache warmers): first to be shed
+    /// or preempted, protected from starvation only by aging.
+    Background,
+}
+
+impl Priority {
+    /// Base scheduling rank — higher admits first. Adjacent tiers are one
+    /// rank apart, so one [`AGE_TICKS_PER_RANK`] wait promotes a request
+    /// past a fresher request one tier up.
+    pub fn rank(&self) -> u64 {
+        match self {
+            Priority::Interactive => 2,
+            Priority::Batch => 1,
+            Priority::Background => 0,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "background" => Ok(Priority::Background),
+            other => anyhow::bail!("unknown priority '{other}' (interactive|batch|background)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
+
+/// Progress a preempted sequence carries back into the queue, replayed on
+/// readmission: the tokens it had already generated rejoin the prefill
+/// stream (their KV is recomputed — greedy decode from a recomputed prefix
+/// is deterministic, so the completion stays bit-identical), generation
+/// resumes after them, and the original admission/first-token stamps
+/// survive so latency accounting spans the whole request, not just the
+/// final residency.
+#[derive(Debug, Default)]
+pub struct ResumeState {
+    /// True once the request has been preempted at least once (set even
+    /// for mid-prefill victims with no generated tokens yet) — feeds the
+    /// `victim_recompute_tokens` telemetry on readmission.
+    pub preempted: bool,
+    /// Tokens generated before preemption, in emission order.
+    pub tokens: Vec<usize>,
+    /// First-token stamp from the earlier residency, if one was emitted.
+    pub first_token_at: Option<Instant>,
+    /// The original admission stamp — queue wait is measured to the FIRST
+    /// admission; preemption must not make a request look fresher.
+    pub admitted: Option<Instant>,
+}
 
 /// An inference request.
 #[derive(Debug)]
@@ -32,6 +114,15 @@ pub struct Request {
     /// a prefix of the unstopped generation) and the response reports
     /// [`ResponseStatus::StoppedAtToken`].
     pub stop_tokens: Vec<usize>,
+    /// Scheduling tier (see [`Priority`]); defaults to [`Priority::Batch`].
+    pub priority: Priority,
+    /// The [`Batcher`] logical-clock value when this request was pushed —
+    /// the base the aging credit is measured from. Stamped by
+    /// [`Batcher::push`]; preserved verbatim across preemption requeues.
+    pub arrived_tick: u64,
+    /// Saved progress from a preempted residency (empty for fresh
+    /// requests).
+    pub resume: ResumeState,
 }
 
 impl Request {
@@ -45,6 +136,9 @@ impl Request {
             gen_tokens: None,
             share_prefix: true,
             stop_tokens: Vec::new(),
+            priority: Priority::default(),
+            arrived_tick: 0,
+            resume: ResumeState::default(),
         }
     }
 
@@ -60,6 +154,12 @@ impl Request {
         self
     }
 
+    /// Attach a scheduling tier.
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
+        self
+    }
+
     /// Opt this request out of shared-prefix KV reuse.
     pub fn without_prefix_sharing(mut self) -> Request {
         self.share_prefix = false;
@@ -70,6 +170,14 @@ impl Request {
     /// server-wide default.
     pub fn budget(&self, default_gen: usize) -> usize {
         self.gen_tokens.unwrap_or(default_gen)
+    }
+
+    /// Length of the prefill stream on (re)admission: the prompt plus any
+    /// tokens a previous residency already generated (recomputed after a
+    /// preemption). Admission sizes KV reservations and the slot-free
+    /// rejection fast path against this, not the bare prompt.
+    pub fn prefill_len(&self) -> usize {
+        self.prompt.len() + self.resume.tokens.len()
     }
 }
 
@@ -92,17 +200,27 @@ pub enum ResponseStatus {
     /// exactly on the budget's final token — the stop predicate matched,
     /// whatever the budget said.
     StoppedAtToken,
+    /// Dropped from the queue by the SLO-aware load shedder: under
+    /// overload the engine sacrifices the lowest-priority queued work so
+    /// admitted requests keep their first-token SLO instead of the whole
+    /// queue missing it. The response carries no new tokens (only the
+    /// pre-preemption tokens, if the request had run before).
+    Shed,
 }
 
-/// Per-step admission order for queued requests.
+/// Per-step admission order for queued requests. Both policies rank by
+/// aged priority first (see [`Batcher::effective_rank`]); the policy only
+/// decides the tie-break within the top rank.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum AdmissionPolicy {
-    /// First come, first served.
+    /// First come, first served among the top aged rank.
     #[default]
     Fcfs,
-    /// Shortest prompt first (FIFO among equals) — favors fast first
-    /// tokens for cheap requests under a backlog, at the cost of strict
-    /// fairness.
+    /// Shortest prompt first (FIFO among equals) within the top aged rank
+    /// — favors fast first tokens for cheap requests under a backlog.
+    /// Aging bounds the starvation this used to inflict on long prompts:
+    /// after [`AGE_TICKS_PER_RANK`] waited steps a long prompt outranks
+    /// every fresher short one.
     ShortestPrompt,
 }
 
@@ -123,6 +241,38 @@ impl AdmissionPolicy {
     }
 }
 
+/// What the engine sheds when the predicted first-token wait for queued
+/// work exceeds the configured SLO.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Never shed; overload shows up as queue wait (the prior behavior,
+    /// and the right setting for bit-identity A/B runs, where shed
+    /// decisions would otherwise diverge between the arms).
+    #[default]
+    Off,
+    /// Shed the newest request of the lowest base tier until the predicted
+    /// wait fits the SLO — admitted work keeps its SLO instead of the
+    /// whole queue missing it.
+    LowestPriority,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<ShedPolicy> {
+        match s {
+            "off" => Ok(ShedPolicy::Off),
+            "lowest" => Ok(ShedPolicy::LowestPriority),
+            other => anyhow::bail!("unknown shed policy '{other}' (off|lowest)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::Off => "off",
+            ShedPolicy::LowestPriority => "lowest",
+        }
+    }
+}
+
 /// The admission queue: requests wait here until the engine has a free KV
 /// slot. (This is what remains of the old dynamic batcher — batch *shape*
 /// is no longer decided here; the engine re-forms its decode batch every
@@ -130,11 +280,33 @@ impl AdmissionPolicy {
 #[derive(Default)]
 pub struct Batcher {
     queue: VecDeque<Request>,
+    /// Deterministic logical clock: ticked once per engine step (never
+    /// wall time), it stamps [`Request::arrived_tick`] at push and drives
+    /// the aging credit in [`Batcher::effective_rank`].
+    clock: u64,
 }
 
 impl Batcher {
-    pub fn push(&mut self, req: Request) {
+    pub fn push(&mut self, mut req: Request) {
+        req.arrived_tick = self.clock;
         self.queue.push_back(req);
+    }
+
+    /// Advance the logical clock by one engine step.
+    pub fn tick(&mut self) {
+        self.clock += 1;
+    }
+
+    /// The current logical-clock value (steps since the queue was built).
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Return a preempted request to the FRONT of the queue, keeping its
+    /// original [`Request::arrived_tick`] (and so its accumulated aging
+    /// credit): preemption must not reset a victim's place in line.
+    pub fn reinsert(&mut self, req: Request) {
+        self.queue.push_front(req);
     }
 
     pub fn len(&self) -> usize {
@@ -143,6 +315,13 @@ impl Batcher {
 
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// Iterate queued requests in arrival order (front = oldest) — the
+    /// engine's shed-time backlog predictor walks this to estimate queue
+    /// wait without disturbing the queue.
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.queue.iter()
     }
 
     /// Remove every queued request matching `pred`, preserving FIFO order
@@ -169,15 +348,31 @@ impl Batcher {
         taken
     }
 
-    /// Index of the next request `policy` would admit, if any.
+    /// The rank admission actually compares: the tier's base rank plus one
+    /// rank per [`AGE_TICKS_PER_RANK`] ticks waited. Monotone in wait, so
+    /// every queued request eventually outranks all fresher arrivals —
+    /// the starvation bound for `ShortestPrompt` and the low tiers.
+    pub fn effective_rank(&self, req: &Request) -> u64 {
+        req.priority.rank() + self.clock.saturating_sub(req.arrived_tick) / AGE_TICKS_PER_RANK
+    }
+
+    /// Index of the next request `policy` would admit, if any: the highest
+    /// aged rank, tie-broken by the policy (FCFS: earliest; shortest:
+    /// cheapest prompt, FIFO among equals).
     fn next_index(&self, policy: AdmissionPolicy) -> Option<usize> {
+        use std::cmp::Reverse;
         match policy {
-            AdmissionPolicy::Fcfs => (!self.queue.is_empty()).then_some(0),
+            AdmissionPolicy::Fcfs => self
+                .queue
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, r)| (self.effective_rank(r), Reverse(*i)))
+                .map(|(i, _)| i),
             AdmissionPolicy::ShortestPrompt => self
                 .queue
                 .iter()
                 .enumerate()
-                .min_by_key(|(i, r)| (r.prompt.len(), *i))
+                .max_by_key(|(i, r)| (self.effective_rank(r), Reverse((r.prompt.len(), *i))))
                 .map(|(i, _)| i),
         }
     }
@@ -216,12 +411,29 @@ impl Batcher {
             None
         }
     }
+
+    /// Remove the queued request the load shedder should drop: the NEWEST
+    /// request of the LOWEST base tier (aging credit deliberately ignored
+    /// — shedding is about who loses least, and the newest low-tier
+    /// arrival has sunk the least wait). Returns `None` on an empty queue.
+    pub fn shed_pop(&mut self) -> Option<Request> {
+        let idx = self
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, r)| (r.priority.rank(), std::cmp::Reverse(*i)))
+            .map(|(i, _)| i)?;
+        self.queue.remove(idx)
+    }
 }
 
 /// One in-flight sequence: its KV slot, prefill cursor, last logits,
 /// generated tokens, and resolved generation budget.
 pub struct Sequence {
     pub id: u64,
+    /// The full prefill stream for this residency: the original prompt
+    /// plus any tokens a preempted earlier residency had already generated
+    /// (those are re-prefilled to rebuild their KV — see [`ResumeState`]).
     pub prompt: Vec<usize>,
     /// Index into the engine's [`super::KvPool`].
     pub slot: usize,
@@ -243,10 +455,21 @@ pub struct Sequence {
     /// Stop tokens, carried from the request (the engine's retire check
     /// reads these next to the budget).
     pub stop_tokens: Vec<usize>,
+    /// Scheduling tier, carried from the request — the preemption victim
+    /// order and the per-tier latency summaries read this.
+    pub priority: Priority,
+    /// Arrival tick, carried from the request — survives preemption so a
+    /// requeued victim keeps its aging credit, and feeds the SLO
+    /// goodput check at first-token time.
+    pub arrived_tick: u64,
+    /// How many of `out`'s leading tokens were resumed from a preempted
+    /// residency (re-prefilled, not re-emitted) — `prompt`'s last
+    /// `resumed` tokens are exactly these.
+    pub resumed: usize,
     pub enqueued: Instant,
-    /// When the engine admitted this sequence into its KV slot (stamped in
-    /// [`Sequence::new`]); `admitted − enqueued` is the queue wait the
-    /// serve layer summarizes.
+    /// When the engine FIRST admitted this request into a KV slot (stamped
+    /// in [`Sequence::new`], restored across preemptions); `admitted −
+    /// enqueued` is the queue wait the serve layer summarizes.
     pub admitted: Instant,
     pub first_token_at: Option<Instant>,
 }
@@ -254,20 +477,26 @@ pub struct Sequence {
 impl Sequence {
     pub fn new(req: Request, slot: usize, vocab: usize, default_gen: usize) -> Sequence {
         let budget = req.budget(default_gen);
+        let resumed = req.resume.tokens.len();
+        let mut prompt = req.prompt;
+        prompt.extend_from_slice(&req.resume.tokens);
         Sequence {
             id: req.id,
-            prompt: req.prompt,
+            prompt,
             slot,
             next_prefill: 0,
             logits: vec![0.0; vocab],
-            out: Vec::new(),
+            out: req.resume.tokens,
             budget,
             share_prefix: req.share_prefix,
             published: 0,
             stop_tokens: req.stop_tokens,
+            priority: req.priority,
+            arrived_tick: req.arrived_tick,
+            resumed,
             enqueued: req.enqueued,
-            admitted: Instant::now(),
-            first_token_at: None,
+            admitted: req.resume.admitted.unwrap_or_else(Instant::now),
+            first_token_at: req.resume.first_token_at,
         }
     }
 
@@ -281,6 +510,32 @@ impl Sequence {
     /// the budget.
     pub fn stopped_at_token(&self) -> bool {
         self.out.last().is_some_and(|t| self.stop_tokens.contains(t))
+    }
+
+    /// Tear this in-flight sequence back down into a queued request — the
+    /// preemption path. The KV slot is NOT released here (the engine does
+    /// that against the pool); all scheduling state survives: original
+    /// prompt, resolved budget, tier, arrival tick, and the
+    /// generated-so-far tokens that prefill recomputes on readmission.
+    pub fn into_request(mut self) -> Request {
+        let orig = self.prompt.len() - self.resumed;
+        self.prompt.truncate(orig);
+        Request {
+            id: self.id,
+            prompt: self.prompt,
+            enqueued: self.enqueued,
+            gen_tokens: Some(self.budget),
+            share_prefix: self.share_prefix,
+            stop_tokens: self.stop_tokens,
+            priority: self.priority,
+            arrived_tick: self.arrived_tick,
+            resume: ResumeState {
+                preempted: true,
+                tokens: self.out,
+                first_token_at: self.first_token_at,
+                admitted: Some(self.admitted),
+            },
+        }
     }
 }
 
@@ -376,5 +631,143 @@ mod tests {
             assert_eq!(AdmissionPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(AdmissionPolicy::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn priority_and_shed_policy_parse_round_trip() {
+        for p in [Priority::Interactive, Priority::Batch, Priority::Background] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("vip").is_err());
+        assert_eq!(Priority::default(), Priority::Batch);
+        for s in [ShedPolicy::Off, ShedPolicy::LowestPriority] {
+            assert_eq!(ShedPolicy::parse(s.name()).unwrap(), s);
+        }
+        assert!(ShedPolicy::parse("all").is_err());
+    }
+
+    #[test]
+    fn aging_promotes_starved_background_past_fresh_interactive() {
+        let mut b = Batcher::default();
+        b.push(req(0, 8).with_priority(Priority::Background));
+        b.push(req(1, 8).with_priority(Priority::Interactive));
+        assert_eq!(b.peek(AdmissionPolicy::Fcfs).unwrap().id, 1, "interactive outranks when fresh");
+        // Background (rank 0) vs Interactive (rank 2): three ranks of aging
+        // credit make the old request strictly dominate any FRESH arrival.
+        for _ in 0..3 * AGE_TICKS_PER_RANK {
+            b.tick();
+        }
+        let first = b.pop(AdmissionPolicy::Fcfs).unwrap().id;
+        assert_eq!(first, 1, "equally-aged peers keep tier order");
+        b.push(req(2, 8).with_priority(Priority::Interactive));
+        assert_eq!(
+            b.pop(AdmissionPolicy::Fcfs).unwrap().id,
+            0,
+            "aged background strictly outranks a fresh interactive arrival"
+        );
+    }
+
+    #[test]
+    fn adversarial_short_stream_cannot_starve_a_long_prompt() {
+        // Regression for ShortestPrompt starvation: a long prompt queued
+        // behind an endless stream of fresh short prompts must admit within
+        // the aging bound — one AGE_TICKS_PER_RANK wait buys a same-tier
+        // rank, which beats any fresh arrival's length advantage.
+        let mut b = Batcher::default();
+        b.push(req(0, 64)); // the long prompt short arrivals used to jump
+        let mut admitted_at = None;
+        for t in 0..2 * AGE_TICKS_PER_RANK {
+            b.tick();
+            b.push(req(1000 + t, 1)); // fresh adversarial short prompt
+            if b.pop(AdmissionPolicy::ShortestPrompt).unwrap().id == 0 {
+                admitted_at = Some(t);
+                break;
+            }
+        }
+        let t = admitted_at.expect("long prompt starved past the aging bound");
+        assert!(t <= AGE_TICKS_PER_RANK, "admitted within one aging rank, got {t}");
+    }
+
+    #[test]
+    fn aged_ordering_is_deterministic() {
+        let run = || {
+            let mut b = Batcher::default();
+            let prios = [Priority::Background, Priority::Interactive, Priority::Batch];
+            for i in 0..12u64 {
+                b.push(req(i, 1 + (i as usize * 5) % 7).with_priority(prios[(i % 3) as usize]));
+                for _ in 0..(i % 4) {
+                    b.tick();
+                }
+            }
+            let mut order = Vec::new();
+            while let Some(r) = b.pop(AdmissionPolicy::Fcfs) {
+                order.push(r.id);
+                b.tick();
+            }
+            order
+        };
+        let order = run();
+        assert_eq!(order.len(), 12);
+        assert_eq!(run(), order, "same push/tick/pop script ⇒ same order (logical clock only)");
+        assert_eq!(order[0], 1, "the oldest interactive request pops first");
+    }
+
+    #[test]
+    fn reinsert_keeps_arrival_tick_and_goes_to_front() {
+        let mut b = Batcher::default();
+        b.push(req(0, 2));
+        for _ in 0..5 {
+            b.tick();
+        }
+        b.push(req(1, 2));
+        let head = b.pop(AdmissionPolicy::Fcfs).unwrap();
+        assert_eq!(head.id, 0);
+        assert_eq!(head.arrived_tick, 0);
+        b.reinsert(head);
+        let again = b.pop(AdmissionPolicy::Fcfs).unwrap();
+        assert_eq!(again.id, 0, "reinserted request returns to the head");
+        assert_eq!(again.arrived_tick, 0, "reinsert keeps the original arrival tick");
+    }
+
+    #[test]
+    fn shed_pop_drops_newest_lowest_tier_first() {
+        let mut b = Batcher::default();
+        b.push(req(0, 2).with_priority(Priority::Background));
+        b.push(req(1, 2).with_priority(Priority::Interactive));
+        b.push(req(2, 2).with_priority(Priority::Background));
+        b.push(req(3, 2).with_priority(Priority::Batch));
+        assert_eq!(b.shed_pop().unwrap().id, 2, "newest background sheds first");
+        assert_eq!(b.shed_pop().unwrap().id, 0);
+        assert_eq!(b.shed_pop().unwrap().id, 3, "then batch");
+        assert_eq!(b.shed_pop().unwrap().id, 1, "interactive sheds last");
+        assert!(b.shed_pop().is_none());
+    }
+
+    #[test]
+    fn preemption_round_trips_through_into_request() {
+        let r = req(7, 3).with_priority(Priority::Interactive).with_budget(6);
+        let mut s = Sequence::new(r, 0, 4, 16);
+        assert_eq!(s.budget, 6);
+        s.out = vec![9, 8];
+        s.next_prefill = s.prompt.len();
+        let first = Some(s.admitted);
+        s.first_token_at = first;
+        let admitted = s.admitted;
+        let rq = s.into_request();
+        assert_eq!(rq.prompt, vec![1, 1, 1], "original prompt survives the requeue");
+        assert_eq!(rq.resume.tokens, vec![9, 8]);
+        assert!(rq.resume.preempted);
+        assert_eq!(rq.gen_tokens, Some(6), "budget pinned to the value resolved at admission");
+        assert_eq!(rq.priority, Priority::Interactive);
+        assert_eq!(rq.prefill_len(), 5);
+        // Readmission: the generated tokens rejoin the prefill stream and
+        // the original stamps survive.
+        let s2 = Sequence::new(rq, 3, 4, 16);
+        assert_eq!(s2.prompt, vec![1, 1, 1, 9, 8]);
+        assert_eq!(s2.out, vec![9, 8]);
+        assert_eq!(s2.resumed, 2);
+        assert_eq!(s2.admitted, admitted, "queue wait still measured to the FIRST admission");
+        assert_eq!(s2.first_token_at, first);
+        assert!(s2.prefilling());
     }
 }

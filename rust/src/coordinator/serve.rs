@@ -14,19 +14,32 @@
 //! bytes. Requests join and leave mid-flight; nothing waits for a batch to
 //! drain. Per-token streaming, per-request latency (completion and first
 //! token), and per-step engine telemetry are reported via [`ServeStats`].
+//!
+//! **Overload behavior.** The engine-level knobs ride through
+//! [`ServeConfig`]: `preemption` lets the engine evict a resident victim
+//! when a strictly higher-priority request is blocked, `slo_first_token_steps`
+//! + `shed_policy` drop lowest-priority queued work once the predicted
+//! queue wait exceeds the SLO ([`ResponseStatus::Shed`]), and
+//! [`ArrivalPlan`] drives *open-loop* request injection (poisson / burst /
+//! ramp storms) through the deterministic synchronous driver
+//! [`run_load_open`], so overload scenarios reproduce step-for-step from a
+//! seed.
 
 use crate::coordinator::engine::{Engine, EngineConfig, EngineTelemetry, SeqEvent};
 use crate::json::{self, Json};
 use crate::model::{KvCache, TransformerLM};
 use crate::sparse::PackOptions;
 use crate::tensor::argmax;
+use crate::util::prng::Rng;
 use crate::util::stats::Summary;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-pub use crate::coordinator::engine::{AdmissionPolicy, Batcher, Request, ResponseStatus};
+pub use crate::coordinator::engine::{
+    AdmissionPolicy, Batcher, Priority, Request, ResponseStatus, ShedPolicy,
+};
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -64,6 +77,15 @@ pub struct ServeConfig {
     /// Overflow LRU-evicts unreferenced entries deterministically and
     /// reports them as `prefix_evictions_cap`.
     pub prefix_cap: usize,
+    /// Let the engine evict a resident victim (releasing its pages and
+    /// re-queuing it with generated tokens saved) when a strictly
+    /// higher-priority request is blocked on slots or pages.
+    pub preemption: bool,
+    /// First-token SLO in engine steps of queue wait (`0` ⇒ no SLO).
+    /// Feeds both `goodput_under_slo` accounting and the shed predicate.
+    pub slo_first_token_steps: usize,
+    /// What to drop when the predicted queue wait blows through the SLO.
+    pub shed_policy: ShedPolicy,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +101,9 @@ impl Default for ServeConfig {
             kv_pages: 0,
             share_prefix: true,
             prefix_cap: 0,
+            preemption: false,
+            slo_first_token_steps: 0,
+            shed_policy: ShedPolicy::Off,
         }
     }
 }
@@ -100,6 +125,97 @@ impl ServeConfig {
             page_size: self.page_size,
             kv_pages: self.kv_pages,
             prefix_cap: self.prefix_cap,
+            preemption: self.preemption,
+            slo_first_token_steps: self.slo_first_token_steps,
+            shed_policy: self.shed_policy,
+        }
+    }
+}
+
+/// When each request of an open-loop workload enters the admission queue,
+/// measured on the engine's step clock — a seeded deterministic stand-in
+/// for wall-clock arrival processes, so storm scenarios replay exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalPlan {
+    /// Every request queued up front; the engine drains the backlog (the
+    /// closed-loop measurement harness).
+    Closed,
+    /// Open loop: i.i.d. exponential inter-arrival gaps at `rate` requests
+    /// per engine step, drawn from the seeded [`Rng`] stream.
+    Poisson { rate: f64 },
+    /// Open loop: bursts of `n` back-to-back arrivals separated by `gap`
+    /// idle steps — the overload-spike shape the CI gate leans on.
+    Burst { n: usize, gap: usize },
+    /// Open loop: inter-arrival gaps shrink linearly across the workload,
+    /// ramping a lazy trickle up into saturation.
+    Ramp,
+}
+
+impl ArrivalPlan {
+    /// Parse `closed` | `poisson:RATE` | `burst:N:GAP` | `ramp`.
+    pub fn parse(s: &str) -> anyhow::Result<ArrivalPlan> {
+        let bad = || {
+            anyhow::anyhow!("unknown arrival plan '{s}' (closed|poisson:RATE|burst:N:GAP|ramp)")
+        };
+        match s.split(':').collect::<Vec<_>>().as_slice() {
+            ["closed"] => Ok(ArrivalPlan::Closed),
+            ["ramp"] => Ok(ArrivalPlan::Ramp),
+            ["poisson", rate] => {
+                let rate: f64 = rate.parse().map_err(|_| bad())?;
+                anyhow::ensure!(rate > 0.0 && rate.is_finite(), "poisson rate must be positive");
+                Ok(ArrivalPlan::Poisson { rate })
+            }
+            ["burst", n, gap] => {
+                let n: usize = n.parse().map_err(|_| bad())?;
+                let gap: usize = gap.parse().map_err(|_| bad())?;
+                anyhow::ensure!(n > 0, "burst size must be positive");
+                Ok(ArrivalPlan::Burst { n, gap })
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    /// Canonical label, `parse`-round-trippable and echoed into SERVE json.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalPlan::Closed => "closed".to_string(),
+            ArrivalPlan::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalPlan::Burst { n, gap } => format!("burst:{n}:{gap}"),
+            ArrivalPlan::Ramp => "ramp".to_string(),
+        }
+    }
+
+    /// Arrival step for each of `n` requests, non-decreasing. Only the
+    /// Poisson shape consumes the seed; the rest are seed-independent.
+    pub fn schedule(&self, n: usize, seed: u64) -> Vec<u64> {
+        match *self {
+            ArrivalPlan::Closed => vec![0; n],
+            ArrivalPlan::Poisson { rate } => {
+                let mut rng = Rng::new(seed ^ 0x4A55_4C49_4152_5249);
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        // Inverse-CDF exponential gap; 1 − u ∈ (0, 1] keeps
+                        // ln finite.
+                        t += -(1.0 - rng.f64()).ln() / rate;
+                        t as u64
+                    })
+                    .collect()
+            }
+            ArrivalPlan::Burst { n: burst, gap } => {
+                (0..n).map(|i| ((i / burst) * gap) as u64).collect()
+            }
+            ArrivalPlan::Ramp => {
+                let mut t = 0u64;
+                (0..n)
+                    .map(|i| {
+                        let at = t;
+                        // Gaps shrink toward back-to-back as i → n.
+                        t += ((n - i) as u64).div_ceil(4).max(1);
+                        at
+                    })
+                    .collect()
+            }
         }
     }
 }
@@ -121,8 +237,13 @@ pub struct Response {
     /// [`ResponseStatus::CapacityStopped`] marks generation cut short by
     /// KV capacity (fewer tokens than the budget, by memory not choice);
     /// [`ResponseStatus::StoppedAtToken`] marks generation ended by one of
-    /// the request's stop tokens (which is the last token returned).
+    /// the request's stop tokens (which is the last token returned);
+    /// [`ResponseStatus::Shed`] marks queued work dropped by the SLO shed
+    /// policy (tokens hold whatever a prior preempted residency generated).
     pub status: ResponseStatus,
+    /// Priority tier the request ran under (feeds the per-tier latency
+    /// summaries).
+    pub priority: Priority,
 }
 
 /// One event on a streaming response channel.
@@ -175,6 +296,24 @@ pub struct ServeStats {
     pub truncated: usize,
     /// Requests stopped by KV capacity before their generation budget.
     pub capacity_stopped: usize,
+    /// Residents evicted mid-flight for higher-priority work.
+    pub preemptions: usize,
+    /// Queued requests dropped by the SLO shed policy.
+    pub shed: usize,
+    /// Already-computed tokens re-prefilled when preempted victims
+    /// readmitted (the KV recompute bill preemption pays).
+    pub victim_recompute_tokens: usize,
+    /// Fraction of submitted requests whose first token landed within
+    /// `slo_first_token_steps` of queue wait (all first tokens when no SLO
+    /// was configured).
+    pub goodput_under_slo: f64,
+    /// Arrival plan the workload ran under (e.g. `closed`, `burst:8:4`).
+    pub arrivals: String,
+    /// First-token latency split by priority tier (seconds; empty tiers
+    /// summarize to zero).
+    pub ftl_interactive: Summary,
+    pub ftl_batch: Summary,
+    pub ftl_background: Summary,
     /// Engine steps that did work.
     pub steps: usize,
     /// Configured KV-slot arena size.
@@ -227,20 +366,18 @@ impl ServeStats {
 
     fn from_run(
         n_requests: usize,
-        tokens_generated: usize,
         wall_seconds: f64,
-        latencies: &[f64],
-        queue_waits: &[f64],
-        first_token_latencies: &[f64],
+        acc: &RunAccumulator,
+        arrivals: String,
         t: &EngineTelemetry,
     ) -> ServeStats {
         ServeStats {
             n_requests,
-            tokens_generated,
+            tokens_generated: acc.tokens,
             wall_seconds,
-            latency: Summary::of(latencies),
-            queue_wait: Summary::of(queue_waits),
-            first_token_latency: Summary::of(first_token_latencies),
+            latency: Summary::of(&acc.latencies),
+            queue_wait: Summary::of(&acc.queue_waits),
+            first_token_latency: Summary::of(&acc.first_token_latencies),
             batch_sizes: Summary::of(&t.decode_batch),
             slot_occupancy: Summary::of(&t.occupancy),
             queue_depth: Summary::of(&t.queue_depth),
@@ -250,6 +387,14 @@ impl ServeStats {
             leaves: t.leaves,
             truncated: t.truncated,
             capacity_stopped: t.capacity_stopped,
+            preemptions: t.preemptions,
+            shed: t.shed,
+            victim_recompute_tokens: t.victim_recompute_tokens,
+            goodput_under_slo: t.slo_hits as f64 / n_requests.max(1) as f64,
+            arrivals,
+            ftl_interactive: Summary::of(&acc.ftl_by_tier[Priority::Interactive.rank() as usize]),
+            ftl_batch: Summary::of(&acc.ftl_by_tier[Priority::Batch.rank() as usize]),
+            ftl_background: Summary::of(&acc.ftl_by_tier[Priority::Background.rank() as usize]),
             steps: t.steps,
             slots: t.slots,
             page_size: t.page_size,
@@ -267,7 +412,7 @@ impl ServeStats {
             time_retire_s: t.time_retire_s,
             time_step_s: t.time_step_s,
             kernel_time: Vec::new(),
-            completions_digest: 0,
+            completions_digest: acc.digest,
         }
     }
 
@@ -285,6 +430,11 @@ impl ServeStats {
             .set("leaves", json::num(self.leaves as f64))
             .set("truncated", json::num(self.truncated as f64))
             .set("capacity_stopped", json::num(self.capacity_stopped as f64))
+            .set("preemptions", json::num(self.preemptions as f64))
+            .set("shed", json::num(self.shed as f64))
+            .set("victim_recompute_tokens", json::num(self.victim_recompute_tokens as f64))
+            .set("goodput_under_slo", json::num(self.goodput_under_slo))
+            .set("arrivals", json::s(&self.arrivals))
             .set("steps", json::num(self.steps as f64))
             .set("slots", json::num(self.slots as f64))
             .set("page_size", json::num(self.page_size as f64))
@@ -306,6 +456,9 @@ impl ServeStats {
             .set("latency_s", self.latency.to_json())
             .set("queue_wait", self.queue_wait.to_json())
             .set("first_token_latency_s", self.first_token_latency.to_json())
+            .set("first_token_latency_interactive", self.ftl_interactive.to_json())
+            .set("first_token_latency_batch", self.ftl_batch.to_json())
+            .set("first_token_latency_background", self.ftl_background.to_json())
             .set("decode_batch", self.batch_sizes.to_json())
             .set("slot_occupancy", self.slot_occupancy.to_json())
             .set("queue_depth", self.queue_depth.to_json())
@@ -516,6 +669,7 @@ fn dispatch(ev: SeqEvent, sinks: &mut HashMap<u64, ResponseSink>) {
                 queue_wait: f.queue_wait,
                 first_token_latency: f.first_token_latency,
                 status: f.status,
+                priority: f.priority,
             };
             match sinks.remove(&resp.id) {
                 Some(ResponseSink::Unary(tx)) => {
@@ -658,6 +812,68 @@ pub fn run_load(
     run_load_mixed(model, cfg, prompts.into_iter().map(|p| (p, None)).collect())
 }
 
+/// One request of a load-driver workload: prompt plus the per-request
+/// knobs the drivers expose (`None` budget ⇒ the server-wide default).
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub prompt: Vec<usize>,
+    pub gen_tokens: Option<usize>,
+    pub priority: Priority,
+}
+
+impl LoadSpec {
+    pub fn new(prompt: Vec<usize>) -> LoadSpec {
+        LoadSpec { prompt, gen_tokens: None, priority: Priority::default() }
+    }
+}
+
+/// Request-level measurements a load driver accumulates as responses land.
+#[derive(Default)]
+struct RunAccumulator {
+    latencies: Vec<f64>,
+    queue_waits: Vec<f64>,
+    first_token_latencies: Vec<f64>,
+    /// Indexed by `Priority::rank()`.
+    ftl_by_tier: [Vec<f64>; 3],
+    tokens: usize,
+    digest: u64,
+}
+
+impl RunAccumulator {
+    fn new() -> RunAccumulator {
+        RunAccumulator { digest: 0xcbf29ce484222325, ..Default::default() }
+    }
+
+    /// FNV-1a over (id, completion) in id order: the drivers absorb
+    /// responses indexed by id, so the digest depends only on what each
+    /// request got back — identical completions ⇒ identical digest,
+    /// whatever the engine's step-by-step interleaving was. Shed responses
+    /// are EXCLUDED: shed decisions legitimately differ across A/B runs
+    /// (e.g. preemption on vs off), so the digest covers exactly the
+    /// completions the bit-identity contract promises.
+    fn fold(&mut self, x: u64) {
+        self.digest = (self.digest ^ x).wrapping_mul(0x100000001b3);
+    }
+
+    fn absorb(&mut self, i: usize, resp: &Response) {
+        self.latencies.push(resp.latency.as_secs_f64());
+        self.queue_waits.push(resp.queue_wait.as_secs_f64());
+        if let Some(ftl) = resp.first_token_latency {
+            let s = ftl.as_secs_f64();
+            self.first_token_latencies.push(s);
+            self.ftl_by_tier[resp.priority.rank() as usize].push(s);
+        }
+        self.tokens += resp.tokens.len();
+        if resp.status != ResponseStatus::Shed {
+            self.fold(i as u64);
+            self.fold(resp.tokens.len() as u64);
+            for &t in &resp.tokens {
+                self.fold(t as u64);
+            }
+        }
+    }
+}
+
 /// [`run_load`] with per-request generation budgets: each entry is
 /// `(prompt, gen_tokens)` where `None` takes the server-wide default —
 /// the `oats serve-load --gen-tokens-mix` driver.
@@ -665,6 +881,20 @@ pub fn run_load_mixed(
     model: Arc<TransformerLM>,
     cfg: ServeConfig,
     requests: Vec<(Vec<usize>, Option<usize>)>,
+) -> ServeStats {
+    let specs = requests
+        .into_iter()
+        .map(|(prompt, gen_tokens)| LoadSpec { gen_tokens, ..LoadSpec::new(prompt) })
+        .collect();
+    run_load_specs(model, cfg, specs)
+}
+
+/// Closed-loop driver over fully-specified [`LoadSpec`]s (budgets and
+/// priorities), through the threaded [`Server`].
+pub fn run_load_specs(
+    model: Arc<TransformerLM>,
+    cfg: ServeConfig,
+    specs: Vec<LoadSpec>,
 ) -> ServeStats {
     // Pack before starting the clock: packing is one-time startup cost and
     // must not bias the measured throughput of compressed models (the dense
@@ -677,55 +907,98 @@ pub fn run_load_mixed(
     let share = cfg.share_prefix;
     let t0 = Instant::now();
     let server = Server::start(model, cfg);
-    let rxs: Vec<mpsc::Receiver<Response>> = requests
+    let rxs: Vec<mpsc::Receiver<Response>> = specs
         .into_iter()
         .enumerate()
-        .map(|(i, (p, gen))| {
-            let mut req = Request::new(i as u64, p);
-            req.gen_tokens = gen;
+        .map(|(i, spec)| {
+            let mut req = Request::new(i as u64, spec.prompt).with_priority(spec.priority);
+            req.gen_tokens = spec.gen_tokens;
             req.share_prefix = share;
             server.submit_request(req)
         })
         .collect();
-    let mut latencies = Vec::new();
-    let mut queue_waits = Vec::new();
-    let mut first_token_latencies = Vec::new();
-    let mut tokens = 0usize;
-    // FNV-1a over (id, completion) in id order: receivers are indexed by
-    // id, so this digest depends only on what each request got back —
-    // identical completions ⇒ identical digest, whatever the engine's
-    // step-by-step interleaving was.
-    let mut digest: u64 = 0xcbf29ce484222325;
-    let mut fold = |x: u64| digest = (digest ^ x).wrapping_mul(0x100000001b3);
+    let mut acc = RunAccumulator::new();
     let n = rxs.len();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("response");
-        latencies.push(resp.latency.as_secs_f64());
-        queue_waits.push(resp.queue_wait.as_secs_f64());
-        if let Some(ftl) = resp.first_token_latency {
-            first_token_latencies.push(ftl.as_secs_f64());
-        }
-        tokens += resp.tokens.len();
-        fold(i as u64);
-        fold(resp.tokens.len() as u64);
-        for &t in &resp.tokens {
-            fold(t as u64);
-        }
+        acc.absorb(i, &resp);
     }
     let wall = t0.elapsed().as_secs_f64();
     let telemetry = server.telemetry();
     server.shutdown();
-    let mut stats = ServeStats::from_run(
-        n,
-        tokens,
-        wall,
-        &latencies,
-        &queue_waits,
-        &first_token_latencies,
-        &telemetry,
-    );
-    stats.completions_digest = digest;
-    stats
+    ServeStats::from_run(n, wall, &acc, ArrivalPlan::Closed.label(), &telemetry)
+}
+
+/// Open-loop load driver: steps the engine synchronously on its logical
+/// clock and injects each request at the step its [`ArrivalPlan`] schedule
+/// dictates — so a storm run (arrival timing, admission order, preemption
+/// and shed decisions included) replays step-for-step from `(plan, seed)`.
+/// The closed plan degenerates to a prequeued backlog.
+pub fn run_load_open(
+    model: Arc<TransformerLM>,
+    cfg: ServeConfig,
+    specs: Vec<LoadSpec>,
+    plan: &ArrivalPlan,
+    seed: u64,
+) -> ServeStats {
+    let model = if cfg.prepack && model.needs_packing() {
+        Arc::new(model.packed_for_serving_with(&cfg.pack_options()))
+    } else {
+        model
+    };
+    let share = cfg.share_prefix;
+    let n = specs.len();
+    let schedule = plan.schedule(n, seed);
+    let label = plan.label();
+    let t0 = Instant::now();
+    let mut engine = Engine::new(model, cfg.engine_config());
+    let telemetry = engine.telemetry();
+    let mut queue = Batcher::default();
+    let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+    let mut arrivals = specs.into_iter().zip(schedule.iter().copied()).enumerate();
+    let mut pending = arrivals.next();
+    let mut done = 0usize;
+    // Generous liveness fuse: the engine retires every admitted sequence in
+    // bounded steps, so a run that outlives this has deadlocked.
+    let horizon = schedule.last().copied().unwrap_or(0) + 10_000 * (n as u64 + 1);
+    let mut step: u64 = 0;
+    while done < n {
+        while let Some((i, (spec, at))) = pending.take() {
+            if at > step {
+                pending = Some((i, (spec, at)));
+                break;
+            }
+            let mut req = Request::new(i as u64, spec.prompt).with_priority(spec.priority);
+            req.gen_tokens = spec.gen_tokens;
+            req.share_prefix = share;
+            queue.push(req);
+            pending = arrivals.next();
+        }
+        for ev in engine.step(&mut queue) {
+            if let SeqEvent::Finished(f) = ev {
+                let resp = Response {
+                    id: f.id,
+                    tokens: f.tokens,
+                    latency: f.enqueued.elapsed(),
+                    queue_wait: f.queue_wait,
+                    first_token_latency: f.first_token_latency,
+                    status: f.status,
+                    priority: f.priority,
+                };
+                responses[resp.id as usize] = Some(resp);
+                done += 1;
+            }
+        }
+        step += 1;
+        assert!(step < horizon, "open-loop run failed to drain: {done}/{n} after {step} steps");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut acc = RunAccumulator::new();
+    for (i, resp) in responses.iter().enumerate() {
+        acc.absorb(i, resp.as_ref().expect("every request finished"));
+    }
+    let t = telemetry.lock().unwrap().clone();
+    ServeStats::from_run(n, wall, &acc, label, &t)
 }
 
 #[cfg(test)]
@@ -1124,6 +1397,134 @@ mod tests {
     }
 
     #[test]
+    fn arrival_plans_parse_and_schedule_deterministically() {
+        assert_eq!(ArrivalPlan::parse("closed").unwrap(), ArrivalPlan::Closed);
+        assert_eq!(ArrivalPlan::parse("ramp").unwrap(), ArrivalPlan::Ramp);
+        assert_eq!(ArrivalPlan::parse("burst:8:4").unwrap(), ArrivalPlan::Burst { n: 8, gap: 4 });
+        assert_eq!(ArrivalPlan::parse("poisson:0.5").unwrap(), ArrivalPlan::Poisson { rate: 0.5 });
+        assert!(ArrivalPlan::parse("avalanche").is_err());
+        assert!(ArrivalPlan::parse("poisson:-1").is_err());
+        assert!(ArrivalPlan::parse("burst:0:4").is_err());
+        for s in ["closed", "poisson:0.5", "burst:8:4", "ramp"] {
+            assert_eq!(ArrivalPlan::parse(s).unwrap().label(), s, "label round trip");
+        }
+        for plan in [
+            ArrivalPlan::Closed,
+            ArrivalPlan::Poisson { rate: 0.5 },
+            ArrivalPlan::Burst { n: 3, gap: 5 },
+            ArrivalPlan::Ramp,
+        ] {
+            let s = plan.schedule(16, 7);
+            assert_eq!(s.len(), 16);
+            assert!(s.windows(2).all(|w| w[0] <= w[1]), "{plan:?} schedule not sorted");
+            assert_eq!(s, plan.schedule(16, 7), "{plan:?} schedule not deterministic");
+        }
+        let a = ArrivalPlan::Poisson { rate: 0.5 }.schedule(16, 7);
+        let b = ArrivalPlan::Poisson { rate: 0.5 }.schedule(16, 8);
+        assert_ne!(a, b, "poisson must move with the seed");
+        // Burst shape: groups of n arrive together, gap steps apart.
+        let s = ArrivalPlan::Burst { n: 2, gap: 3 }.schedule(5, 0);
+        assert_eq!(s, vec![0, 0, 3, 3, 6]);
+    }
+
+    #[test]
+    fn open_loop_burst_matches_closed_loop_digest() {
+        // Same workload, closed loop (threaded server) vs open-loop burst
+        // arrivals (synchronous driver): arrival timing must not change
+        // any completion — the engine is bit-identical per request — only
+        // the latency/telemetry profile.
+        let m = tiny();
+        let specs: Vec<LoadSpec> = (0..10)
+            .map(|i| LoadSpec::new((0..(1 + i % 4)).map(|j| (i * 5 + j) % 16).collect()))
+            .collect();
+        let cfg = || ServeConfig { slots: 3, gen_tokens: 4, ..Default::default() };
+        let closed = run_load_specs(Arc::clone(&m), cfg(), specs.clone());
+        let open = run_load_open(m, cfg(), specs, &ArrivalPlan::Burst { n: 4, gap: 6 }, 0);
+        assert_eq!(open.n_requests, 10);
+        assert_eq!(open.arrivals, "burst:4:6");
+        assert_eq!(closed.arrivals, "closed");
+        assert_eq!(open.completions_digest, closed.completions_digest);
+        assert_eq!(open.tokens_generated, closed.tokens_generated);
+        assert_eq!(open.pages_in_use_at_drain, 0);
+        assert!(open.steps > 0);
+        assert_eq!(open.goodput_under_slo, 1.0, "no SLO set: every first token is goodput");
+    }
+
+    #[test]
+    fn preemption_storm_is_digest_equal_to_preemption_off() {
+        // The CI storm A/B in miniature: a burst of background work holds
+        // the slots when interactive requests arrive; with preemption on
+        // the engine evicts victims for them, and every completion must
+        // still be bit-identical to the preemption-off run (shed off in
+        // both arms, so nothing is dropped).
+        let m = tiny();
+        let specs: Vec<LoadSpec> = (0..12)
+            .map(|i| LoadSpec {
+                prompt: (0..(2 + i % 5)).map(|j| (i * 7 + j) % 16).collect(),
+                gen_tokens: None,
+                priority: if i < 8 { Priority::Background } else { Priority::Interactive },
+            })
+            .collect();
+        let cfg = |preemption: bool| ServeConfig {
+            slots: 2,
+            gen_tokens: 6,
+            preemption,
+            ..Default::default()
+        };
+        let plan = ArrivalPlan::Burst { n: 4, gap: 2 };
+        let on = run_load_open(Arc::clone(&m), cfg(true), specs.clone(), &plan, 3);
+        let off = run_load_open(m, cfg(false), specs, &plan, 3);
+        assert_eq!(on.completions_digest, off.completions_digest, "preemption changed a token");
+        assert_eq!(on.kv_bytes, off.kv_bytes, "A/B must compare equal arenas");
+        assert!(on.preemptions > 0, "interactive burst over resident background never preempted");
+        assert!(on.victim_recompute_tokens > 0, "victims re-prefill their progress");
+        assert_eq!(off.preemptions, 0);
+        assert_eq!(on.shed + off.shed, 0, "shed stays off in the A/B");
+        assert_eq!(on.joins, on.leaves, "every eviction pairs with a readmission");
+        assert_eq!(on.pages_in_use_at_drain, 0, "preemption leaked pages");
+        assert_eq!(off.pages_in_use_at_drain, 0);
+        // The tiers the storm separates: interactive first tokens exist,
+        // and the per-tier buckets partition the overall count.
+        let n_tiers = on.ftl_interactive.n + on.ftl_batch.n + on.ftl_background.n;
+        assert_eq!(n_tiers, on.first_token_latency.n);
+        assert!(on.ftl_interactive.n > 0);
+        assert_eq!(on.ftl_batch.n, 0, "no batch-tier requests in this storm");
+    }
+
+    #[test]
+    fn shed_storm_drops_lowest_tier_and_reports_goodput() {
+        // One slot, a long backlog, and a tight first-token SLO: the
+        // shedder must drop background work (never the interactive
+        // request), account for every request, and drain cleanly.
+        let m = tiny();
+        let mut specs: Vec<LoadSpec> = (0..10)
+            .map(|i| LoadSpec {
+                prompt: vec![(i % 16), 2],
+                gen_tokens: None,
+                priority: Priority::Background,
+            })
+            .collect();
+        specs[1].priority = Priority::Interactive;
+        let cfg = ServeConfig {
+            slots: 1,
+            gen_tokens: 6,
+            slo_first_token_steps: 30,
+            shed_policy: ShedPolicy::LowestPriority,
+            ..Default::default()
+        };
+        let stats = run_load_open(m, cfg, specs, &ArrivalPlan::Closed, 0);
+        assert_eq!(stats.n_requests, 10);
+        assert!(stats.shed > 0, "backlog past the SLO must shed");
+        assert!(stats.shed < 10, "shedding must stop once the backlog fits the SLO");
+        // Every request left exactly once: sheds + retirements cover all.
+        assert_eq!(stats.shed + stats.leaves, 10);
+        assert_eq!(stats.joins, stats.leaves);
+        assert!(stats.goodput_under_slo > 0.0, "admitted work kept its SLO");
+        assert!(stats.ftl_interactive.n > 0, "the interactive request was served, not shed");
+        assert_eq!(stats.pages_in_use_at_drain, 0);
+    }
+
+    #[test]
     fn stop_tokens_surface_stopped_status_through_the_server() {
         let m = tiny();
         let prompt = vec![1, 2, 3];
@@ -1185,6 +1586,18 @@ mod tests {
         let occ = j.get("page_occupancy").expect("page occupancy summary");
         let occ_mean = occ.req_f64("mean").unwrap();
         assert!(occ_mean > 0.0 && occ_mean <= 1.0, "page occupancy {occ_mean}");
+        // Overload telemetry rides along (the CI overload gate reads these);
+        // an unpressured closed-loop run reports the quiet baseline.
+        assert_eq!(j.req_f64("preemptions").unwrap(), 0.0);
+        assert_eq!(j.req_f64("shed").unwrap(), 0.0);
+        assert_eq!(j.req_f64("victim_recompute_tokens").unwrap(), 0.0);
+        assert_eq!(j.req_f64("goodput_under_slo").unwrap(), 1.0, "no SLO: all first tokens count");
+        assert_eq!(j.get("arrivals").and_then(Json::as_str), Some("closed"));
+        for tier in ["interactive", "batch", "background"] {
+            let key = format!("first_token_latency_{tier}");
+            let s = j.get(&key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(s.req_f64("n").is_ok(), "{key} is a summary object");
+        }
         // Round-trips through the parser (what the CI smoke gate does).
         let parsed = crate::json::parse(&j.to_pretty()).unwrap();
         assert!(parsed.get("slot_occupancy").is_some());

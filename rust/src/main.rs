@@ -20,6 +20,14 @@
 //!                   [--no-share-prefix]  # opt every request out of reuse
 //!                   [--trace FILE]       # Chrome trace-event JSON
 //!                                        # (load in Perfetto / about:tracing)
+//!                   [--arrivals closed|poisson:RATE|burst:N:GAP|ramp]
+//!                   [--arrival-seed N]   # open-loop storms on the logical
+//!                                        # clock, deterministic in the seed
+//!                   [--priority-mix interactive,batch,...]  # round-robin tiers
+//!                   [--preempt]          # evict low-tier residents for
+//!                                        # higher-tier arrivals (bit-exact)
+//!                   [--slo-steps N] [--shed-policy off|lowest]
+//!                                        # first-token SLO + load shedding
 //!                   [--compress] [--quantize] [--quick] [--tag NAME]
 //!                   [--slice-rate r]     # with --compress: rotate-and-
 //!                                        # slice the FFN pair first
@@ -245,7 +253,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// `kernel_time` object. Tracing observes and never reorders, so the
 /// `completions_digest` is identical with and without it.
 fn cmd_serve_load(args: &Args) -> Result<()> {
-    use oats::coordinator::serve::{run_load_mixed, AdmissionPolicy, ServeConfig};
+    use oats::coordinator::serve::{
+        run_load_open, run_load_specs, AdmissionPolicy, ArrivalPlan, LoadSpec, Priority,
+        ServeConfig, ShedPolicy,
+    };
     use oats::util::trace;
     let preset = args.flag_or("preset", "tiny");
     let quick = args.bool_flag("quick");
@@ -264,7 +275,13 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         share_prefix: !args.bool_flag("no-share-prefix"),
         // 0 = unbounded prefix index (no capacity eviction).
         prefix_cap: args.usize_flag("prefix-cap", 0),
+        preemption: args.bool_flag("preempt"),
+        // 0 = no SLO (every first token counts as goodput; shed never fires).
+        slo_first_token_steps: args.usize_flag("slo-steps", 0),
+        shed_policy: ShedPolicy::parse(args.flag_or("shed-policy", "off"))?,
     };
+    let plan = ArrivalPlan::parse(args.flag_or("arrivals", "closed"))?;
+    let arrival_seed = args.usize_flag("arrival-seed", 0) as u64;
     let mcfg = ModelConfig::preset(preset)?;
     let mut model = oats::model::TransformerLM::init(&mcfg, 0x5E17E);
     if args.bool_flag("compress") {
@@ -337,22 +354,44 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let requests: Vec<(Vec<usize>, Option<usize>)> = prompts
+    // Priority tiers, assigned round-robin from `--priority-mix` (e.g.
+    // `interactive,batch,background`; None ⇒ every request is Batch, the
+    // pre-priority behavior). Parsed as strictly as the budget mix.
+    let tiers: Option<Vec<Priority>> = match args.flag("priority-mix") {
+        Some(s) => {
+            let parsed: Result<Vec<Priority>, _> =
+                s.split(',').map(|t| Priority::parse(t.trim())).collect();
+            Some(parsed?)
+        }
+        None => None,
+    };
+    let mut requests: Vec<LoadSpec> = prompts
         .into_iter()
         .enumerate()
-        .map(|(i, p)| {
-            let budget = mix.as_ref().map(|m| m[i % m.len()]);
-            (p, budget)
+        .map(|(i, p)| LoadSpec {
+            prompt: p,
+            gen_tokens: mix.as_ref().map(|m| m[i % m.len()]),
+            priority: tiers.as_ref().map_or(Priority::Batch, |t| t[i % t.len()]),
         })
         .collect();
+    // The truncation/capacity probes must reach admission even when the
+    // shedder is dropping low tiers — the CI gates count both statuses in
+    // every run — so under a mixed-priority workload they ride interactive.
+    if tiers.is_some() {
+        for spec in requests.iter_mut().rev().take(2) {
+            spec.priority = Priority::Interactive;
+        }
+    }
     println!(
-        "serve-load: {} requests (gen {}, mix {:?}), {} slots, chunk {}, admission {}…",
+        "serve-load: {} requests (gen {}, mix {:?}), {} slots, chunk {}, admission {}, \
+         arrivals {}…",
         requests.len(),
         cfg.gen_tokens,
         mix,
         cfg.slots,
         cfg.prefill_chunk,
-        cfg.admission.name()
+        cfg.admission.name(),
+        plan.label(),
     );
     // Enabled only around the load run so `kernel_time` and the exported
     // trace cover the serve stack, not the optional compression pass.
@@ -360,7 +399,14 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
     if trace_path.is_some() {
         trace::set_enabled(true);
     }
-    let mut stats = run_load_mixed(std::sync::Arc::new(model), cfg, requests);
+    // The closed plan keeps the threaded server path (every request queued
+    // up front); timed plans replay arrivals on the engine's logical clock
+    // so storms are deterministic in (plan, seed).
+    let model = std::sync::Arc::new(model);
+    let mut stats = match plan {
+        ArrivalPlan::Closed => run_load_specs(model, cfg, requests),
+        ref timed => run_load_open(model, cfg, requests, timed, arrival_seed),
+    };
     if let Some(path) = trace_path {
         trace::set_enabled(false);
         let events = trace::drain();
@@ -408,6 +454,13 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         stats.shared_pages,
         stats.cow_forks,
         stats.completions_digest,
+    );
+    println!(
+        "overload: {} preemptions ({} recompute tokens) | {} shed | goodput {:.2} under SLO",
+        stats.preemptions,
+        stats.victim_recompute_tokens,
+        stats.shed,
+        stats.goodput_under_slo,
     );
     let tag = args.flag_or("tag", preset);
     stats.write_json(tag)?;

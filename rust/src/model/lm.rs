@@ -427,6 +427,15 @@ impl KvCache {
 
     /// Retirement: detach every owned page (for return to the pool's free
     /// list), drop every shared reference, and reset the cache to empty.
+    ///
+    /// This is also the preemption teardown path: an evicted sequence's
+    /// cache goes through here (via `KvPool::release`), discarding its
+    /// computed KV wholesale. Readmission rebuilds it from scratch — shared
+    /// prefix pages re-attach via [`KvCache::push_shared`] and everything
+    /// past them is re-prefilled — which is exactly why preemption keeps
+    /// bit-identity: the rebuilt rows come from the same deterministic
+    /// prefill over the same token stream, so greedy decode resumes on
+    /// identical state.
     pub fn take_pages(&mut self) -> Vec<KvPage> {
         self.len = 0;
         std::mem::take(&mut self.pages)

@@ -14,8 +14,8 @@
 
 use oats::config::ModelConfig;
 use oats::coordinator::engine::{
-    AdmissionPolicy, Batcher, Engine, EngineConfig, FinishedSeq, Request, ResponseStatus,
-    SeqEvent,
+    AdmissionPolicy, Batcher, Engine, EngineConfig, FinishedSeq, Priority, Request,
+    ResponseStatus, SeqEvent, ShedPolicy,
 };
 use oats::coordinator::serve::{generate, generate_lockstep};
 use oats::model::TransformerLM;
@@ -166,6 +166,7 @@ fn paged_engine_matches_lockstep_under_randomized_page_geometry() {
             page_size,
             kv_pages,
             prefix_cap: 0,
+            ..Default::default()
         };
         let n_req = g.usize_range(1, 8);
         let arrivals: Vec<(usize, Vec<usize>)> = (0..n_req)
@@ -227,6 +228,7 @@ fn equal_kv_bytes_paged_arena_admits_more_concurrency() {
         page_size: 0,
         kv_pages: 0,
         prefix_cap: 0,
+        ..Default::default()
     };
     let paged = EngineConfig { slots: 8, page_size: 8, kv_pages: 16, ..whole };
 
@@ -408,6 +410,7 @@ fn shared_prefix_outputs_bit_identical_to_unshared_and_leak_free() {
             page_size,
             kv_pages,
             prefix_cap: 0,
+            ..Default::default()
         };
         // A common system-prompt head most requests open with; tails
         // diverge at random points relative to page boundaries.
@@ -483,6 +486,7 @@ fn shared_prefix_load_saves_prefill_and_forks_on_duplicates() {
         page_size: 4,
         kv_pages: 12,
         prefix_cap: 0,
+        ..Default::default()
     };
     let head: Vec<usize> = (0..8).map(|j| (j * 5 + 3) % m.cfg.vocab).collect();
     let with_tail = |tail: &[usize]| {
@@ -613,6 +617,7 @@ fn tracing_observes_without_reordering_and_orders_lifecycle_events() {
         page_size: 4,
         kv_pages: 24,
         prefix_cap: 0,
+        ..Default::default()
     };
     // The trace flag and rings are process-global and tests in this binary
     // run in parallel, so this test claims an id range no other workload
@@ -659,6 +664,183 @@ fn tracing_observes_without_reordering_and_orders_lifecycle_events() {
             .any(|e| e.name == "engine_step" && matches!(e.kind, trace::EventKind::Span { .. })),
         "traced run recorded no engine_step spans"
     );
+}
+
+#[test]
+fn preemption_is_scheduling_never_behaviour_under_randomized_storms() {
+    // The overload tentpole's parity contract: preemption decides WHEN a
+    // sequence computes, never WHAT. For any slot count, page geometry,
+    // priority assignment, and arrival scatter (shedding off, so nothing
+    // is dropped), every request's tokens and status with preemption on
+    // must equal the preemption-off run — both equal to the lockstep
+    // scalar reference — and both arenas must drain leak-free with
+    // joins == leaves (each eviction pairs with a readmission).
+    let m = tiny();
+    let cap = m.cfg.seq_len;
+    let total_preemptions = std::cell::Cell::new(0usize);
+    check("preemption on == preemption off", 10, |g| {
+        let slots = g.usize_range(1, 4);
+        // Whole-sequence pages or a page arena from barely-one-sequence
+        // (maximum page pressure) up to everything-fits.
+        let page_size = if g.bool() { 0 } else { 8 };
+        let per_seq = if page_size == 0 { 1 } else { cap.div_ceil(page_size) };
+        let kv_pages =
+            if page_size == 0 { 0 } else { g.usize_range(per_seq, slots * per_seq + 1) };
+        let prefill_chunk = g.usize_range(1, 7);
+        let gen_tokens = g.usize_range(1, 7);
+        let admission =
+            if g.bool() { AdmissionPolicy::Fcfs } else { AdmissionPolicy::ShortestPrompt };
+        let cfg = |preemption: bool| EngineConfig {
+            slots,
+            prefill_chunk,
+            gen_tokens,
+            admission,
+            page_size,
+            kv_pages,
+            preemption,
+            ..Default::default()
+        };
+        let n_req = g.usize_range(2, 10);
+        let arrivals: Vec<(usize, Vec<usize>)> = (0..n_req)
+            .map(|_| {
+                let len = g.usize_range(1, 15);
+                let prompt = (0..len).map(|_| g.usize_range(0, m.cfg.vocab)).collect();
+                (g.usize_range(0, 10), prompt)
+            })
+            .collect();
+        // Later arrivals lean interactive so storms of high-tier work land
+        // on slots already held by lower tiers — the preemption trigger.
+        let prios: Vec<Priority> = (0..n_req)
+            .map(|i| match (g.usize_range(0, 4), i >= n_req / 2) {
+                (0, _) | (_, true) => Priority::Interactive,
+                (1, _) => Priority::Batch,
+                _ => Priority::Background,
+            })
+            .collect();
+        let make = |id: u64, p: Vec<usize>| Request::new(id, p).with_priority(prios[id as usize]);
+        let (on, eng_on) = drive_with(&m, cfg(true), &arrivals, make);
+        let (off, eng_off) = drive_with(&m, cfg(false), &arrivals, make);
+        for (id, (_, prompt)) in arrivals.iter().enumerate() {
+            let a = &on[&(id as u64)];
+            let b = &off[&(id as u64)];
+            assert_eq!(a.tokens, b.tokens, "preemption changed output for request {id}");
+            assert_eq!(a.status, b.status, "preemption changed status for request {id}");
+            assert_eq!(a.tokens, generate_lockstep(&m, prompt, gen_tokens));
+        }
+        let t_on = eng_on.telemetry().lock().unwrap().clone();
+        let t_off = eng_off.telemetry().lock().unwrap().clone();
+        assert_eq!(t_off.preemptions, 0, "preemption fired with the flag off");
+        assert_eq!(t_on.shed + t_off.shed, 0, "nothing sheds with the policy off");
+        assert_eq!(t_on.joins, t_on.leaves, "an eviction must pair with a readmission");
+        assert_eq!(t_on.pages_in_use_now, 0, "preemption-on arena leaked pages");
+        assert_eq!(t_off.pages_in_use_now, 0);
+        if t_on.preemptions == 0 {
+            assert_eq!(t_on.victim_recompute_tokens, 0);
+        }
+        total_preemptions.set(total_preemptions.get() + t_on.preemptions);
+    });
+    // The parity above is vacuous if no storm ever preempted: across the
+    // randomized cases at least one eviction must actually have happened.
+    assert!(total_preemptions.get() > 0, "no randomized storm ever forced a preemption");
+}
+
+#[test]
+fn aging_bounds_background_wait_under_an_interactive_flood() {
+    // Starvation bound, end to end, on the adversarial double bind: the
+    // victim is both lowest-tier AND longest-prompt, under ShortestPrompt
+    // admission, while short interactive work arrives every other step.
+    // Waiting ticks promote it one rank per AGE_TICKS_PER_RANK, so it
+    // must overtake fresh interactive arrivals and retire well before the
+    // flood drains — un-aged, it would finish dead last.
+    let m = tiny();
+    let cfg = EngineConfig {
+        slots: 1,
+        prefill_chunk: 8,
+        gen_tokens: 4,
+        admission: AdmissionPolicy::ShortestPrompt,
+        ..Default::default()
+    };
+    let n_flood = 24usize;
+    let mut engine = Engine::new(Arc::clone(&m), cfg);
+    let mut queue = Batcher::default();
+    let mut finish_order = Vec::new();
+    let mut step = 0usize;
+    while finish_order.len() < n_flood + 1 {
+        assert!(step < 10_000, "flood never drained");
+        if step == 0 {
+            let long: Vec<usize> = (0..10).map(|j| (j * 3) % 16).collect();
+            queue.push(Request::new(0, long).with_priority(Priority::Background));
+        }
+        if step % 2 == 0 && step / 2 < n_flood {
+            let id = 1 + (step / 2) as u64;
+            queue.push(Request::new(id, vec![3, 5]).with_priority(Priority::Interactive));
+        }
+        for ev in engine.step(&mut queue) {
+            if let SeqEvent::Finished(f) = ev {
+                finish_order.push(f.id);
+            }
+        }
+        step += 1;
+    }
+    let pos = finish_order.iter().position(|&id| id == 0).expect("background finished");
+    // Service is ~5 steps per request on one slot. The background reaches
+    // interactive rank after 2 × AGE_TICKS_PER_RANK = 32 waiting ticks and
+    // beats same-rank two-token prompts one rank later (~48 ticks), so it
+    // admits by roughly step 50 — about 10 interactives in. Anything in
+    // the front half proves aging; dead last means starvation.
+    assert!(
+        pos < n_flood / 2,
+        "aged background finished {pos} of {} — starved past the aging bound",
+        finish_order.len()
+    );
+}
+
+#[test]
+fn shed_accounting_balances_and_spares_higher_tiers() {
+    // SLO-aware shedding over a one-slot backlog: the predictor drops
+    // exactly enough of the NEWEST lowest-tier queue to fit the SLO, every
+    // dropped request reports Shed with no tokens, the interactive request
+    // is never the victim, and the ledger balances: shed + joins covers
+    // every request with joins == leaves (no preemption here).
+    let m = tiny();
+    let cfg = EngineConfig {
+        slots: 1,
+        prefill_chunk: 8,
+        gen_tokens: 4,
+        admission: AdmissionPolicy::Fcfs,
+        slo_first_token_steps: 10,
+        shed_policy: ShedPolicy::LowestPriority,
+        ..Default::default()
+    };
+    let n_req = 12usize;
+    let arrivals: Vec<(usize, Vec<usize>)> =
+        (0..n_req).map(|i| (0usize, vec![(i * 3) % 16, 7])).collect();
+    let (done, engine) = drive_with(&m, cfg, &arrivals, |id, p| {
+        let tier = if id == 1 { Priority::Interactive } else { Priority::Background };
+        Request::new(id, p).with_priority(tier)
+    });
+    let shed: Vec<u64> = done
+        .values()
+        .filter(|f| f.status == ResponseStatus::Shed)
+        .map(|f| {
+            assert!(f.tokens.is_empty(), "a shed request must not generate");
+            f.id
+        })
+        .collect();
+    assert!(!shed.is_empty(), "a 60-step backlog over a 10-step SLO must shed");
+    assert!(shed.len() < n_req, "shedding must stop once the backlog fits");
+    assert!(!shed.contains(&1), "the interactive request outranks every background");
+    for f in done.values().filter(|f| f.status != ResponseStatus::Shed) {
+        assert_eq!(f.status, ResponseStatus::Complete, "request {} had KV room", f.id);
+        assert_eq!(f.tokens.len(), cfg.gen_tokens, "request {} had budget", f.id);
+    }
+    let t = engine.telemetry().lock().unwrap().clone();
+    assert_eq!(t.shed, shed.len());
+    assert_eq!(t.preemptions, 0);
+    assert_eq!(t.joins, t.leaves, "every admission retired");
+    assert_eq!(t.shed + t.joins, n_req, "every request either joined or shed, exactly once");
+    assert!(t.slo_hits > 0, "the served stream kept its first-token SLO");
+    assert_eq!(t.pages_in_use_now, 0);
 }
 
 #[test]
